@@ -1,0 +1,39 @@
+//! Decode-time ablation: dynamic-tree depth × total-token sweep (the
+//! Table 9 experiment) without retraining anything.
+//!
+//! ```sh
+//! cargo run --release --example ablation_sweep -- [method]
+//! ```
+
+use std::rc::Rc;
+
+use hass::engine::{calibrate, run_suite, build_method};
+use hass::runtime::Runtime;
+use hass::sampling::SampleParams;
+use hass::spec::MethodCfg;
+use hass::workload::Workloads;
+
+fn main() -> anyhow::Result<()> {
+    let method = std::env::args().nth(1).unwrap_or_else(|| "hass".to_string());
+    let rt = Rc::new(Runtime::new(&hass::artifact_dir())?);
+    let wl = Workloads::load(&hass::artifact_dir()).unwrap_or_else(|_| Workloads::embedded());
+    let prompts = wl.suite("dialogue")?[..4.min(wl.suite("dialogue")?.len())].to_vec();
+    let cost = calibrate(&rt, 16)?;
+    println!("t_ar = {:.2} ms; sweeping {method} depth x total", cost.t_ar * 1e3);
+    println!("{:<7} {:>9} {:>9} {:>9}", "depth", "#40", "#60", "#80");
+    for depth in [4usize, 6, 8] {
+        print!("{depth:<7}");
+        for total in [40usize, 60, 80] {
+            let cfg = MethodCfg { depth, total_tokens: total, ..Default::default() };
+            let mut m = build_method(&rt, &method, &cfg)?;
+            let r = run_suite(
+                m.as_mut(), "dialogue", &prompts, 48,
+                &SampleParams { temperature: 0.0, ..Default::default() },
+            )?;
+            let speedup = cost.modeled_speedup(&r.metrics, r.metrics.phases.host_s);
+            print!(" {:>5.2}x({:.1})", speedup, r.tau);
+        }
+        println!();
+    }
+    Ok(())
+}

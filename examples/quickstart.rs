@@ -1,0 +1,39 @@
+//! Quickstart: load the AOT artifacts, generate with HASS, print stats.
+//!
+//! ```sh
+//! make artifacts && make train   # once
+//! cargo run --release --example quickstart
+//! ```
+
+use std::rc::Rc;
+
+use hass::engine::generate_once;
+use hass::runtime::Runtime;
+use hass::sampling::SampleParams;
+use hass::spec::MethodCfg;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Rc::new(Runtime::new(&hass::artifact_dir())?);
+    println!("PJRT platform: {}", rt.platform());
+
+    let prompt = "User: Can you tell me about growing tomatoes?\nAssistant:";
+    for method in ["vanilla", "hass"] {
+        let (text, out) = generate_once(
+            &rt,
+            method,
+            &MethodCfg::default(),
+            prompt,
+            64,
+            &SampleParams { temperature: 0.0, ..Default::default() },
+        )?;
+        println!("\n== {method} ==\n{prompt}{text}");
+        println!(
+            "tau={:.2}  cycles={}  target_calls={}  draft_calls={}",
+            out.metrics.tau(),
+            out.metrics.cycles,
+            out.metrics.target_calls,
+            out.metrics.draft_calls
+        );
+    }
+    Ok(())
+}

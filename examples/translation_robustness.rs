@@ -1,0 +1,34 @@
+//! Table-11-style robustness check: HASS vs EAGLE-2 on the five
+//! cipher-"language" translation suites (drafts trained only on dialogue).
+//!
+//! ```sh
+//! cargo run --release --example translation_robustness
+//! ```
+
+use std::rc::Rc;
+
+use hass::engine::{build_method, run_suite};
+use hass::runtime::Runtime;
+use hass::sampling::SampleParams;
+use hass::spec::MethodCfg;
+use hass::workload::{Workloads, TRANSLATION_SUITES};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Rc::new(Runtime::new(&hass::artifact_dir())?);
+    let wl = Workloads::load(&hass::artifact_dir())?;
+    println!("{:<8} {}", "method", TRANSLATION_SUITES.join("   "));
+    for method in ["eagle2", "hass"] {
+        let mut m = build_method(&rt, method, &MethodCfg::default())?;
+        print!("{method:<8}");
+        for suite in TRANSLATION_SUITES {
+            let prompts = wl.suite(suite)?[..4.min(wl.suite(suite)?.len())].to_vec();
+            let r = run_suite(
+                m.as_mut(), suite, &prompts, 40,
+                &SampleParams { temperature: 0.0, ..Default::default() },
+            )?;
+            print!(" {:>5.2}", r.tau);
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,282 @@
+"""AOT pipeline: lower every serving graph to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+rust `xla` crate links) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Every graph takes model weights as *runtime arguments* (leading parameters,
+in jax pytree-flatten order — the same order `ckpt.py` writes manifests in),
+so artifacts are independent of training and rust swaps draft checkpoints
+freely.  `artifacts/meta.json` records, per graph: parameter tensor names,
+extra input specs, and output specs; plus golden vectors for the rust
+integration tests.
+
+Graphs (S=512 cache slots, d=128, L=4, H=4):
+  target_prefill        (w…, tokens[S])                          -> feats, kv_k, kv_v, logits
+  target_decode_n{1,8,64,128}
+                        (w…, kv_k, kv_v, start, tok[N], pos[N], mask[N,S])
+                                                                 -> logits, feats, kv_k', kv_v'
+  draft_prefill         (w…, wte, tokens[S], tfeats[S,d])        -> kv_k, kv_v, g
+  draft_decode_b{10}    (w…, wte, kv, start, tok[B], feats[B,d], pos[B], mask[B,S])
+                                                                 -> logits, g, kv_k', kv_v'
+  sps_prefill / sps_decode_n{1}  — same families for the SpS tiny LM
+  medusa_heads          (w…, wte, feats[1,d])                    -> logits[1,4,V]
+
+Masks are i32 (0/1) at the graph boundary (simplest literal type for rust)
+and cast to bool internally.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import ckpt, data
+from .model import (DRAFT_CFG, SPS_CFG, TARGET_CFG, draft_decode,
+                    draft_prefill, gpt_decode, gpt_forward, gpt_prefill,
+                    init_draft, init_gpt, init_medusa, medusa_apply)
+
+S = 512  # cache slots
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+f32, i32 = jnp.float32, jnp.int32
+
+
+def spec(shape, dtype=f32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def param_specs(params):
+    return jax.tree_util.tree_map(lambda a: spec(a.shape, a.dtype), params)
+
+
+def tensor_names(params):
+    return [n for n, _ in ckpt.flatten_named(params)]
+
+
+# ---------------------------------------------------------------------------
+# graph definitions
+# ---------------------------------------------------------------------------
+
+
+def build_graphs(decode_ns=(1, 8, 64, 128), draft_bs=(10,)):
+    """Returns {name: (fn, arg_specs, param_names, input_specs, output_names)}."""
+    tcfg, dcfg, scfg = TARGET_CFG, DRAFT_CFG, SPS_CFG
+    d, L, H, hd, V = (tcfg.d_model, tcfg.n_layers, tcfg.n_heads,
+                      tcfg.d_head, tcfg.vocab)
+
+    tparams = init_gpt(jax.random.PRNGKey(0), tcfg)
+    dparams = init_draft(jax.random.PRNGKey(1), dcfg)
+    sparams = init_gpt(jax.random.PRNGKey(2), scfg)
+    mparams = init_medusa(jax.random.PRNGKey(3), tcfg)
+
+    graphs = {}
+
+    # ---- target ----
+    def target_prefill(p, tokens):
+        return gpt_prefill(p, tcfg, tokens)
+
+    graphs["target_prefill"] = (
+        target_prefill,
+        (param_specs(tparams), spec((S,), i32)),
+        tensor_names(tparams),
+        [("tokens", (S,), "i32")],
+        ["feats", "kv_k", "kv_v", "logits"],
+    )
+
+    for n in decode_ns:
+        def target_decode(p, kv_k, kv_v, start, tok, pos, mask, _n=n):
+            return gpt_decode(p, tcfg, kv_k, kv_v, start, tok, pos, mask != 0)
+
+        graphs[f"target_decode_n{n}"] = (
+            target_decode,
+            (param_specs(tparams), spec((L, S, H, hd)), spec((L, S, H, hd)),
+             spec((), i32), spec((n,), i32), spec((n,), i32), spec((n, S), i32)),
+            tensor_names(tparams),
+            [("kv_k", (L, S, H, hd), "f32"), ("kv_v", (L, S, H, hd), "f32"),
+             ("start", (), "i32"), ("tokens", (n,), "i32"),
+             ("positions", (n,), "i32"), ("mask", (n, S), "i32")],
+            ["logits", "feats", "kv_k", "kv_v"],
+        )
+
+    # ---- draft (EAGLE/HASS) ----
+    def d_prefill(dp, wte, tokens, tfeats):
+        return draft_prefill(dp, wte, dcfg, tokens, tfeats)
+
+    graphs["draft_prefill"] = (
+        d_prefill,
+        (param_specs(dparams), spec((V, d)), spec((S,), i32), spec((S, d))),
+        tensor_names(dparams) + ["wte"],
+        [("tokens", (S,), "i32"), ("tfeats", (S, d), "f32")],
+        ["kv_k", "kv_v", "g"],
+    )
+
+    for b in draft_bs:
+        def d_decode(dp, wte, kv_k, kv_v, start, tok, feats, pos, mask, _b=b):
+            return draft_decode(dp, wte, dcfg, kv_k, kv_v, start, tok, feats,
+                                pos, mask != 0)
+
+        graphs[f"draft_decode_b{b}"] = (
+            d_decode,
+            (param_specs(dparams), spec((V, d)), spec((S, H, hd)),
+             spec((S, H, hd)), spec((), i32), spec((b,), i32), spec((b, d)),
+             spec((b,), i32), spec((b, S), i32)),
+            tensor_names(dparams) + ["wte"],
+            [("kv_k", (S, H, hd), "f32"), ("kv_v", (S, H, hd), "f32"),
+             ("start", (), "i32"), ("tokens", (b,), "i32"),
+             ("feats", (b, d), "f32"), ("positions", (b,), "i32"),
+             ("mask", (b, S), "i32")],
+            ["logits", "g", "kv_k", "kv_v"],
+        )
+
+    # ---- SpS tiny LM ----
+    sL, sH, shd = scfg.n_layers, scfg.n_heads, scfg.d_head
+
+    def sps_prefill(p, tokens):
+        return gpt_prefill(p, scfg, tokens)
+
+    graphs["sps_prefill"] = (
+        sps_prefill,
+        (param_specs(sparams), spec((S,), i32)),
+        tensor_names(sparams),
+        [("tokens", (S,), "i32")],
+        ["feats", "kv_k", "kv_v", "logits"],
+    )
+
+    def sps_decode(p, kv_k, kv_v, start, tok, pos, mask):
+        return gpt_decode(p, scfg, kv_k, kv_v, start, tok, pos, mask != 0)
+
+    graphs["sps_decode_n1"] = (
+        sps_decode,
+        (param_specs(sparams), spec((sL, S, sH, shd)), spec((sL, S, sH, shd)),
+         spec((), i32), spec((1,), i32), spec((1,), i32), spec((1, S), i32)),
+        tensor_names(sparams),
+        [("kv_k", (sL, S, sH, shd), "f32"), ("kv_v", (sL, S, sH, shd), "f32"),
+         ("start", (), "i32"), ("tokens", (1,), "i32"),
+         ("positions", (1,), "i32"), ("mask", (1, S), "i32")],
+        ["logits", "feats", "kv_k", "kv_v"],
+    )
+
+    # ---- medusa ----
+    def medusa(mp, wte, feats):
+        return (medusa_apply(mp, wte, feats),)
+
+    graphs["medusa_heads"] = (
+        medusa,
+        (param_specs(mparams), spec((V, d)), spec((1, d))),
+        tensor_names(mparams) + ["wte"],
+        [("feats", (1, d), "f32")],
+        ["logits"],
+    )
+
+    return graphs
+
+
+# ---------------------------------------------------------------------------
+# goldens: greedy continuation + prefill logit fingerprints
+# ---------------------------------------------------------------------------
+
+
+def build_goldens(n_tokens=24):
+    """Greedy continuations from the trained target for rust integration
+    tests (engine output at T=0 must match these token-for-token)."""
+    tparams = jax.tree_util.tree_map(
+        jnp.asarray, ckpt.load("target", init_gpt(jax.random.PRNGKey(0), TARGET_CFG)))
+    fwd = jax.jit(lambda r: gpt_forward(tparams, TARGET_CFG, r)[1])
+    goldens = []
+    for prompt in [data.suite("dialogue", 2, seed=31)[0],
+                   data.suite("code", 2, seed=32)[0],
+                   data.suite("math", 2, seed=33)[0]]:
+        ids = data.encode(prompt, bos=True)
+        cur = len(ids)
+        row = np.zeros(256, np.int32)  # fixed shape: one jit compilation
+        row[:cur] = ids
+        out = []
+        for _ in range(n_tokens):
+            logits = np.asarray(fwd(jnp.asarray(row)))
+            nxt = int(np.argmax(logits[cur - 1]))
+            out.append(nxt)
+            row[cur] = nxt
+            cur += 1
+        # fingerprint: first-8 logits at the last prompt position (the
+        # padded row is causal, so position len-1 only sees the prompt)
+        logits0 = np.asarray(fwd(jnp.asarray(row)))[len(ids) - 1, :8]
+        goldens.append({
+            "prompt_tokens": [int(x) for x in ids],
+            "greedy_tokens": out,
+            "prefill_logits8": [float(x) for x in logits0],
+        })
+    return goldens
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=ART_DIR)
+    ap.add_argument("--skip-goldens", action="store_true")
+    ap.add_argument("--graphs", default="", help="comma-filter of graph names")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    graphs = build_graphs()
+    only = set(args.graphs.split(",")) if args.graphs else None
+
+    meta = {
+        "config": {
+            "S": S,
+            "target": vars(TARGET_CFG) if not hasattr(TARGET_CFG, "__dataclass_fields__")
+            else {k: getattr(TARGET_CFG, k) for k in TARGET_CFG.__dataclass_fields__},
+            "draft": {k: getattr(DRAFT_CFG, k) for k in DRAFT_CFG.__dataclass_fields__},
+            "sps": {k: getattr(SPS_CFG, k) for k in SPS_CFG.__dataclass_fields__},
+        },
+        "graphs": {},
+    }
+
+    for name, (fn, arg_specs, pnames, inputs, outputs) in graphs.items():
+        if only and name not in only:
+            continue
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        meta["graphs"][name] = {
+            "file": f"{name}.hlo.txt",
+            "params": pnames,
+            "inputs": [{"name": n, "shape": list(s), "dtype": t} for n, s, t in inputs],
+            "outputs": outputs,
+        }
+        print(f"lowered {name}: {len(text)} chars", flush=True)
+
+    if not args.skip_goldens and ckpt.exists("target"):
+        meta["goldens"] = build_goldens()
+        print("goldens built")
+    elif not args.skip_goldens:
+        print("WARNING: no target checkpoint; goldens skipped")
+
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {os.path.join(args.out_dir, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Checkpoint I/O: flat f32 binary + JSON manifest, shared with rust.
+
+The rust runtime (rust/src/runtime/weights.rs) reads the same format.  The
+tensor *order* inside the manifest is the jax pytree flatten order
+(sorted dict keys / list indices), which is also the order the AOT graphs
+expect their weight arguments in — so rust can zip manifest entries with
+artifact parameters 1:1.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+from jax.tree_util import tree_flatten_with_path
+
+WEIGHTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "weights")
+
+
+def flatten_named(params):
+    """-> list of (name, array) in deterministic pytree-flatten order."""
+    flat, _ = tree_flatten_with_path(params)
+    return [(jax.tree_util.keystr(path), np.asarray(leaf)) for path, leaf in flat]
+
+
+def save(name: str, params, meta: dict | None = None, directory: str | None = None):
+    directory = directory or WEIGHTS_DIR
+    os.makedirs(directory, exist_ok=True)
+    named = flatten_named(params)
+    manifest = {"tensors": [], "meta": meta or {}}
+    offset = 0
+    with open(os.path.join(directory, f"{name}.bin"), "wb") as f:
+        for tname, arr in named:
+            arr = arr.astype(np.float32)
+            f.write(arr.tobytes())
+            manifest["tensors"].append(
+                {"name": tname, "shape": list(arr.shape), "offset": offset}
+            )
+            offset += arr.size * 4
+    with open(os.path.join(directory, f"{name}.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load(name: str, like_params, directory: str | None = None):
+    """Load a checkpoint back into the structure of ``like_params``."""
+    directory = directory or WEIGHTS_DIR
+    with open(os.path.join(directory, f"{name}.json")) as f:
+        manifest = json.load(f)
+    raw = np.fromfile(os.path.join(directory, f"{name}.bin"), dtype=np.float32)
+    import jax.numpy as jnp
+
+    flat, treedef = jax.tree_util.tree_flatten(like_params)
+    arrays = []
+    for spec, leaf in zip(manifest["tensors"], flat):
+        n = int(np.prod(spec["shape"])) if spec["shape"] else 1
+        start = spec["offset"] // 4
+        arrays.append(
+            jnp.asarray(raw[start : start + n].reshape(spec["shape"]), jnp.float32))
+    assert len(arrays) == len(flat), "checkpoint/structure mismatch"
+    return jax.tree_util.tree_unflatten(treedef, arrays)
+
+
+def exists(name: str, directory: str | None = None) -> bool:
+    directory = directory or WEIGHTS_DIR
+    return os.path.exists(os.path.join(directory, f"{name}.json"))

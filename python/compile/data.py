@@ -1,0 +1,234 @@
+"""Deterministic corpus and evaluation-suite generators.
+
+The paper trains draft models on ShareGPT (68k dialogues) and evaluates on
+MT-bench (dialogue), HumanEval (code), GSM8K (math), and five WMT translation
+directions.  None of those assets are available offline, so this module builds
+the closest synthetic equivalents (see DESIGN.md §2):
+
+* ``train_corpus``      — templated multi-turn dialogues mixed with code and
+                          math text; plays the role of ShareGPT.
+* ``suite("dialogue")`` — held-out dialogue prompts  (MT-bench stand-in).
+* ``suite("code")``     — held-out code prompts      (HumanEval stand-in).
+* ``suite("math")``     — held-out math prompts      (GSM8K stand-in).
+* ``suite("xl_de" .. "xl_zh")`` — five deterministic cipher-"languages"
+                          (translation stand-ins; out-of-domain but regular).
+
+Everything is seeded and reproducible; the rust workload generator
+(rust/src/workload/) mirrors the *prompt* side of these generators exactly so
+that python-side experiments and the rust serving engine see identical inputs.
+
+Tokenizer: char-level, vocab 128.  ids 0/1/2 = PAD/BOS/EOS, 3 = '?'-fallback,
+'\n' = 10, '\t' = 9, printable ASCII 32..126 map to their own byte value.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+
+VOCAB = 128
+PAD, BOS, EOS, UNK = 0, 1, 2, 3
+
+
+def encode(text: str, bos: bool = False) -> list[int]:
+    ids = [BOS] if bos else []
+    for ch in text:
+        o = ord(ch)
+        if o in (9, 10) or 32 <= o <= 126:
+            ids.append(o)
+        else:
+            ids.append(UNK)
+    return ids
+
+
+def decode(ids) -> str:
+    out = []
+    for i in ids:
+        i = int(i)
+        if i in (PAD, BOS):
+            continue
+        if i == EOS:
+            break
+        if i in (9, 10) or 32 <= i <= 126:
+            out.append(chr(i))
+        else:
+            out.append("?")
+    return "".join(out)
+
+
+# ---------------------------------------------------------------------------
+# template pools (shared with the rust mirror — keep in sync with
+# rust/src/workload/mod.rs; changing these invalidates trained checkpoints)
+# ---------------------------------------------------------------------------
+
+TOPICS = [
+    "the weather", "a good book", "machine learning", "baking bread",
+    "planets", "music theory", "chess openings", "growing tomatoes",
+    "ocean tides", "ancient rome", "bicycles", "photography",
+]
+NAMES = ["Tom", "Ana", "Raj", "Mia", "Leo", "Sue", "Ben", "Ivy", "Max", "Zoe"]
+THINGS = ["apples", "books", "coins", "stamps", "cards", "shells", "pens", "keys"]
+ANSWER_STEMS = [
+    "That is a great question about {t}. The key idea is that {t} follows a simple pattern, and once you see the pattern it is easy to explain.",
+    "Let me explain {t} step by step. First, consider the basics. Second, look at an example. Third, practice a little every day.",
+    "Many people ask about {t}. In short, it depends on the details, but the general rule is easy to remember and apply.",
+    "Here is a summary of {t}: it is simpler than it looks. Start small, repeat often, and check your results as you go.",
+]
+QUESTION_STEMS = [
+    "Can you tell me about {t}?",
+    "What should I know about {t}?",
+    "How does {t} work?",
+    "Why is {t} interesting?",
+]
+FUNC_NAMES = ["add", "scale", "merge", "count", "clip", "fold", "rank", "swap"]
+CODE_BODIES = [
+    "def {f}_items(a, b):\n    \"\"\"Return the {f} of a and b.\"\"\"\n    result = a + b\n    return result\n",
+    "def {f}_list(xs):\n    \"\"\"Apply {f} to every item in xs.\"\"\"\n    out = []\n    for x in xs:\n        out.append(x + 1)\n    return out\n",
+    "def {f}_value(x, y):\n    \"\"\"Compute the {f} value.\"\"\"\n    if x > y:\n        return x - y\n    return y - x\n",
+    "def {f}_total(items):\n    \"\"\"Sum all items after {f}.\"\"\"\n    total = 0\n    for item in items:\n        total = total + item\n    return total\n",
+]
+
+# five deterministic "cipher languages": vowel/consonant rotations that keep
+# text regular but out of the training distribution (translation stand-ins).
+_VOWELS = "aeiou"
+
+
+def _cipher(text: str, shift: int, swap_case: bool) -> str:
+    out = []
+    for ch in text:
+        lower = ch.lower()
+        if lower in _VOWELS:
+            idx = (_VOWELS.index(lower) + shift) % 5
+            rep = _VOWELS[idx]
+            out.append(rep.upper() if ch.isupper() else rep)
+        elif swap_case and ch.isalpha():
+            out.append(ch.swapcase())
+        else:
+            out.append(ch)
+    return "".join(out)
+
+
+CIPHERS = {
+    "xl_de": (1, False),
+    "xl_fr": (2, False),
+    "xl_ja": (3, False),
+    "xl_ru": (1, True),
+    "xl_zh": (2, True),
+}
+
+
+# ---------------------------------------------------------------------------
+# document generators
+# ---------------------------------------------------------------------------
+
+def dialogue_doc(rng: random.Random, turns: int = 2) -> str:
+    parts = []
+    for _ in range(turns):
+        t = rng.choice(TOPICS)
+        q = rng.choice(QUESTION_STEMS).format(t=t)
+        a = rng.choice(ANSWER_STEMS).format(t=t)
+        parts.append(f"User: {q}\nAssistant: {a}\n")
+    return "".join(parts)
+
+
+def code_doc(rng: random.Random) -> str:
+    f = rng.choice(FUNC_NAMES)
+    body = rng.choice(CODE_BODIES).format(f=f)
+    return f"# Task: implement {f}\n{body}\n"
+
+
+def math_doc(rng: random.Random) -> str:
+    n1, n2 = rng.randint(2, 9), rng.randint(2, 9)
+    name = rng.choice(NAMES)
+    thing = rng.choice(THINGS)
+    op = rng.choice(["buys", "finds", "gets"])
+    total = n1 + n2
+    return (
+        f"Q: {name} has {n1} {thing} and {op} {n2} more. "
+        f"How many {thing} does {name} have?\n"
+        f"A: {name} starts with {n1} {thing}. {n1} + {n2} = {total}. "
+        f"The answer is {total}.\n\n"
+    )
+
+
+def translation_doc(rng: random.Random, lang: str) -> str:
+    shift, swap = CIPHERS[lang]
+    t = rng.choice(TOPICS)
+    src = rng.choice(ANSWER_STEMS).format(t=t)
+    cip = _cipher(src, shift, swap)
+    tag = lang.split("_")[1].upper()
+    return f"[{tag}] {cip}\nEnglish: {src}\n"
+
+
+def train_corpus(n_docs: int = 2000, seed: int = 1234) -> list[str]:
+    """ShareGPT stand-in: 70% dialogue, 15% code, 15% math."""
+    rng = random.Random(seed)
+    docs = []
+    for i in range(n_docs):
+        r = rng.random()
+        if r < 0.70:
+            docs.append(dialogue_doc(rng))
+        elif r < 0.85:
+            docs.append(code_doc(rng))
+        else:
+            docs.append(math_doc(rng))
+    return docs
+
+
+def suite(name: str, n_prompts: int = 16, seed: int = 777) -> list[str]:
+    """Held-out evaluation prompts.  The prompt is the prefix the engine
+    conditions on; generation continues from it."""
+    rng = random.Random(seed + hash(name) % 100003)
+    prompts = []
+    for _ in range(n_prompts):
+        if name == "dialogue":
+            t = rng.choice(TOPICS)
+            q = rng.choice(QUESTION_STEMS).format(t=t)
+            prompts.append(f"User: {q}\nAssistant:")
+        elif name == "code":
+            f = rng.choice(FUNC_NAMES)
+            prompts.append(f"# Task: implement {f}\ndef {f}_")
+        elif name == "math":
+            n1, n2 = rng.randint(2, 9), rng.randint(2, 9)
+            name_ = rng.choice(NAMES)
+            thing = rng.choice(THINGS)
+            prompts.append(
+                f"Q: {name_} has {n1} {thing} and buys {n2} more. "
+                f"How many {thing} does {name_} have?\nA:"
+            )
+        elif name in CIPHERS:
+            shift, swap = CIPHERS[name]
+            t = rng.choice(TOPICS)
+            src = rng.choice(ANSWER_STEMS).format(t=t)
+            tag = name.split("_")[1].upper()
+            prompts.append(f"[{tag}] {_cipher(src, shift, swap)}\nEnglish:")
+        else:
+            raise ValueError(f"unknown suite {name}")
+    return prompts
+
+
+SUITES = ["dialogue", "code", "math"]
+TRANSLATION_SUITES = list(CIPHERS)
+
+
+@dataclass
+class Batcher:
+    """Packs documents into fixed-length token rows for training."""
+
+    seq_len: int
+    seed: int = 99
+
+    def rows(self, docs: list[str]):
+        import numpy as np
+
+        rng = random.Random(self.seed)
+        stream: list[int] = []
+        rows = []
+        docs = list(docs)
+        rng.shuffle(docs)
+        for d in docs:
+            stream.extend(encode(d, bos=True) + [EOS])
+            while len(stream) >= self.seq_len:
+                rows.append(stream[: self.seq_len])
+                stream = stream[self.seq_len :]
+        return np.array(rows, dtype=np.int32)

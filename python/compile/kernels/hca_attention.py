@@ -1,0 +1,144 @@
+"""L1 Pallas kernel: HASS harmonized-context-alignment attention (training
+hot-spot, paper Fig. 3 / Appendix A.1).
+
+At HASS training step m the draft model must see exactly the feature context
+it will see at speculation step m during decoding: its *own* features for the
+last m-1 positions and target features before that.  Per (q_pos p, k_pos t)
+the key/value stream is ``max(M-1-(p-t), 0)`` where stream 0 holds target
+features and streams 1..M-1 the previous draft forwards (chronological).
+
+The paper implements this in PyTorch with M-1 extra full attention matrices
+and fancy-indexed band overwrites (Appendix A.1).  Kernel strategy here
+(the L1 perf contribution, see DESIGN.md §8):
+
+* one fused kernel, grid (heads, q-tiles);
+* the target-stream score tile is computed once on the MXU;
+* each of the (M-1) sub-diagonal bands is overwritten via an iota band mask
+  against the corresponding draft-stream tile — bands are *sparse* (one
+  diagonal each), so the extra MXU work is bounded by (M-1) small matmuls
+  per tile instead of M-1 full attention passes;
+* masked softmax and the post-softmax value band-correction
+  ``out += w·band ⊙ (V_d − V_t)`` are fused in-register (VMEM), never
+  materializing [M,T,T] score tensors in HBM.
+
+Lowered with ``interpret=True`` for CPU-PJRT execution (Mosaic is TPU-only).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e9
+
+
+def _kernel(pos_ref, q_ref, ks_ref, vs_ref, o_ref, *, scale, m_streams, t_q):
+    # blocks: pos (Tq, 1) int32 absolute query positions; q (Tq, hd);
+    # ks/vs (M, T, hd); o (Tq, hd); grid (heads, q-tiles).  Positions come in
+    # as data rather than pl.program_id so the kernel stays differentiable
+    # under interpret-mode autodiff (training uses grads through this).
+    q = q_ref[...]
+    t_total = ks_ref.shape[1]
+
+    k_t = ks_ref[0]
+    v_t = vs_ref[0]
+    scores = jnp.dot(q, k_t.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = pos_ref[...]  # (Tq,1) broadcasts against k_pos
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (t_q, t_total), 1)
+    band = q_pos - k_pos
+    causal = band >= 0
+
+    # band overwrites: offset i comes from stream M-1-i (most recent first)
+    for i in range(m_streams - 1):
+        k_d = ks_ref[m_streams - 1 - i]
+        s_d = jnp.dot(q, k_d.T, preferred_element_type=jnp.float32) * scale
+        scores = jnp.where(band == i, s_d, scores)
+
+    scores = jnp.where(causal, scores, NEG_INF)
+    smax = jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores - smax) * causal
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+
+    out = jnp.dot(w, v_t, preferred_element_type=jnp.float32)
+    for i in range(m_streams - 1):
+        v_d = vs_ref[m_streams - 1 - i]
+        wb = jnp.where(band == i, w, 0.0)
+        out = out + jnp.dot(wb, v_d - v_t, preferred_element_type=jnp.float32)
+    o_ref[...] = out
+
+
+@functools.lru_cache(maxsize=None)
+def _hca_vjp_wrapped(q_tile: int):
+    """Pallas forward + reference-graph backward.
+
+    Interpret-mode pallas_call does not support reverse-mode autodiff, so —
+    as with production flash-attention kernels — the kernel declares a
+    custom VJP.  The backward pass differentiates the pure-jnp reference
+    (``ref.ref_hca_attention``), which tests assert is numerically identical
+    to the kernel forward.
+    """
+
+    @jax.custom_vjp
+    def fn(q, ks, vs):
+        return _hca_forward(q, ks, vs, q_tile)
+
+    def fwd(q, ks, vs):
+        return fn(q, ks, vs), (q, ks, vs)
+
+    def bwd(res, ct):
+        q, ks, vs = res
+        _, vjp = jax.vjp(ref.ref_hca_attention, q, ks, vs)
+        return vjp(ct)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+def hca_attention(q, k_streams, v_streams, *, q_tile: int = 64):
+    """q: [T,H,hd]; k_streams/v_streams: [M,T,H,hd]. Returns [T,H,hd].
+
+    Semantics identical to ``ref.ref_hca_attention``; differentiable via a
+    custom VJP (see ``_hca_vjp_wrapped``).
+    """
+    return _hca_vjp_wrapped(q_tile)(q, k_streams, v_streams)
+
+
+def _hca_forward(q, k_streams, v_streams, q_tile: int):
+    t, h, hd = q.shape
+    m = k_streams.shape[0]
+    scale = 1.0 / float(hd) ** 0.5
+    t_q = min(q_tile, t)
+    assert t % t_q == 0, f"T={t} must be divisible by q_tile={t_q}"
+
+    qh = jnp.transpose(q, (1, 0, 2))                    # [H,T,hd]
+    ksh = jnp.transpose(k_streams, (2, 0, 1, 3))        # [H,M,T,hd]
+    vsh = jnp.transpose(v_streams, (2, 0, 1, 3))
+    pos = jnp.arange(t, dtype=jnp.int32)[:, None]       # [T,1]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, m_streams=m, t_q=t_q),
+        grid=(h, t // t_q),
+        in_specs=[
+            pl.BlockSpec((t_q, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((None, t_q, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, m, t, hd), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((None, m, t, hd), lambda i, j: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, t_q, hd), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t, hd), jnp.float32),
+        interpret=True,
+    )(pos, qh, ksh, vsh)
+    return jnp.transpose(out, (1, 0, 2))
+
+
+def flops_estimate(t: int, hd: int, h: int, m: int) -> int:
+    """Analytic FLOPs: one full QK^T+PV plus (M-1) band matmul pairs."""
+    full = 2 * 2 * t * t * hd
+    bands = (m - 1) * 2 * 2 * t * t * hd  # upper bound; bands are diag-sparse
+    return h * (full + bands)

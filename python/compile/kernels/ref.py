@@ -1,0 +1,107 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Two attention variants:
+
+* ``ref_cache_attention`` — decode-path attention: N new queries attend to an
+  S-slot KV cache under an arbitrary boolean mask (committed-prefix mask +
+  draft-tree ancestor mask).  Oracle for ``tree_attention.py``.
+
+* ``ref_hca_attention`` — HASS harmonized-context-alignment attention
+  (paper Fig. 3 / Appendix A.1): queries come from the *latest* draft-forward
+  hidden states; the key/value at offset ``b = q_pos - k_pos`` is taken from
+  the hidden states of forward ``m - b`` (so the self-key uses the current
+  forward's own features, offset-1 the previous forward's, ..., falling back
+  to the target-feature stream beyond the alignment horizon).  This is
+  exactly the feature context the draft model sees at speculation step *m*
+  during decoding.  Oracle for ``hca_attention.py``.
+
+Both operate on *post-projection* q/k/v tensors so the oracles pin down the
+attention semantics only; projections live in the model (L2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def ref_cache_attention(q, k, v, mask):
+    """q: [N,H,hd]; k,v: [S,H,hd]; mask: [N,S] bool (True = may attend).
+
+    Returns [N,H,hd]. Rows with no allowed key return zeros (matches kernel).
+    """
+    hd = q.shape[-1]
+    scores = jnp.einsum("nhd,shd->hns", q, k) / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(mask[None, :, :], scores, NEG_INF)
+    any_allowed = mask.any(axis=-1)  # [N]
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs * mask[None, :, :]
+    denom = probs.sum(axis=-1, keepdims=True)
+    probs = probs / jnp.maximum(denom, 1e-30)
+    out = jnp.einsum("hns,shd->nhd", probs, v)
+    return out * any_allowed[:, None, None]
+
+
+def ref_hca_attention(q, k_streams, v_streams):
+    """HASS banded multi-stream causal attention.
+
+    q:          [T,H,hd]   — queries from the latest forward's states.
+    k_streams:  [M,T,H,hd] — keys per stream; stream 0 = target features,
+                             stream i = i-th draft forward (chronological).
+    v_streams:  [M,T,H,hd] — values, same layout.
+
+    Key/value for (q_pos p, k_pos t) comes from stream max(M-1-(p-t), 0):
+    band 0 (self) -> latest stream M-1, band 1 -> M-2, ..., bands >= M-1 ->
+    stream 0 (target features).  Causal: t <= p.
+    """
+    M, T, H, hd = k_streams.shape
+    p_idx = jnp.arange(T)[:, None]
+    t_idx = jnp.arange(T)[None, :]
+    band = p_idx - t_idx                      # [T,T]
+    stream = jnp.maximum(M - 1 - band, 0)     # which stream provides key t
+    causal = band >= 0
+
+    # gather per-(p,t) keys/values: k_sel[p,t,h,d] = k_streams[stream[p,t],t]
+    k_sel = k_streams[stream, t_idx]          # [T,T,H,hd]
+    v_sel = v_streams[stream, t_idx]
+    scores = jnp.einsum("phd,pthd->hpt", q, k_sel) / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(causal[None], scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs * causal[None]
+    probs = probs / jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("hpt,pthd->phd", probs, v_sel)
+    return out
+
+
+def ref_hca_attention_pseudocode(q, k_streams, v_streams):
+    """Direct transliteration of the paper's Appendix A.1 pseudo-code
+    (band-*overwrite* formulation) — a second, independently-derived oracle.
+
+    Same signature/semantics as ``ref_hca_attention`` but computed the way
+    the paper does it: full attention against the target stream first, then
+    per-band score overwrites and a post-softmax value correction.
+    """
+    M, T, H, hd = k_streams.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    idx = jnp.arange(T)
+    causal = idx[:, None] >= idx[None, :]
+
+    k_t, v_t = k_streams[0], v_streams[0]
+    attn = jnp.einsum("phd,thd->hpt", q, k_t) * scale      # [H,T,T]
+    # draft streams, most recent first (pseudo-code's list[::-1])
+    for i in range(M - 1):
+        k_d = k_streams[M - 1 - i]
+        band = (idx[:, None] - idx[None, :]) == i
+        attn_d = jnp.einsum("phd,thd->hpt", q, k_d) * scale
+        attn = jnp.where(band[None], attn_d, attn)
+    attn = jnp.where(causal[None], attn, NEG_INF)
+    w = jnp.exp(attn - attn.max(axis=-1, keepdims=True))
+    w = w * causal[None]
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("hpt,thd->phd", w, v_t)
+    for i in range(M - 1):
+        v_d = v_streams[M - 1 - i]
+        band = ((idx[:, None] - idx[None, :]) == i).astype(w.dtype)
+        out = out + jnp.einsum("hpt,thd->phd", w * band[None], v_d - v_t)
+    return out

@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: draft-tree / KV-cache attention (serving hot-spot).
+
+N new tokens (a flattened draft tree, a verify block, or a single AR step)
+attend to an S-slot KV cache under an arbitrary mask that encodes both the
+committed-prefix visibility and the intra-tree ancestor relation.  This is
+the kernel inside every ``target_verify`` / ``draft_decode`` artifact the
+rust engine calls on the request path.
+
+TPU adaptation (DESIGN.md §3): the grid is (heads,); each program instance
+keeps its head's full (N, S) score tile in VMEM (N ≤ 128, S ≤ 512 →
+≤ 256 KiB f32, well inside the ~16 MiB VMEM budget), computes QK^T on the
+MXU, applies the mask via element-wise select (mask streamed from HBM once
+per head — it is shared across heads, so a production BlockSpec would pin it
+in VMEM across the grid), and fuses masked softmax + PV.  No (N,S,H) mask
+materialization in HBM, no per-band gather.
+
+CPU note: lowered with ``interpret=True`` so the emitted HLO runs on the
+CPU PJRT plugin (real-TPU lowering emits a Mosaic custom-call).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, scale):
+    # block shapes: q (N, hd), k/v (S, hd), mask (N, S), o (N, hd)
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    m = mask_ref[...]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(m, scores, NEG_INF)
+    smax = jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores - smax) * m
+    denom = jnp.sum(probs, axis=-1, keepdims=True)
+    probs = probs / jnp.maximum(denom, 1e-30)
+    o_ref[...] = jnp.dot(probs, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def tree_attention(q, k, v, mask):
+    """q: [N,H,hd]; k,v: [S,H,hd]; mask: [N,S] bool. Returns [N,H,hd].
+
+    Rows whose mask is all-False produce zeros (padding rows).
+    """
+    n, h, hd = q.shape
+    s = k.shape[0]
+    scale = 1.0 / float(hd) ** 0.5
+    # head-major layouts for per-head grid programs
+    qh = jnp.transpose(q, (1, 0, 2))  # [H,N,hd]
+    kh = jnp.transpose(k, (1, 0, 2))  # [H,S,hd]
+    vh = jnp.transpose(v, (1, 0, 2))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((None, n, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, s, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, s, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((n, s), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, n, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, n, hd), jnp.float32),
+        interpret=True,
+    )(qh, kh, vh, mask)
+    return jnp.transpose(out, (1, 0, 2))
+
+
+def vmem_bytes_estimate(n: int, s: int, hd: int) -> int:
+    """Per-program VMEM footprint estimate (DESIGN.md §Perf / real-TPU)."""
+    f32 = 4
+    return (n * hd + 2 * s * hd + 2 * n * s + n * hd) * f32

@@ -1,0 +1,144 @@
+"""Training losses: EAGLE base loss + the seven harmonized-objective
+distillation losses the paper ablates in Table 3.
+
+All distillation losses take target logits ``zq`` and draft logits ``zp``
+([T, V]) plus hyper-parameters, and return a scalar.  q = softmax(zq) is the
+teacher (target LLM) distribution, p = softmax(zp) the student (draft).
+
+* ``topk_loss``          — the paper's §3.1 loss: -Σ_{x∈Ω̂} q(x) log p(x)
+                           over the K most probable target tokens.
+* ``topp_loss``          — Ω̂ = smallest prefix of the sorted target
+                           distribution whose cumulative mass ≥ P.
+* ``normed_topk_loss``   — both distributions renormalized over Ω̂
+                           (linear or softmax normalization).
+* ``bidir_topk_loss``    — Ω̂ = top-K(q) ∪ top-K(p).
+* ``recallk_loss``       — smooth Recall@k surrogate (Patel et al. 2022):
+                           maximize σ((z_p[i] − kth-largest z_p)/τ) for the
+                           teacher's top-K tokens.
+* ``bild_loss``          — Bi-directional Logits Difference (Li et al.
+                           2024a): match pairwise logit *differences* over
+                           teacher top-k (t2s) and student top-k (s2t),
+                           filtering long-tail noise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def smooth_l1(x, y):
+    d = jnp.abs(x - y)
+    return jnp.where(d < 1.0, 0.5 * d * d, d - 0.5).mean()
+
+
+def soft_ce(zq, zp):
+    """Full-vocabulary soft cross-entropy -Σ q log p (EAGLE's logit loss)."""
+    q = jax.nn.softmax(zq, axis=-1)
+    return -(q * jax.nn.log_softmax(zp, axis=-1)).sum(-1).mean()
+
+
+def eagle_loss(g, f, zq, zp, w_cls: float = 0.1):
+    """EAGLE training loss: feature SmoothL1 + w_cls * soft CE."""
+    return smooth_l1(g, f) + w_cls * soft_ce(zq, zp)
+
+
+# ---------------------------------------------------------------------------
+# harmonized objective distillation (Table 3 menu)
+# ---------------------------------------------------------------------------
+
+
+def topk_loss(zq, zp, k: int = 10):
+    q = jax.nn.softmax(zq, axis=-1)
+    logp = jax.nn.log_softmax(zp, axis=-1)
+    topq, idx = jax.lax.top_k(q, k)
+    sel_logp = jnp.take_along_axis(logp, idx, axis=-1)
+    return -(topq * sel_logp).sum(-1).mean()
+
+
+def topp_loss(zq, zp, p: float = 0.9):
+    q = jax.nn.softmax(zq, axis=-1)
+    logp = jax.nn.log_softmax(zp, axis=-1)
+    order = jnp.argsort(-q, axis=-1)
+    q_sorted = jnp.take_along_axis(q, order, axis=-1)
+    logp_sorted = jnp.take_along_axis(logp, order, axis=-1)
+    cum = jnp.cumsum(q_sorted, axis=-1)
+    # keep tokens until cumulative mass first exceeds p (inclusive)
+    keep = (cum - q_sorted) < p
+    return -(jnp.where(keep, q_sorted * logp_sorted, 0.0)).sum(-1).mean()
+
+
+def normed_topk_loss(zq, zp, k: int = 10, norm: str = "linear"):
+    q = jax.nn.softmax(zq, axis=-1)
+    topq, idx = jax.lax.top_k(q, k)
+    zp_sel = jnp.take_along_axis(zp, idx, axis=-1)
+    if norm == "linear":
+        qn = topq / jnp.maximum(topq.sum(-1, keepdims=True), 1e-30)
+        p_sel = jnp.take_along_axis(jax.nn.softmax(zp, axis=-1), idx, axis=-1)
+        pn = p_sel / jnp.maximum(p_sel.sum(-1, keepdims=True), 1e-30)
+        return -(qn * jnp.log(jnp.maximum(pn, 1e-30))).sum(-1).mean()
+    if norm == "softmax":
+        zq_sel = jnp.take_along_axis(zq, idx, axis=-1)
+        qn = jax.nn.softmax(zq_sel, axis=-1)
+        logpn = jax.nn.log_softmax(zp_sel, axis=-1)
+        return -(qn * logpn).sum(-1).mean()
+    raise ValueError(norm)
+
+
+def bidir_topk_loss(zq, zp, k: int = 10):
+    """Distill over top-K(q) ∪ top-K(p) (union realized as two half-losses;
+    the overlap is intentionally counted once per direction, matching the
+    'distillation conducted over the most probable tokens w.r.t. the target
+    distribution as well as the draft distribution' description)."""
+    q = jax.nn.softmax(zq, axis=-1)
+    logp = jax.nn.log_softmax(zp, axis=-1)
+    _, idx_q = jax.lax.top_k(q, k)
+    _, idx_p = jax.lax.top_k(zp, k)
+    lq = -(jnp.take_along_axis(q, idx_q, -1) * jnp.take_along_axis(logp, idx_q, -1)).sum(-1)
+    lp = -(jnp.take_along_axis(q, idx_p, -1) * jnp.take_along_axis(logp, idx_p, -1)).sum(-1)
+    return 0.5 * (lq + lp).mean()
+
+
+def recallk_loss(zq, zp, k: int = 10, tau: float = 1.0):
+    """Smooth Recall@k surrogate: each teacher-top-K token should sit above
+    the student's k-th largest logit; sigmoid-relaxed and averaged."""
+    _, idx = jax.lax.top_k(zq, k)
+    zp_sel = jnp.take_along_axis(zp, idx, axis=-1)
+    kth = jax.lax.top_k(zp, k)[0][..., -1:]
+    recall = jax.nn.sigmoid((zp_sel - kth) / tau)
+    return (1.0 - recall.mean(-1)).mean()
+
+
+def bild_loss(zq, zp, k: int = 8):
+    """Bi-directional logits-difference loss (simplified BiLD).
+
+    Pairwise differences of the top-k logits (teacher-selected for t2s,
+    student-selected for s2t) are matched with a soft-CE over difference
+    rankings; long-tail tokens never enter (the paper's noise filter).
+    """
+
+    def _dir(z_sel_t, z_sel_s):
+        dt = z_sel_t[..., :, None] - z_sel_t[..., None, :]
+        ds = z_sel_s[..., :, None] - z_sel_s[..., None, :]
+        n = dt.shape[-1]
+        dt = dt.reshape(*dt.shape[:-2], n * n)
+        ds = ds.reshape(*ds.shape[:-2], n * n)
+        return -(jax.nn.softmax(dt, -1) * jax.nn.log_softmax(ds, -1)).sum(-1)
+
+    _, idx_t = jax.lax.top_k(zq, k)
+    _, idx_s = jax.lax.top_k(zp, k)
+    t2s = _dir(jnp.take_along_axis(zq, idx_t, -1), jnp.take_along_axis(zp, idx_t, -1))
+    s2t = _dir(jnp.take_along_axis(zq, idx_s, -1), jnp.take_along_axis(zp, idx_s, -1))
+    return 0.5 * (t2s + s2t).mean()
+
+
+LOSS_FNS = {
+    "topk": topk_loss,
+    "topp": topp_loss,
+    "normed_topk_linear": lambda zq, zp, k=10: normed_topk_loss(zq, zp, k, "linear"),
+    "normed_topk_softmax": lambda zq, zp, k=10: normed_topk_loss(zq, zp, k, "softmax"),
+    "bidir_topk": bidir_topk_loss,
+    "recallk": recallk_loss,
+    "bild": bild_loss,
+    "none": lambda zq, zp, **_: 0.0,
+}

@@ -1,0 +1,359 @@
+"""L2: pure-JAX model zoo for the HASS reproduction (build-time only).
+
+Everything is a plain pytree of arrays + pure functions, so every serving
+graph can be lowered to HLO text with *weights as runtime arguments*
+(DESIGN.md §1): rust swaps EAGLE/HASS/ablation checkpoints without
+re-compiling artifacts.
+
+Models
+------
+* GPT target LLM        — 4-layer char-level transformer (LLaMA stand-in).
+* EAGLE/HASS draft net  — token-embedding ⊕ previous-feature fusion fc +
+                          one transformer layer; logits via the target's
+                          (tied) LM head, exactly as in EAGLE/HASS.
+* Medusa heads          — K residual-block heads over the target feature.
+* SpS tiny LM           — independent 2-layer LM (Vicuna-68M stand-in).
+
+Graph families (used by aot.py)
+-------------------------------
+* ``gpt_forward``   — full causal forward (training / analysis).
+* ``gpt_prefill``   — forward + KV-cache export, serving prefill artifact.
+* ``gpt_decode``    — N new tokens vs an S-slot KV cache under an arbitrary
+                      [N,S] mask: AR step (N=1), chain verify, tree verify.
+* ``draft_prefill`` / ``draft_decode`` — same for the draft net (tree
+                      expansion feeds parent *features* alongside tokens).
+* ``draft_forward_hca`` — HASS training forward with harmonized context
+                      alignment (multi-stream banded attention, L1 kernel).
+
+Attention inner loops call the L1 Pallas kernels (interpret=True) or their
+pure-jnp references depending on ``HASS_KERNEL_IMPL`` (env: pallas|ref);
+tests assert both lower to identical numerics.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref as kref
+from .kernels.hca_attention import hca_attention
+from .kernels.tree_attention import tree_attention
+
+
+def kernel_impl() -> str:
+    return os.environ.get("HASS_KERNEL_IMPL", "pallas")
+
+
+def _cache_attn(q, k, v, mask):
+    if kernel_impl() == "pallas":
+        return tree_attention(q, k, v, mask)
+    return kref.ref_cache_attention(q, k, v, mask)
+
+
+def _hca_attn(q, ks, vs):
+    if kernel_impl() == "pallas":
+        tile = 64 if q.shape[0] % 64 == 0 else q.shape[0]
+        return hca_attention(q, ks, vs, q_tile=tile)
+    return kref.ref_hca_attention(q, ks, vs)
+
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class GPTConfig:
+    vocab: int = 128
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    max_seq: int = 512
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+TARGET_CFG = GPTConfig()
+DRAFT_CFG = GPTConfig(n_layers=1)
+SPS_CFG = GPTConfig(d_model=64, n_layers=2, n_heads=2, d_ff=256)
+
+N_MEDUSA_HEADS = 4
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _dense(key, n_in, n_out, scale=0.02):
+    return jax.random.normal(key, (n_in, n_out), jnp.float32) * scale
+
+
+def _block_params(key, cfg: GPTConfig):
+    ks = jax.random.split(key, 6)
+    d, f = cfg.d_model, cfg.d_ff
+    res_scale = 0.02 / (2 * cfg.n_layers) ** 0.5
+    return {
+        "ln1_g": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+        "wq": _dense(ks[0], d, d), "wk": _dense(ks[1], d, d),
+        "wv": _dense(ks[2], d, d), "wo": _dense(ks[3], d, d, res_scale),
+        "ln2_g": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+        "w1": _dense(ks[4], d, f), "b1": jnp.zeros((f,)),
+        "w2": _dense(ks[5], f, d, res_scale), "b2": jnp.zeros((d,)),
+    }
+
+
+def init_gpt(key, cfg: GPTConfig):
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    return {
+        "wte": _dense(keys[0], cfg.vocab, cfg.d_model),
+        "wpe": _dense(keys[1], cfg.max_seq, cfg.d_model, 0.01),
+        "blocks": [_block_params(keys[2 + i], cfg) for i in range(cfg.n_layers)],
+        "lnf_g": jnp.ones((cfg.d_model,)), "lnf_b": jnp.zeros((cfg.d_model,)),
+    }
+
+
+def init_draft(key, cfg: GPTConfig = DRAFT_CFG):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "fc": _dense(k1, 2 * d, d, 0.02),
+        "fc_b": jnp.zeros((d,)),
+        "wpe": _dense(k2, cfg.max_seq, d, 0.01),
+        "block": _block_params(k2, cfg),
+    }
+
+
+def init_medusa(key, cfg: GPTConfig = TARGET_CFG, n_heads: int = N_MEDUSA_HEADS):
+    d = cfg.d_model
+    heads = []
+    for _ in range(n_heads):
+        k1, k2, key = jax.random.split(key, 3)
+        heads.append({
+            "w1": _dense(k1, d, d), "b1": jnp.zeros((d,)),
+            "w2": _dense(k2, d, d, 0.001),
+        })
+    return {"heads": heads}
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def _ln(x, g, b):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _heads(x, cfg: GPTConfig):
+    return x.reshape(x.shape[0], cfg.n_heads, cfg.d_head)
+
+
+def _merge(x):
+    return x.reshape(x.shape[0], -1)
+
+
+def _mlp(b, x):
+    return jnp.dot(jax.nn.gelu(jnp.dot(x, b["w1"]) + b["b1"]), b["w2"]) + b["b2"]
+
+
+def head_logits(params, h):
+    """Tied LM head: logits = h @ wte^T (shared by target, draft, medusa)."""
+    return jnp.dot(h, params["wte"].T)
+
+
+# ---------------------------------------------------------------------------
+# GPT: full causal forward (training / prefill base)
+# ---------------------------------------------------------------------------
+
+
+def _block_causal(b, x, cfg: GPTConfig):
+    t = x.shape[0]
+    s = _ln(x, b["ln1_g"], b["ln1_b"])
+    q, k, v = (_heads(jnp.dot(s, b[w]), cfg) for w in ("wq", "wk", "wv"))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    a = kref.ref_cache_attention(q, k, v, mask)  # plain causal: jnp fast path
+    x = x + jnp.dot(_merge(a), b["wo"])
+    x = x + _mlp(b, _ln(x, b["ln2_g"], b["ln2_b"]))
+    return x
+
+
+def gpt_forward(params, cfg: GPTConfig, tokens):
+    """tokens [T] int32 -> (feats [T,d] post-final-LN, logits [T,V])."""
+    t = tokens.shape[0]
+    x = params["wte"][tokens] + params["wpe"][:t]
+    for b in params["blocks"]:
+        x = _block_causal(b, x, cfg)
+    h = _ln(x, params["lnf_g"], params["lnf_b"])
+    return h, head_logits(params, h)
+
+
+# ---------------------------------------------------------------------------
+# GPT: serving graphs (KV cache, weights-as-args)
+# ---------------------------------------------------------------------------
+
+
+def gpt_prefill(params, cfg: GPTConfig, tokens):
+    """tokens [S] -> (feats [S,d], kv_k [L,S,H,hd], kv_v, logits [S,V]).
+
+    Plain causal attention over the padded row: slots past the true prompt
+    length hold garbage but are never visible — the decode mask only admits
+    slots the engine has actually committed.
+    """
+    s_len = tokens.shape[0]
+    x = params["wte"][tokens] + params["wpe"][:s_len]
+    kv_k, kv_v = [], []
+    mask = jnp.tril(jnp.ones((s_len, s_len), bool))
+    for b in params["blocks"]:
+        sx = _ln(x, b["ln1_g"], b["ln1_b"])
+        q, k, v = (_heads(jnp.dot(sx, b[w]), cfg) for w in ("wq", "wk", "wv"))
+        kv_k.append(k)
+        kv_v.append(v)
+        a = kref.ref_cache_attention(q, k, v, mask)
+        x = x + jnp.dot(_merge(a), b["wo"])
+        x = x + _mlp(b, _ln(x, b["ln2_g"], b["ln2_b"]))
+    h = _ln(x, params["lnf_g"], params["lnf_b"])
+    return h, jnp.stack(kv_k), jnp.stack(kv_v), head_logits(params, h)
+
+
+def gpt_decode(params, cfg: GPTConfig, kv_k, kv_v, write_start, tokens,
+               positions, mask):
+    """One incremental step over N new tokens against an S-slot cache.
+
+    kv_k/kv_v [L,S,H,hd]; write_start scalar i32 (slot where the N new KV
+    rows go, contiguously); tokens [N] i32; positions [N] i32 (absolute,
+    for wpe); mask [N,S] bool — full visibility including the intra-block
+    ancestor relation (new token n sits at slot write_start+n).
+
+    Returns (logits [N,V], feats [N,d], kv_k', kv_v').
+    """
+    x = params["wte"][tokens] + params["wpe"][positions]
+    for li, b in enumerate(params["blocks"]):
+        sx = _ln(x, b["ln1_g"], b["ln1_b"])
+        q, k, v = (_heads(jnp.dot(sx, b[w]), cfg) for w in ("wq", "wk", "wv"))
+        kv_k = jax.lax.dynamic_update_slice(kv_k, k[None], (li, write_start, 0, 0))
+        kv_v = jax.lax.dynamic_update_slice(kv_v, v[None], (li, write_start, 0, 0))
+        a = _cache_attn(q, kv_k[li], kv_v[li], mask)
+        x = x + jnp.dot(_merge(a), b["wo"])
+        x = x + _mlp(b, _ln(x, b["ln2_g"], b["ln2_b"]))
+    h = _ln(x, params["lnf_g"], params["lnf_b"])
+    return head_logits(params, h), h, kv_k, kv_v
+
+
+# ---------------------------------------------------------------------------
+# EAGLE/HASS draft net
+# ---------------------------------------------------------------------------
+
+
+def draft_fuse(dparams, wte, tokens, feats):
+    """EAGLE fusion: x = fc([emb(token) ; feature])."""
+    e = wte[tokens]
+    return jnp.dot(jnp.concatenate([e, feats], axis=-1), dparams["fc"]) + dparams["fc_b"]
+
+
+def shift_feats(target_feats):
+    """Input feature at position p is the target feature of p-1 (zeros at 0)."""
+    return jnp.concatenate([jnp.zeros_like(target_feats[:1]), target_feats[:-1]], axis=0)
+
+
+def _draft_tail(b, x, a):
+    x2 = x + jnp.dot(_merge(a), b["wo"])
+    return x2 + _mlp(b, _ln(x2, b["ln2_g"], b["ln2_b"]))
+
+
+def draft_forward(dparams, wte, cfg: GPTConfig, tokens, in_feats):
+    """Full-causal draft forward (HASS training step 1 == EAGLE training).
+
+    tokens [T]; in_feats [T,d] (already shifted). Returns (g [T,d] feature
+    predictions, fused x [T,d] — the residual stream later HASS steps mix
+    into their K/V bands).
+    """
+    t = tokens.shape[0]
+    x = draft_fuse(dparams, wte, tokens, in_feats) + dparams["wpe"][:t]
+    b = dparams["block"]
+    sx = _ln(x, b["ln1_g"], b["ln1_b"])
+    q, k, v = (_heads(jnp.dot(sx, b[w]), cfg) for w in ("wq", "wk", "wv"))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    a = kref.ref_cache_attention(q, k, v, mask)
+    return _draft_tail(b, x, a), x
+
+
+def draft_forward_hca(dparams, wte, cfg: GPTConfig, tokens, in_feats,
+                      prev_fused):
+    """HASS training forward step m (m = len(prev_fused)+1 >= 2).
+
+    ``prev_fused`` — fused residual streams x of forwards 1..m-1
+    (chronological; x_1 built from target feats), detached by the caller.
+    Queries come from the current forward's fused stream; the key/value
+    stream per band offset follows Fig. 3 (L1 kernel / ref oracle).
+
+    Returns (g [T,d], fused x [T,d]).
+    """
+    t = tokens.shape[0]
+    x = draft_fuse(dparams, wte, tokens, in_feats) + dparams["wpe"][:t]
+    b = dparams["block"]
+    streams = list(prev_fused) + [x]  # stream 0 = target-feature forward
+    lns = [_ln(s, b["ln1_g"], b["ln1_b"]) for s in streams]
+    q = _heads(jnp.dot(lns[-1], b["wq"]), cfg)
+    ks = jnp.stack([_heads(jnp.dot(s, b["wk"]), cfg) for s in lns])
+    vs = jnp.stack([_heads(jnp.dot(s, b["wv"]), cfg) for s in lns])
+    a = _hca_attn(q, ks, vs)
+    return _draft_tail(b, x, a), x
+
+
+def draft_prefill(dparams, wte, cfg: GPTConfig, tokens, target_feats):
+    """Serving prefill for the draft net.
+
+    tokens [S]; target_feats [S,d] (unshifted, from gpt_prefill).  Returns
+    (kv_k [S,H,hd], kv_v [S,H,hd], g [S,d]).
+    """
+    in_feats = shift_feats(target_feats)
+    s_len = tokens.shape[0]
+    x = draft_fuse(dparams, wte, tokens, in_feats) + dparams["wpe"][:s_len]
+    b = dparams["block"]
+    sx = _ln(x, b["ln1_g"], b["ln1_b"])
+    q, k, v = (_heads(jnp.dot(sx, b[w]), cfg) for w in ("wq", "wk", "wv"))
+    mask = jnp.tril(jnp.ones((s_len, s_len), bool))
+    a = kref.ref_cache_attention(q, k, v, mask)
+    return k, v, _draft_tail(b, x, a)
+
+
+def draft_decode(dparams, wte, cfg: GPTConfig, kv_k, kv_v, write_start,
+                 tokens, in_feats, positions, mask):
+    """Tree-expansion step: B new draft nodes against the draft KV cache.
+
+    kv_k/kv_v [S,H,hd] (single layer); tokens [B]; in_feats [B,d] (parent
+    features); positions [B]; mask [B,S].  Returns (logits [B,V], g [B,d],
+    kv_k', kv_v').
+    """
+    x = draft_fuse(dparams, wte, tokens, in_feats) + dparams["wpe"][positions]
+    b = dparams["block"]
+    sx = _ln(x, b["ln1_g"], b["ln1_b"])
+    q, k, v = (_heads(jnp.dot(sx, b[w]), cfg) for w in ("wq", "wk", "wv"))
+    kv_k = jax.lax.dynamic_update_slice(kv_k, k, (write_start, 0, 0))
+    kv_v = jax.lax.dynamic_update_slice(kv_v, v, (write_start, 0, 0))
+    a = _cache_attn(q, kv_k, kv_v, mask)
+    g = _draft_tail(b, x, a)
+    return jnp.dot(g, wte.T), g, kv_k, kv_v
+
+
+# ---------------------------------------------------------------------------
+# Medusa heads
+# ---------------------------------------------------------------------------
+
+
+def medusa_apply(mparams, wte, feats):
+    """feats [N,d] -> logits [N, n_heads, V]; head k predicts token t+1+k."""
+    outs = []
+    for hp in mparams["heads"]:
+        h = feats + jnp.dot(jax.nn.silu(jnp.dot(feats, hp["w1"]) + hp["b1"]), hp["w2"])
+        outs.append(jnp.dot(h, wte.T))
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,418 @@
+"""Training pipeline (build-time): target LM, SpS tiny LM, Medusa heads, and
+every EAGLE/HASS draft variant the paper's experiments need.
+
+Variant registry (paper experiment → checkpoint name) is in ``VARIANTS``;
+``python -m compile.train --variants hass,eagle`` trains a subset,
+``--stage target`` pretrains the target, ``--stage all`` does everything in
+dependency order.  Ablation variants continually train from the base
+``eagle`` checkpoint, mirroring the paper's Table 4 protocol ("continually
+train EAGLE-2's draft model weights").
+
+HASS harmonized context alignment follows the Appendix A.1 pseudo-code:
+step m feeds the (detached) feature predictions of step m-1 as inputs and
+mixes previous-forward fused streams into the K/V bands via the L1 HCA
+attention kernel.  One deviation, documented here: the pseudo-code takes an
+optimizer step after *each* alignment forward; we take a single step on the
+β-weighted sum Σ_m β^{m-1} L_m — identical gradients up to the (tiny)
+intra-batch weight drift, and ~n× faster under jit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ckpt, data
+from .losses import LOSS_FNS, smooth_l1, soft_ce
+from .model import (DRAFT_CFG, N_MEDUSA_HEADS, SPS_CFG, TARGET_CFG,
+                    draft_forward, draft_forward_hca, draft_fuse, gpt_forward,
+                    head_logits, init_draft, init_gpt, init_medusa,
+                    medusa_apply, shift_feats)
+
+TRAIN_SEQ = 256
+
+
+# ---------------------------------------------------------------------------
+# hand-rolled AdamW (no optax offline)
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adamw_step(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    t = state["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda x: x / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda x: x / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * (mm / (jnp.sqrt(vv) + eps) + wd * p), params, mh, vh
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# target LM pretraining
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, cfg, tokens):
+    """Next-token CE over a [B,T] batch."""
+
+    def one(row):
+        _, logits = gpt_forward(params, cfg, row)
+        logp = jax.nn.log_softmax(logits[:-1], axis=-1)
+        tgt = row[1:]
+        return -jnp.take_along_axis(logp, tgt[:, None], axis=-1).mean()
+
+    return jax.vmap(one)(tokens).mean()
+
+
+def train_lm(cfg, rows, steps, bs, lr, seed=0, log_every=50, name="target"):
+    key = jax.random.PRNGKey(seed)
+    params = init_gpt(key, cfg)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, batch, lr_t):
+        loss, grads = jax.value_and_grad(lm_loss)(params, cfg, batch)
+        params, opt = adamw_step(params, grads, opt, lr_t)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    for it in range(steps):
+        idx = rng.integers(0, rows.shape[0], bs)
+        lr_t = lr * min(1.0, (it + 1) / 40) * (0.1 + 0.9 * (1 - it / steps))
+        params, opt, loss = step_fn(params, opt, jnp.asarray(rows[idx]), lr_t)
+        if it % log_every == 0 or it == steps - 1:
+            print(f"[{name}] step {it:4d} loss {float(loss):.4f} "
+                  f"({(time.time()-t0):.0f}s)", flush=True)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# feature dataset for draft training
+# ---------------------------------------------------------------------------
+
+
+def build_feature_dataset(tparams, rows, max_rows=1400):
+    """Run the target over training rows once; cache post-LN features.
+
+    Returns (tokens [N,T], feats [N,T,d]).  Target logits are re-derived on
+    the fly from feats @ wte^T (tied head) during draft training — cheap and
+    saves 128/ d× the memory.
+    """
+    rows = rows[:max_rows]
+    fwd = jax.jit(lambda r: gpt_forward(tparams, TARGET_CFG, r)[0])
+    feats = []
+    bs = 32
+    for i in range(0, rows.shape[0], bs):
+        feats.append(np.asarray(jax.vmap(fwd)(jnp.asarray(rows[i : i + bs]))))
+    return rows, np.concatenate(feats, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# self-distillation corpus (Table 8): greedy generations from the target
+# ---------------------------------------------------------------------------
+
+
+def selfdistill_rows(tparams, n_docs=400, seq=TRAIN_SEQ, seed=5150):
+    """Greedy-complete training prompts with the target model and re-pack.
+
+    Uses full re-forward per block of 32 tokens (build-time only, so the
+    simple O(T^2) loop is fine at this scale)."""
+    import random as pyrandom
+
+    rng = pyrandom.Random(seed)
+    fwd = jax.jit(lambda r: gpt_forward(tparams, TARGET_CFG, r)[1])
+    docs = []
+    for i in range(n_docs):
+        r = rng.random()
+        if r < 0.7:
+            t = rng.choice(data.TOPICS)
+            q = rng.choice(data.QUESTION_STEMS).format(t=t)
+            prompt = f"User: {q}\nAssistant:"
+        elif r < 0.85:
+            f = rng.choice(data.FUNC_NAMES)
+            prompt = f"# Task: implement {f}\ndef {f}_"
+        else:
+            n1, n2 = rng.randint(2, 9), rng.randint(2, 9)
+            nm, th = rng.choice(data.NAMES), rng.choice(data.THINGS)
+            prompt = f"Q: {nm} has {n1} {th} and buys {n2} more. How many {th} does {nm} have?\nA:"
+        ids = data.encode(prompt, bos=True)
+        ids = ids + [0] * (seq - len(ids)) if len(ids) < seq else ids[:seq]
+        cur = len(data.encode(prompt, bos=True))
+        ids = np.array(ids, np.int32)
+        # greedy continuation, recomputing every 1 token over the full row
+        for _ in range(min(160, seq - cur)):
+            logits = np.asarray(fwd(jnp.asarray(ids)))
+            nxt = int(np.argmax(logits[cur - 1]))
+            if nxt == data.EOS:
+                break
+            ids[cur] = nxt
+            cur += 1
+        docs.append(data.decode(ids[:cur]))
+        if (i + 1) % 50 == 0:
+            print(f"[selfdistill] {i+1}/{n_docs} docs", flush=True)
+    return data.Batcher(seq).rows(docs)
+
+
+# ---------------------------------------------------------------------------
+# HASS / EAGLE draft training
+# ---------------------------------------------------------------------------
+
+
+def hass_batch_loss(dparams, wte, tokens, f_target, *, align, loss_name, k,
+                    w, beta, token_align_p, rngkey, w_cls=0.1):
+    """β-weighted sum of per-alignment-step losses for one row.
+
+    tokens [T]; f_target [T,d] (target post-LN features for these tokens).
+    """
+    cfg = DRAFT_CFG
+    zq = jnp.dot(f_target, wte.T)  # teacher logits (dist of next token)
+    distill = LOSS_FNS[loss_name]
+
+    f_in = shift_feats(f_target)   # forward-1 inputs
+    total = 0.0
+    fused_streams = []
+    cur_feats = f_in
+    cur_tokens = tokens
+    g = None
+    for m in range(1, align + 1):
+        if m == 1:
+            g, x = draft_forward(dparams, wte, cfg, cur_tokens, cur_feats)
+        else:
+            # next forward's inputs: previous predictions, shifted + detached
+            cur_feats = jax.lax.stop_gradient(
+                jnp.concatenate([f_in[:1], g[:-1]], axis=0))
+            if token_align_p > 0.0:
+                rngkey, sub = jax.random.split(rngkey)
+                draft_tok = jnp.concatenate(
+                    [cur_tokens[:1],
+                     jnp.argmax(jnp.dot(g[:-1], wte.T), axis=-1)])
+                coin = jax.random.bernoulli(sub, token_align_p, cur_tokens.shape)
+                cur_tokens = jnp.where(coin, draft_tok, tokens)
+            g, x = draft_forward_hca(dparams, wte, cfg, cur_tokens, cur_feats,
+                                     fused_streams)
+        fused_streams = [jax.lax.stop_gradient(s) for s in fused_streams + [x]]
+        zp = jnp.dot(g, wte.T)
+        step_loss = (smooth_l1(g, f_target) + w_cls * soft_ce(zq, zp)
+                     + w * (distill(zq, zp, k) if loss_name != "none" else 0.0))
+        total = total + (beta ** (m - 1)) * step_loss
+    return total
+
+
+def train_draft(name, tokens_ds, feats_ds, wte, *, align=3, loss_name="topk",
+                k=10, w=1.0, beta=1.0, token_align_p=0.0, steps=400, bs=4,
+                lr=1e-3, seed=1, init_from=None, log_every=50):
+    key = jax.random.PRNGKey(seed)
+    if init_from is not None and ckpt.exists(init_from):
+        dparams = ckpt.load(init_from, init_draft(key))
+        print(f"[{name}] continuing from {init_from}")
+    else:
+        dparams = init_draft(key)
+    opt = adamw_init(dparams)
+
+    def batch_loss(dp, toks, feats, rk):
+        keys = jax.random.split(rk, toks.shape[0])
+        f = partial(hass_batch_loss, dp, wte, align=align, loss_name=loss_name,
+                    k=k, w=w, beta=beta, token_align_p=token_align_p)
+        return jax.vmap(lambda t_, f_, k_: f(t_, f_, rngkey=k_))(toks, feats, keys).mean()
+
+    @jax.jit
+    def step_fn(dp, opt, toks, feats, lr_t, rk):
+        loss, grads = jax.value_and_grad(batch_loss)(dp, toks, feats, rk)
+        dp, opt = adamw_step(dp, grads, opt, lr_t)
+        return dp, opt, loss
+
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    for it in range(steps):
+        idx = rng.integers(0, tokens_ds.shape[0], bs)
+        lr_t = lr * min(1.0, (it + 1) / 20) * (0.15 + 0.85 * (1 - it / steps))
+        key, sub = jax.random.split(key)
+        dparams, opt, loss = step_fn(dparams, opt, jnp.asarray(tokens_ds[idx]),
+                                     jnp.asarray(feats_ds[idx]), lr_t, sub)
+        if it % log_every == 0 or it == steps - 1:
+            print(f"[{name}] step {it:4d} loss {float(loss):.4f} "
+                  f"({(time.time()-t0):.0f}s)", flush=True)
+    meta = {"align": align, "loss": loss_name, "k": k, "w": w, "beta": beta,
+            "token_align_p": token_align_p, "steps": steps, "kind": "draft"}
+    ckpt.save(name, dparams, meta)
+    return dparams
+
+
+# ---------------------------------------------------------------------------
+# Medusa heads
+# ---------------------------------------------------------------------------
+
+
+def train_medusa(tokens_ds, feats_ds, wte, steps=300, bs=8, lr=1e-3, seed=3):
+    mparams = init_medusa(jax.random.PRNGKey(seed))
+    opt = adamw_init(mparams)
+
+    def loss_fn(mp, toks, feats):
+        def one(t_, f_):
+            logits = medusa_apply(mp, wte, f_)  # [T, H, V]
+            total = 0.0
+            tt = t_.shape[0]
+            for h in range(N_MEDUSA_HEADS):
+                off = h + 1
+                lp = jax.nn.log_softmax(logits[: tt - off - 1, h], axis=-1)
+                tgt = t_[off + 1 :]
+                total += -jnp.take_along_axis(lp, tgt[:, None], 1).mean()
+            return total / N_MEDUSA_HEADS
+
+        return jax.vmap(one)(toks, feats).mean()
+
+    @jax.jit
+    def step_fn(mp, opt, toks, feats, lr_t):
+        loss, grads = jax.value_and_grad(loss_fn)(mp, toks, feats)
+        mp, opt = adamw_step(mp, grads, opt, lr_t)
+        return mp, opt, loss
+
+    rng = np.random.default_rng(seed)
+    for it in range(steps):
+        idx = rng.integers(0, tokens_ds.shape[0], bs)
+        lr_t = lr * min(1.0, (it + 1) / 20)
+        mparams, opt, loss = step_fn(mparams, opt, jnp.asarray(tokens_ds[idx]),
+                                     jnp.asarray(feats_ds[idx]), lr_t)
+        if it % 50 == 0 or it == steps - 1:
+            print(f"[medusa] step {it:4d} loss {float(loss):.4f}", flush=True)
+    ckpt.save("medusa", mparams, {"kind": "medusa"})
+    return mparams
+
+
+# ---------------------------------------------------------------------------
+# variant registry (paper experiment → checkpoint)
+# ---------------------------------------------------------------------------
+
+BASE = dict(align=3, loss_name="topk", k=10, w=1.0, beta=1.0, token_align_p=0.0)
+
+VARIANTS = {
+    # main methods (Tables 1/2): eagle == EAGLE & EAGLE-2 weights
+    "eagle": dict(align=1, loss_name="none", w=0.0, steps=400),
+    "hass": dict(**BASE, steps=400),
+    # Table 4: align-step sweep (continual from eagle, like the paper)
+    "eagle2_topk": dict(align=1, loss_name="topk", k=10, w=1.0, steps=160, init_from="eagle"),
+    "hass_align2": dict(align=2, loss_name="topk", k=10, w=1.0, steps=160, init_from="eagle"),
+    "hass_align3": dict(align=3, loss_name="topk", k=10, w=1.0, steps=160, init_from="eagle"),
+    "hass_align4": dict(align=4, loss_name="topk", k=10, w=1.0, steps=160, init_from="eagle"),
+    "hass_align5": dict(align=5, loss_name="topk", k=10, w=1.0, steps=160, init_from="eagle"),
+    # Fig 4 / Table 7: K and w sweeps
+    **{f"hass_k{kk}": dict(align=3, loss_name="topk", k=kk, w=1.0, steps=160, init_from="eagle")
+       for kk in (1, 5, 50, 100)},
+    **{f"hass_w{str(ww).replace('.', '')}": dict(align=3, loss_name="topk", k=10, w=ww,
+                                                 steps=160, init_from="eagle")
+       for ww in (0.0, 0.1, 0.2, 0.5, 2.0)},
+    # Table 3: loss-function menu
+    "hass_topp": dict(align=3, loss_name="topp", k=10, w=1.0, steps=160, init_from="eagle"),
+    "hass_ntk_lin": dict(align=3, loss_name="normed_topk_linear", k=10, w=1.0, steps=160, init_from="eagle"),
+    "hass_ntk_soft": dict(align=3, loss_name="normed_topk_softmax", k=10, w=1.0, steps=160, init_from="eagle"),
+    "hass_bidir": dict(align=3, loss_name="bidir_topk", k=10, w=1.0, steps=160, init_from="eagle"),
+    "hass_recallk": dict(align=3, loss_name="recallk", k=10, w=1.0, steps=160, init_from="eagle"),
+    "hass_bild": dict(align=3, loss_name="bild", k=8, w=1.0, steps=160, init_from="eagle"),
+    # Table 5 / Fig 6: β reweighting
+    "hass_beta07": dict(align=3, loss_name="topk", k=10, w=1.0, beta=0.7, steps=160, init_from="eagle"),
+    "hass_beta05": dict(align=3, loss_name="topk", k=10, w=1.0, beta=0.5, steps=160, init_from="eagle"),
+    "hass_beta03": dict(align=3, loss_name="topk", k=10, w=1.0, beta=0.3, steps=160, init_from="eagle"),
+    # Table 6 / Fig 7: token alignment
+    "hass_tok01": dict(align=3, loss_name="none", w=0.0, token_align_p=0.1, steps=160, init_from="eagle"),
+    "hass_tok02": dict(align=3, loss_name="none", w=0.0, token_align_p=0.2, steps=160, init_from="eagle"),
+    "hass_tok10": dict(align=3, loss_name="none", w=0.0, token_align_p=1.0, steps=160, init_from="eagle"),
+    "hass_featonly": dict(align=3, loss_name="none", w=0.0, steps=160, init_from="eagle"),
+    # Table 10 / Fig 8: data proportions (fresh training, scaled steps)
+    **{f"eagle_p{p}": dict(align=1, loss_name="none", w=0.0, steps=400, fraction=1.0 / p)
+       for p in (2, 4, 8)},
+    **{f"hass_p{p}": dict(**BASE, steps=400, fraction=1.0 / p) for p in (2, 4, 8)},
+    # Table 8: self-distillation (model-generated data)
+    "eagle_mg": dict(align=1, loss_name="none", w=0.0, steps=300, selfdistill=True),
+    "hass_mg": dict(**BASE, steps=300, selfdistill=True),
+}
+
+CORE = ["eagle", "hass"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stage", default="core",
+                    help="target|sps|medusa|core|all or comma list of variants")
+    ap.add_argument("--steps-scale", type=float, default=1.0)
+    ap.add_argument("--target-steps", type=int, default=700)
+    ap.add_argument("--docs", type=int, default=2000)
+    args = ap.parse_args(argv)
+
+    rows = data.Batcher(TRAIN_SEQ).rows(data.train_corpus(args.docs))
+    print(f"corpus rows: {rows.shape}", flush=True)
+
+    def get_target():
+        if ckpt.exists("target"):
+            return ckpt.load("target", init_gpt(jax.random.PRNGKey(0), TARGET_CFG))
+        tp = train_lm(TARGET_CFG, rows, args.target_steps, 8, 3e-3, name="target")
+        ckpt.save("target", tp, {"kind": "gpt", "cfg": "target"})
+        return tp
+
+    stages = args.stage.split(",")
+    want_all = "all" in stages
+    if "target" in stages or want_all or "core" in stages:
+        tparams = get_target()
+    else:
+        tparams = ckpt.load("target", init_gpt(jax.random.PRNGKey(0), TARGET_CFG))
+
+    if "sps" in stages or want_all or "core" in stages:
+        if not ckpt.exists("sps"):
+            sp = train_lm(SPS_CFG, rows, int(500 * args.steps_scale), 8, 3e-3, name="sps")
+            ckpt.save("sps", sp, {"kind": "gpt", "cfg": "sps"})
+
+    # feature dataset (shared by draft/medusa training)
+    need_feats = want_all or "core" in stages or "medusa" in stages or any(
+        s in VARIANTS for s in stages)
+    if need_feats:
+        print("building feature dataset...", flush=True)
+        toks, feats = build_feature_dataset(tparams, rows)
+        wte = tparams["wte"]
+
+    if "medusa" in stages or want_all or "core" in stages:
+        if not ckpt.exists("medusa"):
+            train_medusa(toks, feats, wte, steps=int(300 * args.steps_scale))
+
+    variant_list = [s for s in stages if s in VARIANTS]
+    if want_all:
+        variant_list = list(VARIANTS)
+    elif "core" in stages:
+        variant_list = CORE + variant_list
+
+    for vname in variant_list:
+        if ckpt.exists(vname):
+            print(f"[{vname}] exists, skipping")
+            continue
+        spec = dict(VARIANTS[vname])
+        steps = max(20, int(spec.pop("steps") * args.steps_scale))
+        fraction = spec.pop("fraction", 1.0)
+        selfd = spec.pop("selfdistill", False)
+        if selfd:
+            sd_rows = selfdistill_rows(tparams, n_docs=150)
+            sd_toks, sd_feats = build_feature_dataset(tparams, sd_rows)
+            tt, ff = sd_toks, sd_feats
+        elif fraction < 1.0:
+            n = max(8, int(toks.shape[0] * fraction))
+            tt, ff = toks[:n], feats[:n]
+        else:
+            tt, ff = toks, feats
+        train_draft(vname, tt, ff, wte, steps=steps, **spec)
+
+    print("training done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Figures 9/10/11 harness: HASS training overhead vs alignment steps.
+
+Measures, for align-j ∈ {1..5} (align-1 == EAGLE/EAGLE-2 training):
+
+* **Fig 9  — training speed** (batch/s), measured on this machine;
+* **Fig 10 — computational cost** (GFLOPs/batch), analytic, split into the
+  paper's constant / attention / others parts (attention accumulates as
+  Σ_{i<=j} i across steps; backward = 2 × (attention + others));
+* **Fig 11 — memory** (bytes of live activations per batch, analytic
+  proxy for the paper's GPU-memory curves; CPU RSS is too noisy to
+  attribute).
+
+Paper reference points: Align-3 ≈ +66% wall-clock vs EAGLE-2 average,
+≈ 3x FLOPs; memory grows mildly and fits a single H800 at Align-5.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ckpt, data
+from .model import DRAFT_CFG, TARGET_CFG, init_draft, init_gpt
+from .train import TRAIN_SEQ, adamw_init, adamw_step, hass_batch_loss
+
+
+def analytic_flops(align: int, batch: int, seq: int = TRAIN_SEQ):
+    """(constant, attention, others, backward) GFLOPs per batch."""
+    cfg = DRAFT_CFG
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    t = seq
+    # constant: teacher head on target features (independent of align steps)
+    constant = 2 * t * d * v
+    # per-forward: fuse fc (2d->d), qkvo projections, mlp, head
+    proj = 2 * t * (2 * d * d) + 4 * 2 * t * d * d + 2 * 2 * t * d * f + 2 * t * d * v
+    # attention: step j attends over j streams' keys -> Σ_{i<=j} i scaling
+    attn_unit = 2 * 2 * t * t * d  # QK^T + PV for one stream pair
+    attn = sum(range(1, align + 1)) * attn_unit
+    others = align * proj
+    backward = 2 * (attn + others)
+    scale = batch / 1e9
+    return constant * scale, attn * scale, others * scale, backward * scale
+
+
+def activation_bytes(align: int, batch: int, seq: int = TRAIN_SEQ):
+    """Live-activation proxy: per-forward residual streams + scores kept
+    for backward, plus the detached stream stack reused across steps."""
+    cfg = DRAFT_CFG
+    d, hgt = cfg.d_model, cfg.n_heads
+    t = seq
+    per_fwd = (6 * t * d + hgt * t * t) * 4  # activations + attention probs
+    streams = align * t * d * 4              # detached fused streams
+    return batch * (align * per_fwd + streams)
+
+
+def main():
+    rows = data.Batcher(TRAIN_SEQ).rows(data.train_corpus(60, seed=2))
+    tparams = ckpt.load("target", init_gpt(jax.random.PRNGKey(0), TARGET_CFG))
+    from .model import gpt_forward
+
+    fwd = jax.jit(lambda r: gpt_forward(tparams, TARGET_CFG, r)[0])
+    feats = np.stack([np.asarray(fwd(jnp.asarray(r))) for r in rows[:8]])
+    toks = rows[:8]
+    wte = jnp.asarray(tparams["wte"])
+    batch = 2  # paper's measurement batch size
+
+    print(f"{'align':>6} {'batch/s':>9} {'rel':>6} {'fwdGF':>8} {'bwdGF':>8} "
+          f"{'totGF':>8} {'actMB':>7}")
+    base_speed = None
+    for align in range(1, 6):
+        dparams = init_draft(jax.random.PRNGKey(1))
+        opt = adamw_init(dparams)
+
+        def batch_loss(dp, tt, ff):
+            f = lambda t_, f_: hass_batch_loss(
+                dp, wte, t_, f_, align=align, loss_name="topk", k=10, w=1.0,
+                beta=1.0, token_align_p=0.0, rngkey=jax.random.PRNGKey(0))
+            return jax.vmap(f)(tt, ff).mean()
+
+        @jax.jit
+        def step(dp, opt, tt, ff):
+            loss, g = jax.value_and_grad(batch_loss)(dp, tt, ff)
+            dp, opt = adamw_step(dp, g, opt, 1e-3)
+            return dp, opt, loss
+
+        tt = jnp.asarray(toks[:batch])
+        ff = jnp.asarray(feats[:batch])
+        dparams, opt, _ = step(dparams, opt, tt, ff)  # compile
+        n = 6
+        t0 = time.time()
+        for _ in range(n):
+            dparams, opt, loss = step(dparams, opt, tt, ff)
+        jax.block_until_ready(loss)
+        dt = (time.time() - t0) / n
+        speed = 1.0 / dt
+        if base_speed is None:
+            base_speed = speed
+        c, a, o, b = analytic_flops(align, batch)
+        mb = activation_bytes(align, batch) / 1e6
+        print(f"{align:>6} {speed:>9.2f} {speed / base_speed:>6.2f} "
+              f"{c + a + o:>8.2f} {b:>8.2f} {c + a + o + b:>8.2f} {mb:>7.1f}")
+    print("\npaper shape: Align-3 ~ +66% time vs Align-1; FLOPs ~3x; "
+          "memory grows mildly (Fig 9/10/11).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Corpus / suite generator determinism and tokenizer roundtrip."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+
+
+def test_encode_decode_roundtrip_ascii():
+    s = "User: hello\nAssistant: 42 + 1 = 43\t(done)"
+    assert data.decode(data.encode(s)) == s
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.text(alphabet=st.characters(min_codepoint=32, max_codepoint=126), max_size=80))
+def test_roundtrip_printable(s):
+    assert data.decode(data.encode(s)) == s
+
+
+def test_non_ascii_maps_to_unk():
+    ids = data.encode("héllo")
+    assert data.UNK in ids
+    assert data.decode(ids) == "h?llo"
+
+
+def test_bos_eos_handling():
+    ids = data.encode("ab", bos=True) + [data.EOS] + data.encode("cd")
+    assert data.decode(ids) == "ab"  # EOS terminates
+
+
+def test_train_corpus_deterministic():
+    a = data.train_corpus(50, seed=7)
+    b = data.train_corpus(50, seed=7)
+    assert a == b
+    assert a != data.train_corpus(50, seed=8)
+
+
+def test_corpus_mixture():
+    docs = data.train_corpus(300, seed=1)
+    n_code = sum("def " in d for d in docs)
+    n_math = sum(d.startswith("Q:") for d in docs)
+    n_dlg = sum(d.startswith("User:") for d in docs)
+    assert n_dlg > n_code > 0 and n_math > 0
+    assert n_dlg + n_code + n_math == len(docs)
+
+
+def test_suites_deterministic_and_distinct():
+    for name in data.SUITES + data.TRANSLATION_SUITES:
+        p1 = data.suite(name, 8)
+        p2 = data.suite(name, 8)
+        assert p1 == p2
+        assert len(set(p1)) > 1
+
+
+def test_suite_prompts_fit_vocab():
+    for name in data.SUITES + data.TRANSLATION_SUITES:
+        for p in data.suite(name, 8):
+            ids = data.encode(p, bos=True)
+            assert all(0 <= i < data.VOCAB for i in ids)
+            assert len(ids) < 200  # prompts must fit the 512-slot cache
+
+
+def test_cipher_deterministic_and_reversible_vowels():
+    src = "the quick brown fox"
+    c1 = data._cipher(src, 1, False)
+    assert c1 != src
+    # shifting 5 times returns vowels to the start
+    back = src
+    for _ in range(5):
+        back = data._cipher(back, 1, False)
+    assert back == src
+
+
+def test_ciphers_distinct():
+    src = "speculative sampling is fun"
+    outs = {data._cipher(src, s, w) for s, w in data.CIPHERS.values()}
+    assert len(outs) == len(data.CIPHERS)
+
+
+def test_batcher_shapes():
+    rows = data.Batcher(64).rows(data.train_corpus(30, seed=2))
+    assert rows.ndim == 2 and rows.shape[1] == 64
+    assert rows.dtype == np.int32
+    assert (rows >= 0).all() and (rows < data.VOCAB).all()

@@ -1,0 +1,115 @@
+"""Distillation-loss properties (Table 3 menu)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.losses import (LOSS_FNS, bidir_topk_loss, bild_loss, eagle_loss,
+                            normed_topk_loss, recallk_loss, smooth_l1,
+                            soft_ce, topk_loss, topp_loss)
+
+V = 64
+SET = dict(deadline=None, max_examples=15)
+
+
+def logits(seed, t=6, v=V):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.normal(size=(t, v)) * 2, jnp.float32),
+            jnp.asarray(rng.normal(size=(t, v)) * 2, jnp.float32))
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_topk_with_full_vocab_equals_soft_ce(seed):
+    zq, zp = logits(seed)
+    np.testing.assert_allclose(topk_loss(zq, zp, k=V), soft_ce(zq, zp),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_topp_with_p1_equals_soft_ce(seed):
+    zq, zp = logits(seed)
+    np.testing.assert_allclose(topp_loss(zq, zp, p=1.0), soft_ce(zq, zp),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1), k=st.sampled_from([1, 5, 10]))
+def test_topk_monotone_in_k(seed, k):
+    """Adding more (positive) terms can only increase the truncated CE."""
+    zq, zp = logits(seed)
+    assert float(topk_loss(zq, zp, k)) <= float(topk_loss(zq, zp, k + 5)) + 1e-6
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_losses_finite_and_nonnegative(seed):
+    zq, zp = logits(seed)
+    for name, fn in LOSS_FNS.items():
+        val = float(fn(zq, zp)) if name != "none" else 0.0
+        assert np.isfinite(val), name
+        assert val >= -1e-6, name
+
+
+def test_normed_topk_minimized_when_student_matches_teacher():
+    zq, _ = logits(0)
+    # student == teacher should (near-)minimize the renormalized CE
+    at_match = float(normed_topk_loss(zq, zq, 10, "softmax"))
+    worse = float(normed_topk_loss(zq, zq + jnp.flip(zq, -1), 10, "softmax"))
+    assert at_match < worse
+
+
+def test_recallk_zero_when_student_ranks_teacher_topk_high():
+    zq, _ = logits(1)
+    # student = teacher scaled up -> teacher top-k far above student kth logit
+    val = float(recallk_loss(zq, zq * 50, k=5, tau=0.1))
+    assert val < 0.25
+
+
+def test_recallk_bounded():
+    zq, zp = logits(2)
+    v = float(recallk_loss(zq, zp))
+    assert 0.0 <= v <= 1.0
+
+
+def test_bild_minimal_at_match():
+    zq, _ = logits(3)
+    at_match = float(bild_loss(zq, zq))
+    rng = np.random.default_rng(4)
+    pert = zq + jnp.asarray(rng.normal(size=zq.shape), jnp.float32)
+    assert at_match <= float(bild_loss(zq, pert)) + 1e-6
+
+
+def test_bidir_between_halves():
+    zq, zp = logits(5)
+    b = float(bidir_topk_loss(zq, zp, 10))
+    assert np.isfinite(b) and b > 0
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_all_losses_differentiable(seed):
+    zq, zp = logits(seed)
+    for name, fn in LOSS_FNS.items():
+        if name == "none":
+            continue
+        g = jax.grad(lambda z: fn(zq, z))(zp)
+        assert bool(jnp.isfinite(g).all()), name
+
+
+def test_eagle_loss_components():
+    rng = np.random.default_rng(6)
+    g = jnp.asarray(rng.normal(size=(5, 8)), jnp.float32)
+    f = jnp.asarray(rng.normal(size=(5, 8)), jnp.float32)
+    zq, zp = logits(7, t=5, v=16)
+    full = float(eagle_loss(g, f, zq, zp, w_cls=0.1))
+    assert abs(full - (float(smooth_l1(g, f)) + 0.1 * float(soft_ce(zq, zp)))) < 1e-6
+    assert float(eagle_loss(f, f, zq, zq, w_cls=0.0)) < 1e-8 + 1e-6
+
+
+def test_smooth_l1_regions():
+    assert float(smooth_l1(jnp.zeros(1), jnp.asarray([0.5]))) == pytest.approx(0.125)
+    assert float(smooth_l1(jnp.zeros(1), jnp.asarray([2.0]))) == pytest.approx(1.5)

@@ -1,0 +1,177 @@
+"""L2 model graph correctness.
+
+The crucial invariants for a *lossless* speculative serving engine:
+
+1. prefill and full forward agree;
+2. incremental decode with a KV cache reproduces the full forward exactly;
+3. *tree* decode: every node's logits equal the full forward of its own
+   root-to-node path — this is what makes tree verification sound;
+4. draft-model chain decode agrees with the draft training forward
+   (training/decoding context harmony for step 1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (DRAFT_CFG, SPS_CFG, TARGET_CFG, draft_decode,
+                           draft_forward, draft_prefill, gpt_decode,
+                           gpt_forward, gpt_prefill, init_draft, init_gpt,
+                           init_medusa, medusa_apply, shift_feats)
+
+S = 96  # small cache for tests
+
+
+@pytest.fixture(scope="module")
+def target():
+    return init_gpt(jax.random.PRNGKey(0), TARGET_CFG)
+
+
+@pytest.fixture(scope="module")
+def draft():
+    return init_draft(jax.random.PRNGKey(1), DRAFT_CFG)
+
+
+def toks(n, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).integers(4, 120, n), jnp.int32)
+
+
+def pad_cache(kvk, kvv, s=S):
+    L, t, H, hd = kvk.shape
+    zk = jnp.zeros((L, s, H, hd)).at[:, :t].set(kvk)
+    zv = jnp.zeros((L, s, H, hd)).at[:, :t].set(kvv)
+    return zk, zv
+
+
+def test_prefill_equals_forward(target):
+    t = toks(40)
+    h1, logits1 = gpt_forward(target, TARGET_CFG, t)
+    h2, _, _, logits2 = gpt_prefill(target, TARGET_CFG, t)
+    np.testing.assert_allclose(h1, h2, atol=1e-5)
+    np.testing.assert_allclose(logits1, logits2, atol=1e-5)
+
+
+def test_causality(target):
+    """Perturbing a future token must not change past logits."""
+    t = toks(24)
+    _, l1 = gpt_forward(target, TARGET_CFG, t)
+    t2 = t.at[20].set((t[20] + 7) % 120)
+    _, l2 = gpt_forward(target, TARGET_CFG, t2)
+    np.testing.assert_allclose(l1[:19], l2[:19], atol=1e-6)
+    assert float(jnp.abs(l1[20:] - l2[20:]).max()) > 1e-4
+
+
+def test_incremental_decode_equals_full(target):
+    """AR decode (N=1 steps) over a cache == one full forward."""
+    plen, extra = 20, 6
+    full = toks(plen + extra, seed=3)
+    _, kvk, kvv, logits_p = gpt_prefill(target, TARGET_CFG, full[:plen])
+    kvk, kvv = pad_cache(kvk, kvv)
+    _, logits_full = gpt_forward(target, TARGET_CFG, full)
+
+    for i in range(extra):
+        cur = plen + i
+        mask = (jnp.arange(S) <= cur)[None, :]
+        lg, _, kvk, kvv = gpt_decode(
+            target, TARGET_CFG, kvk, kvv, jnp.int32(cur),
+            full[cur : cur + 1], jnp.asarray([cur], jnp.int32), mask)
+        np.testing.assert_allclose(lg[0], logits_full[cur], atol=1e-4)
+
+
+def test_tree_decode_each_node_matches_its_path(target):
+    """Branching tree: node logits == full forward over the node's path.
+
+    Tree over prefix P (len 12):       root r
+                                      /      \\
+                                     a        b
+                                     |
+                                     c
+    """
+    plen = 12
+    prefix = toks(plen, seed=4)
+    _, kvk, kvv, _ = gpt_prefill(target, TARGET_CFG, prefix)
+    kvk, kvv = pad_cache(kvk, kvv)
+
+    r, a, b, c = 30, 40, 50, 60
+    tree_tokens = jnp.asarray([r, a, b, c], jnp.int32)
+    # positions: depth below prefix
+    positions = jnp.asarray([plen, plen + 1, plen + 1, plen + 2], jnp.int32)
+    n = 4
+    mask = np.zeros((n, S), bool)
+    mask[:, :plen] = True               # all see the committed prefix
+    anc = {0: [0], 1: [0, 1], 2: [0, 2], 3: [0, 1, 3]}
+    for node, ancestors in anc.items():
+        for apos in ancestors:
+            mask[node, plen + apos] = True
+    lg, _, _, _ = gpt_decode(target, TARGET_CFG, kvk, kvv, jnp.int32(plen),
+                             tree_tokens, positions, jnp.asarray(mask))
+
+    paths = {0: [r], 1: [r, a], 2: [r, b], 3: [r, a, c]}
+    for node, path in paths.items():
+        seq = jnp.concatenate([prefix, jnp.asarray(path, jnp.int32)])
+        _, logits_full = gpt_forward(target, TARGET_CFG, seq)
+        np.testing.assert_allclose(lg[node], logits_full[-1], atol=1e-4,
+                                   err_msg=f"node {node}")
+
+
+def test_decode_mask_blocks_dead_slots(target):
+    """Slots excluded by the mask (rolled-back tree nodes) must not affect
+    the result even though their KV rows contain stale data."""
+    plen = 10
+    prefix = toks(plen, seed=5)
+    _, kvk, kvv, _ = gpt_prefill(target, TARGET_CFG, prefix)
+    kvk, kvv = pad_cache(kvk, kvv)
+    # poison slots plen..plen+4 with garbage KV
+    kvk = kvk.at[:, plen : plen + 5].set(99.0)
+    kvv = kvv.at[:, plen : plen + 5].set(-99.0)
+    cur = plen + 5  # write the new token past the poisoned region
+    mask = ((jnp.arange(S) < plen) | (jnp.arange(S) == cur))[None, :]
+    lg, _, _, _ = gpt_decode(target, TARGET_CFG, kvk, kvv, jnp.int32(cur),
+                             jnp.asarray([44], jnp.int32),
+                             jnp.asarray([plen], jnp.int32), mask)
+    seq = jnp.concatenate([prefix, jnp.asarray([44], jnp.int32)])
+    _, logits_full = gpt_forward(target, TARGET_CFG, seq)
+    np.testing.assert_allclose(lg[0], logits_full[-1], atol=1e-4)
+
+
+def test_draft_chain_decode_matches_training_forward(target, draft):
+    """Draft KV-chain decode step-by-step == the full draft training forward
+    (context harmony at speculation step 1)."""
+    tlen = 16
+    t = toks(tlen, seed=6)
+    tfeats, _ = gpt_forward(target, TARGET_CFG, t)
+    wte = target["wte"]
+
+    g_full, _ = draft_forward(draft, wte, DRAFT_CFG, t, shift_feats(tfeats))
+
+    kvk, kvv, _ = draft_prefill(draft, wte, DRAFT_CFG, t[:8], tfeats[:8])
+    zk = jnp.zeros((S, DRAFT_CFG.n_heads, DRAFT_CFG.d_head)).at[:8].set(kvk)
+    zv = jnp.zeros((S, DRAFT_CFG.n_heads, DRAFT_CFG.d_head)).at[:8].set(kvv)
+    B = 10  # decode block width (padded)
+    for i in range(8, tlen):
+        mask = np.zeros((B, S), bool)
+        mask[0, : i + 1] = True
+        tok = jnp.zeros((B,), jnp.int32).at[0].set(t[i])
+        fin = jnp.zeros((B, DRAFT_CFG.d_model)).at[0].set(tfeats[i - 1])
+        pos = jnp.zeros((B,), jnp.int32).at[0].set(i)
+        lg, g, zk, zv = draft_decode(draft, wte, DRAFT_CFG, zk, zv,
+                                     jnp.int32(i), tok, fin, pos,
+                                     jnp.asarray(mask))
+        np.testing.assert_allclose(g[0], g_full[i], atol=1e-4,
+                                   err_msg=f"pos {i}")
+
+
+def test_medusa_shapes(target):
+    mp = init_medusa(jax.random.PRNGKey(7))
+    feats = jnp.ones((3, TARGET_CFG.d_model))
+    out = medusa_apply(mp, target["wte"], feats)
+    assert out.shape == (3, 4, TARGET_CFG.vocab)
+
+
+def test_sps_config_forward():
+    sp = init_gpt(jax.random.PRNGKey(8), SPS_CFG)
+    t = toks(20, seed=9)
+    h, logits = gpt_forward(sp, SPS_CFG, t)
+    assert logits.shape == (20, SPS_CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())

@@ -1,0 +1,35 @@
+"""Fig 9/10/11 analytic-model invariants."""
+
+from compile.train_overhead import activation_bytes, analytic_flops
+
+
+def test_flops_monotone_in_align():
+    prev = 0.0
+    for align in range(1, 6):
+        c, a, o, b = analytic_flops(align, batch=2)
+        total = c + a + o + b
+        assert total > prev
+        prev = total
+
+
+def test_constant_part_is_constant():
+    c1 = analytic_flops(1, 2)[0]
+    c5 = analytic_flops(5, 2)[0]
+    assert c1 == c5
+
+
+def test_attention_part_superlinear():
+    # attention scales with sum(1..j): align-4 / align-2 should be 10/3
+    a2 = analytic_flops(2, 1)[1]
+    a4 = analytic_flops(4, 1)[1]
+    assert abs(a4 / a2 - 10.0 / 3.0) < 1e-6
+
+
+def test_backward_is_twice_attn_plus_others():
+    c, a, o, b = analytic_flops(3, 4)
+    assert abs(b - 2 * (a + o)) < 1e-9
+
+
+def test_memory_linear_in_batch_and_growing_in_align():
+    assert activation_bytes(3, 4) == 2 * activation_bytes(3, 2)
+    assert activation_bytes(4, 2) > activation_bytes(2, 2)

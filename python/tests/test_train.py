@@ -1,0 +1,131 @@
+"""Training-pipeline invariants (fast, tiny-scale)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import ckpt, data, train
+from compile.model import (DRAFT_CFG, TARGET_CFG, draft_forward, gpt_forward,
+                           init_draft, init_gpt, shift_feats)
+from compile.losses import smooth_l1, soft_ce, topk_loss
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    rows = data.Batcher(64).rows(data.train_corpus(40, seed=11))
+    tp = init_gpt(jax.random.PRNGKey(0), TARGET_CFG)
+    return rows, tp
+
+
+def test_lm_loss_near_uniform_at_init(tiny):
+    rows, tp = tiny
+    loss = float(train.lm_loss(tp, TARGET_CFG, jnp.asarray(rows[:2])))
+    assert abs(loss - np.log(128)) < 0.5
+
+
+def test_adamw_step_moves_params(tiny):
+    rows, tp = tiny
+    opt = train.adamw_init(tp)
+    loss, grads = jax.value_and_grad(train.lm_loss)(tp, TARGET_CFG,
+                                                    jnp.asarray(rows[:2]))
+    tp2, opt2 = train.adamw_step(tp, grads, opt, 1e-3)
+    assert float(jnp.abs(tp2["wte"] - tp["wte"]).max()) > 0
+    assert float(opt2["t"]) == 1.0
+
+
+def test_short_training_reduces_loss(tiny):
+    rows, _ = tiny
+    cfg = TARGET_CFG
+    p0 = init_gpt(jax.random.PRNGKey(1), cfg)
+    l0 = float(train.lm_loss(p0, cfg, jnp.asarray(rows[:4])))
+    p1 = train.train_lm(cfg, rows, steps=12, bs=4, lr=3e-3, log_every=100,
+                        name="test")
+    l1 = float(train.lm_loss(p1, cfg, jnp.asarray(rows[:4])))
+    assert l1 < l0 - 0.3
+
+
+def test_hass_loss_align1_equals_eagle_components(tiny):
+    """align=1, w=0 reduces exactly to the EAGLE loss on forward 1."""
+    rows, tp = tiny
+    toks = jnp.asarray(rows[0])
+    f, _ = gpt_forward(tp, TARGET_CFG, toks)
+    dp = init_draft(jax.random.PRNGKey(2))
+    got = float(train.hass_batch_loss(
+        dp, tp["wte"], toks, f, align=1, loss_name="none", k=10, w=0.0,
+        beta=1.0, token_align_p=0.0, rngkey=jax.random.PRNGKey(0)))
+    g, _ = draft_forward(dp, tp["wte"], DRAFT_CFG, toks, shift_feats(f))
+    zq, zp = jnp.dot(f, tp["wte"].T), jnp.dot(g, tp["wte"].T)
+    want = float(smooth_l1(g, f) + 0.1 * soft_ce(zq, zp))
+    assert abs(got - want) < 1e-5
+
+
+def test_hass_loss_beta_weighting(tiny):
+    """β=0 keeps only the first alignment step's loss."""
+    rows, tp = tiny
+    toks = jnp.asarray(rows[0])
+    f, _ = gpt_forward(tp, TARGET_CFG, toks)
+    dp = init_draft(jax.random.PRNGKey(3))
+    kw = dict(loss_name="topk", k=10, w=1.0, token_align_p=0.0,
+              rngkey=jax.random.PRNGKey(0))
+    l1 = float(train.hass_batch_loss(dp, tp["wte"], toks, f, align=1,
+                                     beta=1.0, **kw))
+    l3b0 = float(train.hass_batch_loss(dp, tp["wte"], toks, f, align=3,
+                                       beta=0.0, **kw))
+    assert abs(l1 - l3b0) < 1e-5
+
+
+def test_hass_loss_align3_grads_finite(tiny):
+    rows, tp = tiny
+    toks = jnp.asarray(rows[0])
+    f, _ = gpt_forward(tp, TARGET_CFG, toks)
+    dp = init_draft(jax.random.PRNGKey(4))
+    g = jax.grad(lambda d: train.hass_batch_loss(
+        d, tp["wte"], toks, f, align=3, loss_name="topk", k=10, w=1.0,
+        beta=0.7, token_align_p=0.0, rngkey=jax.random.PRNGKey(0)))(dp)
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree_util.tree_leaves(g))
+
+
+def test_token_alignment_path_runs(tiny):
+    rows, tp = tiny
+    toks = jnp.asarray(rows[0])
+    f, _ = gpt_forward(tp, TARGET_CFG, toks)
+    dp = init_draft(jax.random.PRNGKey(5))
+    v = float(train.hass_batch_loss(
+        dp, tp["wte"], toks, f, align=2, loss_name="none", k=10, w=0.0,
+        beta=1.0, token_align_p=0.5, rngkey=jax.random.PRNGKey(9)))
+    assert np.isfinite(v)
+
+
+def test_ckpt_roundtrip(tmp_path, tiny):
+    _, tp = tiny
+    ckpt.save("rt", tp, {"kind": "gpt"}, directory=str(tmp_path))
+    tp2 = ckpt.load("rt", tp, directory=str(tmp_path))
+    for a, b in zip(jax.tree_util.tree_leaves(tp), jax.tree_util.tree_leaves(tp2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ckpt_manifest_order_matches_flatten(tmp_path, tiny):
+    _, tp = tiny
+    ckpt.save("ord", tp, directory=str(tmp_path))
+    import json
+    man = json.load(open(tmp_path / "ord.json"))
+    names = [t["name"] for t in man["tensors"]]
+    assert names == [n for n, _ in ckpt.flatten_named(tp)]
+    # offsets are contiguous
+    off = 0
+    for t in man["tensors"]:
+        assert t["offset"] == off
+        off += int(np.prod(t["shape"]) if t["shape"] else 1) * 4
+
+
+def test_variant_registry_covers_paper_experiments():
+    v = train.VARIANTS
+    assert {"eagle", "hass", "eagle2_topk"} <= set(v)
+    assert {f"hass_align{i}" for i in (2, 3, 4, 5)} <= set(v)
+    assert {"hass_beta07", "hass_beta05", "hass_beta03"} <= set(v)
+    assert {"hass_topp", "hass_bild", "hass_recallk", "hass_bidir"} <= set(v)
+    assert {"hass_mg", "eagle_mg"} <= set(v)
+    assert {f"hass_p{p}" for p in (2, 4, 8)} <= set(v)
+    for name, spec in v.items():
+        assert 1 <= spec.get("align", 1) <= 5, name

@@ -1,0 +1,97 @@
+//! Micro-benchmarks of the L3 hot path (perf-pass instrumentation):
+//! tree build/rerank/mask-pack, sampling transforms, and — when artifacts
+//! are present — the real per-graph call latencies that dominate a
+//! drafting-verification cycle.
+//!
+//! `cargo bench --bench bench_cycle`
+
+use std::rc::Rc;
+
+use hass::bench::bench;
+use hass::engine::build_method;
+use hass::runtime::Runtime;
+use hass::sampling::{process_logits, SampleParams};
+use hass::spec::{GenRequest, MethodCfg};
+use hass::tokenizer;
+use hass::tree::Tree;
+use hass::util::rng::Rng;
+
+fn random_tree(rng: &mut Rng, levels: usize, beam: usize) -> Tree {
+    let mut t = Tree::new(1);
+    let mut frontier = vec![0usize];
+    for _ in 0..levels {
+        let mut next = Vec::new();
+        for &p in frontier.iter().take(beam) {
+            for _ in 0..beam {
+                let lp = -(rng.next_f32() * 3.0 + 0.01);
+                next.push(t.add_child(p, rng.gen_range(128) as i32, lp));
+            }
+        }
+        frontier = next;
+    }
+    t
+}
+
+fn main() {
+    println!("== L3 micro-benchmarks ==");
+    let mut rng = Rng::new(7);
+    let tree = random_tree(&mut rng, 6, 10);
+    println!("tree nodes: {}", tree.nodes.len());
+
+    bench("tree: build (6 levels x beam 10)", 3, 50, || {
+        let mut r = Rng::new(7);
+        let t = random_tree(&mut r, 6, 10);
+        std::hint::black_box(t.nodes.len());
+    });
+    bench("tree: rerank top-60", 3, 200, || {
+        std::hint::black_box(tree.rerank(60).len());
+    });
+    let plan = tree.rerank(60);
+    bench("tree: ancestor mask pack (61 rows)", 3, 200, || {
+        std::hint::black_box(plan.block_mask().len());
+    });
+
+    let logits: Vec<f32> = (0..128).map(|i| ((i * 37) % 97) as f32 / 17.0).collect();
+    let p1 = SampleParams { temperature: 1.0, top_p: 0.9, ..Default::default() };
+    bench("sampling: process_logits (V=128, top-p)", 10, 2000, || {
+        std::hint::black_box(process_logits(&logits, &p1));
+    });
+    let p0 = SampleParams { temperature: 0.0, ..Default::default() };
+    bench("sampling: process_logits greedy", 10, 2000, || {
+        std::hint::black_box(process_logits(&logits, &p0));
+    });
+
+    // real-graph latencies (skipped without artifacts)
+    let dir = hass::artifact_dir();
+    if !dir.join("meta.json").exists() || !dir.join("weights/hass.json").exists() {
+        println!("(artifacts/weights missing: skipping end-to-end cycle benches)");
+        return;
+    }
+    println!("\n== end-to-end cycle benches (real PJRT graphs) ==");
+    let rt = Rc::new(Runtime::new(&dir).expect("runtime"));
+    let mut m = build_method(&rt, "hass", &MethodCfg::default()).unwrap();
+    let req = GenRequest {
+        prompt_tokens: tokenizer::encode(
+            "User: Can you tell me about the weather?\nAssistant:", true),
+        max_new: 48,
+        params: SampleParams { temperature: 0.0, ..Default::default() },
+    };
+    // warm the compile caches
+    let _ = m.generate(&req).unwrap();
+    rt.reset_stats();
+    let out = m.generate(&req).unwrap();
+    println!(
+        "hass 48-token request: tau={:.2} cycles={} target_calls={} draft_calls={}",
+        out.metrics.tau(), out.metrics.cycles,
+        out.metrics.target_calls, out.metrics.draft_calls
+    );
+    println!("phase split: draft={:.1}ms verify={:.1}ms sample={:.1}ms host={:.1}ms",
+        out.metrics.phases.draft_s * 1e3, out.metrics.phases.verify_s * 1e3,
+        out.metrics.phases.sample_s * 1e3, out.metrics.phases.host_s * 1e3);
+    for (g, s) in rt.call_stats() {
+        println!(
+            "  {g:<22} calls={:>5} mean={:>8.3}ms total={:>7.3}s",
+            s.calls, s.secs / s.calls.max(1) as f64 * 1e3, s.secs
+        );
+    }
+}

@@ -1,0 +1,42 @@
+//! End-to-end paper-table benches: regenerates every table/figure the
+//! evaluation section reports (fast settings; `hass table N --prompts 16
+//! --tokens 64` for the full runs).  One bench per table per DESIGN.md §5.
+//!
+//! `cargo bench --bench bench_tables`          (tables 1, 2 + figure 5)
+//! `cargo bench --bench bench_tables -- all`   (every table, incl. 9)
+
+use std::rc::Rc;
+
+use hass::runtime::Runtime;
+use hass::tables::{run_figure, run_table, Harness};
+use hass::workload::Workloads;
+
+fn main() -> anyhow::Result<()> {
+    let all = std::env::args().any(|a| a == "all");
+    let dir = hass::artifact_dir();
+    if !dir.join("meta.json").exists() || !dir.join("weights/target.json").exists() {
+        println!("bench_tables: artifacts/weights missing — run `make artifacts train` first");
+        return Ok(());
+    }
+    let rt = Rc::new(Runtime::new(&dir)?);
+    let wl = Workloads::load(&dir).unwrap_or_else(|_| Workloads::embedded());
+    // fast bench settings: 3 prompts x 24 tokens per combo
+    let mut h = Harness::new(rt, wl, 3, 24)?;
+
+    let tables: &[&str] = if all {
+        &["1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11"]
+    } else {
+        &["1", "2"]
+    };
+    for t in tables {
+        if let Err(e) = run_table(&mut h, t) {
+            println!("table {t}: {e:#}");
+        }
+    }
+    for f in ["1", "5"] {
+        if let Err(e) = run_figure(&mut h, f) {
+            println!("figure {f}: {e:#}");
+        }
+    }
+    Ok(())
+}

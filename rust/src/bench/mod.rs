@@ -1,0 +1,64 @@
+//! Micro-bench harness (criterion substitute for the offline build):
+//! warmup, timed iterations, and a summary line — used by `cargo bench`
+//! targets and the perf pass.
+
+use std::time::Instant;
+
+use crate::util::stats::{summarize, Summary};
+
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+/// Run `f` for `warmup` + `iters` iterations; prints + returns stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let summary = summarize(&samples);
+    println!(
+        "{name:<40} {:>10.3}us/iter  p50={:>10.3}us  p99={:>10.3}us  (n={})",
+        summary.mean * 1e6,
+        summary.p50 * 1e6,
+        summary.p99 * 1e6,
+        iters
+    );
+    BenchResult { name: name.to_string(), summary }
+}
+
+/// Time a single run of `f` (for end-to-end benches where iterations are
+/// internal).
+pub fn bench_once<F: FnOnce() -> R, R>(name: &str, f: F) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{name:<40} {:>10.1}ms", dt * 1e3);
+    (r, dt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_iterations() {
+        let mut count = 0;
+        let r = bench("noop", 2, 10, || count += 1);
+        assert_eq!(count, 12);
+        assert_eq!(r.summary.n, 10);
+    }
+
+    #[test]
+    fn bench_once_returns_value() {
+        let (v, dt) = bench_once("compute", || 21 * 2);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Acceptance + timing metrics (τ, per-depth α, phase breakdown) — the
+//! quantities every paper table/figure is built from.
+
+use crate::util::stats::PhaseTimer;
+
+pub const MAX_DEPTH_TRACKED: usize = 16;
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// drafting-verification cycles executed
+    pub cycles: usize,
+    /// tokens emitted (accepted + bonus per cycle)
+    pub new_tokens: usize,
+    /// per-depth: how many cycles reached speculation step d (0-based)
+    pub reached: [usize; MAX_DEPTH_TRACKED],
+    /// per-depth: how many of those accepted the draft token at step d
+    pub accepted: [usize; MAX_DEPTH_TRACKED],
+    /// wall-clock phases
+    pub phases: PhaseTimer,
+    /// target-model graph invocations (verify or AR steps)
+    pub target_calls: usize,
+    /// draft-model graph invocations
+    pub draft_calls: usize,
+    /// total draft tokens sent for verification
+    pub draft_tokens_verified: usize,
+}
+
+impl Metrics {
+    /// Acceptance length τ: mean tokens per drafting-verification cycle.
+    pub fn tau(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.new_tokens as f64 / self.cycles as f64
+    }
+
+    /// Per-step acceptance rate α_d (paper Fig. 5/6): P(accept at step d |
+    /// reached step d).
+    pub fn alpha(&self, d: usize) -> f64 {
+        if d >= MAX_DEPTH_TRACKED || self.reached[d] == 0 {
+            return 0.0;
+        }
+        self.accepted[d] as f64 / self.reached[d] as f64
+    }
+
+    pub fn alphas(&self, max_d: usize) -> Vec<f64> {
+        (0..max_d).map(|d| self.alpha(d)).collect()
+    }
+
+    pub fn record_cycle(&mut self, accepted_depth: usize, emitted: usize) {
+        self.cycles += 1;
+        self.new_tokens += emitted;
+        for d in 0..accepted_depth.min(MAX_DEPTH_TRACKED) {
+            self.reached[d] += 1;
+            self.accepted[d] += 1;
+        }
+        if accepted_depth < MAX_DEPTH_TRACKED {
+            self.reached[accepted_depth] += 1;
+        }
+    }
+
+    pub fn merge(&mut self, o: &Metrics) {
+        self.cycles += o.cycles;
+        self.new_tokens += o.new_tokens;
+        for d in 0..MAX_DEPTH_TRACKED {
+            self.reached[d] += o.reached[d];
+            self.accepted[d] += o.accepted[d];
+        }
+        self.phases.add(&o.phases);
+        self.target_calls += o.target_calls;
+        self.draft_calls += o.draft_calls;
+        self.draft_tokens_verified += o.draft_tokens_verified;
+    }
+}
+
+/// Device cost model for the paper's speedup accounting (DESIGN.md §7).
+///
+/// `measured` uses honest CPU wall-clock.  `modeled` prices each target
+/// forward (1..=N tokens) at ~one memory-bound AR step and each draft step
+/// at `draft_ratio` of that — the H800 regime Table 2 reflects — while
+/// charging the *measured* L3 overhead (tree/sampling/host) as-is.
+///
+/// `draft_ratio` defaults to the *paper's* draft/target ratio (a 1-layer
+/// EAGLE head over a 32-layer LLaMA, ~0.05 of an AR step when
+/// memory-bound), not this testbed's 1-vs-4-layer ratio: the modeled
+/// accounting exists precisely to translate measured acceptance behaviour
+/// into the paper's device regime (DESIGN.md §7).
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// seconds per target AR step (calibrated on this machine)
+    pub t_ar: f64,
+    /// verify-call overhead multiplier vs a plain AR step
+    pub verify_factor: f64,
+    /// draft step cost as a fraction of an AR step
+    pub draft_ratio: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { t_ar: 1.0, verify_factor: 1.05, draft_ratio: 0.05 }
+    }
+}
+
+impl CostModel {
+    /// Modeled wall-time for a run described by `m`.
+    pub fn modeled_time(&self, m: &Metrics, host_overhead_s: f64) -> f64 {
+        self.t_ar
+            * (m.target_calls as f64 * self.verify_factor
+                + m.draft_calls as f64 * self.draft_ratio)
+            + host_overhead_s
+    }
+
+    /// Modeled vanilla-AR time for the same number of emitted tokens.
+    pub fn vanilla_time(&self, tokens: usize) -> f64 {
+        self.t_ar * tokens as f64
+    }
+
+    pub fn modeled_speedup(&self, m: &Metrics, host_overhead_s: f64) -> f64 {
+        let t = self.modeled_time(m, host_overhead_s);
+        if t <= 0.0 {
+            return 0.0;
+        }
+        self.vanilla_time(m.new_tokens) / t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tau_counts_tokens_per_cycle() {
+        let mut m = Metrics::default();
+        m.record_cycle(3, 4); // 3 accepted + bonus
+        m.record_cycle(0, 1); // nothing accepted, bonus only
+        assert!((m.tau() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_semantics() {
+        let mut m = Metrics::default();
+        // cycle 1: accepted depth 2 (steps 0,1 accepted; step 2 reached+rejected)
+        m.record_cycle(2, 3);
+        // cycle 2: accepted depth 0 (step 0 reached+rejected)
+        m.record_cycle(0, 1);
+        assert!((m.alpha(0) - 0.5).abs() < 1e-12);
+        assert!((m.alpha(1) - 1.0).abs() < 1e-12);
+        assert_eq!(m.alpha(2), 0.0);
+        assert_eq!(m.reached[2], 1);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Metrics::default();
+        a.record_cycle(1, 2);
+        let mut b = Metrics::default();
+        b.record_cycle(3, 4);
+        a.merge(&b);
+        assert_eq!(a.cycles, 2);
+        assert_eq!(a.new_tokens, 6);
+    }
+
+    #[test]
+    fn cost_model_speedup_grows_with_tau() {
+        let cm = CostModel { t_ar: 0.01, verify_factor: 1.0, draft_ratio: 0.1 };
+        let mut fast = Metrics::default();
+        fast.target_calls = 10;
+        fast.draft_calls = 60;
+        fast.new_tokens = 50; // tau 5
+        let mut slow = Metrics::default();
+        slow.target_calls = 25;
+        slow.draft_calls = 150;
+        slow.new_tokens = 50; // tau 2
+        assert!(cm.modeled_speedup(&fast, 0.0) > cm.modeled_speedup(&slow, 0.0));
+        // vanilla == 1.0x: one target call per token, no drafts
+        let mut v = Metrics::default();
+        v.target_calls = 50;
+        v.new_tokens = 50;
+        let s = cm.modeled_speedup(&v, 0.0);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

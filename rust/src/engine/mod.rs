@@ -1,0 +1,176 @@
+//! Engine: method factory, suite runner, device-cost calibration.
+
+pub mod metrics;
+pub mod sessions;
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Runtime;
+use crate::sampling::SampleParams;
+use crate::spec::eagle::{build_eagle, TreeKind};
+use crate::spec::lookup::{Lookup, LookupKind};
+use crate::spec::medusa::Medusa;
+use crate::spec::sps::Sps;
+use crate::spec::vanilla::Vanilla;
+use crate::spec::{GenOutput, GenRequest, Method, MethodCfg};
+use crate::tokenizer;
+use crate::util::stats::{summarize, Stopwatch, Summary};
+
+pub use metrics::{CostModel, Metrics};
+
+/// Method names of the paper's comparison set (Tables 1/2 order).
+pub const PAPER_METHODS: &[&str] = &[
+    "pld", "lookahead", "sps", "medusa", "eagle", "eagle2", "hass",
+];
+
+/// Build a method by name.  `eagle2:<ckpt>` / `hass:<ckpt>` select an
+/// ablation draft checkpoint with EAGLE-2 decoding.
+pub fn build_method(rt: &Rc<Runtime>, name: &str, cfg: &MethodCfg) -> Result<Box<dyn Method>> {
+    let target_w = rt.checkpoint("target")?;
+    let (kind, ckpt_name, label): (Option<TreeKind>, String, String) = match name {
+        "vanilla" => return Ok(Box::new(Vanilla::new(rt.clone(), target_w)?)),
+        "sps" => {
+            return Ok(Box::new(Sps::new(
+                rt.clone(),
+                target_w,
+                rt.checkpoint("sps")?,
+                cfg.gamma,
+            )?))
+        }
+        "pld" => {
+            return Ok(Box::new(Lookup::new(
+                rt.clone(),
+                target_w,
+                LookupKind::Pld,
+                cfg.lookup_len,
+            )?))
+        }
+        "lookahead" => {
+            return Ok(Box::new(Lookup::new(
+                rt.clone(),
+                target_w,
+                LookupKind::Lookahead,
+                cfg.lookup_len,
+            )?))
+        }
+        "medusa" => {
+            return Ok(Box::new(Medusa::new(
+                rt.clone(),
+                target_w,
+                rt.checkpoint("medusa")?,
+            )?))
+        }
+        "eagle" => (Some(TreeKind::Static), "eagle".into(), "eagle".into()),
+        "eagle2" => (Some(TreeKind::Dynamic), "eagle".into(), "eagle2".into()),
+        "hass" => (Some(TreeKind::Dynamic), cfg.draft_ckpt.clone(), "hass".into()),
+        other => {
+            // "eagle2:<ckpt>" or "hass:<ckpt>" — ablation checkpoints
+            if let Some((base, ck)) = other.split_once(':') {
+                if base == "eagle2" || base == "hass" {
+                    (Some(TreeKind::Dynamic), ck.to_string(), other.to_string())
+                } else {
+                    bail!("unknown method '{other}'")
+                }
+            } else {
+                bail!("unknown method '{other}'")
+            }
+        }
+    };
+    let _ = kind;
+    Ok(Box::new(build_eagle(
+        rt.clone(),
+        target_w,
+        rt.checkpoint(&ckpt_name)?,
+        if name == "eagle" { TreeKind::Static } else { TreeKind::Dynamic },
+        &label,
+        cfg.depth,
+        cfg.beam,
+        cfg.total_tokens,
+    )?))
+}
+
+/// Aggregated result of running one method over a prompt suite.
+#[derive(Clone, Debug)]
+pub struct SuiteResult {
+    pub method: String,
+    pub suite: String,
+    pub n_prompts: usize,
+    pub tau: f64,
+    pub alphas: Vec<f64>,
+    pub wall_s: f64,
+    pub tokens: usize,
+    pub metrics: Metrics,
+    pub latency: Summary,
+    /// measured tokens/second
+    pub tok_per_s: f64,
+}
+
+pub fn run_suite(
+    method: &mut dyn Method,
+    suite_name: &str,
+    prompts: &[String],
+    max_new: usize,
+    params: &SampleParams,
+) -> Result<SuiteResult> {
+    let mut total = Metrics::default();
+    let mut latencies = Vec::new();
+    let mut tokens = 0usize;
+    let sw = Stopwatch::start();
+    for (i, p) in prompts.iter().enumerate() {
+        let req = GenRequest {
+            prompt_tokens: tokenizer::encode(p, true),
+            max_new,
+            params: SampleParams { seed: params.seed ^ (i as u64).wrapping_mul(0x9E37), ..*params },
+        };
+        let lsw = Stopwatch::start();
+        let out = method.generate(&req)?;
+        latencies.push(lsw.secs());
+        tokens += out.tokens.len();
+        total.merge(&out.metrics);
+    }
+    let wall = sw.secs();
+    Ok(SuiteResult {
+        method: method.name(),
+        suite: suite_name.to_string(),
+        n_prompts: prompts.len(),
+        tau: total.tau(),
+        alphas: total.alphas(8),
+        wall_s: wall,
+        tokens,
+        metrics: total,
+        latency: summarize(&latencies),
+        tok_per_s: tokens as f64 / wall,
+    })
+}
+
+/// Run a single generation and return (text, output).
+pub fn generate_once(
+    rt: &Rc<Runtime>,
+    method_name: &str,
+    cfg: &MethodCfg,
+    prompt: &str,
+    max_new: usize,
+    params: &SampleParams,
+) -> Result<(String, GenOutput)> {
+    let mut m = build_method(rt, method_name, cfg)?;
+    let req = GenRequest { prompt_tokens: tokenizer::encode(prompt, true), max_new, params: *params };
+    let out = m.generate(&req)?;
+    Ok((tokenizer::decode(&out.tokens), out))
+}
+
+/// Calibrate the cost model: measure the mean wall time of a target AR
+/// step on this machine (the paper-regime device model prices verify ≈ AR).
+pub fn calibrate(rt: &Rc<Runtime>, steps: usize) -> Result<CostModel> {
+    let mut v = Vanilla::new(rt.clone(), rt.checkpoint("target")?)?;
+    let req = GenRequest {
+        prompt_tokens: tokenizer::encode("User: calibrate the device model please\nAssistant:", true),
+        max_new: steps.max(8),
+        params: SampleParams { temperature: 0.0, ..Default::default() },
+    };
+    let sw = Stopwatch::start();
+    let out = v.generate(&req)?;
+    let t_ar = sw.secs() / out.tokens.len().max(1) as f64;
+    Ok(CostModel { t_ar, ..Default::default() })
+}

@@ -1,0 +1,487 @@
+//! Per-request model sessions: thin, stateful wrappers over the AOT graphs.
+//!
+//! A session owns the host-side KV cache and the argument plumbing for one
+//! model (target GPT, EAGLE/HASS draft net, SpS tiny LM, Medusa heads).
+//! All graph outputs come back as host tensors; the engine layers the
+//! speculative policies (spec/) on top.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::kvcache::KvCache;
+use crate::runtime::{scalar_i32, Checkpoint, Runtime, TensorF, TensorI};
+
+/// Pick the smallest compiled decode-block width that fits `n` rows.
+pub fn pick_block(n: usize) -> Result<usize> {
+    for cand in [1usize, 8, 64, 128] {
+        if n <= cand {
+            return Ok(cand);
+        }
+    }
+    bail!("verification block of {n} rows exceeds the largest artifact (128)")
+}
+
+fn call(
+    rt: &Runtime,
+    graph: &str,
+    weights: &[Literal],
+    extra_weights: &[&Literal],
+    inputs: &[Literal],
+) -> Result<Vec<Literal>> {
+    let mut args: Vec<&Literal> = Vec::with_capacity(weights.len() + extra_weights.len() + inputs.len());
+    args.extend(weights.iter());
+    args.extend(extra_weights.iter().copied());
+    args.extend(inputs.iter());
+    rt.call(graph, &args)
+}
+
+fn tensor_out(lits: &[Literal], i: usize) -> Result<TensorF> {
+    TensorF::from_literal(lits.get(i).context("missing graph output")?)
+}
+
+/// Output of a decode/verify call.
+pub struct DecodeOut {
+    /// [N, V] logits
+    pub logits: TensorF,
+    /// [N, d] post-LN features
+    pub feats: TensorF,
+}
+
+// ---------------------------------------------------------------------------
+// target GPT session
+// ---------------------------------------------------------------------------
+
+pub struct TargetSession {
+    rt: Rc<Runtime>,
+    pub weights: Rc<Checkpoint>,
+    pub cache: KvCache,
+    pub slots: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    /// features of the committed sequence, one row per committed token
+    /// (needed as draft inputs); grown incrementally.
+    pub feats: Vec<Vec<f32>>,
+}
+
+impl TargetSession {
+    pub fn new(rt: Rc<Runtime>, weights: Rc<Checkpoint>) -> Result<TargetSession> {
+        let (slots, layers, heads, d_model, vocab) = {
+            let m = rt.meta();
+            (m.cache_slots(), m.dim("target", "n_layers"),
+             m.dim("target", "n_heads"), m.dim("target", "d_model"),
+             m.dim("target", "vocab"))
+        };
+        let hd = d_model / heads.max(1);
+        Ok(TargetSession {
+            rt,
+            weights,
+            cache: KvCache::new(layers, slots, heads, hd),
+            slots,
+            vocab,
+            d_model,
+            feats: Vec::new(),
+        })
+    }
+
+    pub fn reset(&mut self) {
+        self.cache.reset();
+        self.feats.clear();
+    }
+
+    /// Prefill the prompt; returns the logits row at the last prompt token.
+    pub fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        if tokens.is_empty() || tokens.len() > self.slots {
+            bail!("prompt length {} out of range", tokens.len());
+        }
+        let mut padded = vec![0i32; self.slots];
+        padded[..tokens.len()].copy_from_slice(tokens);
+        let inp = TensorI::new(vec![self.slots], padded)?.to_literal()?;
+        let out = call(&self.rt, "target_prefill", &self.weights.literals, &[], &[inp])?;
+        let feats = tensor_out(&out, 0)?;
+        let kv_k = tensor_out(&out, 1)?;
+        let kv_v = tensor_out(&out, 2)?;
+        let logits = tensor_out(&out, 3)?;
+        self.cache.absorb(kv_k, kv_v)?;
+        self.cache.committed = tokens.len();
+        self.feats = (0..tokens.len()).map(|i| feats.row(i).to_vec()).collect();
+        Ok(logits.row(tokens.len() - 1).to_vec())
+    }
+
+    /// Verify/decode a block of `tokens` (chain or tree).  `positions` are
+    /// absolute sequence positions; `block_anc` is the intra-block ancestor
+    /// mask (None = chain).  Returns per-row logits + features; KV rows are
+    /// written at the committed boundary (commit/compact is the caller's
+    /// decision).
+    pub fn decode(
+        &mut self,
+        tokens: &[i32],
+        positions: &[usize],
+        block_anc: Option<&[Vec<bool>]>,
+    ) -> Result<DecodeOut> {
+        let n = tokens.len();
+        let nb = pick_block(n)?;
+        if self.cache.committed + nb > self.slots {
+            bail!("target cache exhausted ({} + {nb} > {})", self.cache.committed, self.slots);
+        }
+        // pad rows to the block width
+        let mut tok = vec![0i32; nb];
+        tok[..n].copy_from_slice(tokens);
+        let mut pos = vec![0i32; nb];
+        for (i, &p) in positions.iter().enumerate() {
+            pos[i] = p as i32;
+        }
+        // pad ancestor mask with all-false rows (padding rows see nothing)
+        let mask = match block_anc {
+            Some(anc) => {
+                let mut padded: Vec<Vec<bool>> = anc.to_vec();
+                for row in padded.iter_mut() {
+                    row.resize(nb, false);
+                }
+                padded.resize(nb, vec![false; nb]);
+                self.cache.block_mask(nb, Some(&padded))
+            }
+            None => {
+                let mut m = self.cache.block_mask(nb, None);
+                // zero out padding rows entirely
+                for row in n..nb {
+                    for s in 0..self.slots {
+                        m.data[row * self.slots + s] = 0;
+                    }
+                }
+                m
+            }
+        };
+        let graph = format!("target_decode_n{nb}");
+        let out = call(
+            &self.rt,
+            &graph,
+            &self.weights.literals,
+            &[],
+            &[
+                crate::runtime::tensor::f32_literal(
+                    &[self.cache.layers, self.cache.slots, self.cache.heads, self.cache.head_dim],
+                    &self.cache.k)?,
+                crate::runtime::tensor::f32_literal(
+                    &[self.cache.layers, self.cache.slots, self.cache.heads, self.cache.head_dim],
+                    &self.cache.v)?,
+                scalar_i32(self.cache.committed as i32),
+                TensorI::new(vec![nb], tok)?.to_literal()?,
+                TensorI::new(vec![nb], pos)?.to_literal()?,
+                mask.to_literal()?,
+            ],
+        )?;
+        let logits = tensor_out(&out, 0)?;
+        let feats = tensor_out(&out, 1)?;
+        self.cache.absorb(tensor_out(&out, 2)?, tensor_out(&out, 3)?)?;
+        Ok(DecodeOut { logits, feats })
+    }
+
+    /// Commit block rows after acceptance (rows strictly increasing) and
+    /// record their features as committed context.
+    pub fn commit_rows(&mut self, rows: &[usize], feats: &TensorF) -> Result<()> {
+        self.cache.compact_accepted(rows)?;
+        for &r in rows {
+            self.feats.push(feats.row(r).to_vec());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EAGLE/HASS draft session
+// ---------------------------------------------------------------------------
+
+pub struct DraftSession {
+    rt: Rc<Runtime>,
+    pub weights: Rc<Checkpoint>,
+    /// target wte literal (the draft decodes through the target's LM head)
+    pub wte: Literal,
+    /// KV cache kept as pass-through literals: graph outputs are fed back
+    /// as the next call's inputs without host round-trips (perf pass §Perf;
+    /// the draft cache never needs compaction, so host access is never
+    /// required — unlike the target cache).
+    kv_k: Option<Literal>,
+    kv_v: Option<Literal>,
+    pub committed: usize,
+    pub slots: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub block: usize,
+}
+
+impl DraftSession {
+    pub fn new(
+        rt: Rc<Runtime>,
+        weights: Rc<Checkpoint>,
+        target: &Rc<Checkpoint>,
+    ) -> Result<DraftSession> {
+        let (slots, d_model, heads, vocab) = {
+            let m = rt.meta();
+            (m.cache_slots(), m.dim("draft", "d_model"),
+             m.dim("draft", "n_heads"), m.dim("draft", "vocab"))
+        };
+        let _ = heads;
+        let wte = target
+            .tensor("['wte']")
+            .context("target checkpoint missing wte")?
+            .to_literal()?;
+        Ok(DraftSession {
+            rt,
+            weights,
+            wte,
+            kv_k: None,
+            kv_v: None,
+            committed: 0,
+            slots,
+            vocab,
+            d_model,
+            block: 10,
+        })
+    }
+
+    pub fn reset(&mut self) {
+        self.committed = 0;
+        self.kv_k = None;
+        self.kv_v = None;
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.slots - self.committed
+    }
+
+    pub fn commit(&mut self, n: usize) -> Result<()> {
+        if self.committed + n > self.slots {
+            bail!("draft cache overflow");
+        }
+        self.committed += n;
+        Ok(())
+    }
+
+    /// Prefill: prompt tokens + target features (unshifted).
+    pub fn prefill(&mut self, tokens: &[i32], target_feats: &[Vec<f32>]) -> Result<()> {
+        let mut padded = vec![0i32; self.slots];
+        padded[..tokens.len()].copy_from_slice(tokens);
+        let mut tf = vec![0.0f32; self.slots * self.d_model];
+        for (i, row) in target_feats.iter().enumerate().take(tokens.len()) {
+            tf[i * self.d_model..(i + 1) * self.d_model].copy_from_slice(row);
+        }
+        let mut out = call(
+            &self.rt,
+            "draft_prefill",
+            &self.weights.literals,
+            &[&self.wte],
+            &[
+                TensorI::new(vec![self.slots], padded)?.to_literal()?,
+                TensorF::new(vec![self.slots, self.d_model], tf)?.to_literal()?,
+            ],
+        )?;
+        // keep the KV literals as-is: zero host conversions on this path
+        self.kv_v = Some(out.swap_remove(1));
+        self.kv_k = Some(out.swap_remove(0));
+        self.committed = tokens.len();
+        Ok(())
+    }
+
+    /// One draft forward over up to `block` rows.
+    ///
+    /// `rows`: (token, input-feature, position, visible-slots) per row; KV
+    /// rows are written at `write_start` (contiguous).  `mask_rows[i]`
+    /// lists *extra* visible slots beyond the committed prefix (tree
+    /// ancestors); every row also sees its own slot.
+    pub fn decode(
+        &mut self,
+        tokens: &[i32],
+        in_feats: &[&[f32]],
+        positions: &[usize],
+        extra_visible: &[Vec<usize>],
+        write_start: usize,
+    ) -> Result<DecodeOut> {
+        let n = tokens.len();
+        let b = self.block;
+        if n > b {
+            bail!("draft decode block too large: {n} > {b}");
+        }
+        if write_start + b > self.slots {
+            bail!("draft cache exhausted");
+        }
+        let mut tok = vec![0i32; b];
+        tok[..n].copy_from_slice(tokens);
+        let mut pos = vec![0i32; b];
+        let mut feats = vec![0.0f32; b * self.d_model];
+        for i in 0..n {
+            pos[i] = positions[i] as i32;
+            feats[i * self.d_model..(i + 1) * self.d_model].copy_from_slice(in_feats[i]);
+        }
+        let mut mask = vec![0i32; b * self.slots];
+        for i in 0..n {
+            let off = i * self.slots;
+            for s in 0..self.committed {
+                mask[off + s] = 1;
+            }
+            for &s in &extra_visible[i] {
+                mask[off + s] = 1;
+            }
+            mask[off + write_start + i] = 1; // own slot
+        }
+        let kv_k = self.kv_k.as_ref().context("draft decode before prefill")?;
+        let kv_v = self.kv_v.as_ref().context("draft decode before prefill")?;
+        let inputs = [
+            scalar_i32(write_start as i32),
+            TensorI::new(vec![b], tok)?.to_literal()?,
+            TensorF::new(vec![b, self.d_model], feats)?.to_literal()?,
+            TensorI::new(vec![b], pos)?.to_literal()?,
+            TensorI::new(vec![b, self.slots], mask)?.to_literal()?,
+        ];
+        let mut args: Vec<&Literal> = Vec::with_capacity(self.weights.literals.len() + 8);
+        args.extend(self.weights.literals.iter());
+        args.push(&self.wte);
+        args.push(kv_k);
+        args.push(kv_v);
+        args.extend(inputs.iter());
+        let mut out = self.rt.call("draft_decode_b10", &args)?;
+        let logits = tensor_out(&out, 0)?;
+        let g = tensor_out(&out, 1)?;
+        self.kv_v = Some(out.swap_remove(3));
+        self.kv_k = Some(out.swap_remove(2));
+        Ok(DecodeOut { logits, feats: g })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SpS tiny-LM session (vanilla speculative sampling draft)
+// ---------------------------------------------------------------------------
+
+pub struct SpsSession {
+    rt: Rc<Runtime>,
+    pub weights: Rc<Checkpoint>,
+    pub cache: KvCache,
+    pub slots: usize,
+    pub vocab: usize,
+}
+
+impl SpsSession {
+    pub fn new(rt: Rc<Runtime>, weights: Rc<Checkpoint>) -> Result<SpsSession> {
+        let (slots, d, heads, layers, vocab) = {
+            let m = rt.meta();
+            (m.cache_slots(), m.dim("sps", "d_model"), m.dim("sps", "n_heads"),
+             m.dim("sps", "n_layers"), m.dim("sps", "vocab"))
+        };
+        Ok(SpsSession {
+            rt,
+            weights,
+            cache: KvCache::new(layers, slots, heads, d / heads.max(1)),
+            slots,
+            vocab,
+        })
+    }
+
+    pub fn reset(&mut self) {
+        self.cache.reset();
+    }
+
+    pub fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let mut padded = vec![0i32; self.slots];
+        padded[..tokens.len()].copy_from_slice(tokens);
+        let inp = TensorI::new(vec![self.slots], padded)?.to_literal()?;
+        let out = call(&self.rt, "sps_prefill", &self.weights.literals, &[], &[inp])?;
+        self.cache.absorb(tensor_out(&out, 1)?, tensor_out(&out, 2)?)?;
+        self.cache.committed = tokens.len();
+        let logits = tensor_out(&out, 3)?;
+        Ok(logits.row(tokens.len() - 1).to_vec())
+    }
+
+    /// One AR step; writes the token's KV at `committed` and commits it.
+    pub fn decode1(&mut self, token: i32, position: usize) -> Result<Vec<f32>> {
+        let mask = self.cache.block_mask(1, None);
+        let out = call(
+            &self.rt,
+            "sps_decode_n1",
+            &self.weights.literals,
+            &[],
+            &[
+                crate::runtime::tensor::f32_literal(
+                    &[self.cache.layers, self.cache.slots, self.cache.heads, self.cache.head_dim],
+                    &self.cache.k)?,
+                crate::runtime::tensor::f32_literal(
+                    &[self.cache.layers, self.cache.slots, self.cache.heads, self.cache.head_dim],
+                    &self.cache.v)?,
+                scalar_i32(self.cache.committed as i32),
+                TensorI::new(vec![1], vec![token])?.to_literal()?,
+                TensorI::new(vec![1], vec![position as i32])?.to_literal()?,
+                mask.to_literal()?,
+            ],
+        )?;
+        let logits = tensor_out(&out, 0)?;
+        self.cache.absorb(tensor_out(&out, 2)?, tensor_out(&out, 3)?)?;
+        self.cache.commit(1)?;
+        Ok(logits.row(0).to_vec())
+    }
+
+    /// Roll back the last `n` committed rows (rejected chain suffix).
+    pub fn rollback(&mut self, n: usize) {
+        self.cache.committed = self.cache.committed.saturating_sub(n);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Medusa heads
+// ---------------------------------------------------------------------------
+
+pub struct MedusaHeads {
+    rt: Rc<Runtime>,
+    pub weights: Rc<Checkpoint>,
+    pub wte: Literal,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+}
+
+impl MedusaHeads {
+    pub fn new(rt: Rc<Runtime>, weights: Rc<Checkpoint>, target: &Rc<Checkpoint>) -> Result<MedusaHeads> {
+        let (vocab, d_model) = {
+            let m = rt.meta();
+            (m.dim("target", "vocab"), m.dim("target", "d_model"))
+        };
+        let wte = target
+            .tensor("['wte']")
+            .context("target checkpoint missing wte")?
+            .to_literal()?;
+        Ok(MedusaHeads {
+            rt,
+            weights,
+            wte,
+            n_heads: 4,
+            vocab,
+            d_model,
+        })
+    }
+
+    /// feat [d] -> per-head logits [n_heads][V].
+    pub fn predict(&self, feat: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let inp = TensorF::new(vec![1, self.d_model], feat.to_vec())?.to_literal()?;
+        let out = call(&self.rt, "medusa_heads", &self.weights.literals, &[&self.wte], &[inp])?;
+        let logits = tensor_out(&out, 0)?; // [1, H, V]
+        let v = self.vocab;
+        Ok((0..self.n_heads)
+            .map(|h| logits.data[h * v..(h + 1) * v].to_vec())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::pick_block;
+
+    #[test]
+    fn pick_block_choices() {
+        assert_eq!(pick_block(1).unwrap(), 1);
+        assert_eq!(pick_block(2).unwrap(), 8);
+        assert_eq!(pick_block(8).unwrap(), 8);
+        assert_eq!(pick_block(9).unwrap(), 64);
+        assert_eq!(pick_block(61).unwrap(), 64);
+        assert_eq!(pick_block(101).unwrap(), 128);
+        assert!(pick_block(129).is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! Host-side KV-cache manager.
+//!
+//! Serving graphs are functional: they take the whole cache, write N new
+//! rows at `write_start`, and return the updated cache.  The engine keeps
+//! the authoritative copy host-side and owns the commit/rollback policy:
+//!
+//! * tree verification writes its N rows at `committed`; after acceptance
+//!   the accepted rows are *compacted* down so the committed region stays
+//!   contiguous and the 512-slot cache isn't burned at N slots/cycle;
+//! * rejected rows need no cleanup — visibility masks are built from
+//!   `committed`, so stale rows are simply never attended to.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{TensorF, TensorI};
+
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub layers: usize,
+    pub slots: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// committed prefix length (slots [0, committed) are canonical context)
+    pub committed: usize,
+}
+
+impl KvCache {
+    pub fn new(layers: usize, slots: usize, heads: usize, head_dim: usize) -> KvCache {
+        let n = layers * slots * heads * head_dim;
+        KvCache {
+            layers,
+            slots,
+            heads,
+            head_dim,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            committed: 0,
+        }
+    }
+
+    pub fn row_size(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    fn layer_stride(&self) -> usize {
+        self.slots * self.row_size()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.slots - self.committed
+    }
+
+    /// Replace buffers from graph outputs ([L,S,H,hd] tensors).
+    pub fn absorb(&mut self, k: TensorF, v: TensorF) -> Result<()> {
+        if k.data.len() != self.k.len() || v.data.len() != self.v.len() {
+            bail!(
+                "kv absorb size mismatch: got {}/{}, want {}",
+                k.data.len(),
+                v.data.len(),
+                self.k.len()
+            );
+        }
+        self.k = k.data;
+        self.v = v.data;
+        Ok(())
+    }
+
+    pub fn k_tensor(&self) -> TensorF {
+        let dims = if self.layers > 1 || true {
+            vec![self.layers, self.slots, self.heads, self.head_dim]
+        } else {
+            vec![self.slots, self.heads, self.head_dim]
+        };
+        TensorF { dims, data: self.k.clone() }
+    }
+
+    pub fn v_tensor(&self) -> TensorF {
+        TensorF { dims: vec![self.layers, self.slots, self.heads, self.head_dim], data: self.v.clone() }
+    }
+
+    /// Single-layer tensors shaped [S,H,hd] (draft cache graphs).
+    pub fn k_tensor_2d(&self) -> TensorF {
+        TensorF { dims: vec![self.slots, self.heads, self.head_dim], data: self.k.clone() }
+    }
+
+    pub fn v_tensor_2d(&self) -> TensorF {
+        TensorF { dims: vec![self.slots, self.heads, self.head_dim], data: self.v.clone() }
+    }
+
+    /// Mark `n` rows starting at `committed` as committed (chain decode:
+    /// rows were written contiguously at the old committed offset).
+    pub fn commit(&mut self, n: usize) -> Result<()> {
+        if self.committed + n > self.slots {
+            bail!("kv cache overflow: {} + {n} > {}", self.committed, self.slots);
+        }
+        self.committed += n;
+        Ok(())
+    }
+
+    /// Compact accepted block rows down to the committed boundary.
+    ///
+    /// A verification block of N rows was written at `base == committed`;
+    /// `accepted_rows` are the accepted rows in increasing order.  Their KV
+    /// rows move to `committed .. committed+len`, then commit advances.
+    pub fn compact_accepted(&mut self, accepted_rows: &[usize]) -> Result<()> {
+        let base = self.committed;
+        for w in accepted_rows.windows(2) {
+            if w[1] <= w[0] {
+                bail!("accepted rows must be strictly increasing");
+            }
+        }
+        if let Some(&last) = accepted_rows.last() {
+            if base + last >= self.slots {
+                bail!("accepted row {last} out of cache");
+            }
+        }
+        let rs = self.row_size();
+        for l in 0..self.layers {
+            let ls = l * self.layer_stride();
+            for (i, &r) in accepted_rows.iter().enumerate() {
+                let src = ls + (base + r) * rs;
+                let dst = ls + (base + i) * rs;
+                if src != dst {
+                    self.k.copy_within(src..src + rs, dst);
+                    self.v.copy_within(src..src + rs, dst);
+                }
+            }
+        }
+        self.committed += accepted_rows.len();
+        Ok(())
+    }
+
+    /// Reset to an empty cache (new request).
+    pub fn reset(&mut self) {
+        self.committed = 0;
+        // buffers need no clearing: masks hide stale rows
+    }
+
+    /// Visibility mask rows for a decode block: row n sees all committed
+    /// slots, plus (optionally) block ancestors at `base + ancestor_row`,
+    /// plus its own slot `base + n`.
+    pub fn block_mask(
+        &self,
+        n: usize,
+        block_anc: Option<&[Vec<bool>]>,
+    ) -> TensorI {
+        let base = self.committed;
+        let mut data = vec![0i32; n * self.slots];
+        for row in 0..n {
+            let off = row * self.slots;
+            for s in 0..base {
+                data[off + s] = 1;
+            }
+            match block_anc {
+                Some(anc) => {
+                    for b in 0..n {
+                        if anc[row][b] {
+                            data[off + base + b] = 1;
+                        }
+                    }
+                }
+                None => {
+                    // chain semantics: row n sees rows 0..=n of the block
+                    for b in 0..=row {
+                        data[off + base + b] = 1;
+                    }
+                }
+            }
+        }
+        TensorI { dims: vec![n, self.slots], data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn filled(layers: usize, slots: usize) -> KvCache {
+        let mut c = KvCache::new(layers, slots, 2, 4);
+        for (i, x) in c.k.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        for (i, x) in c.v.iter_mut().enumerate() {
+            *x = -(i as f32);
+        }
+        c
+    }
+
+    #[test]
+    fn commit_bounds() {
+        let mut c = KvCache::new(1, 8, 2, 4);
+        assert!(c.commit(8).is_ok());
+        assert!(c.commit(1).is_err());
+    }
+
+    #[test]
+    fn compact_moves_rows_in_order() {
+        let mut c = filled(2, 16);
+        c.committed = 4;
+        let rs = c.row_size();
+        // block rows 1 and 3 accepted -> slots 5 and 7 move to 4 and 5
+        let expect_k_slot4: Vec<f32> = c.k[5 * rs..6 * rs].to_vec();
+        let expect_k_slot5: Vec<f32> = c.k[7 * rs..8 * rs].to_vec();
+        let l1 = c.layer_stride();
+        let expect_l1_slot4: Vec<f32> = c.k[l1 + 5 * rs..l1 + 6 * rs].to_vec();
+        c.compact_accepted(&[1, 3]).unwrap();
+        assert_eq!(c.committed, 6);
+        assert_eq!(&c.k[4 * rs..5 * rs], &expect_k_slot4[..]);
+        assert_eq!(&c.k[5 * rs..6 * rs], &expect_k_slot5[..]);
+        assert_eq!(&c.k[l1 + 4 * rs..l1 + 5 * rs], &expect_l1_slot4[..]);
+    }
+
+    #[test]
+    fn compact_rejects_bad_input() {
+        let mut c = filled(1, 8);
+        c.committed = 2;
+        assert!(c.compact_accepted(&[3, 1]).is_err());
+        assert!(c.compact_accepted(&[7]).is_err()); // 2 + 7 >= 8
+    }
+
+    #[test]
+    fn compact_accepted_row0_is_noop_move() {
+        let mut c = filled(1, 8);
+        c.committed = 3;
+        let before = c.k.clone();
+        c.compact_accepted(&[0]).unwrap();
+        assert_eq!(c.k, before);
+        assert_eq!(c.committed, 4);
+    }
+
+    #[test]
+    fn chain_mask_rows() {
+        let mut c = KvCache::new(1, 8, 2, 4);
+        c.committed = 3;
+        let m = c.block_mask(2, None);
+        assert_eq!(m.dims, vec![2, 8]);
+        assert_eq!(&m.data[0..8], &[1, 1, 1, 1, 0, 0, 0, 0]);
+        assert_eq!(&m.data[8..16], &[1, 1, 1, 1, 1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn tree_mask_rows() {
+        let mut c = KvCache::new(1, 8, 2, 4);
+        c.committed = 2;
+        // 3-row block: row2's parent is row0 (not row1)
+        let anc = vec![
+            vec![true, false, false],
+            vec![true, true, false],
+            vec![true, false, true],
+        ];
+        let m = c.block_mask(3, Some(&anc));
+        assert_eq!(&m.data[16..24], &[1, 1, 1, 0, 1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn prop_compact_preserves_committed_prefix() {
+        prop::check(
+            "compaction never touches the committed prefix",
+            |r| {
+                let slots = 16 + r.gen_range(16);
+                let committed = r.gen_range(slots / 2);
+                let n_free = slots - committed;
+                let mut rows = Vec::new();
+                let mut cur = 0;
+                while rows.len() < 5 && cur < n_free - 1 {
+                    cur += 1 + r.gen_range(2);
+                    if cur < n_free {
+                        rows.push(cur - 1);
+                    }
+                }
+                (slots, committed, rows)
+            },
+            |(slots, committed, rows)| {
+                let mut c = filled(2, *slots);
+                c.committed = *committed;
+                let prefix_k: Vec<f32> = c.k[..*committed * c.row_size()].to_vec();
+                c.compact_accepted(rows).map_err(|e| e.to_string())?;
+                if &c.k[..*committed * c.row_size()] != &prefix_k[..] {
+                    return Err("committed prefix mutated".into());
+                }
+                if c.committed != committed + rows.len() {
+                    return Err("commit count wrong".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

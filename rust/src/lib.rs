@@ -1,0 +1,36 @@
+//! # HASS — Harmonized Speculative Sampling (ICLR 2025), full-system repro
+//!
+//! A three-layer speculative-decoding serving stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: request scheduler, TCP
+//!   server, draft-tree construction (EAGLE-2 dynamic / EAGLE static /
+//!   Medusa), lossless verification, KV-cache management, metrics, and the
+//!   paper's full table/figure harness.
+//! * **L2/L1 (python/, build-time only)** — JAX models + Pallas kernels,
+//!   AOT-lowered to HLO-text artifacts that this crate loads through the
+//!   PJRT CPU client (`xla` crate).  Python never runs on the request path.
+//!
+//! Quickstart: see `examples/quickstart.rs`; paper tables: `hass table N`.
+
+pub mod bench;
+pub mod engine;
+pub mod kvcache;
+pub mod runtime;
+pub mod sampling;
+pub mod scheduler;
+pub mod server;
+pub mod spec;
+pub mod tables;
+pub mod tokenizer;
+pub mod tree;
+pub mod util;
+pub mod workload;
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$HASS_ARTIFACTS` or `./artifacts`.
+pub fn artifact_dir() -> PathBuf {
+    std::env::var("HASS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,193 @@
+//! `hass` — CLI for the HASS speculative-serving reproduction.
+//!
+//! Subcommands:
+//!   generate   --method hass --prompt "..." [--tokens 64 --temp 0.0]
+//!   compare    [--tokens 48 --temp 0.0]      run every method on one prompt
+//!   table <N>  [--prompts 8 --tokens 48]     regenerate paper table N (1-11)
+//!   figure <N>                               regenerate paper figure N
+//!   serve      [--port 7777 --queue 64]      TCP JSON-lines server
+//!   client     --prompt "..." [--addr ...]   one-shot request to a server
+//!   goldens                                  verify vs python goldens
+//!   calibrate                                measure the device cost model
+//!   stats      --method hass                 per-graph call-time breakdown
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use hass::engine::{build_method, calibrate, generate_once, run_suite};
+use hass::runtime::Runtime;
+use hass::sampling::SampleParams;
+use hass::scheduler::Scheduler;
+use hass::spec::{GenRequest, MethodCfg};
+use hass::tables::{run_figure, run_table, Harness};
+use hass::tokenizer;
+use hass::util::cli::Args;
+use hass::workload::Workloads;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn method_cfg(args: &Args) -> MethodCfg {
+    MethodCfg {
+        draft_ckpt: args.get_or("ckpt", "hass"),
+        depth: args.usize_or("depth", 6),
+        total_tokens: args.usize_or("total", 60),
+        beam: args.usize_or("beam", 10),
+        gamma: args.usize_or("gamma", 4),
+        lookup_len: args.usize_or("lookup-len", 5),
+    }
+}
+
+fn params(args: &Args) -> SampleParams {
+    SampleParams {
+        temperature: args.f64_or("temp", 0.0) as f32,
+        top_k: args.usize_or("top-k", 0),
+        top_p: args.f64_or("top-p", 1.0) as f32,
+        seed: args.usize_or("seed", 0) as u64,
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "generate" => {
+            let rt = Rc::new(Runtime::new(&hass::artifact_dir())?);
+            let prompt = args.get_or("prompt", "User: Can you tell me about chess openings?\nAssistant:");
+            let method = args.get_or("method", "hass");
+            let (text, out) = generate_once(
+                &rt, &method, &method_cfg(args), &prompt,
+                args.usize_or("tokens", 64), &params(args),
+            )?;
+            println!("--- prompt ---\n{prompt}\n--- completion ({}) ---\n{text}", method);
+            println!(
+                "\ntau={:.2}  cycles={}  target_calls={}  draft_calls={}  alphas={:?}",
+                out.metrics.tau(), out.metrics.cycles, out.metrics.target_calls,
+                out.metrics.draft_calls,
+                out.metrics.alphas(6).iter().map(|a| (a * 100.0).round() / 100.0).collect::<Vec<_>>()
+            );
+            Ok(())
+        }
+        "compare" => {
+            let rt = Rc::new(Runtime::new(&hass::artifact_dir())?);
+            let prompt = args.get_or("prompt", "User: Can you tell me about chess openings?\nAssistant:");
+            let p = params(args);
+            println!("{:<12} {:>6} {:>8} {:>9} {:>9}", "method", "tau", "tokens", "t_call", "d_call");
+            for m in ["vanilla", "pld", "lookahead", "sps", "medusa", "eagle", "eagle2", "hass"] {
+                match generate_once(&rt, m, &method_cfg(args), &prompt, args.usize_or("tokens", 48), &p) {
+                    Ok((_, out)) => println!(
+                        "{m:<12} {:>6.2} {:>8} {:>9} {:>9}",
+                        out.metrics.tau(), out.tokens.len(),
+                        out.metrics.target_calls, out.metrics.draft_calls
+                    ),
+                    Err(e) => println!("{m:<12} failed: {e:#}"),
+                }
+            }
+            Ok(())
+        }
+        "table" | "figure" => {
+            let rt = Rc::new(Runtime::new(&hass::artifact_dir())?);
+            let wl = Workloads::load(&hass::artifact_dir())?;
+            let mut h = Harness::new(
+                rt, wl,
+                args.usize_or("prompts", 8),
+                args.usize_or("tokens", 48),
+            )?;
+            let id = args.positionals.first().map(String::as_str).unwrap_or("1");
+            if args.subcommand == "table" {
+                run_table(&mut h, id)
+            } else {
+                run_figure(&mut h, id)
+            }
+        }
+        "serve" => {
+            let port = args.usize_or("port", 7777);
+            let sched = Arc::new(Scheduler::start(
+                hass::artifact_dir(),
+                method_cfg(args),
+                args.usize_or("queue", 64),
+            ));
+            let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
+            hass::server::serve(listener, sched)
+        }
+        "client" => {
+            let addr = args.get_or("addr", "127.0.0.1:7777");
+            let mut c = hass::server::Client::connect(&addr)?;
+            let resp = c.request(
+                &args.get_or("method", "hass"),
+                &args.get_or("prompt", "User: How does photosynthesis work?\nAssistant:"),
+                args.usize_or("tokens", 64),
+                args.f64_or("temp", 0.0) as f32,
+            )?;
+            println!("{}", resp.to_string());
+            Ok(())
+        }
+        "goldens" => {
+            let rt = Rc::new(Runtime::new(&hass::artifact_dir())?);
+            let goldens = rt.meta().goldens.clone();
+            if goldens.is_empty() {
+                bail!("no goldens in artifacts/meta.json (re-run `make artifacts` after training)");
+            }
+            let mut m = build_method(&rt, "vanilla", &MethodCfg::default())?;
+            let mut failures = 0;
+            for (i, g) in goldens.iter().enumerate() {
+                let req = GenRequest {
+                    prompt_tokens: g.prompt_tokens.clone(),
+                    max_new: g.greedy_tokens.len(),
+                    params: SampleParams { temperature: 0.0, ..Default::default() },
+                };
+                let out = m.generate(&req)?;
+                let want = &g.greedy_tokens[..out.tokens.len().min(g.greedy_tokens.len())];
+                if out.tokens != want {
+                    failures += 1;
+                    println!("golden {i}: MISMATCH\n  rust:   {:?}\n  python: {:?}", out.tokens, want);
+                } else {
+                    println!("golden {i}: OK ({} tokens) -> {:?}", out.tokens.len(),
+                             tokenizer::decode(&out.tokens));
+                }
+            }
+            if failures > 0 {
+                bail!("{failures} golden(s) failed");
+            }
+            Ok(())
+        }
+        "calibrate" => {
+            let rt = Rc::new(Runtime::new(&hass::artifact_dir())?);
+            let cm = calibrate(&rt, 32)?;
+            println!(
+                "t_ar = {:.3} ms/token  (modeled: verify={:.2}x AR, draft={:.2}x AR)",
+                cm.t_ar * 1e3, cm.verify_factor, cm.draft_ratio
+            );
+            Ok(())
+        }
+        "stats" => {
+            let rt = Rc::new(Runtime::new(&hass::artifact_dir())?);
+            let wl = Workloads::load(&hass::artifact_dir())?;
+            let method = args.get_or("method", "hass");
+            let mut m = build_method(&rt, &method, &method_cfg(args))?;
+            let prompts = wl.suite("dialogue")?[..4.min(wl.suite("dialogue")?.len())].to_vec();
+            let r = run_suite(m.as_mut(), "dialogue", &prompts, args.usize_or("tokens", 48), &params(args))?;
+            println!("method={} tau={:.2} tok/s={:.1}", r.method, r.tau, r.tok_per_s);
+            println!("phases: draft={:.3}s verify={:.3}s sample={:.3}s host={:.3}s",
+                     r.metrics.phases.draft_s, r.metrics.phases.verify_s,
+                     r.metrics.phases.sample_s, r.metrics.phases.host_s);
+            println!("\nper-graph call stats:");
+            for (g, s) in rt.call_stats() {
+                println!("  {g:<22} calls={:>6}  total={:>8.3}s  mean={:>7.3}ms",
+                         s.calls, s.secs, s.secs / s.calls.max(1) as f64 * 1e3);
+            }
+            Ok(())
+        }
+        "" | "help" => {
+            println!("usage: hass <generate|compare|table N|figure N|serve|client|goldens|calibrate|stats> [flags]");
+            println!("see rust/src/main.rs header for flags; artifacts from `make artifacts`.");
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try: hass help)"),
+    }
+}

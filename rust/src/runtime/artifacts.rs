@@ -1,0 +1,172 @@
+//! Artifact registry: `artifacts/meta.json` + `*.hlo.txt` graph inventory.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct GraphMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub params: Vec<String>,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub prompt_tokens: Vec<i32>,
+    pub greedy_tokens: Vec<i32>,
+    pub prefill_logits8: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub dir: PathBuf,
+    pub graphs: BTreeMap<String, GraphMeta>,
+    pub goldens: Vec<Golden>,
+    pub config: Json,
+}
+
+impl Meta {
+    pub fn load(dir: &Path) -> Result<Meta> {
+        let path = dir.join("meta.json");
+        let j = json::parse(
+            &std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?,
+        )?;
+        let mut graphs = BTreeMap::new();
+        for (name, g) in j.get("graphs").and_then(|g| g.as_obj()).unwrap_or(&[]) {
+            let inputs = g
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(|i| InputSpec {
+                    name: i.str_at("name").unwrap_or("").to_string(),
+                    shape: i
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect(),
+                    dtype: i.str_at("dtype").unwrap_or("f32").to_string(),
+                })
+                .collect();
+            graphs.insert(
+                name.clone(),
+                GraphMeta {
+                    name: name.clone(),
+                    file: dir.join(g.str_at("file").unwrap_or("")),
+                    params: g
+                        .get("params")
+                        .and_then(|p| p.as_arr())
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|p| p.as_str().map(String::from))
+                        .collect(),
+                    inputs,
+                    outputs: g
+                        .get("outputs")
+                        .and_then(|o| o.as_arr())
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|o| o.as_str().map(String::from))
+                        .collect(),
+                },
+            );
+        }
+        let goldens = j
+            .get("goldens")
+            .and_then(|g| g.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(|g| Golden {
+                prompt_tokens: ints(g.get("prompt_tokens")),
+                greedy_tokens: ints(g.get("greedy_tokens")),
+                prefill_logits8: floats(g.get("prefill_logits8")),
+            })
+            .collect();
+        Ok(Meta {
+            dir: dir.to_path_buf(),
+            graphs,
+            goldens,
+            config: j.get("config").cloned().unwrap_or(Json::Obj(vec![])),
+        })
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphMeta> {
+        self.graphs
+            .get(name)
+            .with_context(|| format!("graph '{name}' not in artifacts (re-run `make artifacts`)"))
+    }
+
+    /// Model dimensions from the config block.
+    pub fn dim(&self, model: &str, key: &str) -> usize {
+        self.config
+            .get(model)
+            .and_then(|m| m.usize_at(key))
+            .unwrap_or(0)
+    }
+
+    pub fn cache_slots(&self) -> usize {
+        self.config.usize_at("S").unwrap_or(512)
+    }
+}
+
+fn ints(j: Option<&Json>) -> Vec<i32> {
+    j.and_then(|a| a.as_arr())
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|v| v.as_i64().map(|x| x as i32))
+        .collect()
+}
+
+fn floats(j: Option<&Json>) -> Vec<f32> {
+    j.and_then(|a| a.as_arr())
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|v| v.as_f64().map(|x| x as f32))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_minimal_meta() {
+        let dir = std::env::temp_dir().join("hass_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"config":{"S":512,"target":{"d_model":128}},
+                "graphs":{"g1":{"file":"g1.hlo.txt","params":["['wte']"],
+                 "inputs":[{"name":"tokens","shape":[512],"dtype":"i32"}],
+                 "outputs":["logits"]}},
+                "goldens":[{"prompt_tokens":[1,2],"greedy_tokens":[3],"prefill_logits8":[0.5]}]}"#,
+        )
+        .unwrap();
+        let m = Meta::load(&dir).unwrap();
+        let g = m.graph("g1").unwrap();
+        assert_eq!(g.params, vec!["['wte']"]);
+        assert_eq!(g.inputs[0].shape, vec![512]);
+        assert_eq!(g.inputs[0].dtype, "i32");
+        assert_eq!(m.goldens.len(), 1);
+        assert_eq!(m.goldens[0].greedy_tokens, vec![3]);
+        assert_eq!(m.dim("target", "d_model"), 128);
+        assert_eq!(m.cache_slots(), 512);
+        assert!(m.graph("nope").is_err());
+    }
+}

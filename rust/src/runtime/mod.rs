@@ -1,0 +1,165 @@
+//! L3 runtime: PJRT CPU client wrapping the `xla` crate.
+//!
+//! Loads HLO-text artifacts produced by `python/compile/aot.py`, compiles
+//! them once (lazily, per graph), and executes them from the serving hot
+//! path with weights + per-call inputs as literals.  Follows the pattern of
+//! /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+
+pub mod artifacts;
+pub mod tensor;
+pub mod weights;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+pub use artifacts::{GraphMeta, Golden, Meta};
+pub use tensor::{scalar_i32, TensorF, TensorI};
+pub use weights::Checkpoint;
+
+/// Cumulative per-graph call accounting (perf pass instrumentation).
+#[derive(Clone, Debug, Default)]
+pub struct CallStats {
+    pub calls: u64,
+    pub secs: f64,
+}
+
+pub struct Runtime {
+    client: PjRtClient,
+    meta: Meta,
+    weights_dir: PathBuf,
+    exes: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+    ckpts: RefCell<HashMap<String, std::rc::Rc<Checkpoint>>>,
+    stats: RefCell<HashMap<String, CallStats>>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let meta = Meta::load(artifact_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            meta,
+            weights_dir: artifact_dir.join("weights"),
+            exes: RefCell::new(HashMap::new()),
+            ckpts: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn meta(&self) -> &Meta {
+        &self.meta
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (and cache) a weight checkpoint by name.
+    pub fn checkpoint(&self, name: &str) -> Result<std::rc::Rc<Checkpoint>> {
+        if let Some(c) = self.ckpts.borrow().get(name) {
+            return Ok(c.clone());
+        }
+        let c = std::rc::Rc::new(Checkpoint::load(&self.weights_dir, name)?);
+        self.ckpts.borrow_mut().insert(name.to_string(), c.clone());
+        Ok(c)
+    }
+
+    pub fn has_checkpoint(&self, name: &str) -> bool {
+        self.weights_dir.join(format!("{name}.json")).exists()
+    }
+
+    fn ensure_compiled(&self, graph: &str) -> Result<()> {
+        if self.exes.borrow().contains_key(graph) {
+            return Ok(());
+        }
+        let gm = self.meta.graph(graph)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&gm.file)
+            .with_context(|| format!("parsing {}", gm.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling graph {graph}"))?;
+        eprintln!(
+            "[runtime] compiled {graph} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        self.exes.borrow_mut().insert(graph.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute `graph` with the given argument literals (weights first, in
+    /// manifest order, then per-call inputs).  Returns the decomposed
+    /// output tuple as literals.
+    pub fn call(&self, graph: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+        self.ensure_compiled(graph)?;
+        let gm = self.meta.graph(graph)?;
+        let expected = gm.params.len() + gm.inputs.len();
+        if args.len() != expected {
+            bail!(
+                "graph {graph}: got {} args, expected {} ({} weights + {} inputs)",
+                args.len(),
+                expected,
+                gm.params.len(),
+                gm.inputs.len()
+            );
+        }
+        let t0 = Instant::now();
+        let exes = self.exes.borrow();
+        let exe = exes.get(graph).unwrap();
+        let mut out = exe.execute::<&Literal>(args)?;
+        let lit = out
+            .pop()
+            .and_then(|mut v| v.pop())
+            .context("empty execution result")?
+            .to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        let mut stats = self.stats.borrow_mut();
+        let e = stats.entry(graph.to_string()).or_default();
+        e.calls += 1;
+        e.secs += t0.elapsed().as_secs_f64();
+        Ok(parts)
+    }
+
+    /// Sanity-check that a checkpoint's manifest matches a graph's weight
+    /// parameter list (names + count), catching stale artifacts early.
+    pub fn validate_bundle(&self, graph: &str, ckpt: &Checkpoint, extra: usize) -> Result<()> {
+        let gm = self.meta.graph(graph)?;
+        if gm.params.len() != ckpt.tensor_names.len() + extra {
+            bail!(
+                "graph {graph} expects {} weight params, checkpoint '{}' has {} (+{extra} extra)",
+                gm.params.len(),
+                ckpt.name,
+                ckpt.tensor_names.len()
+            );
+        }
+        for (g, c) in gm.params.iter().zip(ckpt.tensor_names.iter()) {
+            if g != c {
+                bail!("graph {graph} param '{g}' != checkpoint tensor '{c}'");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn call_stats(&self) -> Vec<(String, CallStats)> {
+        let mut v: Vec<_> = self
+            .stats
+            .borrow()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| b.1.secs.partial_cmp(&a.1.secs).unwrap());
+        v
+    }
+
+    pub fn reset_stats(&self) {
+        self.stats.borrow_mut().clear();
+    }
+}

@@ -1,0 +1,136 @@
+//! Host tensors ⇄ XLA literals.
+//!
+//! The engine keeps KV caches and weights host-side as flat `Vec`s and
+//! materializes `xla::Literal`s at call boundaries (CPU PJRT: literal
+//! creation is a memcpy; see DESIGN.md §7 for the perf accounting).
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI {
+    pub dims: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+fn numel(dims: &[usize]) -> usize {
+    dims.iter().product::<usize>().max(1)
+}
+
+impl TensorF {
+    pub fn zeros(dims: &[usize]) -> Self {
+        TensorF { dims: dims.to_vec(), data: vec![0.0; numel(dims)] }
+    }
+
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        if numel(&dims) != data.len() {
+            bail!("shape {:?} != data len {}", dims, data.len());
+        }
+        Ok(TensorF { dims, data })
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        // single-copy construction (perf §Perf: vec1+reshape costs two
+        // copies; create_from_shape_and_untyped_data costs one)
+        f32_literal(&self.dims, &self.data)
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        TensorF::new(dims, data)
+    }
+
+    /// Row-major index helper for 2-D tensors.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.dims.len(), 2);
+        self.data[i * self.dims[1] + j]
+    }
+
+    /// Borrow row i of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.dims[self.dims.len() - 1];
+        &self.data[i * w..(i + 1) * w]
+    }
+}
+
+impl TensorI {
+    pub fn zeros(dims: &[usize]) -> Self {
+        TensorI { dims: dims.to_vec(), data: vec![0; numel(dims)] }
+    }
+
+    pub fn new(dims: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        if numel(&dims) != data.len() {
+            bail!("shape {:?} != data len {}", dims, data.len());
+        }
+        Ok(TensorI { dims, data })
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        // single-copy construction, same rationale as TensorF::to_literal
+        let bytes = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        Ok(Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            &self.dims,
+            bytes,
+        )?)
+    }
+}
+
+pub fn scalar_i32(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Build an f32 literal directly from a host slice (one copy).
+pub fn f32_literal(dims: &[usize], data: &[f32]) -> Result<Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_validation() {
+        assert!(TensorF::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(TensorF::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn indexing() {
+        let t = TensorF::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = TensorF::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = TensorF::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn int_literal() {
+        let t = TensorI::new(vec![3], vec![7, 8, 9]).unwrap();
+        let lit = t.to_literal().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+    }
+}

@@ -1,0 +1,128 @@
+//! Checkpoint loader: flat f32 binary + JSON manifest written by
+//! `python/compile/ckpt.py`.  Manifest tensor order == jax pytree flatten
+//! order == the weight-argument order every AOT graph expects, so a
+//! checkpoint zips 1:1 with a graph's parameter list.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::util::json::{self, Json};
+
+use super::tensor::TensorF;
+
+pub struct Checkpoint {
+    pub name: String,
+    pub tensor_names: Vec<String>,
+    pub tensors: Vec<TensorF>,
+    pub literals: Vec<Literal>,
+    pub meta: Json,
+}
+
+impl Checkpoint {
+    pub fn load(dir: &Path, name: &str) -> Result<Checkpoint> {
+        let man_path = dir.join(format!("{name}.json"));
+        let bin_path = dir.join(format!("{name}.bin"));
+        let manifest = json::parse(
+            &std::fs::read_to_string(&man_path)
+                .with_context(|| format!("reading {}", man_path.display()))?,
+        )?;
+        let raw = std::fs::read(&bin_path)
+            .with_context(|| format!("reading {}", bin_path.display()))?;
+        if raw.len() % 4 != 0 {
+            bail!("{}: bin size not a multiple of 4", bin_path.display());
+        }
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let specs = manifest
+            .get("tensors")
+            .and_then(|t| t.as_arr())
+            .context("manifest missing 'tensors'")?;
+        let mut tensor_names = Vec::new();
+        let mut tensors = Vec::new();
+        let mut literals = Vec::new();
+        for spec in specs {
+            let tname = spec.str_at("name").context("tensor missing name")?.to_string();
+            let dims: Vec<usize> = spec
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .context("tensor missing shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect();
+            let offset = spec.usize_at("offset").context("tensor missing offset")? / 4;
+            let n: usize = dims.iter().product::<usize>().max(1);
+            if offset + n > floats.len() {
+                bail!("{name}: tensor {tname} overruns bin file");
+            }
+            let t = TensorF::new(dims, floats[offset..offset + n].to_vec())?;
+            literals.push(t.to_literal()?);
+            tensor_names.push(tname);
+            tensors.push(t);
+        }
+        let meta = manifest.get("meta").cloned().unwrap_or(Json::Obj(vec![]));
+        Ok(Checkpoint { name: name.to_string(), tensor_names, tensors, literals, meta })
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&TensorF> {
+        self.tensor_names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| &self.tensors[i])
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.data.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_test_ckpt(dir: &Path) {
+        let data: Vec<f32> = (0..10).map(|x| x as f32).collect();
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("t.bin"), &bytes).unwrap();
+        let mut f = std::fs::File::create(dir.join("t.json")).unwrap();
+        write!(
+            f,
+            r#"{{"tensors":[{{"name":"['a']","shape":[2,3],"offset":0}},{{"name":"['b']","shape":[4],"offset":24}}],"meta":{{"kind":"test"}}}}"#
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn load_checkpoint() {
+        let dir = std::env::temp_dir().join("hass_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_test_ckpt(&dir);
+        let c = Checkpoint::load(&dir, "t").unwrap();
+        assert_eq!(c.tensor_names, vec!["['a']", "['b']"]);
+        assert_eq!(c.tensors[0].dims, vec![2, 3]);
+        assert_eq!(c.tensors[1].data, vec![6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(c.param_count(), 10);
+        assert_eq!(c.meta.str_at("kind"), Some("test"));
+        assert_eq!(c.tensor("['b']").unwrap().data[0], 6.0);
+        assert!(c.tensor("missing").is_none());
+    }
+
+    #[test]
+    fn overrun_detected() {
+        let dir = std::env::temp_dir().join("hass_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bytes: Vec<u8> = (0..8u8).collect();
+        std::fs::write(dir.join("bad.bin"), &bytes).unwrap();
+        std::fs::write(
+            dir.join("bad.json"),
+            r#"{"tensors":[{"name":"x","shape":[100],"offset":0}]}"#,
+        )
+        .unwrap();
+        assert!(Checkpoint::load(&dir, "bad").is_err());
+    }
+}

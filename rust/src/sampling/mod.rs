@@ -1,0 +1,396 @@
+//! Sampling + lossless verification primitives.
+//!
+//! * softmax / temperature / top-k / top-p transforms;
+//! * `sample_token` — one draw from a processed distribution;
+//! * `verify_chain` — canonical Leviathan/Chen speculative rejection
+//!   sampling for *chain* drafts whose tokens were sampled from the draft
+//!   distribution (vanilla SpS): accept token x with prob min(1, p(x)/q(x)),
+//!   on rejection re-sample from norm(relu(p − q)).  Lossless for q-sampled
+//!   proposals (statistically tested).
+//! * `accept_at_node` — tree verification via sample-then-match: draw
+//!   x ~ p_target at the node; if x equals one of the node's (deterministic,
+//!   confidence-ranked) children, descend; otherwise emit x as the bonus
+//!   token.  The output is *always* an exact sample from the target
+//!   distribution, so tree methods (Medusa/EAGLE/EAGLE-2/HASS) are lossless
+//!   for any proposal set — including EAGLE-2's deterministic top-k trees
+//!   (DESIGN.md §6; at T=0 this reduces to argmax matching, identical to
+//!   the paper's greedy acceptance).
+
+use crate::util::rng::Rng;
+
+/// Sampling parameters for a generation request.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleParams {
+    pub temperature: f32,
+    pub top_k: usize,
+    pub top_p: f32,
+    pub seed: u64,
+}
+
+impl Default for SampleParams {
+    fn default() -> Self {
+        SampleParams { temperature: 1.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+}
+
+impl SampleParams {
+    pub fn greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// logits -> probabilities (in place), applying temperature / top-k / top-p.
+/// Greedy (T<=0) produces a one-hot at the argmax.
+pub fn process_logits(logits: &[f32], p: &SampleParams) -> Vec<f32> {
+    let v = logits.len();
+    if p.greedy() {
+        let mut out = vec![0.0; v];
+        out[argmax(logits)] = 1.0;
+        return out;
+    }
+    let inv_t = 1.0 / p.temperature;
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<f32> = logits.iter().map(|&l| ((l - mx) * inv_t).exp()).collect();
+
+    if p.top_k > 0 && p.top_k < v {
+        let mut idx: Vec<usize> = (0..v).collect();
+        idx.sort_unstable_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        for &i in &idx[p.top_k..] {
+            probs[i] = 0.0;
+        }
+    }
+    if p.top_p < 1.0 {
+        let mut idx: Vec<usize> = (0..v).collect();
+        idx.sort_unstable_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        let total: f32 = probs.iter().sum();
+        let mut cum = 0.0;
+        for &i in &idx {
+            if cum >= p.top_p * total {
+                probs[i] = 0.0;
+            }
+            cum += probs[i];
+        }
+    }
+    normalize(&mut probs);
+    probs
+}
+
+pub fn normalize(probs: &mut [f32]) {
+    let total: f32 = probs.iter().sum();
+    if total > 0.0 {
+        for x in probs.iter_mut() {
+            *x /= total;
+        }
+    } else if !probs.is_empty() {
+        let u = 1.0 / probs.len() as f32;
+        for x in probs.iter_mut() {
+            *x = u;
+        }
+    }
+}
+
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut e: Vec<f32> = logits.iter().map(|&l| (l - mx).exp()).collect();
+    normalize(&mut e);
+    e
+}
+
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = logits.iter().map(|&l| (l - mx).exp()).sum::<f32>().ln() + mx;
+    logits.iter().map(|&l| l - lse).collect()
+}
+
+/// Top-k (value, index) pairs, descending.
+pub fn topk(xs: &[f32], k: usize) -> Vec<(f32, usize)> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_unstable_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx.into_iter().take(k).map(|i| (xs[i], i)).collect()
+}
+
+pub fn sample_token(probs: &[f32], rng: &mut Rng) -> usize {
+    rng.sample_weighted(probs)
+}
+
+/// Result of verifying a chain of draft tokens.
+#[derive(Clone, Debug)]
+pub struct ChainVerdict {
+    /// number of draft tokens accepted (prefix length)
+    pub accepted: usize,
+    /// the token sampled after the accepted prefix (bonus / correction)
+    pub bonus: i32,
+}
+
+/// Canonical speculative rejection sampling over a drafted chain.
+///
+/// `draft_tokens[i]` was sampled from `draft_probs[i]` (full distribution);
+/// `target_probs[i]` is the target's (already temperature/top-p processed)
+/// distribution at the same position; `target_probs[len]` is the target
+/// distribution *after* the full chain (for the bonus when all accepted).
+pub fn verify_chain(
+    draft_tokens: &[i32],
+    draft_probs: &[Vec<f32>],
+    target_probs: &[Vec<f32>],
+    rng: &mut Rng,
+) -> ChainVerdict {
+    debug_assert_eq!(draft_tokens.len(), draft_probs.len());
+    debug_assert!(target_probs.len() >= draft_tokens.len() + 1);
+    for i in 0..draft_tokens.len() {
+        let x = draft_tokens[i] as usize;
+        let p = target_probs[i][x];
+        let q = draft_probs[i][x].max(1e-30);
+        if (rng.next_f64() as f32) < p / q {
+            continue; // accepted, move to next position
+        }
+        // rejected: sample from the residual norm(relu(p - q))
+        let mut residual: Vec<f32> = target_probs[i]
+            .iter()
+            .zip(draft_probs[i].iter())
+            .map(|(&pp, &qq)| (pp - qq).max(0.0))
+            .collect();
+        normalize(&mut residual);
+        let bonus = sample_token(&residual, rng) as i32;
+        return ChainVerdict { accepted: i, bonus };
+    }
+    let bonus = sample_token(&target_probs[draft_tokens.len()], rng) as i32;
+    ChainVerdict { accepted: draft_tokens.len(), bonus }
+}
+
+/// Tree-node verification by sample-then-match (see module docs).
+/// Returns (matched child index or None, sampled token).
+pub fn accept_at_node(
+    target_probs: &[f32],
+    child_tokens: &[i32],
+    rng: &mut Rng,
+    greedy: bool,
+) -> (Option<usize>, i32) {
+    let x = if greedy {
+        argmax(target_probs) as i32
+    } else {
+        sample_token(target_probs, rng) as i32
+    };
+    let hit = child_tokens.iter().position(|&c| c == x);
+    (hit, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn greedy_one_hot() {
+        let p = process_logits(&[0.1, 5.0, -2.0], &SampleParams { temperature: 0.0, ..Default::default() });
+        assert_eq!(p, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn top_k_masks_tail() {
+        let p = process_logits(
+            &[1.0, 2.0, 3.0, 4.0],
+            &SampleParams { temperature: 1.0, top_k: 2, ..Default::default() },
+        );
+        assert_eq!(p[0], 0.0);
+        assert_eq!(p[1], 0.0);
+        assert!(p[2] > 0.0 && p[3] > 0.0);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn top_p_keeps_head() {
+        let p = process_logits(
+            &[0.0, 0.0, 10.0],
+            &SampleParams { temperature: 1.0, top_p: 0.5, ..Default::default() },
+        );
+        assert!((p[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn temperature_sharpens() {
+        let hot = process_logits(&[1.0, 2.0], &SampleParams { temperature: 2.0, ..Default::default() });
+        let cold = process_logits(&[1.0, 2.0], &SampleParams { temperature: 0.5, ..Default::default() });
+        assert!(cold[1] > hot[1]);
+    }
+
+    #[test]
+    fn log_softmax_consistent() {
+        let l = [0.3f32, -1.2, 2.0];
+        let ls = log_softmax(&l);
+        let sm = softmax(&l);
+        for (a, b) in ls.iter().zip(sm.iter()) {
+            assert!((a.exp() - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn topk_ordering() {
+        let t = topk(&[0.1, 0.9, 0.5], 2);
+        assert_eq!(t[0].1, 1);
+        assert_eq!(t[1].1, 2);
+    }
+
+    /// THE statistical losslessness test for chain rejection sampling:
+    /// empirical output distribution of the first emitted token must match
+    /// the target distribution regardless of the draft distribution.
+    #[test]
+    fn chain_rejection_preserves_target_distribution() {
+        let v = 5;
+        let target = vec![0.40f32, 0.25, 0.15, 0.15, 0.05];
+        let draft = vec![0.10f32, 0.50, 0.10, 0.10, 0.20]; // badly misaligned
+        let mut rng = Rng::new(1234);
+        let n = 60_000;
+        let mut counts = vec![0usize; v];
+        for _ in 0..n {
+            // draft proposes 1 token sampled from draft dist
+            let d = sample_token(&draft, &mut rng) as i32;
+            let verdict = verify_chain(
+                &[d],
+                &[draft.clone()],
+                &[target.clone(), target.clone()],
+                &mut rng,
+            );
+            let first = if verdict.accepted >= 1 { d } else { verdict.bonus };
+            counts[first as usize] += 1;
+        }
+        for i in 0..v {
+            let emp = counts[i] as f32 / n as f32;
+            assert!(
+                (emp - target[i]).abs() < 0.012,
+                "token {i}: got {emp}, want {}",
+                target[i]
+            );
+        }
+    }
+
+    #[test]
+    fn chain_accepts_everything_when_distributions_match() {
+        let dist = vec![0.25f32; 4];
+        let mut rng = Rng::new(7);
+        let mut total_acc = 0;
+        for _ in 0..200 {
+            let d: Vec<i32> = (0..3).map(|_| sample_token(&dist, &mut rng) as i32).collect();
+            let verdict = verify_chain(
+                &d,
+                &vec![dist.clone(); 3],
+                &vec![dist.clone(); 4],
+                &mut rng,
+            );
+            total_acc += verdict.accepted;
+        }
+        assert_eq!(total_acc, 600, "p==q must always accept");
+    }
+
+    #[test]
+    fn sample_then_match_is_exactly_target_distributed() {
+        // tree acceptance: emitted token (child-or-bonus) is the raw sample
+        let target = vec![0.5f32, 0.3, 0.2];
+        let children = vec![0i32, 1];
+        let mut rng = Rng::new(99);
+        let mut counts = vec![0usize; 3];
+        for _ in 0..30_000 {
+            let (hit, x) = accept_at_node(&target, &children, &mut rng, false);
+            if let Some(h) = hit {
+                assert_eq!(children[h], x);
+            }
+            counts[x as usize] += 1;
+        }
+        for i in 0..3 {
+            let emp = counts[i] as f32 / 30_000.0;
+            assert!((emp - target[i]).abs() < 0.012, "{i}: {emp}");
+        }
+    }
+
+    #[test]
+    fn greedy_accept_matches_argmax() {
+        let target = vec![0.1f32, 0.7, 0.2];
+        let mut rng = Rng::new(1);
+        let (hit, x) = accept_at_node(&target, &[1], &mut rng, true);
+        assert_eq!(x, 1);
+        assert_eq!(hit, Some(0));
+        let (hit2, x2) = accept_at_node(&target, &[0, 2], &mut rng, true);
+        assert_eq!(x2, 1);
+        assert_eq!(hit2, None);
+    }
+
+    #[test]
+    fn prop_process_logits_valid_distribution() {
+        prop::check(
+            "process_logits yields a distribution",
+            |r| {
+                let n = 2 + r.gen_range(40);
+                let logits: Vec<f32> = (0..n).map(|_| (r.next_f32() - 0.5) * 20.0).collect();
+                let params = SampleParams {
+                    temperature: if r.gen_bool(0.3) { 0.0 } else { 0.1 + r.next_f32() * 3.0 },
+                    top_k: if r.gen_bool(0.5) { r.gen_range(n) } else { 0 },
+                    top_p: if r.gen_bool(0.5) { 0.2 + 0.8 * r.next_f32() } else { 1.0 },
+                    seed: 0,
+                };
+                (logits, params)
+            },
+            |(logits, params)| {
+                let p = process_logits(logits, params);
+                let sum: f32 = p.iter().sum();
+                if (sum - 1.0).abs() > 1e-4 {
+                    return Err(format!("sum={sum}"));
+                }
+                if p.iter().any(|&x| x < 0.0 || !x.is_finite()) {
+                    return Err("negative or nan prob".into());
+                }
+                // argmax always survives the filters
+                if p[argmax(logits)] <= 0.0 {
+                    return Err("argmax filtered out".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_verify_chain_prefix_bounds() {
+        prop::check(
+            "verify_chain accepted <= chain length, bonus in vocab",
+            |r| {
+                let v = 3 + r.gen_range(10);
+                let len = 1 + r.gen_range(5);
+                let mk = |r: &mut crate::util::rng::Rng| {
+                    let mut p: Vec<f32> = (0..v).map(|_| r.next_f32() + 1e-3).collect();
+                    normalize(&mut p);
+                    p
+                };
+                let dp: Vec<Vec<f32>> = (0..len).map(|_| mk(r)).collect();
+                let tp: Vec<Vec<f32>> = (0..=len).map(|_| mk(r)).collect();
+                let toks: Vec<i32> = dp.iter().map(|p| argmax(p) as i32).collect();
+                (toks, dp, tp, r.next_u64())
+            },
+            |(toks, dp, tp, seed)| {
+                let mut rng = Rng::new(*seed);
+                let v = verify_chain(toks, dp, tp, &mut rng);
+                if v.accepted > toks.len() {
+                    return Err("accepted overrun".into());
+                }
+                if v.bonus < 0 || v.bonus as usize >= tp[0].len() {
+                    return Err("bonus out of vocab".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

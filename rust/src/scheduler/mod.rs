@@ -1,0 +1,168 @@
+//! Request scheduler: bounded FIFO queue + a dedicated engine worker.
+//!
+//! The PJRT client (and thus every session) is thread-pinned, so the
+//! scheduler owns exactly one engine thread that constructs the Runtime and
+//! method instances locally and drains the queue; producers (server
+//! connections, load generators) submit over a bounded channel —
+//! backpressure is the channel bound.  Batch size is 1 per the paper's
+//! serving setup; methods are cached per name so checkpoint/compile costs
+//! are paid once.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Result};
+
+use crate::engine::build_method;
+use crate::runtime::Runtime;
+use crate::sampling::SampleParams;
+use crate::spec::{GenRequest, Method, MethodCfg};
+use crate::tokenizer;
+use crate::util::stats::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: u64,
+    pub method: String,
+    pub prompt: String,
+    pub max_new: usize,
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub text: String,
+    pub tokens: usize,
+    pub tau: f64,
+    pub latency_s: f64,
+    pub queue_s: f64,
+    pub error: Option<String>,
+}
+
+enum Msg {
+    Run(Job, Stopwatch, SyncSender<JobResult>),
+    Shutdown,
+}
+
+pub struct Scheduler {
+    tx: SyncSender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Scheduler {
+    /// Spawn the engine worker.  `queue_cap` bounds in-flight requests.
+    pub fn start(artifact_dir: PathBuf, cfg: MethodCfg, queue_cap: usize) -> Scheduler {
+        let (tx, rx) = sync_channel::<Msg>(queue_cap);
+        let handle = std::thread::spawn(move || worker(artifact_dir, cfg, rx));
+        Scheduler { tx, handle: Some(handle) }
+    }
+
+    /// Submit a job; `blocking` waits for queue space, otherwise a full
+    /// queue is an error (backpressure surfaced to the caller).
+    pub fn submit(
+        &self,
+        job: Job,
+        blocking: bool,
+    ) -> Result<Receiver<JobResult>> {
+        let (rtx, rrx) = sync_channel(1);
+        let msg = Msg::Run(job, Stopwatch::start(), rtx);
+        if blocking {
+            self.tx.send(msg).map_err(|_| anyhow::anyhow!("scheduler down"))?;
+        } else {
+            match self.tx.try_send(msg) {
+                Ok(()) => {}
+                Err(TrySendError::Full(_)) => bail!("queue full (backpressure)"),
+                Err(TrySendError::Disconnected(_)) => bail!("scheduler down"),
+            }
+        }
+        Ok(rrx)
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker(artifact_dir: PathBuf, cfg: MethodCfg, rx: Receiver<Msg>) {
+    let rt = match Runtime::new(&artifact_dir) {
+        Ok(rt) => Rc::new(rt),
+        Err(e) => {
+            eprintln!("[scheduler] runtime init failed: {e:#}");
+            // drain and error out every job
+            while let Ok(Msg::Run(job, sw, rtx)) = rx.recv() {
+                let _ = rtx.send(JobResult {
+                    id: job.id,
+                    text: String::new(),
+                    tokens: 0,
+                    tau: 0.0,
+                    latency_s: 0.0,
+                    queue_s: sw.secs(),
+                    error: Some(format!("runtime init failed: {e:#}")),
+                });
+            }
+            return;
+        }
+    };
+    let mut methods: HashMap<String, Box<dyn Method>> = HashMap::new();
+    while let Ok(msg) = rx.recv() {
+        let (job, sw, rtx) = match msg {
+            Msg::Run(j, s, t) => (j, s, t),
+            Msg::Shutdown => break,
+        };
+        let queue_s = sw.secs();
+        let method = match methods.entry(job.method.clone()) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(e) => match build_method(&rt, &job.method, &cfg) {
+                Ok(m) => e.insert(m),
+                Err(err) => {
+                    let _ = rtx.send(JobResult {
+                        id: job.id,
+                        text: String::new(),
+                        tokens: 0,
+                        tau: 0.0,
+                        latency_s: 0.0,
+                        queue_s,
+                        error: Some(format!("{err:#}")),
+                    });
+                    continue;
+                }
+            },
+        };
+        let lsw = Stopwatch::start();
+        let req = GenRequest {
+            prompt_tokens: tokenizer::encode(&job.prompt, true),
+            max_new: job.max_new,
+            params: SampleParams { temperature: job.temperature, seed: job.seed, ..Default::default() },
+        };
+        let result = match method.generate(&req) {
+            Ok(out) => JobResult {
+                id: job.id,
+                text: tokenizer::decode(&out.tokens),
+                tokens: out.tokens.len(),
+                tau: out.metrics.tau(),
+                latency_s: lsw.secs(),
+                queue_s,
+                error: None,
+            },
+            Err(err) => JobResult {
+                id: job.id,
+                text: String::new(),
+                tokens: 0,
+                tau: 0.0,
+                latency_s: lsw.secs(),
+                queue_s,
+                error: Some(format!("{err:#}")),
+            },
+        };
+        let _ = rtx.send(result);
+    }
+
+}

@@ -1,0 +1,167 @@
+//! TCP JSON-lines serving front-end + client.
+//!
+//! Protocol: one JSON object per line.
+//!   request:  {"prompt": "...", "max_tokens": 64, "temperature": 0.0,
+//!              "method": "hass", "seed": 1}
+//!   response: {"id": 1, "text": "...", "tokens": 12, "tau": 4.2,
+//!              "latency_ms": 180.0, "queue_ms": 2.0}
+//!   error:    {"id": 1, "error": "..."}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::scheduler::{Job, JobResult, Scheduler};
+use crate::util::json::{self, Json};
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+pub fn parse_request(line: &str) -> Result<Job> {
+    let j = json::parse(line)?;
+    Ok(Job {
+        id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+        method: j.str_at("method").unwrap_or("hass").to_string(),
+        prompt: j.str_at("prompt").context("missing 'prompt'")?.to_string(),
+        max_new: j.usize_at("max_tokens").unwrap_or(64),
+        temperature: j.f64_at("temperature").unwrap_or(0.0) as f32,
+        seed: j.usize_at("seed").unwrap_or(0) as u64,
+    })
+}
+
+pub fn format_response(r: &JobResult) -> String {
+    match &r.error {
+        Some(e) => Json::obj(vec![
+            ("id", Json::num(r.id as f64)),
+            ("error", Json::str(e.clone())),
+        ])
+        .to_string(),
+        None => Json::obj(vec![
+            ("id", Json::num(r.id as f64)),
+            ("text", Json::str(r.text.clone())),
+            ("tokens", Json::num(r.tokens as f64)),
+            ("tau", Json::num((r.tau * 1000.0).round() / 1000.0)),
+            ("latency_ms", Json::num((r.latency_s * 100_000.0).round() / 100.0)),
+            ("queue_ms", Json::num((r.queue_s * 100_000.0).round() / 100.0)),
+        ])
+        .to_string(),
+    }
+}
+
+/// Blocking accept loop; each connection gets a reader thread that submits
+/// to the shared scheduler.
+pub fn serve(listener: TcpListener, scheduler: Arc<Scheduler>) -> Result<()> {
+    eprintln!("[server] listening on {}", listener.local_addr()?);
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let sched = scheduler.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, &sched) {
+                eprintln!("[server] connection error: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, sched: &Scheduler) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match parse_request(&line) {
+            Ok(job) => match sched.submit(job, true) {
+                Ok(rx) => match rx.recv() {
+                    Ok(r) => format_response(&r),
+                    Err(_) => r#"{"error":"engine dropped"}"#.to_string(),
+                },
+                Err(e) => format!(r#"{{"error":"{e}"}}"#),
+            },
+            Err(e) => format!(r#"{{"error":"bad request: {e}"}}"#),
+        };
+        writer.write_all(resp.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    eprintln!("[server] {peer} disconnected");
+    Ok(())
+}
+
+/// Simple blocking client for examples/load generators.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        Ok(Client { stream: TcpStream::connect(addr)? })
+    }
+
+    pub fn request(&mut self, method: &str, prompt: &str, max_tokens: usize, temperature: f32) -> Result<Json> {
+        let req = Json::obj(vec![
+            ("method", Json::str(method)),
+            ("prompt", Json::str(prompt)),
+            ("max_tokens", Json::num(max_tokens as f64)),
+            ("temperature", Json::num(temperature as f64)),
+        ])
+        .to_string();
+        self.stream.write_all(req.as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        Ok(json::parse(line.trim())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_fields() {
+        let j = parse_request(
+            r#"{"prompt": "hi", "max_tokens": 10, "temperature": 1.0, "method": "eagle2"}"#,
+        )
+        .unwrap();
+        assert_eq!(j.prompt, "hi");
+        assert_eq!(j.max_new, 10);
+        assert_eq!(j.method, "eagle2");
+        assert!((j.temperature - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_request_defaults() {
+        let j = parse_request(r#"{"prompt": "x"}"#).unwrap();
+        assert_eq!(j.max_new, 64);
+        assert_eq!(j.method, "hass");
+        assert_eq!(j.temperature, 0.0);
+    }
+
+    #[test]
+    fn missing_prompt_is_error() {
+        assert!(parse_request(r#"{"max_tokens": 3}"#).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_as_json() {
+        let r = JobResult {
+            id: 7,
+            text: "a\"b".into(),
+            tokens: 3,
+            tau: 4.25,
+            latency_s: 0.5,
+            queue_s: 0.001,
+            error: None,
+        };
+        let j = json::parse(&format_response(&r)).unwrap();
+        assert_eq!(j.usize_at("id"), Some(7));
+        assert_eq!(j.str_at("text"), Some("a\"b"));
+        assert_eq!(j.f64_at("latency_ms"), Some(500.0));
+    }
+}

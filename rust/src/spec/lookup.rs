@@ -1,0 +1,240 @@
+//! Training-free lookup drafts:
+//!
+//! * **PLD** (prompt lookup decoding, Saxena 2023): match the current
+//!   suffix n-gram against the prompt + generated history; propose the
+//!   tokens that followed the match.
+//! * **Lookahead** (Fu et al. 2023), simplified: an online n-gram pool
+//!   harvested from the generated stream proposes continuations.  (The full
+//!   Jacobi-trajectory pool is out of scope; this preserves the
+//!   verification branch + n-gram cache essence — see DESIGN.md §2.)
+//!
+//! Both verify a proposed chain with one target call and accept by
+//! sample-then-match (argmax matching at T=0, the only temperature the
+//! paper reports for these methods).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::engine::metrics::Metrics;
+use crate::engine::sessions::TargetSession;
+use crate::runtime::{Checkpoint, Runtime};
+use crate::sampling::{process_logits, sample_token};
+use crate::spec::{truncate_eos, GenOutput, GenRequest, Method};
+use crate::tokenizer::EOS;
+use crate::util::rng::Rng;
+use crate::util::stats::Stopwatch;
+
+#[derive(Clone, Copy, PartialEq)]
+pub enum LookupKind {
+    Pld,
+    Lookahead,
+}
+
+pub struct Lookup {
+    target: TargetSession,
+    kind: LookupKind,
+    max_chain: usize,
+    ngram: usize,
+}
+
+impl Lookup {
+    pub fn new(
+        rt: Rc<Runtime>,
+        target_w: Rc<Checkpoint>,
+        kind: LookupKind,
+        max_chain: usize,
+    ) -> Result<Lookup> {
+        Ok(Lookup {
+            target: TargetSession::new(rt, target_w)?,
+            kind,
+            max_chain,
+            ngram: 3,
+        })
+    }
+
+    /// PLD: longest-suffix match in history; returns following tokens.
+    fn propose_pld(&self, history: &[i32]) -> Vec<i32> {
+        for n in (1..=self.ngram.min(history.len().saturating_sub(1))).rev() {
+            let suffix = &history[history.len() - n..];
+            // scan backwards for the most recent earlier occurrence
+            let limit = history.len() - n;
+            for start in (0..limit).rev() {
+                if &history[start..start + n] == suffix {
+                    let from = start + n;
+                    let to = (from + self.max_chain).min(history.len() - n);
+                    if from < to {
+                        return history[from..to].to_vec();
+                    }
+                }
+            }
+        }
+        Vec::new()
+    }
+
+    /// Lookahead: pool of bigram -> continuation harvested online.
+    fn propose_pool(
+        &self,
+        pool: &HashMap<(i32, i32), Vec<i32>>,
+        history: &[i32],
+    ) -> Vec<i32> {
+        if history.len() < 2 {
+            return Vec::new();
+        }
+        let key = (history[history.len() - 2], history[history.len() - 1]);
+        let mut out = Vec::new();
+        let mut cur = key;
+        while out.len() < self.max_chain {
+            match pool.get(&cur) {
+                Some(cont) if !cont.is_empty() => {
+                    let nxt = cont[cont.len() - 1]; // most recent continuation
+                    out.push(nxt);
+                    cur = (cur.1, nxt);
+                }
+                _ => break,
+            }
+        }
+        out
+    }
+}
+
+impl Method for Lookup {
+    fn name(&self) -> String {
+        match self.kind {
+            LookupKind::Pld => "pld".into(),
+            LookupKind::Lookahead => "lookahead".into(),
+        }
+    }
+
+    fn generate(&mut self, req: &GenRequest) -> Result<GenOutput> {
+        let mut metrics = Metrics::default();
+        let mut rng = Rng::new(req.params.seed);
+        self.target.reset();
+        let plen = req.prompt_tokens.len();
+
+        let sw = Stopwatch::start();
+        let last_logits = self.target.prefill(&req.prompt_tokens)?;
+        metrics.phases.verify_s += sw.secs();
+        metrics.target_calls += 1;
+
+        let mut out_tokens = Vec::new();
+        let probs = process_logits(&last_logits, &req.params);
+        out_tokens.push(sample_token(&probs, &mut rng) as i32);
+
+        let mut pool: HashMap<(i32, i32), Vec<i32>> = HashMap::new();
+        // seed the pool from the prompt
+        for w in req.prompt_tokens.windows(3) {
+            pool.entry((w[0], w[1])).or_default().push(w[2]);
+        }
+
+        while out_tokens.len() < req.max_new
+            && *out_tokens.last().unwrap() != EOS
+            && self.target.cache.remaining() > self.max_chain + 2
+        {
+            let root = *out_tokens.last().unwrap();
+            let mut history = req.prompt_tokens.clone();
+            history.extend(&out_tokens);
+
+            let sw = Stopwatch::start();
+            let chain = match self.kind {
+                LookupKind::Pld => self.propose_pld(&history),
+                LookupKind::Lookahead => self.propose_pool(&pool, &history),
+            };
+            metrics.phases.draft_s += sw.secs();
+
+            let mut block = vec![root];
+            block.extend(&chain);
+            let base_pos = plen + out_tokens.len() - 1;
+            let positions: Vec<usize> = (0..block.len()).map(|i| base_pos + i).collect();
+
+            let sw = Stopwatch::start();
+            let ver = self.target.decode(&block, &positions, None)?;
+            metrics.phases.verify_s += sw.secs();
+            metrics.target_calls += 1;
+            metrics.draft_tokens_verified += chain.len();
+
+            // chain walk: sample at each position; accept while it matches
+            let sw = Stopwatch::start();
+            let mut accepted = 0usize;
+            let mut emitted: Vec<i32> = Vec::new();
+            loop {
+                let probs = process_logits(ver.logits.row(accepted), &req.params);
+                let x = if req.params.greedy() {
+                    crate::sampling::argmax(&probs) as i32
+                } else {
+                    sample_token(&probs, &mut rng) as i32
+                };
+                if accepted < chain.len() && x == chain[accepted] && x != EOS {
+                    emitted.push(x);
+                    accepted += 1;
+                } else {
+                    emitted.push(x);
+                    break;
+                }
+            }
+            metrics.phases.sample_s += sw.secs();
+
+            let accepted_rows: Vec<usize> = (0..=accepted).collect();
+            self.target.commit_rows(&accepted_rows, &ver.feats)?;
+            metrics.record_cycle(accepted, emitted.len());
+
+            // harvest pool n-grams from newly emitted tokens
+            let mut h2 = history.clone();
+            h2.extend(&emitted);
+            let start = h2.len().saturating_sub(emitted.len() + 2);
+            for w in h2[start..].windows(3) {
+                let e = pool.entry((w[0], w[1])).or_default();
+                e.push(w[2]);
+                if e.len() > 8 {
+                    e.remove(0);
+                }
+            }
+            out_tokens.extend(emitted);
+        }
+        if out_tokens.len() > req.max_new {
+            out_tokens.truncate(req.max_new);
+        }
+        truncate_eos(&mut out_tokens);
+        Ok(GenOutput { tokens: out_tokens, metrics })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // propose_pld is pure — test without a runtime
+    fn mk() -> Lookup {
+        // SAFETY: construct via raw parts is impossible; instead test the
+        // algorithm through a tiny shim replicating propose_pld.
+        unimplemented!()
+    }
+
+    #[test]
+    fn pld_matching_logic() {
+        // replicate propose_pld standalone to keep it runtime-free
+        fn propose(history: &[i32], ngram: usize, max_chain: usize) -> Vec<i32> {
+            for n in (1..=ngram.min(history.len().saturating_sub(1))).rev() {
+                let suffix = &history[history.len() - n..];
+                let limit = history.len() - n;
+                for start in (0..limit).rev() {
+                    if &history[start..start + n] == suffix {
+                        let from = start + n;
+                        let to = (from + max_chain).min(history.len() - n);
+                        if from < to {
+                            return history[from..to].to_vec();
+                        }
+                    }
+                }
+            }
+            Vec::new()
+        }
+        // history: "a b c X a b c" -> suffix [a,b,c] matches at 0, proposes [X]
+        let h = [10, 11, 12, 99, 10, 11, 12];
+        assert_eq!(propose(&h, 3, 5), vec![99]);
+        // no repeat -> empty
+        assert_eq!(propose(&[1, 2, 3, 4], 3, 5), Vec::<i32>::new());
+        let _ = mk as fn() -> Lookup; // silence dead_code for the shim
+    }
+}

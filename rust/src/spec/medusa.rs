@@ -1,0 +1,140 @@
+//! Medusa (Cai et al. 2024): K independent feature heads on the frozen
+//! target predict tokens t+1..t+K; a sparse static tree over per-head
+//! top-k ranks is verified in one target call.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::engine::metrics::Metrics;
+use crate::engine::sessions::{MedusaHeads, TargetSession};
+use crate::runtime::{Checkpoint, Runtime};
+use crate::sampling::{process_logits, sample_token, topk};
+use crate::spec::{accept_walk, truncate_eos, GenOutput, GenRequest, Method};
+use crate::tokenizer::EOS;
+use crate::tree::{medusa_template, Tree};
+use crate::util::rng::Rng;
+use crate::util::stats::Stopwatch;
+
+pub struct Medusa {
+    target: TargetSession,
+    heads: MedusaHeads,
+    template: Vec<Vec<usize>>,
+}
+
+impl Medusa {
+    pub fn new(
+        rt: Rc<Runtime>,
+        target_w: Rc<Checkpoint>,
+        medusa_w: Rc<Checkpoint>,
+    ) -> Result<Medusa> {
+        let heads = MedusaHeads::new(rt.clone(), medusa_w, &target_w)?;
+        Ok(Medusa {
+            target: TargetSession::new(rt, target_w)?,
+            heads,
+            template: medusa_template(),
+        })
+    }
+
+    /// Build the static tree from per-head top-k logits.  A node with rank
+    /// path [r1..rd] carries head_d's rank-r_d token; its score is the sum
+    /// of the heads' log-probs (ordering only).
+    fn build_tree(&self, root_token: i32, head_logits: &[Vec<f32>]) -> Tree {
+        let max_rank = 1 + self
+            .template
+            .iter()
+            .flat_map(|p| p.iter().copied())
+            .max()
+            .unwrap_or(0);
+        let head_top: Vec<Vec<(f32, usize)>> = head_logits
+            .iter()
+            .map(|l| {
+                let sm = crate::sampling::log_softmax(l);
+                topk(&sm, max_rank)
+            })
+            .collect();
+        let mut tree = Tree::new(root_token);
+        let mut node_of_path: std::collections::HashMap<Vec<usize>, usize> =
+            std::collections::HashMap::new();
+        let mut paths = self.template.clone();
+        paths.sort_by_key(|p| p.len()); // parents first
+        for path in paths {
+            let depth = path.len();
+            if depth > head_top.len() {
+                continue;
+            }
+            let parent = if depth == 1 {
+                0
+            } else {
+                match node_of_path.get(&path[..depth - 1].to_vec()) {
+                    Some(&p) => p,
+                    None => continue,
+                }
+            };
+            let rank = path[depth - 1];
+            let (lp, tok) = head_top[depth - 1][rank];
+            let idx = tree.add_child(parent, tok as i32, lp);
+            node_of_path.insert(path.clone(), idx);
+        }
+        tree
+    }
+}
+
+impl Method for Medusa {
+    fn name(&self) -> String {
+        "medusa".into()
+    }
+
+    fn generate(&mut self, req: &GenRequest) -> Result<GenOutput> {
+        let mut metrics = Metrics::default();
+        let mut rng = Rng::new(req.params.seed);
+        self.target.reset();
+        let plen = req.prompt_tokens.len();
+
+        let sw = Stopwatch::start();
+        let last_logits = self.target.prefill(&req.prompt_tokens)?;
+        metrics.phases.verify_s += sw.secs();
+        metrics.target_calls += 1;
+
+        let mut out_tokens = Vec::new();
+        let probs = process_logits(&last_logits, &req.params);
+        out_tokens.push(sample_token(&probs, &mut rng) as i32);
+        // heads read the feature of the last committed position
+        let mut head_feat: Vec<f32> = self.target.feats[plen - 1].clone();
+
+        while out_tokens.len() < req.max_new
+            && *out_tokens.last().unwrap() != EOS
+            && self.target.cache.remaining() > self.template.len() + 3
+        {
+            let root = *out_tokens.last().unwrap();
+            let sw = Stopwatch::start();
+            let head_logits = self.heads.predict(&head_feat)?;
+            metrics.draft_calls += 1;
+            let tree = self.build_tree(root, &head_logits);
+            let plan = tree.flatten_all();
+            metrics.phases.draft_s += sw.secs();
+
+            let base_pos = plen + out_tokens.len() - 1;
+            let positions: Vec<usize> = plan.depths.iter().map(|&d| base_pos + d).collect();
+            let anc = plan.block_mask();
+
+            let sw = Stopwatch::start();
+            let ver = self.target.decode(&plan.tokens, &positions, Some(&anc))?;
+            metrics.phases.verify_s += sw.secs();
+            metrics.target_calls += 1;
+
+            let sw = Stopwatch::start();
+            let walk = accept_walk(&plan, &ver, &req.params, &mut rng, &mut metrics);
+            metrics.phases.sample_s += sw.secs();
+
+            self.target.commit_rows(&walk.accepted_rows, &ver.feats)?;
+            head_feat = ver.feats.row(walk.bonus_parent_row).to_vec();
+            out_tokens.extend(&walk.new_tokens);
+        }
+        if out_tokens.len() > req.max_new {
+            out_tokens.truncate(req.max_new);
+        }
+        truncate_eos(&mut out_tokens);
+        Ok(GenOutput { tokens: out_tokens, metrics })
+    }
+}

@@ -1,0 +1,249 @@
+//! Speculative-decoding methods (the paper's comparison set, Table 1/2):
+//!
+//! | method     | drafts from                  | structure      | module     |
+//! |------------|------------------------------|----------------|------------|
+//! | vanilla    | —                            | 1 token/step   | vanilla.rs |
+//! | SpS        | independent tiny LM          | chain (γ)      | sps.rs     |
+//! | PLD        | prompt n-gram lookup         | chain          | lookup.rs  |
+//! | Lookahead  | online n-gram pool           | chain          | lookup.rs  |
+//! | Medusa     | feature heads on the target  | static tree    | medusa.rs  |
+//! | EAGLE      | feature-level draft net      | static tree    | eagle.rs   |
+//! | EAGLE-2    | feature-level draft net      | dynamic tree   | eagle.rs   |
+//! | HASS       | EAGLE-2 + HASS checkpoint    | dynamic tree   | eagle.rs   |
+//!
+//! All methods share the target session + the lossless verification walk;
+//! HASS differs from EAGLE-2 *only* by its draft checkpoint — exactly the
+//! paper's setup (training-time contribution, zero inference overhead).
+
+pub mod eagle;
+pub mod lookup;
+pub mod medusa;
+pub mod sps;
+pub mod vanilla;
+
+use anyhow::Result;
+
+use crate::engine::metrics::Metrics;
+use crate::engine::sessions::DecodeOut;
+use crate::sampling::{accept_at_node, process_logits, SampleParams};
+use crate::tokenizer::EOS;
+use crate::tree::VerifyPlan;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub prompt_tokens: Vec<i32>,
+    pub max_new: usize,
+    pub params: SampleParams,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenOutput {
+    pub tokens: Vec<i32>,
+    pub metrics: Metrics,
+}
+
+pub trait Method {
+    fn name(&self) -> String;
+    fn generate(&mut self, req: &GenRequest) -> Result<GenOutput>;
+}
+
+/// Method configuration (paper hyper-parameters + ablation knobs).
+#[derive(Clone, Debug)]
+pub struct MethodCfg {
+    /// draft checkpoint name (eagle.rs methods)
+    pub draft_ckpt: String,
+    /// dynamic-tree depth (EAGLE-2/HASS; paper default 6)
+    pub depth: usize,
+    /// dynamic-tree total draft tokens kept at rerank (paper default 60)
+    pub total_tokens: usize,
+    /// dynamic-tree expansion beam (EAGLE-2 top-k; default 10)
+    pub beam: usize,
+    /// SpS chain length γ
+    pub gamma: usize,
+    /// PLD/Lookahead max proposed chain
+    pub lookup_len: usize,
+}
+
+impl Default for MethodCfg {
+    fn default() -> Self {
+        MethodCfg {
+            draft_ckpt: "hass".into(),
+            depth: 6,
+            total_tokens: 60,
+            beam: 10,
+            gamma: 4,
+            lookup_len: 5,
+        }
+    }
+}
+
+/// Result of the acceptance walk over a verified tree block.
+pub struct WalkOutcome {
+    /// block rows committed (root + accepted path), strictly increasing
+    pub accepted_rows: Vec<usize>,
+    /// tokens emitted this cycle (accepted path tokens + bonus)
+    pub new_tokens: Vec<i32>,
+    /// row whose target distribution produced the bonus (its feature is the
+    /// draft input paired with the bonus token next cycle)
+    pub bonus_parent_row: usize,
+}
+
+/// Lossless acceptance walk (sample-then-match; greedy == argmax matching).
+/// `plan` rows must be in BFS order; `out.logits` row i is the target's
+/// next-token logits at plan row i.
+pub fn accept_walk(
+    plan: &VerifyPlan,
+    out: &DecodeOut,
+    params: &SampleParams,
+    rng: &mut Rng,
+    metrics: &mut Metrics,
+) -> WalkOutcome {
+    let mut cur = 0usize;
+    let mut accepted_rows = vec![0usize];
+    let mut new_tokens = Vec::new();
+    let mut depth_accepted = 0usize;
+    loop {
+        let probs = process_logits(out.logits.row(cur), params);
+        let children = &plan.children_rows[cur];
+        let child_tokens: Vec<i32> = children.iter().map(|&c| plan.tokens[c]).collect();
+        let (hit, x) = accept_at_node(&probs, &child_tokens, rng, params.greedy());
+        match hit {
+            Some(j) if !children.is_empty() => {
+                cur = children[j];
+                accepted_rows.push(cur);
+                new_tokens.push(plan.tokens[cur]);
+                depth_accepted += 1;
+                if plan.tokens[cur] == EOS {
+                    // EOS accepted: no bonus beyond it
+                    metrics.record_cycle(depth_accepted, new_tokens.len());
+                    metrics.draft_tokens_verified += plan.len() - 1;
+                    return WalkOutcome {
+                        accepted_rows,
+                        new_tokens,
+                        bonus_parent_row: cur,
+                    };
+                }
+            }
+            _ => {
+                new_tokens.push(x);
+                metrics.record_cycle(depth_accepted, new_tokens.len());
+                metrics.draft_tokens_verified += plan.len() - 1;
+                return WalkOutcome { accepted_rows, new_tokens, bonus_parent_row: cur };
+            }
+        }
+    }
+}
+
+/// Truncate an output stream at (and including) the first EOS.
+pub fn truncate_eos(tokens: &mut Vec<i32>) -> bool {
+    if let Some(p) = tokens.iter().position(|&t| t == EOS) {
+        tokens.truncate(p + 1);
+        true
+    } else {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::TensorF;
+    use crate::tree::Tree;
+
+    fn plan_and_logits(vocab: usize) -> (VerifyPlan, DecodeOut) {
+        // root(tok 5) -> a(tok 7) -> aa(tok 9); plus sibling b(tok 8)
+        let mut t = Tree::new(5);
+        let a = t.add_child(0, 7, -0.1);
+        let _b = t.add_child(0, 8, -1.0);
+        let _aa = t.add_child(a, 9, -0.2);
+        let plan = t.flatten_all();
+        // logits rows: make row of node X put all mass on its best child
+        let n = plan.len();
+        let mut logits = vec![-10.0f32; n * vocab];
+        for row in 0..n {
+            // target prefers token (7,9,...) chain: root->7, a->9, others->0
+            let tok = match plan.tokens[row] {
+                5 => 7,
+                7 => 9,
+                _ => 0,
+            };
+            logits[row * vocab + tok as usize] = 10.0;
+        }
+        let out = DecodeOut {
+            logits: TensorF::new(vec![n, vocab], logits).unwrap(),
+            feats: TensorF::zeros(&[n, 4]),
+        };
+        (plan, out)
+    }
+
+    #[test]
+    fn greedy_walk_follows_matching_path() {
+        let (plan, out) = plan_and_logits(16);
+        let mut m = Metrics::default();
+        let mut rng = Rng::new(0);
+        let params = SampleParams { temperature: 0.0, ..Default::default() };
+        let w = accept_walk(&plan, &out, &params, &mut rng, &mut m);
+        // path: root -> 7 -> 9, then bonus 0 from node 9's row
+        assert_eq!(w.new_tokens, vec![7, 9, 0]);
+        assert_eq!(w.accepted_rows.len(), 3);
+        assert_eq!(m.cycles, 1);
+        assert_eq!(m.new_tokens, 3);
+        assert!((m.alpha(0) - 1.0).abs() < 1e-9);
+        assert!((m.alpha(1) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn walk_rejects_when_target_prefers_other_token() {
+        let mut t = Tree::new(5);
+        t.add_child(0, 7, -0.1);
+        let plan = t.flatten_all();
+        let vocab = 16;
+        let mut logits = vec![-10.0f32; plan.len() * vocab];
+        logits[3] = 10.0; // root row prefers token 3, child is 7 -> reject
+        logits[vocab + 1] = 10.0;
+        let out = DecodeOut {
+            logits: TensorF::new(vec![plan.len(), vocab], logits).unwrap(),
+            feats: TensorF::zeros(&[plan.len(), 4]),
+        };
+        let mut m = Metrics::default();
+        let mut rng = Rng::new(0);
+        let params = SampleParams { temperature: 0.0, ..Default::default() };
+        let w = accept_walk(&plan, &out, &params, &mut rng, &mut m);
+        assert_eq!(w.new_tokens, vec![3]);
+        assert_eq!(w.accepted_rows, vec![0]);
+        assert_eq!(w.bonus_parent_row, 0);
+        assert_eq!(m.alpha(0), 0.0);
+    }
+
+    #[test]
+    fn walk_stops_at_eos() {
+        let mut t = Tree::new(5);
+        let e = t.add_child(0, EOS, -0.1);
+        t.add_child(e, 7, -0.1);
+        let plan = t.flatten_all();
+        let vocab = 16;
+        let mut logits = vec![-10.0f32; plan.len() * vocab];
+        for row in 0..plan.len() {
+            logits[row * vocab + EOS as usize] = 10.0;
+        }
+        let out = DecodeOut {
+            logits: TensorF::new(vec![plan.len(), vocab], logits).unwrap(),
+            feats: TensorF::zeros(&[plan.len(), 4]),
+        };
+        let mut m = Metrics::default();
+        let mut rng = Rng::new(0);
+        let params = SampleParams { temperature: 0.0, ..Default::default() };
+        let w = accept_walk(&plan, &out, &params, &mut rng, &mut m);
+        assert_eq!(w.new_tokens, vec![EOS]);
+    }
+
+    #[test]
+    fn truncate_at_eos() {
+        let mut v = vec![10, 11, EOS, 40];
+        assert!(truncate_eos(&mut v));
+        assert_eq!(v, vec![10, 11, EOS]);
+        let mut w = vec![10, 11];
+        assert!(!truncate_eos(&mut w));
+    }
+}

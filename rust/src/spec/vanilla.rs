@@ -1,0 +1,67 @@
+//! Vanilla auto-regressive decoding — the 1.00x baseline every speedup in
+//! Table 2 is measured against.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::engine::metrics::Metrics;
+use crate::engine::sessions::TargetSession;
+use crate::runtime::{Checkpoint, Runtime};
+use crate::sampling::{process_logits, sample_token};
+use crate::spec::{truncate_eos, GenOutput, GenRequest, Method};
+use crate::util::rng::Rng;
+use crate::util::stats::Stopwatch;
+
+pub struct Vanilla {
+    target: TargetSession,
+}
+
+impl Vanilla {
+    pub fn new(rt: Rc<Runtime>, target_w: Rc<Checkpoint>) -> Result<Vanilla> {
+        Ok(Vanilla { target: TargetSession::new(rt, target_w)? })
+    }
+}
+
+impl Method for Vanilla {
+    fn name(&self) -> String {
+        "vanilla".into()
+    }
+
+    fn generate(&mut self, req: &GenRequest) -> Result<GenOutput> {
+        let mut metrics = Metrics::default();
+        let mut rng = Rng::new(req.params.seed);
+        self.target.reset();
+
+        let sw = Stopwatch::start();
+        let last_logits = self.target.prefill(&req.prompt_tokens)?;
+        metrics.phases.verify_s += sw.secs();
+        metrics.target_calls += 1;
+
+        let mut out_tokens = Vec::new();
+        let probs = process_logits(&last_logits, &req.params);
+        let mut next = sample_token(&probs, &mut rng) as i32;
+        out_tokens.push(next);
+
+        while out_tokens.len() < req.max_new
+            && *out_tokens.last().unwrap() != crate::tokenizer::EOS
+            && self.target.cache.remaining() > 1
+        {
+            let pos = req.prompt_tokens.len() + out_tokens.len() - 1;
+            let sw = Stopwatch::start();
+            let out = self.target.decode(&[next], &[pos], None)?;
+            metrics.phases.verify_s += sw.secs();
+            metrics.target_calls += 1;
+            self.target.commit_rows(&[0], &out.feats)?;
+
+            let sw = Stopwatch::start();
+            let probs = process_logits(out.logits.row(0), &req.params);
+            next = sample_token(&probs, &mut rng) as i32;
+            metrics.phases.sample_s += sw.secs();
+            out_tokens.push(next);
+            metrics.record_cycle(0, 1);
+        }
+        truncate_eos(&mut out_tokens);
+        Ok(GenOutput { tokens: out_tokens, metrics })
+    }
+}

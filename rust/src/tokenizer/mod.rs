@@ -1,0 +1,109 @@
+//! Char-level tokenizer, vocab 128 — the exact mirror of
+//! `python/compile/data.py` (ids 0/1/2/3 = PAD/BOS/EOS/UNK; '\t'=9,
+//! '\n'=10; printable ASCII 32..=126 map to their own byte value).
+
+pub const VOCAB: usize = 128;
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const UNK: i32 = 3;
+
+pub fn encode(text: &str, bos: bool) -> Vec<i32> {
+    let mut ids = Vec::with_capacity(text.len() + 1);
+    if bos {
+        ids.push(BOS);
+    }
+    for ch in text.chars() {
+        let o = ch as u32;
+        if o == 9 || o == 10 || (32..=126).contains(&o) {
+            ids.push(o as i32);
+        } else {
+            ids.push(UNK);
+        }
+    }
+    ids
+}
+
+pub fn decode(ids: &[i32]) -> String {
+    let mut out = String::with_capacity(ids.len());
+    for &i in ids {
+        match i {
+            PAD | BOS => continue,
+            EOS => break,
+            9 | 10 => out.push(i as u8 as char),
+            32..=126 => out.push(i as u8 as char),
+            _ => out.push('?'),
+        }
+    }
+    out
+}
+
+pub fn is_valid(id: i32) -> bool {
+    (0..VOCAB as i32).contains(&id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "User: hi\nAssistant: 1 + 2 = 3\t(ok)";
+        assert_eq!(decode(&encode(s, false)), s);
+    }
+
+    #[test]
+    fn bos_skipped_eos_stops() {
+        let mut ids = encode("ab", true);
+        ids.push(EOS);
+        ids.extend(encode("zz", false));
+        assert_eq!(decode(&ids), "ab");
+    }
+
+    #[test]
+    fn non_ascii_to_unk() {
+        let ids = encode("héllo", false);
+        assert!(ids.contains(&UNK));
+        assert_eq!(decode(&ids), "h?llo");
+    }
+
+    #[test]
+    fn prop_roundtrip_printable() {
+        prop::check(
+            "tokenizer roundtrip on printable ascii",
+            |r| {
+                (0..r.gen_range(60))
+                    .map(|_| (32 + r.gen_range(95)) as u8 as char)
+                    .collect::<String>()
+            },
+            |s| {
+                let back = decode(&encode(s, false));
+                if back == *s {
+                    Ok(())
+                } else {
+                    Err(format!("{s:?} -> {back:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_all_ids_in_vocab() {
+        prop::check(
+            "encoded ids within vocab",
+            |r| {
+                (0..r.gen_range(40))
+                    .map(|_| char::from_u32(r.gen_range(300) as u32).unwrap_or('x'))
+                    .collect::<String>()
+            },
+            |s| {
+                if encode(s, true).iter().all(|&i| is_valid(i)) {
+                    Ok(())
+                } else {
+                    Err("id out of vocab".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,107 @@
+//! Minimal CLI argument parser (clap substitute for the offline build).
+//!
+//! Grammar: `binary <subcommand> [positionals] [--flag value | --switch]`.
+//! Flags may appear anywhere after the subcommand; `--flag=value` also works.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positionals: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                a.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    a.flags.insert(stripped.to_string(), it.next().unwrap().clone());
+                } else {
+                    a.switches.push(stripped.to_string());
+                }
+            } else {
+                a.positionals.push(arg.clone());
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = args("table 1 --temp 0.0 --suite code --verbose");
+        assert_eq!(a.subcommand, "table");
+        assert_eq!(a.positionals, ["1"]);
+        assert_eq!(a.get("temp"), Some("0.0"));
+        assert_eq!(a.get("suite"), Some("code"));
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = args("serve --port=9000 --depth=6");
+        assert_eq!(a.usize_or("port", 0), 9000);
+        assert_eq!(a.usize_or("depth", 0), 6);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("gen");
+        assert_eq!(a.usize_or("tokens", 64), 64);
+        assert_eq!(a.f64_or("temp", 1.0), 1.0);
+        assert_eq!(a.get_or("method", "hass"), "hass");
+        assert!(!a.has("anything"));
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = args("bench --fast");
+        assert!(a.has("fast"));
+        assert!(a.get("fast").is_none());
+    }
+}

@@ -1,0 +1,8 @@
+//! Substrate utilities built in-repo (the offline vendor set only carries
+//! the `xla` crate closure — see DESIGN.md §2 substitution table).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,104 @@
+//! Property-testing substrate (proptest substitute for the offline build).
+//!
+//! Seeded case sweeps with failure reporting: every failing case prints its
+//! seed so it can be replayed with `PROP_SEED=<seed>`.  No automatic
+//! shrinking — generators should be written size-parameterized so a failing
+//! seed is already small (the `sized` combinator draws small sizes first).
+
+use crate::util::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        let base_seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        PropConfig { cases: 64, base_seed }
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; panic with seed on first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check_with(PropConfig::default(), name, gen, prop)
+}
+
+pub fn check_with<T: std::fmt::Debug>(
+    cfg: PropConfig,
+    name: &str,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case as u64 * 0x9E3779B9);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (case {case}, replay with PROP_SEED={seed}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Draw sizes small-first: early cases use the low end of [lo, hi].
+pub fn sized(rng: &mut Rng, case_frac: f64, lo: usize, hi: usize) -> usize {
+    let span = ((hi - lo) as f64 * case_frac.clamp(0.05, 1.0)).ceil() as usize;
+    lo + rng.gen_range(span.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("reverse twice is identity", |r| {
+            (0..r.gen_range(20)).map(|_| r.next_u64()).collect::<Vec<_>>()
+        }, |v| {
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if w == *v { Ok(()) } else { Err("mismatch".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", |r| r.gen_range(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut seen = Vec::new();
+        check_with(
+            PropConfig { cases: 5, base_seed: 77 },
+            "record",
+            |r| r.next_u64(),
+            |v| {
+                seen.push(*v);
+                Ok(())
+            },
+        );
+        let mut seen2 = Vec::new();
+        check_with(
+            PropConfig { cases: 5, base_seed: 77 },
+            "record2",
+            |r| r.next_u64(),
+            |v| {
+                seen2.push(*v);
+                Ok(())
+            },
+        );
+        assert_eq!(seen, seen2);
+    }
+}

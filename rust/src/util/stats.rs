@@ -1,0 +1,104 @@
+//! Summary statistics + timing helpers (criterion substitute building block).
+
+use std::time::Instant;
+
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+pub fn summarize(samples: &[f64]) -> Summary {
+    if samples.is_empty() {
+        return Summary::default();
+    }
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| sorted[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        p50: pct(0.50),
+        p90: pct(0.90),
+        p99: pct(0.99),
+    }
+}
+
+/// Accumulates phase wall-times (draft/verify/sample/host) per request.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimer {
+    pub draft_s: f64,
+    pub verify_s: f64,
+    pub sample_s: f64,
+    pub host_s: f64,
+}
+
+impl PhaseTimer {
+    pub fn total(&self) -> f64 {
+        self.draft_s + self.verify_s + self.sample_s + self.host_s
+    }
+    pub fn add(&mut self, other: &PhaseTimer) {
+        self.draft_s += other.draft_s;
+        self.verify_s += other.verify_s;
+        self.sample_s += other.sample_s;
+        self.host_s += other.host_s;
+    }
+}
+
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        assert_eq!(summarize(&[]).n, 0);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = summarize(&[7.0]);
+        assert_eq!(s.p99, 7.0);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut a = PhaseTimer { draft_s: 1.0, verify_s: 2.0, sample_s: 0.5, host_s: 0.25 };
+        let b = a.clone();
+        a.add(&b);
+        assert!((a.total() - 7.5).abs() < 1e-12);
+    }
+}

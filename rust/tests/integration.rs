@@ -1,0 +1,227 @@
+//! End-to-end integration tests over the real artifacts + trained weights.
+//!
+//! These require `make artifacts` (and `make train` for draft methods);
+//! they skip gracefully when artifacts are missing so `cargo test` stays
+//! green on a fresh clone.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use hass::engine::{build_method, generate_once};
+use hass::runtime::Runtime;
+use hass::sampling::SampleParams;
+use hass::spec::{GenRequest, MethodCfg};
+use hass::tokenizer;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    let dir = hass::artifact_dir();
+    if !dir.join("meta.json").exists() {
+        eprintln!("skipping integration test: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Rc::new(Runtime::new(&dir).expect("runtime")))
+}
+
+fn have(rt: &Rc<Runtime>, ckpt: &str) -> bool {
+    rt.has_checkpoint(ckpt)
+}
+
+const PROMPT: &str = "User: Why is music theory interesting?\nAssistant:";
+
+#[test]
+fn greedy_matches_python_goldens() {
+    let Some(rt) = runtime() else { return };
+    let goldens = rt.meta().goldens.clone();
+    if goldens.is_empty() {
+        eprintln!("skipping: goldens not built (train target, re-run make artifacts)");
+        return;
+    }
+    let mut m = build_method(&rt, "vanilla", &MethodCfg::default()).unwrap();
+    for g in &goldens {
+        let req = GenRequest {
+            prompt_tokens: g.prompt_tokens.clone(),
+            max_new: g.greedy_tokens.len(),
+            params: SampleParams { temperature: 0.0, ..Default::default() },
+        };
+        let out = m.generate(&req).unwrap();
+        assert_eq!(
+            out.tokens,
+            g.greedy_tokens[..out.tokens.len()].to_vec(),
+            "rust greedy decode != python golden"
+        );
+    }
+}
+
+/// THE losslessness invariant: at T=0, every speculative method produces
+/// exactly the vanilla greedy continuation.
+#[test]
+fn all_methods_lossless_at_t0() {
+    let Some(rt) = runtime() else { return };
+    let params = SampleParams { temperature: 0.0, ..Default::default() };
+    let cfg = MethodCfg::default();
+    let (want, _) = generate_once(&rt, "vanilla", &cfg, PROMPT, 40, &params).unwrap();
+    for m in ["pld", "lookahead", "sps", "medusa", "eagle", "eagle2", "hass"] {
+        let needs = match m {
+            "sps" => "sps",
+            "medusa" => "medusa",
+            "eagle" | "eagle2" => "eagle",
+            "hass" => "hass",
+            _ => "target",
+        };
+        if !have(&rt, needs) {
+            eprintln!("skipping {m}: checkpoint {needs} not trained");
+            continue;
+        }
+        let (got, out) = generate_once(&rt, m, &cfg, PROMPT, 40, &params).unwrap();
+        assert_eq!(got, want, "method {m} broke greedy losslessness");
+        assert!(out.metrics.tau() >= 1.0, "{m}: tau < 1");
+    }
+}
+
+/// Stochastic sampling must be reproducible per seed and vary across seeds.
+#[test]
+fn sampling_reproducible_per_seed() {
+    let Some(rt) = runtime() else { return };
+    let cfg = MethodCfg::default();
+    if !have(&rt, "hass") {
+        return;
+    }
+    let p1 = SampleParams { temperature: 1.0, seed: 7, ..Default::default() };
+    let (a, _) = generate_once(&rt, "hass", &cfg, PROMPT, 32, &p1).unwrap();
+    let (b, _) = generate_once(&rt, "hass", &cfg, PROMPT, 32, &p1).unwrap();
+    assert_eq!(a, b, "same seed must reproduce");
+    let p2 = SampleParams { temperature: 1.0, seed: 8, ..Default::default() };
+    let (c, _) = generate_once(&rt, "hass", &cfg, PROMPT, 32, &p2).unwrap();
+    assert_ne!(a, c, "different seeds should differ (T=1)");
+}
+
+/// Stochastic losslessness: HASS output at T=1 must equal single-step
+/// target sampling with the same RNG discipline?  RNG streams differ by
+/// construction, so instead assert the *distributional* property on the
+/// first emitted token over many seeds: speculative HASS and vanilla draw
+/// from the same target distribution.
+#[test]
+fn first_token_distribution_matches_vanilla() {
+    let Some(rt) = runtime() else { return };
+    if !have(&rt, "hass") {
+        return;
+    }
+    let cfg = MethodCfg::default();
+    let mut counts_v = std::collections::HashMap::new();
+    let mut counts_h = std::collections::HashMap::new();
+    let n = 60usize;
+    for seed in 0..n as u64 {
+        let p = SampleParams { temperature: 1.0, seed, ..Default::default() };
+        // second emitted token is the first speculative one
+        let (_, ov) = generate_once(&rt, "vanilla", &cfg, PROMPT, 2, &p).unwrap();
+        let (_, oh) = generate_once(&rt, "hass", &cfg, PROMPT, 2, &p).unwrap();
+        *counts_v.entry(ov.tokens[1]).or_insert(0usize) += 1;
+        *counts_h.entry(oh.tokens[1]).or_insert(0usize) += 1;
+    }
+    // total-variation distance between the two empirical distributions
+    let keys: std::collections::HashSet<i32> =
+        counts_v.keys().chain(counts_h.keys()).copied().collect();
+    let tv: f64 = keys
+        .iter()
+        .map(|k| {
+            let a = *counts_v.get(k).unwrap_or(&0) as f64 / n as f64;
+            let b = *counts_h.get(k).unwrap_or(&0) as f64 / n as f64;
+            (a - b).abs()
+        })
+        .sum::<f64>()
+        / 2.0;
+    assert!(tv < 0.35, "empirical TV distance too large: {tv}");
+}
+
+/// Speculative methods must beat vanilla on acceptance length.
+#[test]
+fn hass_tau_exceeds_eagle2_on_dialogue() {
+    let Some(rt) = runtime() else { return };
+    if !(have(&rt, "hass") && have(&rt, "eagle")) {
+        return;
+    }
+    let cfg = MethodCfg::default();
+    let params = SampleParams { temperature: 0.0, ..Default::default() };
+    let mut tau = |m: &str| {
+        let mut total = 0.0;
+        for p in [PROMPT, "User: Can you tell me about the weather?\nAssistant:"] {
+            total += generate_once(&rt, m, &cfg, p, 48, &params).unwrap().1.metrics.tau();
+        }
+        total / 2.0
+    };
+    let h = tau("hass");
+    let e2 = tau("eagle2");
+    assert!(h > 1.5, "hass tau too low: {h}");
+    assert!(e2 > 1.2, "eagle2 tau too low: {e2}");
+    // the paper's headline: HASS >= EAGLE-2 (allow tiny slack for noise)
+    assert!(h >= e2 - 0.15, "hass ({h:.2}) below eagle2 ({e2:.2})");
+}
+
+/// Method instances are reusable across requests (session reset works).
+#[test]
+fn method_reuse_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    if !have(&rt, "hass") {
+        return;
+    }
+    let mut m = build_method(&rt, "hass", &MethodCfg::default()).unwrap();
+    let req = GenRequest {
+        prompt_tokens: tokenizer::encode(PROMPT, true),
+        max_new: 24,
+        params: SampleParams { temperature: 0.0, ..Default::default() },
+    };
+    let a = m.generate(&req).unwrap();
+    let b = m.generate(&req).unwrap();
+    assert_eq!(a.tokens, b.tokens, "stateful session leaked across requests");
+}
+
+/// Prefill logits fingerprint vs python.
+#[test]
+fn prefill_logits_match_python_fingerprint() {
+    let Some(rt) = runtime() else { return };
+    let goldens = rt.meta().goldens.clone();
+    if goldens.is_empty() {
+        return;
+    }
+    use hass::engine::sessions::TargetSession;
+    let tw = rt.checkpoint("target").unwrap();
+    let mut sess = TargetSession::new(rt.clone(), tw).unwrap();
+    for g in &goldens {
+        let logits = sess.prefill(&g.prompt_tokens).unwrap();
+        for (i, want) in g.prefill_logits8.iter().enumerate() {
+            assert!(
+                (logits[i] - want).abs() < 1e-3,
+                "logit {i}: {} vs {}",
+                logits[i],
+                want
+            );
+        }
+        sess.reset();
+    }
+}
+
+/// End-to-end scheduler + TCP server round-trip.
+#[test]
+fn server_roundtrip() {
+    let dir = hass::artifact_dir();
+    if !dir.join("meta.json").exists() || !dir.join("weights/hass.json").exists() {
+        return;
+    }
+    let sched = Arc::new(hass::scheduler::Scheduler::start(
+        dir,
+        MethodCfg::default(),
+        8,
+    ));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let s2 = sched.clone();
+    std::thread::spawn(move || {
+        let _ = hass::server::serve(listener, s2);
+    });
+    let mut c = hass::server::Client::connect(&addr.to_string()).unwrap();
+    let resp = c.request("hass", PROMPT, 24, 0.0).unwrap();
+    assert!(resp.get("error").is_none(), "server error: {resp:?}");
+    assert!(resp.usize_at("tokens").unwrap_or(0) > 0);
+    assert!(resp.f64_at("tau").unwrap_or(0.0) >= 1.0);
+    assert!(!resp.str_at("text").unwrap_or("").is_empty());
+}
