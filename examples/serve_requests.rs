@@ -1,73 +1,134 @@
 //! End-to-end serving driver (the repo's E2E validation workload):
-//! starts the scheduler + TCP server in-process, replays a mixed-suite
-//! request trace from concurrent client connections, and reports
-//! latency percentiles, throughput, and mean acceptance length.
+//! for each worker count, starts a scheduler pool + TCP server
+//! in-process, replays a mixed-suite request trace from concurrent
+//! client connections, fetches the pool's `{"stats": true}` snapshot
+//! over the wire, and reports latency percentiles plus the aggregate
+//! throughput per worker count.
 //!
 //! ```sh
-//! cargo run --release --example serve_requests -- [n_requests] [method]
+//! cargo run --release --example serve_requests -- \
+//!     [--requests 12] [--method hass] [--clients 3] [--workers 1,2]
 //! ```
 
 use std::sync::Arc;
 
 use hass::server::Client;
 use hass::spec::MethodCfg;
+use hass::util::cli::Args;
 use hass::util::stats::summarize;
 use hass::workload::Workloads;
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().collect();
-    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(12);
-    let method = args.get(2).cloned().unwrap_or_else(|| "hass".to_string());
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    // legacy positional form `serve_requests 12 hass` still works: the
+    // leading count parses as Args' subcommand, the method as positional 0
+    let n_requests = args.usize_or("requests", args.subcommand.parse().unwrap_or(12));
+    let method = args.get_or("method", &args.pos_or(0, "hass"));
+    let n_clients = args.usize_or("clients", 3).max(1);
+    let worker_counts = args.usize_list_or("workers", &[1, 2]);
 
     let dir = hass::artifact_dir();
     let wl = Workloads::load(&dir).unwrap_or_else(|_| Workloads::embedded());
-    let sched = Arc::new(hass::scheduler::Scheduler::start(dir, MethodCfg::default(), 64));
-    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
-    let addr = listener.local_addr()?;
-    {
-        let sched = sched.clone();
-        std::thread::spawn(move || hass::server::serve(listener, sched));
-    }
-    println!("server on {addr}; replaying {n_requests} requests with '{method}'");
 
-    let trace = wl.trace(n_requests, 123);
-    let t0 = std::time::Instant::now();
-    let mut handles = Vec::new();
-    // 3 concurrent client connections hammering the queue (batch=1 engine)
-    for (ci, chunk) in trace.chunks(n_requests.div_ceil(3)).enumerate() {
-        let chunk = chunk.to_vec();
-        let method = method.clone();
-        handles.push(std::thread::spawn(move || {
-            let mut c = Client::connect(&addr.to_string()).expect("connect");
-            let mut out = Vec::new();
-            for (suite, prompt, max_new) in chunk {
-                let resp = c.request(&method, &prompt, max_new, 0.0).expect("request");
-                let lat = resp.f64_at("latency_ms").unwrap_or(0.0);
-                let q = resp.f64_at("queue_ms").unwrap_or(0.0);
-                let tau = resp.f64_at("tau").unwrap_or(0.0);
-                let toks = resp.usize_at("tokens").unwrap_or(0);
-                println!("  client{ci} {suite:<9} tokens={toks:<3} tau={tau:<5} lat={lat:.0}ms queue={q:.0}ms");
-                out.push((lat, q, tau, toks));
-            }
-            out
-        }));
-    }
-    let mut lats = Vec::new();
-    let mut taus = Vec::new();
-    let mut total_tokens = 0usize;
-    for h in handles {
-        for (lat, _q, tau, toks) in h.join().unwrap() {
-            lats.push(lat);
-            taus.push(tau);
-            total_tokens += toks;
+    let mut summary = Vec::new();
+    for &workers in &worker_counts {
+        let workers = workers.max(1); // Scheduler::start clamps the same way
+        let sched = Arc::new(hass::scheduler::Scheduler::start(
+            dir.clone(),
+            MethodCfg::default(),
+            64,
+            workers,
+        ));
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        {
+            let sched = sched.clone();
+            std::thread::spawn(move || hass::server::serve(listener, sched));
         }
+        println!(
+            "\n== {workers} worker(s) on {addr}: {n_requests} requests over \
+             {n_clients} connections, method '{method}' =="
+        );
+
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for (ci, chunk) in wl.trace_split(n_requests, 123, n_clients).into_iter().enumerate() {
+            if chunk.is_empty() {
+                continue;
+            }
+            let method = method.clone();
+            let addr = addr.to_string();
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).expect("connect");
+                let mut out = Vec::new();
+                for (suite, prompt, max_new) in chunk {
+                    let resp = c.request(&method, &prompt, max_new, 0.0).expect("request");
+                    if let Some(err) = resp.str_at("error") {
+                        println!("  client{ci} {suite:<9} error: {err}");
+                        continue;
+                    }
+                    let lat = resp.f64_at("latency_ms").unwrap_or(0.0);
+                    let q = resp.f64_at("queue_ms").unwrap_or(0.0);
+                    let tau = resp.f64_at("tau").unwrap_or(0.0);
+                    let toks = resp.usize_at("tokens").unwrap_or(0);
+                    let w = resp.usize_at("worker").unwrap_or(0);
+                    println!(
+                        "  client{ci} {suite:<9} worker={w} tokens={toks:<3} \
+                         tau={tau:<5} lat={lat:.0}ms queue={q:.0}ms"
+                    );
+                    out.push((lat, q, tau, toks));
+                }
+                out
+            }));
+        }
+        let mut lats = Vec::new();
+        let mut taus = Vec::new();
+        let mut total_tokens = 0usize;
+        for h in handles {
+            for (lat, _q, tau, toks) in h.join().expect("client thread") {
+                lats.push(lat);
+                taus.push(tau);
+                total_tokens += toks;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+
+        let mut c = Client::connect(&addr.to_string())?;
+        let stats = c.stats()?;
+        if let Some(agg) = stats.get("stats").and_then(|s| s.get("aggregate")) {
+            println!(
+                "  pool: jobs={} ok={} err={} tokens={} tau={}",
+                agg.usize_at("jobs").unwrap_or(0),
+                agg.usize_at("jobs_ok").unwrap_or(0),
+                agg.usize_at("jobs_err").unwrap_or(0),
+                agg.usize_at("tokens").unwrap_or(0),
+                agg.f64_at("tau").unwrap_or(0.0),
+            );
+        }
+        sched.shutdown();
+
+        let s = summarize(&lats);
+        println!(
+            "  completed: {}   tokens: {}   wall: {:.1}s   mean tau: {:.2}",
+            lats.len(),
+            total_tokens,
+            wall,
+            taus.iter().sum::<f64>() / taus.len().max(1) as f64
+        );
+        summary.push(format!(
+            "workers={workers}: {:.1} tok/s  {:.2} req/s  lat p50={:.0}ms p90={:.0}ms p99={:.0}ms",
+            total_tokens as f64 / wall,
+            lats.len() as f64 / wall,
+            s.p50,
+            s.p90,
+            s.p99,
+        ));
     }
-    let wall = t0.elapsed().as_secs_f64();
-    let s = summarize(&lats);
-    println!("\n== serving summary ({method}) ==");
-    println!("requests: {}   tokens: {}   wall: {:.1}s", lats.len(), total_tokens, wall);
-    println!("throughput: {:.1} tok/s   {:.2} req/s", total_tokens as f64 / wall, lats.len() as f64 / wall);
-    println!("latency ms: mean={:.0} p50={:.0} p90={:.0} p99={:.0}", s.mean, s.p50, s.p90, s.p99);
-    println!("mean tau: {:.2}", taus.iter().sum::<f64>() / taus.len().max(1) as f64);
+
+    println!("\n== aggregate throughput by pool size ==");
+    for line in summary {
+        println!("{line}");
+    }
     Ok(())
 }

@@ -71,6 +71,15 @@ impl Metrics {
         self.draft_calls += o.draft_calls;
         self.draft_tokens_verified += o.draft_tokens_verified;
     }
+
+    /// Merge many Metrics into one aggregate (worker-pool / suite rollups).
+    pub fn merged<'a, I: IntoIterator<Item = &'a Metrics>>(iter: I) -> Metrics {
+        let mut out = Metrics::default();
+        for m in iter {
+            out.merge(m);
+        }
+        out
+    }
 }
 
 /// Device cost model for the paper's speedup accounting (DESIGN.md §7).
@@ -158,6 +167,22 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.cycles, 2);
         assert_eq!(a.new_tokens, 6);
+    }
+
+    #[test]
+    fn merged_aggregates_many() {
+        let mut a = Metrics::default();
+        a.record_cycle(1, 2);
+        let mut b = Metrics::default();
+        b.record_cycle(3, 4);
+        let m = Metrics::merged([&a, &b]);
+        assert_eq!(m.cycles, 2);
+        assert_eq!(m.new_tokens, 6);
+        assert!((m.tau() - 3.0).abs() < 1e-12);
+        // empty merge is the identity (tau finite at 0)
+        let empty = Metrics::merged(std::iter::empty());
+        assert_eq!(empty.cycles, 0);
+        assert_eq!(empty.tau(), 0.0);
     }
 
     #[test]

@@ -68,12 +68,10 @@ impl KvCache {
     }
 
     pub fn k_tensor(&self) -> TensorF {
-        let dims = if self.layers > 1 || true {
-            vec![self.layers, self.slots, self.heads, self.head_dim]
-        } else {
-            vec![self.slots, self.heads, self.head_dim]
-        };
-        TensorF { dims, data: self.k.clone() }
+        TensorF {
+            dims: vec![self.layers, self.slots, self.heads, self.head_dim],
+            data: self.k.clone(),
+        }
     }
 
     pub fn v_tensor(&self) -> TensorF {
@@ -187,6 +185,17 @@ mod tests {
             *x = -(i as f32);
         }
         c
+    }
+
+    #[test]
+    fn k_v_tensor_shapes_symmetric() {
+        for layers in [1, 3] {
+            let c = KvCache::new(layers, 8, 2, 4);
+            assert_eq!(c.k_tensor().dims, c.v_tensor().dims);
+            assert_eq!(c.k_tensor().dims, vec![layers, 8, 2, 4]);
+            assert_eq!(c.k_tensor().data.len(), c.v_tensor().data.len());
+            assert_eq!(c.k_tensor_2d().dims, c.v_tensor_2d().dims);
+        }
     }
 
     #[test]

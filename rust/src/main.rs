@@ -5,8 +5,9 @@
 //!   compare    [--tokens 48 --temp 0.0]      run every method on one prompt
 //!   table <N>  [--prompts 8 --tokens 48]     regenerate paper table N (1-11)
 //!   figure <N>                               regenerate paper figure N
-//!   serve      [--port 7777 --queue 64]      TCP JSON-lines server
-//!   client     --prompt "..." [--addr ...]   one-shot request to a server
+//!   serve      [--port 7777 --queue 64 --workers 1]   TCP JSON-lines server
+//!   client     --prompt "..." [--addr ... --stats]    one-shot request to a server
+//!                                            (--stats fetches pool counters)
 //!   goldens                                  verify vs python goldens
 //!   calibrate                                measure the device cost model
 //!   stats      --method hass                 per-graph call-time breakdown
@@ -111,6 +112,7 @@ fn run(args: &Args) -> Result<()> {
                 hass::artifact_dir(),
                 method_cfg(args),
                 args.usize_or("queue", 64),
+                args.usize_or("workers", 1),
             ));
             let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
             hass::server::serve(listener, sched)
@@ -118,6 +120,10 @@ fn run(args: &Args) -> Result<()> {
         "client" => {
             let addr = args.get_or("addr", "127.0.0.1:7777");
             let mut c = hass::server::Client::connect(&addr)?;
+            if args.has("stats") {
+                println!("{}", c.stats()?.to_string());
+                return Ok(());
+            }
             let resp = c.request(
                 &args.get_or("method", "hass"),
                 &args.get_or("prompt", "User: How does photosynthesis work?\nAssistant:"),

@@ -39,11 +39,15 @@ impl SampleParams {
     }
 }
 
+/// Index of the largest finite value; NaN entries never win (a NaN at
+/// index 0 used to win by default because every `>` against it is false).
 pub fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
-    for i in 1..xs.len() {
-        if xs[i] > xs[best] {
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best_v {
             best = i;
+            best_v = x;
         }
     }
     best
@@ -60,18 +64,29 @@ pub fn process_logits(logits: &[f32], p: &SampleParams) -> Vec<f32> {
     }
     let inv_t = 1.0 / p.temperature;
     let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut probs: Vec<f32> = logits.iter().map(|&l| ((l - mx) * inv_t).exp()).collect();
+    // mask non-finite weights to 0 up front: a NaN logit must never reach
+    // the top-p cumulative sum or normalize() (NaN total would silently
+    // flatten the whole distribution to uniform)
+    let mut probs: Vec<f32> = logits
+        .iter()
+        .map(|&l| {
+            let e = ((l - mx) * inv_t).exp();
+            if e.is_finite() {
+                e
+            } else {
+                0.0
+            }
+        })
+        .collect();
 
     if p.top_k > 0 && p.top_k < v {
-        let mut idx: Vec<usize> = (0..v).collect();
-        idx.sort_unstable_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        let idx = sort_desc_indices(&probs);
         for &i in &idx[p.top_k..] {
             probs[i] = 0.0;
         }
     }
     if p.top_p < 1.0 {
-        let mut idx: Vec<usize> = (0..v).collect();
-        idx.sort_unstable_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        let idx = sort_desc_indices(&probs);
         let total: f32 = probs.iter().sum();
         let mut cum = 0.0;
         for &i in &idx {
@@ -112,11 +127,26 @@ pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
     logits.iter().map(|&l| l - lse).collect()
 }
 
-/// Top-k (value, index) pairs, descending.
-pub fn topk(xs: &[f32], k: usize) -> Vec<(f32, usize)> {
+/// Indices of `xs` sorted by value descending.  NaN entries sort last:
+/// the old `partial_cmp(..).unwrap()` aborted the engine thread whenever
+/// a logit was NaN (satellite regression fix).
+fn sort_desc_indices(xs: &[f32]) -> Vec<usize> {
+    let key = |i: usize| {
+        let x = xs[i];
+        if x.is_nan() {
+            f32::NEG_INFINITY
+        } else {
+            x
+        }
+    };
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_unstable_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
-    idx.into_iter().take(k).map(|i| (xs[i], i)).collect()
+    idx.sort_unstable_by(|&a, &b| key(b).total_cmp(&key(a)));
+    idx
+}
+
+/// Top-k (value, index) pairs, descending; NaN-safe (NaN ranks last).
+pub fn topk(xs: &[f32], k: usize) -> Vec<(f32, usize)> {
+    sort_desc_indices(xs).into_iter().take(k).map(|i| (xs[i], i)).collect()
 }
 
 pub fn sample_token(probs: &[f32], rng: &mut Rng) -> usize {
@@ -245,6 +275,63 @@ mod tests {
         let t = topk(&[0.1, 0.9, 0.5], 2);
         assert_eq!(t[0].1, 1);
         assert_eq!(t[1].1, 2);
+    }
+
+    /// Satellite regression: a NaN logit must not abort the engine thread.
+    #[test]
+    fn topk_nan_ranks_last_without_panic() {
+        let t = topk(&[0.1, f32::NAN, 0.9], 2);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].1, 2);
+        assert_eq!(t[1].1, 0);
+        // NaN only surfaces once the finite values are exhausted
+        let all = topk(&[0.1, f32::NAN, 0.9], 3);
+        assert_eq!(all[2].1, 1);
+        assert!(all[2].0.is_nan());
+    }
+
+    #[test]
+    fn process_logits_with_nan_does_not_panic() {
+        let p = process_logits(
+            &[1.0, f32::NAN, 2.0],
+            &SampleParams { temperature: 1.0, top_k: 2, top_p: 0.9, ..Default::default() },
+        );
+        assert_eq!(p.len(), 3);
+        assert_eq!(p[1], 0.0, "NaN entry must be masked by top-k");
+        assert!(p.iter().all(|x| x.is_finite()));
+    }
+
+    /// The greedy (T=0) serving default must also survive NaN: argmax
+    /// previously returned index 0 whenever xs[0] was NaN.
+    #[test]
+    fn greedy_argmax_skips_nan() {
+        assert_eq!(argmax(&[f32::NAN, 1.0, 2.0]), 2);
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), 0);
+        let p = process_logits(
+            &[f32::NAN, 1.0, 2.0],
+            &SampleParams { temperature: 0.0, ..Default::default() },
+        );
+        assert_eq!(p, vec![0.0, 0.0, 1.0]);
+    }
+
+    /// The top-p-only path must also mask NaN: an unmasked NaN poisons the
+    /// cumulative sum and used to flatten the output to uniform.
+    #[test]
+    fn process_logits_nan_with_top_p_only() {
+        let p = process_logits(
+            &[1.0, f32::NAN, 2.0],
+            &SampleParams { temperature: 1.0, top_k: 0, top_p: 0.9, ..Default::default() },
+        );
+        assert_eq!(p[1], 0.0, "NaN entry must carry zero probability");
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p[2] > p[0], "surviving entries keep their ordering");
+        // no top-k / top-p filters at all
+        let p = process_logits(
+            &[1.0, f32::NAN, 2.0],
+            &SampleParams { temperature: 1.0, ..Default::default() },
+        );
+        assert_eq!(p[1], 0.0);
+        assert!(p.iter().all(|x| x.is_finite()));
     }
 
     /// THE statistical losslessness test for chain rejection sampling:

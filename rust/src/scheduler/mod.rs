@@ -1,22 +1,40 @@
-//! Request scheduler: bounded FIFO queue + a dedicated engine worker.
+//! Request scheduler: bounded FIFO queue + a pool of engine workers.
 //!
-//! The PJRT client (and thus every session) is thread-pinned, so the
-//! scheduler owns exactly one engine thread that constructs the Runtime and
-//! method instances locally and drains the queue; producers (server
-//! connections, load generators) submit over a bounded channel —
-//! backpressure is the channel bound.  Batch size is 1 per the paper's
-//! serving setup; methods are cached per name so checkpoint/compile costs
-//! are paid once.
+//! The PJRT client (and thus every session) is thread-pinned, so each of
+//! the N engine worker threads constructs its own `Runtime` and per-method
+//! cache locally and serves jobs off a shared work queue.  Dispatch is
+//! work-stealing off one bounded `Receiver` behind a mutex: a worker holds
+//! the lock only while *waiting* for a message, never while running a job,
+//! so jobs execute concurrently across workers while idle workers queue
+//! fairly behind the lock.  Producers (server connections, load
+//! generators) submit over the bounded channel — backpressure is the
+//! channel bound, exactly as in the single-worker design.  Batch size
+//! stays 1 per engine per the paper's serving setup; methods are cached
+//! per name in each worker so checkpoint/compile costs are paid once per
+//! worker thread.
+//!
+//! Observability: every worker maintains a [`WorkerStats`] slot (jobs
+//! served, tokens, busy/idle seconds, acceptance [`Metrics`] merged over
+//! its jobs); [`Scheduler::stats`] snapshots them as a [`PoolStats`]
+//! aggregate, which the server exposes through the `{"stats": true}`
+//! JSON-lines request.  [`Scheduler::shutdown`] is graceful: queued jobs
+//! drain (FIFO) before the per-worker stop markers are consumed, then all
+//! engine threads are joined.  `HASS_TEST_JOB_DELAY_MS` injects an
+//! artificial per-job delay (test-only throttle for pool scheduling
+//! tests and queueing demos).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::rc::Rc;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::engine::build_method;
+use crate::engine::metrics::Metrics;
 use crate::runtime::Runtime;
 use crate::sampling::SampleParams;
 use crate::spec::{GenRequest, Method, MethodCfg};
@@ -41,128 +59,480 @@ pub struct JobResult {
     pub tau: f64,
     pub latency_s: f64,
     pub queue_s: f64,
+    /// engine worker that served the job
+    pub worker: usize,
     pub error: Option<String>,
 }
 
+// Results travel over an *unbounded* Sender: a worker must never block
+// handing a result to a slow consumer (that would stall the shared pool
+// for every other connection).  The bounded work queue is the
+// backpressure; a client that never reads only grows its own buffer.
 enum Msg {
-    Run(Job, Stopwatch, SyncSender<JobResult>),
+    Run(Job, Stopwatch, Sender<JobResult>),
     Shutdown,
 }
 
+/// Live counters for one engine worker (updated by the worker thread).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub worker: usize,
+    pub jobs_ok: u64,
+    pub jobs_err: u64,
+    /// tokens emitted across successful jobs
+    pub tokens: u64,
+    /// seconds spent running jobs
+    pub busy_s: f64,
+    /// seconds spent waiting for work
+    pub idle_s: f64,
+    /// acceptance metrics merged over every successful job
+    pub metrics: Metrics,
+}
+
+impl WorkerStats {
+    pub fn jobs(&self) -> u64 {
+        self.jobs_ok + self.jobs_err
+    }
+}
+
+/// Snapshot of the whole pool: per-worker counters + queue depth.
+#[derive(Clone, Debug, Default)]
+pub struct PoolStats {
+    pub workers: Vec<WorkerStats>,
+    /// jobs submitted but not yet picked up by a worker
+    pub queue_depth: usize,
+}
+
+impl PoolStats {
+    pub fn jobs(&self) -> u64 {
+        self.workers.iter().map(WorkerStats::jobs).sum()
+    }
+
+    pub fn jobs_ok(&self) -> u64 {
+        self.workers.iter().map(|w| w.jobs_ok).sum()
+    }
+
+    pub fn jobs_err(&self) -> u64 {
+        self.workers.iter().map(|w| w.jobs_err).sum()
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.workers.iter().map(|w| w.tokens).sum()
+    }
+
+    pub fn busy_s(&self) -> f64 {
+        self.workers.iter().map(|w| w.busy_s).sum()
+    }
+
+    /// Acceptance metrics merged across every worker.
+    pub fn metrics(&self) -> Metrics {
+        Metrics::merged(self.workers.iter().map(|w| &w.metrics))
+    }
+
+    /// Pool-wide acceptance length τ.
+    pub fn tau(&self) -> f64 {
+        self.metrics().tau()
+    }
+}
+
 pub struct Scheduler {
-    tx: SyncSender<Msg>,
-    handle: Option<JoinHandle<()>>,
+    /// `None` once shutdown has begun: closing submissions *before* the
+    /// stop markers are enqueued guarantees no job can land behind them
+    /// (it would be dropped unserved and hang its client).
+    tx: RwLock<Option<SyncSender<Msg>>>,
+    workers: usize,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    stats: Arc<Mutex<Vec<WorkerStats>>>,
+    queue_depth: Arc<AtomicUsize>,
 }
 
 impl Scheduler {
-    /// Spawn the engine worker.  `queue_cap` bounds in-flight requests.
-    pub fn start(artifact_dir: PathBuf, cfg: MethodCfg, queue_cap: usize) -> Scheduler {
-        let (tx, rx) = sync_channel::<Msg>(queue_cap);
-        let handle = std::thread::spawn(move || worker(artifact_dir, cfg, rx));
-        Scheduler { tx, handle: Some(handle) }
+    /// Spawn `workers` engine threads sharing one bounded work queue.
+    /// `queue_cap` bounds submitted-but-unserved requests.
+    pub fn start(
+        artifact_dir: PathBuf,
+        cfg: MethodCfg,
+        queue_cap: usize,
+        workers: usize,
+    ) -> Scheduler {
+        // the env knob is read once per pool (demo/test throttle)
+        let test_delay_ms: Option<u64> = std::env::var("HASS_TEST_JOB_DELAY_MS")
+            .ok()
+            .and_then(|v| v.parse().ok());
+        Scheduler::start_inner(artifact_dir, cfg, queue_cap, workers, test_delay_ms)
+    }
+
+    fn start_inner(
+        artifact_dir: PathBuf,
+        cfg: MethodCfg,
+        queue_cap: usize,
+        workers: usize,
+        test_delay_ms: Option<u64>,
+    ) -> Scheduler {
+        let workers = workers.max(1);
+        let (tx, rx) = sync_channel::<Msg>(queue_cap.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let stats: Arc<Mutex<Vec<WorkerStats>>> = Arc::new(Mutex::new(
+            (0..workers).map(|w| WorkerStats { worker: w, ..WorkerStats::default() }).collect(),
+        ));
+        let queue_depth = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let ctx = WorkerCtx {
+                id: w,
+                stats: stats.clone(),
+                queue_depth: queue_depth.clone(),
+                test_delay_ms,
+            };
+            let rx = rx.clone();
+            let dir = artifact_dir.clone();
+            let cfg = cfg.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("engine-{w}"))
+                    .spawn(move || worker(ctx, dir, cfg, rx))
+                    .expect("spawn engine worker"),
+            );
+        }
+        Scheduler {
+            tx: RwLock::new(Some(tx)),
+            workers,
+            handles: Mutex::new(handles),
+            stats,
+            queue_depth,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     /// Submit a job; `blocking` waits for queue space, otherwise a full
     /// queue is an error (backpressure surfaced to the caller).
-    pub fn submit(
-        &self,
-        job: Job,
-        blocking: bool,
-    ) -> Result<Receiver<JobResult>> {
-        let (rtx, rrx) = sync_channel(1);
-        let msg = Msg::Run(job, Stopwatch::start(), rtx);
-        if blocking {
-            self.tx.send(msg).map_err(|_| anyhow::anyhow!("scheduler down"))?;
-        } else {
-            match self.tx.try_send(msg) {
-                Ok(()) => {}
-                Err(TrySendError::Full(_)) => bail!("queue full (backpressure)"),
-                Err(TrySendError::Disconnected(_)) => bail!("scheduler down"),
-            }
-        }
+    pub fn submit(&self, job: Job, blocking: bool) -> Result<Receiver<JobResult>> {
+        let (rtx, rrx) = channel();
+        self.submit_to(job, blocking, rtx)?;
         Ok(rrx)
     }
 
-    pub fn shutdown(mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
+    /// Submit with a caller-supplied result channel.  One channel can
+    /// collect many jobs (results carry the job id), which lets a server
+    /// connection drain all its responses with a single pump thread.
+    pub fn submit_to(&self, job: Job, blocking: bool, rtx: Sender<JobResult>) -> Result<()> {
+        // holding the read lock across the send excludes shutdown()'s
+        // write-locked sender teardown, so an accepted job always sits
+        // ahead of the stop markers and is guaranteed to be served
+        let guard = self.tx.read().unwrap_or_else(|p| p.into_inner());
+        let tx = match guard.as_ref() {
+            Some(tx) => tx,
+            None => return Err(anyhow::anyhow!("scheduler down")),
+        };
+        let msg = Msg::Run(job, Stopwatch::start(), rtx);
+        // count before sending so the gauge never underflows when a worker
+        // dequeues between the send and the increment
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+        let sent = if blocking {
+            tx.send(msg).map_err(|_| anyhow::anyhow!("scheduler down"))
+        } else {
+            match tx.try_send(msg) {
+                Ok(()) => Ok(()),
+                Err(TrySendError::Full(_)) => Err(anyhow::anyhow!("queue full (backpressure)")),
+                Err(TrySendError::Disconnected(_)) => Err(anyhow::anyhow!("scheduler down")),
+            }
+        };
+        if let Err(e) = sent {
+            self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Snapshot per-worker counters + queue depth.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self.stats.lock().unwrap_or_else(|p| p.into_inner()).clone(),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Graceful shutdown: submissions close first (the write lock waits
+    /// out in-flight submits), then the per-worker stop markers are
+    /// enqueued — the queue is FIFO, so every accepted job drains before
+    /// a worker stops — and all engine threads are joined.  Idempotent.
+    pub fn shutdown(&self) {
+        let tx = self.tx.write().unwrap_or_else(|p| p.into_inner()).take();
+        if let Some(tx) = tx {
+            for _ in 0..self.workers {
+                let _ = tx.send(Msg::Shutdown);
+            }
+        }
+        let mut handles = self.handles.lock().unwrap_or_else(|p| p.into_inner());
+        for h in handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn worker(artifact_dir: PathBuf, cfg: MethodCfg, rx: Receiver<Msg>) {
-    let rt = match Runtime::new(&artifact_dir) {
-        Ok(rt) => Rc::new(rt),
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+struct WorkerCtx {
+    id: usize,
+    stats: Arc<Mutex<Vec<WorkerStats>>>,
+    queue_depth: Arc<AtomicUsize>,
+    /// artificial per-job delay (test-only throttle; see module docs)
+    test_delay_ms: Option<u64>,
+}
+
+impl WorkerCtx {
+    fn add_idle(&self, idle_s: f64) {
+        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
+        stats[self.id].idle_s += idle_s;
+    }
+}
+
+fn worker(ctx: WorkerCtx, artifact_dir: PathBuf, cfg: MethodCfg, rx: Arc<Mutex<Receiver<Msg>>>) {
+    // The runtime is thread-pinned, so each worker owns one.  If init
+    // fails (missing artifacts), keep serving: every job gets an error
+    // result instead of a hang, and the pool stays observable.
+    let (rt, init_err): (Option<Rc<Runtime>>, Option<String>) = match Runtime::new(&artifact_dir) {
+        Ok(rt) => (Some(Rc::new(rt)), None),
         Err(e) => {
-            eprintln!("[scheduler] runtime init failed: {e:#}");
-            // drain and error out every job
-            while let Ok(Msg::Run(job, sw, rtx)) = rx.recv() {
-                let _ = rtx.send(JobResult {
-                    id: job.id,
-                    text: String::new(),
-                    tokens: 0,
-                    tau: 0.0,
-                    latency_s: 0.0,
-                    queue_s: sw.secs(),
-                    error: Some(format!("runtime init failed: {e:#}")),
-                });
-            }
-            return;
+            eprintln!("[scheduler] worker {}: runtime init failed: {e:#}", ctx.id);
+            (None, Some(format!("runtime init failed: {e:#}")))
         }
     };
     let mut methods: HashMap<String, Box<dyn Method>> = HashMap::new();
-    while let Ok(msg) = rx.recv() {
+    loop {
+        let idle_sw = Stopwatch::start();
+        let msg = {
+            let guard = match rx.lock() {
+                Ok(g) => g,
+                Err(_) => return,
+            };
+            guard.recv()
+        };
+        let idle_s = idle_sw.secs();
         let (job, sw, rtx) = match msg {
-            Msg::Run(j, s, t) => (j, s, t),
-            Msg::Shutdown => break,
+            Ok(Msg::Run(j, s, t)) => (j, s, t),
+            Ok(Msg::Shutdown) | Err(_) => {
+                ctx.add_idle(idle_s);
+                return;
+            }
         };
+        ctx.queue_depth.fetch_sub(1, Ordering::Relaxed);
         let queue_s = sw.secs();
-        let method = match methods.entry(job.method.clone()) {
-            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
-            std::collections::hash_map::Entry::Vacant(e) => match build_method(&rt, &job.method, &cfg) {
-                Ok(m) => e.insert(m),
-                Err(err) => {
-                    let _ = rtx.send(JobResult {
-                        id: job.id,
-                        text: String::new(),
-                        tokens: 0,
-                        tau: 0.0,
-                        latency_s: 0.0,
-                        queue_s,
-                        error: Some(format!("{err:#}")),
-                    });
-                    continue;
+        let busy_sw = Stopwatch::start();
+        if let Some(ms) = ctx.test_delay_ms {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+        let (result, job_metrics) = match (&rt, &init_err) {
+            (Some(rt), _) => {
+                // a panicking method (bad logits, artifact mismatch...)
+                // must cost one error response, not the engine thread —
+                // and certainly not a client hung waiting for a reply
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_job(rt, &mut methods, &cfg, &job, queue_s, ctx.id)
+                }));
+                match caught {
+                    Ok(r) => r,
+                    Err(p) => {
+                        // session state may be mid-mutation: rebuild fresh
+                        methods.clear();
+                        let msg = panic_text(p.as_ref());
+                        (
+                            err_result(&job, queue_s, 0.0, &format!("engine panic: {msg}"), ctx.id),
+                            None,
+                        )
+                    }
                 }
-            },
+            }
+            (None, Some(err)) => (err_result(&job, queue_s, 0.0, err, ctx.id), None),
+            (None, None) => unreachable!("worker without runtime or init error"),
         };
-        let lsw = Stopwatch::start();
-        let req = GenRequest {
-            prompt_tokens: tokenizer::encode(&job.prompt, true),
-            max_new: job.max_new,
-            params: SampleParams { temperature: job.temperature, seed: job.seed, ..Default::default() },
-        };
-        let result = match method.generate(&req) {
-            Ok(out) => JobResult {
-                id: job.id,
-                text: tokenizer::decode(&out.tokens),
-                tokens: out.tokens.len(),
-                tau: out.metrics.tau(),
-                latency_s: lsw.secs(),
-                queue_s,
-                error: None,
-            },
-            Err(err) => JobResult {
-                id: job.id,
-                text: String::new(),
-                tokens: 0,
-                tau: 0.0,
-                latency_s: lsw.secs(),
-                queue_s,
-                error: Some(format!("{err:#}")),
-            },
-        };
+        let busy_s = busy_sw.secs();
+        {
+            let mut stats = ctx.stats.lock().unwrap_or_else(|p| p.into_inner());
+            let w = &mut stats[ctx.id];
+            w.idle_s += idle_s;
+            w.busy_s += busy_s;
+            w.tokens += result.tokens as u64;
+            match result.error {
+                Some(_) => w.jobs_err += 1,
+                None => w.jobs_ok += 1,
+            }
+            if let Some(m) = &job_metrics {
+                w.metrics.merge(m);
+            }
+        }
         let _ = rtx.send(result);
     }
+}
 
+fn run_job(
+    rt: &Rc<Runtime>,
+    methods: &mut HashMap<String, Box<dyn Method>>,
+    cfg: &MethodCfg,
+    job: &Job,
+    queue_s: f64,
+    worker: usize,
+) -> (JobResult, Option<Metrics>) {
+    let method = match methods.entry(job.method.clone()) {
+        std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+        std::collections::hash_map::Entry::Vacant(e) => match build_method(rt, &job.method, cfg) {
+            Ok(m) => e.insert(m),
+            Err(err) => {
+                return (err_result(job, queue_s, 0.0, &format!("{err:#}"), worker), None)
+            }
+        },
+    };
+    let lsw = Stopwatch::start();
+    let req = GenRequest {
+        prompt_tokens: tokenizer::encode(&job.prompt, true),
+        max_new: job.max_new,
+        params: SampleParams {
+            temperature: job.temperature,
+            seed: job.seed,
+            ..Default::default()
+        },
+    };
+    match method.generate(&req) {
+        Ok(out) => {
+            let metrics = out.metrics.clone();
+            (
+                JobResult {
+                    id: job.id,
+                    text: tokenizer::decode(&out.tokens),
+                    tokens: out.tokens.len(),
+                    tau: out.metrics.tau(),
+                    latency_s: lsw.secs(),
+                    queue_s,
+                    worker,
+                    error: None,
+                },
+                Some(metrics),
+            )
+        }
+        Err(err) => (err_result(job, queue_s, lsw.secs(), &format!("{err:#}"), worker), None),
+    }
+}
+
+fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
+fn err_result(job: &Job, queue_s: f64, latency_s: f64, err: &str, worker: usize) -> JobResult {
+    JobResult {
+        id: job.id,
+        text: String::new(),
+        tokens: 0,
+        tau: 0.0,
+        latency_s,
+        queue_s,
+        worker,
+        error: Some(err.to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64) -> Job {
+        Job {
+            id,
+            method: "hass".into(),
+            prompt: "hi".into(),
+            max_new: 4,
+            temperature: 0.0,
+            seed: 0,
+        }
+    }
+
+    /// Nonexistent artifact dir: runtime init fails fast, so the pool's
+    /// error path exercises the full dispatch machinery without weights.
+    fn bad_dir() -> PathBuf {
+        PathBuf::from("/nonexistent/hass-artifacts")
+    }
+
+    #[test]
+    fn pool_serves_error_results_without_artifacts() {
+        let sched = Scheduler::start(bad_dir(), MethodCfg::default(), 16, 2);
+        let rxs: Vec<_> = (0..8).map(|i| sched.submit(job(i), true).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.id, i as u64);
+            assert!(r.worker < 2);
+            let err = r.error.expect("no artifacts must surface an error result");
+            assert!(err.contains("runtime init failed"), "unexpected error: {err}");
+        }
+        let stats = sched.stats();
+        assert_eq!(stats.workers.len(), 2);
+        assert_eq!(stats.jobs(), 8);
+        assert_eq!(stats.jobs_err(), 8);
+        assert_eq!(stats.jobs_ok(), 0);
+        assert!(stats.tau().is_finite());
+        sched.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_fails() {
+        let sched = Scheduler::start(bad_dir(), MethodCfg::default(), 4, 1);
+        sched.shutdown();
+        assert!(sched.submit(job(1), true).is_err());
+        assert!(sched.submit(job(2), false).is_err());
+        assert_eq!(sched.stats().queue_depth, 0);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs() {
+        let sched = Scheduler::start(bad_dir(), MethodCfg::default(), 32, 2);
+        let rxs: Vec<_> = (0..12).map(|i| sched.submit(job(i), true).unwrap()).collect();
+        sched.shutdown();
+        for rx in rxs {
+            assert!(rx.recv().is_ok(), "job dropped during graceful shutdown");
+        }
+        let stats = sched.stats();
+        assert_eq!(stats.jobs(), 12);
+        assert_eq!(stats.queue_depth, 0);
+    }
+
+    #[test]
+    fn pool_distributes_across_workers_under_load() {
+        // inject the per-job delay directly (mutating the process env from
+        // a parallel test races other threads reading it) so one worker
+        // can't drain the queue alone
+        let sched = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 32, 2, Some(20));
+        let rxs: Vec<_> = (0..8).map(|i| sched.submit(job(i), true).unwrap()).collect();
+        let served: std::collections::HashSet<usize> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().worker).collect();
+        assert_eq!(served.len(), 2, "both engine threads must serve jobs");
+        let stats = sched.stats();
+        assert!(stats.workers.iter().all(|w| w.jobs() > 0));
+        assert!(stats.busy_s() > 0.0);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn submit_to_collects_many_jobs_on_one_channel() {
+        let sched = Scheduler::start(bad_dir(), MethodCfg::default(), 16, 2);
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        for i in 0..6 {
+            sched.submit_to(job(i), true, rtx.clone()).unwrap();
+        }
+        drop(rtx);
+        let mut ids: Vec<u64> = rrx.iter().map(|r: JobResult| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..6).collect::<Vec<u64>>());
+        sched.shutdown();
+    }
 }

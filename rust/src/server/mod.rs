@@ -1,59 +1,138 @@
 //! TCP JSON-lines serving front-end + client.
 //!
 //! Protocol: one JSON object per line.
-//!   request:  {"prompt": "...", "max_tokens": 64, "temperature": 0.0,
+//!   generate: {"prompt": "...", "max_tokens": 64, "temperature": 0.0,
 //!              "method": "hass", "seed": 1}
-//!   response: {"id": 1, "text": "...", "tokens": 12, "tau": 4.2,
-//!              "latency_ms": 180.0, "queue_ms": 2.0}
-//!   error:    {"id": 1, "error": "..."}
+//!          -> {"id": 1, "text": "...", "tokens": 12, "tau": 4.2,
+//!              "latency_ms": 180.0, "queue_ms": 2.0, "worker": 0}
+//!   stats:    {"stats": true}
+//!          -> {"stats": {"workers": [{"worker": 0, "jobs_ok": 3, ...}],
+//!              "aggregate": {"jobs": 3, "tokens": 120, "tau": 3.1, ...}}}
+//!   error:    {"id": 1, "error": "..."}  ("id" omitted when the line
+//!             could not be parsed; messages are JSON-escaped)
+//!
+//! Connections are pipelined over the worker pool: each generate request
+//! is submitted to the scheduler as soon as its line is read, and a
+//! single per-connection pump thread writes each response line when its
+//! job finishes (`Scheduler::submit_to` routes every job's result onto
+//! one channel).  Responses carry "id" so clients can pair them; with
+//! N>1 engine workers they may arrive out of order relative to the
+//! requests on the same connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::scheduler::{Job, JobResult, Scheduler};
+use crate::scheduler::{Job, JobResult, PoolStats, Scheduler};
 use crate::util::json::{self, Json};
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
-pub fn parse_request(line: &str) -> Result<Job> {
+/// A parsed JSON-lines request.
+pub enum Request {
+    Gen(Job),
+    Stats,
+}
+
+pub fn parse_request(line: &str) -> Result<Request> {
     let j = json::parse(line)?;
-    Ok(Job {
+    if j.get("stats").and_then(|v| v.as_bool()).unwrap_or(false) {
+        return Ok(Request::Stats);
+    }
+    Ok(Request::Gen(Job {
         id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
         method: j.str_at("method").unwrap_or("hass").to_string(),
         prompt: j.str_at("prompt").context("missing 'prompt'")?.to_string(),
         max_new: j.usize_at("max_tokens").unwrap_or(64),
         temperature: j.f64_at("temperature").unwrap_or(0.0) as f32,
         seed: j.usize_at("seed").unwrap_or(0) as u64,
-    })
+    }))
+}
+
+/// Seconds -> milliseconds rounded to 2 decimals (wire format).
+fn wire_ms(s: f64) -> f64 {
+    (s * 100_000.0).round() / 100.0
+}
+
+/// Round to 3 decimals (wire format for τ).
+fn wire_r3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
 }
 
 pub fn format_response(r: &JobResult) -> String {
     match &r.error {
-        Some(e) => Json::obj(vec![
-            ("id", Json::num(r.id as f64)),
-            ("error", Json::str(e.clone())),
-        ])
-        .to_string(),
+        Some(e) => format_error(Some(r.id), e),
         None => Json::obj(vec![
             ("id", Json::num(r.id as f64)),
             ("text", Json::str(r.text.clone())),
             ("tokens", Json::num(r.tokens as f64)),
-            ("tau", Json::num((r.tau * 1000.0).round() / 1000.0)),
-            ("latency_ms", Json::num((r.latency_s * 100_000.0).round() / 100.0)),
-            ("queue_ms", Json::num((r.queue_s * 100_000.0).round() / 100.0)),
+            ("tau", Json::num(wire_r3(r.tau))),
+            ("latency_ms", Json::num(wire_ms(r.latency_s))),
+            ("queue_ms", Json::num(wire_ms(r.queue_s))),
+            ("worker", Json::num(r.worker as f64)),
         ])
         .to_string(),
     }
 }
 
+/// Escape-safe error line.  Built through the JSON writer so messages
+/// containing quotes/backslashes stay valid JSON (the old `format!`
+/// interpolation emitted them raw).
+pub fn format_error(id: Option<u64>, msg: &str) -> String {
+    let mut kv: Vec<(&str, Json)> = Vec::new();
+    if let Some(id) = id {
+        kv.push(("id", Json::num(id as f64)));
+    }
+    kv.push(("error", Json::str(msg)));
+    Json::obj(kv).to_string()
+}
+
+/// Render a pool snapshot as the `{"stats": ...}` response line.
+pub fn format_pool_stats(p: &PoolStats) -> String {
+    let workers: Vec<Json> = p
+        .workers
+        .iter()
+        .map(|w| {
+            Json::obj(vec![
+                ("worker", Json::num(w.worker as f64)),
+                ("jobs_ok", Json::num(w.jobs_ok as f64)),
+                ("jobs_err", Json::num(w.jobs_err as f64)),
+                ("tokens", Json::num(w.tokens as f64)),
+                ("busy_ms", Json::num(wire_ms(w.busy_s))),
+                ("idle_ms", Json::num(wire_ms(w.idle_s))),
+                ("tau", Json::num(wire_r3(w.metrics.tau()))),
+            ])
+        })
+        .collect();
+    let aggregate = Json::obj(vec![
+        ("workers", Json::num(p.workers.len() as f64)),
+        ("jobs", Json::num(p.jobs() as f64)),
+        ("jobs_ok", Json::num(p.jobs_ok() as f64)),
+        ("jobs_err", Json::num(p.jobs_err() as f64)),
+        ("tokens", Json::num(p.tokens() as f64)),
+        ("queue_depth", Json::num(p.queue_depth as f64)),
+        ("busy_ms", Json::num(wire_ms(p.busy_s()))),
+        ("tau", Json::num(wire_r3(p.tau()))),
+    ]);
+    Json::obj(vec![(
+        "stats",
+        Json::obj(vec![("workers", Json::Arr(workers)), ("aggregate", aggregate)]),
+    )])
+    .to_string()
+}
+
 /// Blocking accept loop; each connection gets a reader thread that submits
-/// to the shared scheduler.
+/// to the shared scheduler pool.
 pub fn serve(listener: TcpListener, scheduler: Arc<Scheduler>) -> Result<()> {
-    eprintln!("[server] listening on {}", listener.local_addr()?);
+    eprintln!(
+        "[server] listening on {} ({} engine workers)",
+        listener.local_addr()?,
+        scheduler.workers()
+    );
     for stream in listener.incoming() {
         let stream = stream?;
         let sched = scheduler.clone();
@@ -66,28 +145,52 @@ pub fn serve(listener: TcpListener, scheduler: Arc<Scheduler>) -> Result<()> {
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, sched: &Scheduler) -> Result<()> {
+fn write_line(writer: &Arc<Mutex<TcpStream>>, line: &str) -> std::io::Result<()> {
+    let mut w = writer.lock().unwrap_or_else(|p| p.into_inner());
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")
+}
+
+fn handle_conn(stream: TcpStream, sched: &Arc<Scheduler>) -> Result<()> {
     let peer = stream.peer_addr()?;
-    let mut writer = stream.try_clone()?;
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
     let reader = BufReader::new(stream);
+    // One pump thread per connection drains every job result.  The
+    // channel is unbounded on purpose: engine workers must never block
+    // handing a result to a slow client (that would stall the shared
+    // pool for every other connection) — a client that never reads only
+    // grows its own connection's buffer.
+    let (rtx, rrx) = channel::<JobResult>();
+    let pump = {
+        let w = writer.clone();
+        std::thread::spawn(move || {
+            for r in rrx {
+                if write_line(&w, &format_response(&r)).is_err() {
+                    return; // client gone; drain-by-drop
+                }
+            }
+        })
+    };
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        let resp = match parse_request(&line) {
-            Ok(job) => match sched.submit(job, true) {
-                Ok(rx) => match rx.recv() {
-                    Ok(r) => format_response(&r),
-                    Err(_) => r#"{"error":"engine dropped"}"#.to_string(),
-                },
-                Err(e) => format!(r#"{{"error":"{e}"}}"#),
-            },
-            Err(e) => format!(r#"{{"error":"bad request: {e}"}}"#),
-        };
-        writer.write_all(resp.as_bytes())?;
-        writer.write_all(b"\n")?;
+        match parse_request(&line) {
+            Ok(Request::Stats) => write_line(&writer, &format_pool_stats(&sched.stats()))?,
+            Ok(Request::Gen(job)) => {
+                let id = job.id;
+                if let Err(e) = sched.submit_to(job, true, rtx.clone()) {
+                    write_line(&writer, &format_error(Some(id), &format!("{e:#}")))?;
+                }
+            }
+            Err(e) => write_line(&writer, &format_error(None, &format!("bad request: {e:#}")))?,
+        }
     }
+    // closing our sender ends the pump once all in-flight jobs have
+    // reported (workers hold the remaining clones)
+    drop(rtx);
+    let _ = pump.join();
     eprintln!("[server] {peer} disconnected");
     Ok(())
 }
@@ -102,7 +205,13 @@ impl Client {
         Ok(Client { stream: TcpStream::connect(addr)? })
     }
 
-    pub fn request(&mut self, method: &str, prompt: &str, max_tokens: usize, temperature: f32) -> Result<Json> {
+    pub fn request(
+        &mut self,
+        method: &str,
+        prompt: &str,
+        max_tokens: usize,
+        temperature: f32,
+    ) -> Result<Json> {
         let req = Json::obj(vec![
             ("method", Json::str(method)),
             ("prompt", Json::str(prompt)),
@@ -110,25 +219,40 @@ impl Client {
             ("temperature", Json::num(temperature as f64)),
         ])
         .to_string();
-        self.stream.write_all(req.as_bytes())?;
+        self.roundtrip(&req)
+    }
+
+    /// Fetch the pool's `{"stats": ...}` snapshot.
+    pub fn stats(&mut self) -> Result<Json> {
+        self.roundtrip(r#"{"stats":true}"#)
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Result<Json> {
+        self.stream.write_all(line.as_bytes())?;
         self.stream.write_all(b"\n")?;
         let mut reader = BufReader::new(self.stream.try_clone()?);
-        let mut line = String::new();
-        reader.read_line(&mut line)?;
-        Ok(json::parse(line.trim())?)
+        let mut resp = String::new();
+        reader.read_line(&mut resp)?;
+        Ok(json::parse(resp.trim())?)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::metrics::Metrics;
+    use crate::scheduler::WorkerStats;
+
+    fn gen(line: &str) -> Job {
+        match parse_request(line).unwrap() {
+            Request::Gen(j) => j,
+            Request::Stats => panic!("expected a generate request"),
+        }
+    }
 
     #[test]
     fn parse_request_fields() {
-        let j = parse_request(
-            r#"{"prompt": "hi", "max_tokens": 10, "temperature": 1.0, "method": "eagle2"}"#,
-        )
-        .unwrap();
+        let j = gen(r#"{"prompt": "hi", "max_tokens": 10, "temperature": 1.0, "method": "eagle2"}"#);
         assert_eq!(j.prompt, "hi");
         assert_eq!(j.max_new, 10);
         assert_eq!(j.method, "eagle2");
@@ -137,7 +261,7 @@ mod tests {
 
     #[test]
     fn parse_request_defaults() {
-        let j = parse_request(r#"{"prompt": "x"}"#).unwrap();
+        let j = gen(r#"{"prompt": "x"}"#);
         assert_eq!(j.max_new, 64);
         assert_eq!(j.method, "hass");
         assert_eq!(j.temperature, 0.0);
@@ -149,6 +273,13 @@ mod tests {
     }
 
     #[test]
+    fn stats_request_parses() {
+        assert!(matches!(parse_request(r#"{"stats": true}"#).unwrap(), Request::Stats));
+        // "stats": false is not a stats request (and needs a prompt)
+        assert!(parse_request(r#"{"stats": false}"#).is_err());
+    }
+
+    #[test]
     fn response_roundtrips_as_json() {
         let r = JobResult {
             id: 7,
@@ -157,11 +288,81 @@ mod tests {
             tau: 4.25,
             latency_s: 0.5,
             queue_s: 0.001,
+            worker: 1,
             error: None,
         };
         let j = json::parse(&format_response(&r)).unwrap();
         assert_eq!(j.usize_at("id"), Some(7));
         assert_eq!(j.str_at("text"), Some("a\"b"));
         assert_eq!(j.f64_at("latency_ms"), Some(500.0));
+        assert_eq!(j.usize_at("worker"), Some(1));
+    }
+
+    /// Satellite regression: error messages containing quotes/backslashes
+    /// must still produce valid JSON lines.
+    #[test]
+    fn quoted_error_message_is_valid_json() {
+        let msg = r#"bad "quoted" thing with a \ backslash"#;
+        let j = json::parse(&format_error(Some(3), msg)).unwrap();
+        assert_eq!(j.usize_at("id"), Some(3));
+        assert_eq!(j.str_at("error"), Some(msg));
+        // parse-failure path (no id) stays valid too
+        let j = json::parse(&format_error(None, "a \"b\" c")).unwrap();
+        assert!(j.get("id").is_none());
+        assert_eq!(j.str_at("error"), Some("a \"b\" c"));
+        // and through a JobResult carrying a quoted error
+        let r = JobResult {
+            id: 9,
+            text: String::new(),
+            tokens: 0,
+            tau: 0.0,
+            latency_s: 0.0,
+            queue_s: 0.0,
+            worker: 0,
+            error: Some("engine said \"no\"".into()),
+        };
+        let j = json::parse(&format_response(&r)).unwrap();
+        assert_eq!(j.str_at("error"), Some("engine said \"no\""));
+    }
+
+    #[test]
+    fn pool_stats_roundtrip() {
+        let mut m = Metrics::default();
+        m.record_cycle(2, 3);
+        let p = PoolStats {
+            workers: vec![
+                WorkerStats {
+                    worker: 0,
+                    jobs_ok: 3,
+                    jobs_err: 1,
+                    tokens: 30,
+                    busy_s: 0.5,
+                    idle_s: 0.1,
+                    metrics: m.clone(),
+                },
+                WorkerStats {
+                    worker: 1,
+                    jobs_ok: 2,
+                    jobs_err: 0,
+                    tokens: 20,
+                    busy_s: 0.25,
+                    idle_s: 0.2,
+                    metrics: m,
+                },
+            ],
+            queue_depth: 4,
+        };
+        let j = json::parse(&format_pool_stats(&p)).unwrap();
+        let stats = j.get("stats").unwrap();
+        let agg = stats.get("aggregate").unwrap();
+        assert_eq!(agg.usize_at("jobs"), Some(6));
+        assert_eq!(agg.usize_at("jobs_ok"), Some(5));
+        assert_eq!(agg.usize_at("tokens"), Some(50));
+        assert_eq!(agg.usize_at("queue_depth"), Some(4));
+        assert_eq!(agg.f64_at("tau"), Some(3.0));
+        let workers = stats.get("workers").unwrap().as_arr().unwrap();
+        assert_eq!(workers.len(), 2);
+        assert_eq!(workers[0].usize_at("jobs_ok"), Some(3));
+        assert_eq!(workers[1].usize_at("worker"), Some(1));
     }
 }

@@ -62,6 +62,29 @@ struct NodeInfo {
     path: Vec<usize>,
 }
 
+/// Children for a static-template node as (template rank, draft log-prob,
+/// token) triples.  Ranks the vocabulary cannot fill are skipped: the old
+/// `ordered[r]` indexing panicked whenever `topk` returned fewer than
+/// `max_rank + 1` entries (vocab smaller than the template fan-out).
+pub fn static_tree_children(
+    sm: &[f32],
+    parent_path: &[usize],
+    template: &[Vec<usize>],
+) -> Vec<(usize, f32, i32)> {
+    let mut ranks: Vec<usize> = template
+        .iter()
+        .filter(|p| p.len() == parent_path.len() + 1 && p[..parent_path.len()] == parent_path[..])
+        .map(|p| p[parent_path.len()])
+        .collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    let ordered = topk(sm, ranks.iter().max().map_or(0, |m| m + 1));
+    ranks
+        .into_iter()
+        .filter_map(|r| ordered.get(r).map(|&(lp, tok)| (r, lp, tok as i32)))
+        .collect()
+}
+
 /// Construct an EAGLE-family method (static or dynamic tree).
 pub fn build_eagle(
     rt: Rc<Runtime>,
@@ -178,16 +201,8 @@ impl Method for Eagle {
                         }
                         TreeKind::Static => {
                             let ppath = info[parent].path.clone();
-                            let mut ranks: Vec<usize> = template
-                                .iter()
-                                .filter(|p| p.len() == ppath.len() + 1 && p[..ppath.len()] == ppath[..])
-                                .map(|p| p[ppath.len()])
-                                .collect();
-                            ranks.sort_unstable();
-                            let ordered = topk(&sm, ranks.iter().max().map_or(0, |m| m + 1));
-                            for r in ranks {
-                                let (lp, tok) = ordered[r];
-                                let _idx = tree.add_child(parent, tok as i32, lp);
+                            for (r, lp, tok) in static_tree_children(&sm, &ppath, template) {
+                                let _idx = tree.add_child(parent, tok, lp);
                                 let mut anc = info[parent].anc_slots.clone();
                                 if let Some(s) = info[parent].slot {
                                     anc.push(s);
@@ -195,7 +210,6 @@ impl Method for Eagle {
                                 let mut path = ppath.clone();
                                 path.push(r);
                                 info.push(NodeInfo { g: None, slot: None, anc_slots: anc, path });
-
                             }
                         }
                     }
@@ -303,5 +317,42 @@ impl Method for Eagle {
         }
         truncate_eos(&mut out_tokens);
         Ok(GenOutput { tokens: out_tokens, metrics })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_children_follow_template_ranks() {
+        let template = eagle_static_template();
+        let sm = log_softmax(&[0.1, 0.9, 0.3, 0.5, 0.2, 0.05, 0.7, 0.6]);
+        let kids = static_tree_children(&sm, &[], &template);
+        // the template's root fan-out is 4: ranks 0..=3
+        assert_eq!(kids.len(), 4);
+        let ranks: Vec<usize> = kids.iter().map(|k| k.0).collect();
+        assert_eq!(ranks, vec![0, 1, 2, 3]);
+        // rank 0 carries the argmax token
+        assert_eq!(kids[0].2, 1);
+        // log-probs are descending in rank
+        assert!(kids.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+
+    /// Satellite regression: vocab smaller than the template fan-out must
+    /// skip the unfillable ranks instead of panicking on `ordered[r]`.
+    #[test]
+    fn static_children_tiny_vocab_skips_missing_ranks() {
+        let template = eagle_static_template();
+        let sm = log_softmax(&[0.2, 0.8]); // vocab 2 < root fan-out 4
+        let kids = static_tree_children(&sm, &[], &template);
+        assert_eq!(kids.len(), 2);
+        assert!(kids.iter().all(|k| k.2 == 0 || k.2 == 1));
+        assert_eq!(kids[0].2, 1, "rank 0 is still the argmax");
+        // deeper paths keep working too
+        let kids = static_tree_children(&sm, &[0, 0], &template);
+        assert_eq!(kids.len(), 2); // template has [0,0,0] and [0,0,1]
+        // a parent path outside the template yields no children
+        assert!(static_tree_children(&sm, &[3, 3], &template).is_empty());
     }
 }

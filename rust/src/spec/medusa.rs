@@ -72,7 +72,11 @@ impl Medusa {
                 }
             };
             let rank = path[depth - 1];
-            let (lp, tok) = head_top[depth - 1][rank];
+            // skip ranks the vocabulary can't fill (same guard as the
+            // static EAGLE tree: topk may return fewer than max_rank)
+            let Some(&(lp, tok)) = head_top[depth - 1].get(rank) else {
+                continue;
+            };
             let idx = tree.add_child(parent, tok as i32, lp);
             node_of_path.insert(path.clone(), idx);
         }

@@ -1,7 +1,10 @@
 //! Minimal CLI argument parser (clap substitute for the offline build).
 //!
 //! Grammar: `binary <subcommand> [positionals] [--flag value | --switch]`.
-//! Flags may appear anywhere after the subcommand; `--flag=value` also works.
+//! Flags may appear anywhere after the subcommand; `--flag=value` also
+//! works.  Comma-separated list values (`--workers 1,2,4`) parse through
+//! `usize_list_or`; flagless drivers (examples) can read positionals with
+//! the `pos_*` helpers.
 
 use std::collections::BTreeMap;
 
@@ -62,6 +65,32 @@ impl Args {
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
+
+    /// Comma-separated usize list flag (`--workers 1,2,4`).  Unparseable
+    /// entries are dropped; a missing flag — or a value with no parseable
+    /// entry at all — yields `default` (never a silent empty list).
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            Some(v) => {
+                let parsed: Vec<usize> =
+                    v.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+                if parsed.is_empty() {
+                    default.to_vec()
+                } else {
+                    parsed
+                }
+            }
+            None => default.to_vec(),
+        }
+    }
+
+    pub fn pos_or(&self, i: usize, default: &str) -> String {
+        self.positionals.get(i).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn pos_usize_or(&self, i: usize, default: usize) -> usize {
+        self.positionals.get(i).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
 }
 
 #[cfg(test)]
@@ -103,5 +132,26 @@ mod tests {
         let a = args("bench --fast");
         assert!(a.has("fast"));
         assert!(a.get("fast").is_none());
+    }
+
+    #[test]
+    fn usize_lists() {
+        let a = args("serve --workers 1,2,4");
+        assert_eq!(a.usize_list_or("workers", &[8]), vec![1, 2, 4]);
+        assert_eq!(a.usize_list_or("missing", &[8]), vec![8]);
+        let b = args("serve --workers 2,x,3");
+        assert_eq!(b.usize_list_or("workers", &[]), vec![2, 3]);
+        // fully unparseable values fall back to the default, not []
+        let c = args("serve --workers two,4x");
+        assert_eq!(c.usize_list_or("workers", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn positional_helpers() {
+        let a = args("table 3 fast");
+        assert_eq!(a.pos_usize_or(0, 1), 3);
+        assert_eq!(a.pos_or(1, "slow"), "fast");
+        assert_eq!(a.pos_usize_or(5, 9), 9);
+        assert_eq!(a.pos_or(5, "d"), "d");
     }
 }
