@@ -7,12 +7,17 @@
 //!
 //! ```sh
 //! cargo run --release --example serve_requests -- \
-//!     [--requests 12] [--method hass] [--clients 3] [--workers 1,2]
+//!     [--requests 12] [--method hass] [--clients 3] [--workers 1,2] \
+//!     [--max-active 2]
 //! ```
+//!
+//! `--max-active` sets how many jobs each engine worker interleaves
+//! round-robin (cycle-granular continuous batching); the run ends with a
+//! streamed request that counts per-cycle delta lines.
 
 use std::sync::Arc;
 
-use hass::server::Client;
+use hass::server::{Client, ReqOpts};
 use hass::spec::MethodCfg;
 use hass::util::cli::Args;
 use hass::util::stats::summarize;
@@ -27,6 +32,7 @@ fn main() -> anyhow::Result<()> {
     let method = args.get_or("method", &args.pos_or(0, "hass"));
     let n_clients = args.usize_or("clients", 3).max(1);
     let worker_counts = args.usize_list_or("workers", &[1, 2]);
+    let max_active = args.usize_or("max-active", 2).max(1);
 
     let dir = hass::artifact_dir();
     let wl = Workloads::load(&dir).unwrap_or_else(|_| Workloads::embedded());
@@ -39,6 +45,7 @@ fn main() -> anyhow::Result<()> {
             MethodCfg::default(),
             64,
             workers,
+            max_active,
         ));
         let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
@@ -95,6 +102,20 @@ fn main() -> anyhow::Result<()> {
         let wall = t0.elapsed().as_secs_f64();
 
         let mut c = Client::connect(&addr.to_string())?;
+        // streamed request demo: per-cycle deltas over the same pool
+        let mut n_deltas = 0usize;
+        let fin = c.generate(
+            "User: stream demo please\nAssistant:",
+            &ReqOpts { method: method.clone(), max_tokens: 16, stream: true, ..Default::default() },
+            |_| n_deltas += 1,
+        )?;
+        match fin.str_at("error") {
+            Some(e) => println!("  stream demo: error: {e}"),
+            None => println!(
+                "  stream demo: {n_deltas} delta lines -> {} tokens",
+                fin.usize_at("tokens").unwrap_or(0)
+            ),
+        }
         let stats = c.stats()?;
         if let Some(agg) = stats.get("stats").and_then(|s| s.get("aggregate")) {
             println!(

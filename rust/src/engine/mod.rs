@@ -25,11 +25,28 @@ pub const PAPER_METHODS: &[&str] = &[
     "pld", "lookahead", "sps", "medusa", "eagle", "eagle2", "hass",
 ];
 
-/// Build a method by name.  `eagle2:<ckpt>` / `hass:<ckpt>` select an
-/// ablation draft checkpoint with EAGLE-2 decoding.
+/// Methods that need no `Runtime` (no artifacts, no compiled graphs).
+/// The scheduler uses this to serve e.g. `mock` jobs even on hosts whose
+/// runtime init failed; `build_method` delegates here first.
+pub fn build_free_method(name: &str) -> Option<Box<dyn Method>> {
+    match name {
+        "mock" => Some(Box::new(crate::spec::mock::Mock)),
+        _ => None,
+    }
+}
+
+/// Build a method by name.  `eagle:<ckpt>` / `eagle2:<ckpt>` /
+/// `hass:<ckpt>` select an ablation draft checkpoint with the base
+/// method's tree kind.
 pub fn build_method(rt: &Rc<Runtime>, name: &str, cfg: &MethodCfg) -> Result<Box<dyn Method>> {
+    if let Some(m) = build_free_method(name) {
+        return Ok(m);
+    }
     let target_w = rt.checkpoint("target")?;
-    let (kind, ckpt_name, label): (Option<TreeKind>, String, String) = match name {
+    // `kind` is authoritative from here on: the old code discarded it and
+    // re-derived the tree from `name == "eagle"`, which silently gave
+    // `eagle:<ckpt>`-style ablations a dynamic tree
+    let (kind, ckpt_name, label): (TreeKind, String, String) = match name {
         "vanilla" => return Ok(Box::new(Vanilla::new(rt.clone(), target_w)?)),
         "sps" => {
             return Ok(Box::new(Sps::new(
@@ -62,28 +79,27 @@ pub fn build_method(rt: &Rc<Runtime>, name: &str, cfg: &MethodCfg) -> Result<Box
                 rt.checkpoint("medusa")?,
             )?))
         }
-        "eagle" => (Some(TreeKind::Static), "eagle".into(), "eagle".into()),
-        "eagle2" => (Some(TreeKind::Dynamic), "eagle".into(), "eagle2".into()),
-        "hass" => (Some(TreeKind::Dynamic), cfg.draft_ckpt.clone(), "hass".into()),
+        "eagle" => (TreeKind::Static, "eagle".into(), "eagle".into()),
+        "eagle2" => (TreeKind::Dynamic, "eagle".into(), "eagle2".into()),
+        "hass" => (TreeKind::Dynamic, cfg.draft_ckpt.clone(), "hass".into()),
         other => {
-            // "eagle2:<ckpt>" or "hass:<ckpt>" — ablation checkpoints
+            // "<base>:<ckpt>" — ablation checkpoints with base decoding
             if let Some((base, ck)) = other.split_once(':') {
-                if base == "eagle2" || base == "hass" {
-                    (Some(TreeKind::Dynamic), ck.to_string(), other.to_string())
-                } else {
-                    bail!("unknown method '{other}'")
+                match base {
+                    "eagle" => (TreeKind::Static, ck.to_string(), other.to_string()),
+                    "eagle2" | "hass" => (TreeKind::Dynamic, ck.to_string(), other.to_string()),
+                    _ => bail!("unknown method '{other}'"),
                 }
             } else {
                 bail!("unknown method '{other}'")
             }
         }
     };
-    let _ = kind;
     Ok(Box::new(build_eagle(
         rt.clone(),
         target_w,
         rt.checkpoint(&ckpt_name)?,
-        if name == "eagle" { TreeKind::Static } else { TreeKind::Dynamic },
+        kind,
         &label,
         cfg.depth,
         cfg.beam,
@@ -141,7 +157,8 @@ pub fn run_suite(
         tokens,
         metrics: total,
         latency: summarize(&latencies),
-        tok_per_s: tokens as f64 / wall,
+        // guard the divide: an empty/instant suite must report 0, not inf/NaN
+        tok_per_s: if wall > 0.0 { tokens as f64 / wall } else { 0.0 },
     })
 }
 
@@ -173,4 +190,25 @@ pub fn calibrate(rt: &Rc<Runtime>, steps: usize) -> Result<CostModel> {
     let out = v.generate(&req)?;
     let t_ar = sw.secs() / out.tokens.len().max(1) as f64;
     Ok(CostModel { t_ar, ..Default::default() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn free_methods_build_without_a_runtime() {
+        let mut m = build_free_method("mock").expect("mock is runtime-free");
+        assert_eq!(m.name(), "mock");
+        let req = GenRequest {
+            prompt_tokens: vec![1],
+            max_new: 5,
+            params: SampleParams::default(),
+        };
+        let out = m.generate(&req).unwrap();
+        assert_eq!(out.tokens.len(), 5);
+        // real methods still require a runtime
+        assert!(build_free_method("hass").is_none());
+        assert!(build_free_method("vanilla").is_none());
+    }
 }

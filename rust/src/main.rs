@@ -5,9 +5,13 @@
 //!   compare    [--tokens 48 --temp 0.0]      run every method on one prompt
 //!   table <N>  [--prompts 8 --tokens 48]     regenerate paper table N (1-11)
 //!   figure <N>                               regenerate paper figure N
-//!   serve      [--port 7777 --queue 64 --workers 1]   TCP JSON-lines server
-//!   client     --prompt "..." [--addr ... --stats]    one-shot request to a server
-//!                                            (--stats fetches pool counters)
+//!   serve      [--port 7777 --queue 64 --workers 1 --max-active 2]
+//!                                            TCP JSON-lines server; each worker
+//!                                            interleaves up to --max-active jobs
+//!   client     --prompt "..." [--addr ... --stats --stream --deadline-ms N]
+//!                                            one-shot request to a server
+//!                                            (--stats fetches pool counters,
+//!                                             --stream prints per-cycle deltas)
 //!   goldens                                  verify vs python goldens
 //!   calibrate                                measure the device cost model
 //!   stats      --method hass                 per-graph call-time breakdown
@@ -113,6 +117,7 @@ fn run(args: &Args) -> Result<()> {
                 method_cfg(args),
                 args.usize_or("queue", 64),
                 args.usize_or("workers", 1),
+                args.usize_or("max-active", 2),
             ));
             let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
             hass::server::serve(listener, sched)
@@ -121,16 +126,28 @@ fn run(args: &Args) -> Result<()> {
             let addr = args.get_or("addr", "127.0.0.1:7777");
             let mut c = hass::server::Client::connect(&addr)?;
             if args.has("stats") {
-                println!("{}", c.stats()?.to_string());
+                println!("{}", c.stats()?);
                 return Ok(());
             }
-            let resp = c.request(
-                &args.get_or("method", "hass"),
-                &args.get_or("prompt", "User: How does photosynthesis work?\nAssistant:"),
-                args.usize_or("tokens", 64),
-                args.f64_or("temp", 0.0) as f32,
-            )?;
-            println!("{}", resp.to_string());
+            let opts = hass::server::ReqOpts {
+                method: args.get_or("method", "hass"),
+                max_tokens: args.usize_or("tokens", 64),
+                temperature: args.f64_or("temp", 0.0) as f32,
+                seed: args.usize_or("seed", 0) as u64,
+                stream: args.has("stream"),
+                deadline_ms: args.u64_opt("deadline-ms"),
+            };
+            let prompt =
+                args.get_or("prompt", "User: How does photosynthesis work?\nAssistant:");
+            let streaming = opts.stream;
+            let resp = c.generate(&prompt, &opts, |delta| {
+                print!("{delta}");
+                let _ = std::io::Write::flush(&mut std::io::stdout());
+            })?;
+            if streaming {
+                println!();
+            }
+            println!("{resp}");
             Ok(())
         }
         "goldens" => {

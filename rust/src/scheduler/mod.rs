@@ -1,33 +1,55 @@
-//! Request scheduler: bounded FIFO queue + a pool of engine workers.
+//! Request scheduler: bounded FIFO queue + a pool of engine workers with
+//! cycle-granular continuous batching inside each worker.
 //!
 //! The PJRT client (and thus every session) is thread-pinned, so each of
 //! the N engine worker threads constructs its own `Runtime` and per-method
-//! cache locally and serves jobs off a shared work queue.  Dispatch is
-//! work-stealing off one bounded `Receiver` behind a mutex: a worker holds
-//! the lock only while *waiting* for a message, never while running a job,
-//! so jobs execute concurrently across workers while idle workers queue
-//! fairly behind the lock.  Producers (server connections, load
-//! generators) submit over the bounded channel — backpressure is the
-//! channel bound, exactly as in the single-worker design.  Batch size
-//! stays 1 per engine per the paper's serving setup; methods are cached
-//! per name in each worker so checkpoint/compile costs are paid once per
-//! worker thread.
+//! instance pool locally and serves jobs off a shared work queue.
+//! Dispatch is work-stealing off one bounded `Receiver` behind a mutex: a
+//! worker holds the lock only while *waiting* for a message, never while
+//! running a job.  Producers (server connections, load generators) submit
+//! over the bounded channel — backpressure is the channel bound.
+//!
+//! **Continuous batching.**  `Method` is a resumable state machine
+//! (`start`/`step`, see `spec`), so a worker no longer runs one job to
+//! completion: it interleaves up to `max_active` live sessions
+//! round-robin, one drafting-verification cycle per turn, polling the
+//! queue between cycles.  A short job submitted behind a long one starts
+//! immediately and finishes first instead of waiting out the long job's
+//! tail (head-of-line blocking at job granularity becomes cycle
+//! granularity).  Each live session checks out its own `Method` instance
+//! (own KV caches) from a per-name free list, returned at completion.
+//!
+//! **Streaming / cancellation / deadlines.**  Results travel as
+//! [`JobEvent`]s on an *unbounded* channel (a worker must never block
+//! handing a result to a slow consumer): jobs with `stream: true` get a
+//! [`JobEvent::Delta`] per cycle, every job ends with exactly one
+//! [`JobEvent::Done`].  [`Scheduler::cancel`] marks a job id; the owning
+//! worker aborts it between cycles (or at admission while still queued)
+//! with a "cancelled" error result.  A job's `deadline_ms` is checked
+//! between cycles against its submission clock.  Callers must only
+//! cancel ids they actually submitted (the TCP server enforces this per
+//! connection): a marker for a never-submitted id would linger and
+//! cancel whatever job is eventually assigned that id.  Markers for
+//! already-finished jobs are cleared lazily when the id is next seen.
 //!
 //! Observability: every worker maintains a [`WorkerStats`] slot (jobs
 //! served, tokens, busy/idle seconds, acceptance [`Metrics`] merged over
-//! its jobs); [`Scheduler::stats`] snapshots them as a [`PoolStats`]
-//! aggregate, which the server exposes through the `{"stats": true}`
-//! JSON-lines request.  [`Scheduler::shutdown`] is graceful: queued jobs
-//! drain (FIFO) before the per-worker stop markers are consumed, then all
-//! engine threads are joined.  `HASS_TEST_JOB_DELAY_MS` injects an
-//! artificial per-job delay (test-only throttle for pool scheduling
-//! tests and queueing demos).
+//! its jobs — busy counts in-step CPU time, not interleaved wall time);
+//! [`Scheduler::stats`] snapshots them as a [`PoolStats`] aggregate, which
+//! the server exposes through the `{"stats": true}` JSON-lines request.
+//! [`Scheduler::shutdown`] is graceful: queued jobs drain (FIFO) before
+//! the per-worker stop markers are consumed — a worker that sees its
+//! marker finishes its live sessions, then exits.  `HASS_TEST_JOB_DELAY_MS`
+//! injects an artificial delay at job admission *and* after every step
+//! (test-only throttle for pool scheduling tests and queueing demos).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
+};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 
@@ -37,7 +59,7 @@ use crate::engine::build_method;
 use crate::engine::metrics::Metrics;
 use crate::runtime::Runtime;
 use crate::sampling::SampleParams;
-use crate::spec::{GenRequest, Method, MethodCfg};
+use crate::spec::{GenRequest, GenState, Method, MethodCfg};
 use crate::tokenizer;
 use crate::util::stats::Stopwatch;
 
@@ -49,6 +71,11 @@ pub struct Job {
     pub max_new: usize,
     pub temperature: f32,
     pub seed: u64,
+    /// emit a [`JobEvent::Delta`] per drafting-verification cycle
+    pub stream: bool,
+    /// abort with an error result once this many ms have passed since
+    /// submission (checked between cycles, and at admission while queued)
+    pub deadline_ms: Option<u64>,
 }
 
 #[derive(Clone, Debug)]
@@ -57,19 +84,50 @@ pub struct JobResult {
     pub text: String,
     pub tokens: usize,
     pub tau: f64,
+    /// wall time from admission to completion (includes cycles of other
+    /// interleaved jobs on the same worker)
     pub latency_s: f64,
     pub queue_s: f64,
     /// engine worker that served the job
     pub worker: usize,
+    /// the request asked for streaming (final wire line carries "done")
+    pub stream: bool,
     pub error: Option<String>,
 }
 
-// Results travel over an *unbounded* Sender: a worker must never block
-// handing a result to a slow consumer (that would stall the shared pool
-// for every other connection).  The bounded work queue is the
-// backpressure; a client that never reads only grows its own buffer.
+/// One message on a job's result channel.  Non-streamed jobs produce a
+/// single `Done`; streamed jobs produce one `Delta` per cycle first.
+#[derive(Clone, Debug)]
+pub enum JobEvent {
+    Delta {
+        id: u64,
+        /// decoded text of the tokens emitted this cycle
+        text: String,
+        /// total tokens emitted so far
+        tokens: usize,
+    },
+    Done(JobResult),
+}
+
+impl JobEvent {
+    pub fn id(&self) -> u64 {
+        match self {
+            JobEvent::Delta { id, .. } => *id,
+            JobEvent::Done(r) => r.id,
+        }
+    }
+
+    /// The terminal result, if this is the `Done` event.
+    pub fn into_result(self) -> Option<JobResult> {
+        match self {
+            JobEvent::Done(r) => Some(r),
+            JobEvent::Delta { .. } => None,
+        }
+    }
+}
+
 enum Msg {
-    Run(Job, Stopwatch, Sender<JobResult>),
+    Run(Job, Stopwatch, Sender<JobEvent>),
     Shutdown,
 }
 
@@ -81,7 +139,8 @@ pub struct WorkerStats {
     pub jobs_err: u64,
     /// tokens emitted across successful jobs
     pub tokens: u64,
-    /// seconds spent running jobs
+    /// seconds spent doing per-job work — method build/checkout, start,
+    /// and step calls (CPU occupancy, not interleaved wall time)
     pub busy_s: f64,
     /// seconds spent waiting for work
     pub idle_s: f64,
@@ -141,25 +200,29 @@ pub struct Scheduler {
     /// (it would be dropped unserved and hang its client).
     tx: RwLock<Option<SyncSender<Msg>>>,
     workers: usize,
+    max_active: usize,
     handles: Mutex<Vec<JoinHandle<()>>>,
     stats: Arc<Mutex<Vec<WorkerStats>>>,
     queue_depth: Arc<AtomicUsize>,
+    cancels: Arc<Mutex<HashSet<u64>>>,
 }
 
 impl Scheduler {
     /// Spawn `workers` engine threads sharing one bounded work queue.
-    /// `queue_cap` bounds submitted-but-unserved requests.
+    /// `queue_cap` bounds submitted-but-unserved requests; `max_active`
+    /// bounds the sessions one worker interleaves (1 = run-to-completion).
     pub fn start(
         artifact_dir: PathBuf,
         cfg: MethodCfg,
         queue_cap: usize,
         workers: usize,
+        max_active: usize,
     ) -> Scheduler {
         // the env knob is read once per pool (demo/test throttle)
         let test_delay_ms: Option<u64> = std::env::var("HASS_TEST_JOB_DELAY_MS")
             .ok()
             .and_then(|v| v.parse().ok());
-        Scheduler::start_inner(artifact_dir, cfg, queue_cap, workers, test_delay_ms)
+        Scheduler::start_inner(artifact_dir, cfg, queue_cap, workers, max_active, test_delay_ms)
     }
 
     fn start_inner(
@@ -167,21 +230,26 @@ impl Scheduler {
         cfg: MethodCfg,
         queue_cap: usize,
         workers: usize,
+        max_active: usize,
         test_delay_ms: Option<u64>,
     ) -> Scheduler {
         let workers = workers.max(1);
+        let max_active = max_active.max(1);
         let (tx, rx) = sync_channel::<Msg>(queue_cap.max(1));
         let rx = Arc::new(Mutex::new(rx));
         let stats: Arc<Mutex<Vec<WorkerStats>>> = Arc::new(Mutex::new(
             (0..workers).map(|w| WorkerStats { worker: w, ..WorkerStats::default() }).collect(),
         ));
         let queue_depth = Arc::new(AtomicUsize::new(0));
+        let cancels: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let ctx = WorkerCtx {
                 id: w,
                 stats: stats.clone(),
                 queue_depth: queue_depth.clone(),
+                cancels: cancels.clone(),
+                max_active,
                 test_delay_ms,
             };
             let rx = rx.clone();
@@ -197,9 +265,11 @@ impl Scheduler {
         Scheduler {
             tx: RwLock::new(Some(tx)),
             workers,
+            max_active,
             handles: Mutex::new(handles),
             stats,
             queue_depth,
+            cancels,
         }
     }
 
@@ -207,18 +277,22 @@ impl Scheduler {
         self.workers
     }
 
+    pub fn max_active(&self) -> usize {
+        self.max_active
+    }
+
     /// Submit a job; `blocking` waits for queue space, otherwise a full
     /// queue is an error (backpressure surfaced to the caller).
-    pub fn submit(&self, job: Job, blocking: bool) -> Result<Receiver<JobResult>> {
+    pub fn submit(&self, job: Job, blocking: bool) -> Result<Receiver<JobEvent>> {
         let (rtx, rrx) = channel();
         self.submit_to(job, blocking, rtx)?;
         Ok(rrx)
     }
 
-    /// Submit with a caller-supplied result channel.  One channel can
-    /// collect many jobs (results carry the job id), which lets a server
+    /// Submit with a caller-supplied event channel.  One channel can
+    /// collect many jobs (events carry the job id), which lets a server
     /// connection drain all its responses with a single pump thread.
-    pub fn submit_to(&self, job: Job, blocking: bool, rtx: Sender<JobResult>) -> Result<()> {
+    pub fn submit_to(&self, job: Job, blocking: bool, rtx: Sender<JobEvent>) -> Result<()> {
         // holding the read lock across the send excludes shutdown()'s
         // write-locked sender teardown, so an accepted job always sits
         // ahead of the stop markers and is guaranteed to be served
@@ -245,6 +319,13 @@ impl Scheduler {
             return Err(e);
         }
         Ok(())
+    }
+
+    /// Request cancellation of a job by id.  The job — queued or live —
+    /// reports a "cancelled" error result through its own event channel;
+    /// cancelling an unknown or already-finished id is a no-op.
+    pub fn cancel(&self, id: u64) {
+        self.cancels.lock().unwrap_or_else(|p| p.into_inner()).insert(id);
     }
 
     /// Snapshot per-worker counters + queue depth.
@@ -283,7 +364,10 @@ struct WorkerCtx {
     id: usize,
     stats: Arc<Mutex<Vec<WorkerStats>>>,
     queue_depth: Arc<AtomicUsize>,
-    /// artificial per-job delay (test-only throttle; see module docs)
+    cancels: Arc<Mutex<HashSet<u64>>>,
+    /// sessions this worker interleaves round-robin
+    max_active: usize,
+    /// artificial admission + per-step delay (test throttle; module docs)
     test_delay_ms: Option<u64>,
 }
 
@@ -292,12 +376,54 @@ impl WorkerCtx {
         let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
         stats[self.id].idle_s += idle_s;
     }
+
+    /// Consume a pending cancel marker for `id`.
+    fn take_cancel(&self, id: u64) -> bool {
+        self.cancels.lock().unwrap_or_else(|p| p.into_inner()).remove(&id)
+    }
+
+    fn sleep_throttle(&self) {
+        if let Some(ms) = self.test_delay_ms {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+}
+
+/// Per-name free list of method instances.  Each live session owns one
+/// instance (sessions hold per-instance KV caches); at completion the
+/// instance returns here so checkpoint/compile costs are paid at most
+/// `max_active` times per name per worker.
+type MethodPool = HashMap<String, Vec<Box<dyn Method>>>;
+
+/// One live generation session on a worker.
+struct ActiveJob {
+    job: Job,
+    rtx: Sender<JobEvent>,
+    /// clock since submission (deadline base; keeps ticking while running)
+    submit_sw: Stopwatch,
+    queue_s: f64,
+    /// clock since admission (reported latency)
+    run_sw: Stopwatch,
+    /// seconds spent inside start/step for this job
+    cpu_s: f64,
+    /// tokens already delivered as stream deltas
+    sent: usize,
+    state: GenState,
+    method: Box<dyn Method>,
+}
+
+enum StepVerdict {
+    Continue,
+    /// job finished; `reuse` returns the method instance to the pool
+    /// (false after a panic left its sessions mid-mutation)
+    Done { reuse: bool },
 }
 
 fn worker(ctx: WorkerCtx, artifact_dir: PathBuf, cfg: MethodCfg, rx: Arc<Mutex<Receiver<Msg>>>) {
     // The runtime is thread-pinned, so each worker owns one.  If init
-    // fails (missing artifacts), keep serving: every job gets an error
-    // result instead of a hang, and the pool stays observable.
+    // fails (missing artifacts), keep serving: runtime-backed jobs get an
+    // error result instead of a hang (runtime-free methods still run),
+    // and the pool stays observable.
     let (rt, init_err): (Option<Rc<Runtime>>, Option<String>) = match Runtime::new(&artifact_dir) {
         Ok(rt) => (Some(Rc::new(rt)), None),
         Err(e) => {
@@ -305,91 +431,147 @@ fn worker(ctx: WorkerCtx, artifact_dir: PathBuf, cfg: MethodCfg, rx: Arc<Mutex<R
             (None, Some(format!("runtime init failed: {e:#}")))
         }
     };
-    let mut methods: HashMap<String, Box<dyn Method>> = HashMap::new();
+    let mut pool: MethodPool = HashMap::new();
+    let mut active: Vec<ActiveJob> = Vec::new();
+    let mut draining = false;
+    let mut cursor = 0usize;
     loop {
-        let idle_sw = Stopwatch::start();
-        let msg = {
-            let guard = match rx.lock() {
-                Ok(g) => g,
-                Err(_) => return,
+        // ---- admit new jobs up to max_active ----
+        while !draining && active.len() < ctx.max_active {
+            let msg = if active.is_empty() {
+                // nothing to step: block for work (counted as idle)
+                let idle_sw = Stopwatch::start();
+                let m = {
+                    let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
+                    guard.recv()
+                };
+                ctx.add_idle(idle_sw.secs());
+                match m {
+                    Ok(m) => m,
+                    Err(_) => return, // channel gone, nothing in flight
+                }
+            } else {
+                // Live sessions waiting: poll without blocking.  try_lock,
+                // not lock — an *idle* worker parks inside recv() while
+                // holding the rx mutex, so lock() here would stall our
+                // active sessions until new work arrived.  If the mutex is
+                // held, whoever holds it will take the next job anyway.
+                let m = match rx.try_lock() {
+                    Ok(guard) => guard.try_recv(),
+                    Err(std::sync::TryLockError::WouldBlock) => Err(TryRecvError::Empty),
+                    Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner().try_recv(),
+                };
+                match m {
+                    Ok(m) => m,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        draining = true;
+                        break;
+                    }
+                }
             };
-            guard.recv()
-        };
-        let idle_s = idle_sw.secs();
-        let (job, sw, rtx) = match msg {
-            Ok(Msg::Run(j, s, t)) => (j, s, t),
-            Ok(Msg::Shutdown) | Err(_) => {
-                ctx.add_idle(idle_s);
-                return;
-            }
-        };
-        ctx.queue_depth.fetch_sub(1, Ordering::Relaxed);
-        let queue_s = sw.secs();
-        let busy_sw = Stopwatch::start();
-        if let Some(ms) = ctx.test_delay_ms {
-            std::thread::sleep(std::time::Duration::from_millis(ms));
-        }
-        let (result, job_metrics) = match (&rt, &init_err) {
-            (Some(rt), _) => {
-                // a panicking method (bad logits, artifact mismatch...)
-                // must cost one error response, not the engine thread —
-                // and certainly not a client hung waiting for a reply
-                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    run_job(rt, &mut methods, &cfg, &job, queue_s, ctx.id)
-                }));
-                match caught {
-                    Ok(r) => r,
-                    Err(p) => {
-                        // session state may be mid-mutation: rebuild fresh
-                        methods.clear();
-                        let msg = panic_text(p.as_ref());
-                        (
-                            err_result(&job, queue_s, 0.0, &format!("engine panic: {msg}"), ctx.id),
-                            None,
-                        )
+            match msg {
+                Msg::Shutdown => {
+                    if active.is_empty() {
+                        return;
+                    }
+                    // finish live sessions, stop pulling new work
+                    draining = true;
+                }
+                Msg::Run(job, submit_sw, rtx) => {
+                    ctx.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                    if let Some(a) =
+                        admit(&ctx, rt.as_ref(), &init_err, &mut pool, &cfg, job, submit_sw, rtx)
+                    {
+                        active.push(a);
                     }
                 }
             }
-            (None, Some(err)) => (err_result(&job, queue_s, 0.0, err, ctx.id), None),
-            (None, None) => unreachable!("worker without runtime or init error"),
-        };
-        let busy_s = busy_sw.secs();
-        {
-            let mut stats = ctx.stats.lock().unwrap_or_else(|p| p.into_inner());
-            let w = &mut stats[ctx.id];
-            w.idle_s += idle_s;
-            w.busy_s += busy_s;
-            w.tokens += result.tokens as u64;
-            match result.error {
-                Some(_) => w.jobs_err += 1,
-                None => w.jobs_ok += 1,
+        }
+        if active.is_empty() {
+            if draining {
+                return;
             }
-            if let Some(m) = &job_metrics {
-                w.metrics.merge(m);
+            continue; // blocking recv above admitted nothing (rejected job)
+        }
+        // ---- one cycle of one live session, round-robin ----
+        cursor %= active.len();
+        match step_active(&ctx, &mut active[cursor]) {
+            StepVerdict::Continue => cursor += 1,
+            StepVerdict::Done { reuse } => {
+                let a = active.swap_remove(cursor);
+                if reuse {
+                    let name = a.job.method.clone();
+                    checkin(&mut pool, &name, a.method);
+                }
             }
         }
-        let _ = rtx.send(result);
     }
 }
 
-fn run_job(
-    rt: &Rc<Runtime>,
-    methods: &mut HashMap<String, Box<dyn Method>>,
+fn checkout(
+    pool: &mut MethodPool,
+    rt: Option<&Rc<Runtime>>,
+    init_err: &Option<String>,
     cfg: &MethodCfg,
-    job: &Job,
-    queue_s: f64,
-    worker: usize,
-) -> (JobResult, Option<Metrics>) {
-    let method = match methods.entry(job.method.clone()) {
-        std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
-        std::collections::hash_map::Entry::Vacant(e) => match build_method(rt, &job.method, cfg) {
-            Ok(m) => e.insert(m),
-            Err(err) => {
-                return (err_result(job, queue_s, 0.0, &format!("{err:#}"), worker), None)
-            }
-        },
+    name: &str,
+) -> std::result::Result<Box<dyn Method>, String> {
+    if let Some(m) = pool.get_mut(name).and_then(|v| v.pop()) {
+        return Ok(m);
+    }
+    if let Some(m) = crate::engine::build_free_method(name) {
+        return Ok(m);
+    }
+    match rt {
+        Some(rt) => build_method(rt, name, cfg).map_err(|e| format!("{e:#}")),
+        None => Err(init_err.clone().unwrap_or_else(|| "runtime init failed".to_string())),
+    }
+}
+
+fn checkin(pool: &mut MethodPool, name: &str, m: Box<dyn Method>) {
+    pool.entry(name.to_string()).or_default().push(m);
+}
+
+fn past_deadline(job: &Job, since_submit: &Stopwatch) -> bool {
+    match job.deadline_ms {
+        Some(ms) => since_submit.secs() * 1000.0 > ms as f64,
+        None => false,
+    }
+}
+
+/// Start a session for a dequeued job.  Returns the live session, or
+/// `None` if the job already completed (rejected, or done at start).
+#[allow(clippy::too_many_arguments)]
+fn admit(
+    ctx: &WorkerCtx,
+    rt: Option<&Rc<Runtime>>,
+    init_err: &Option<String>,
+    pool: &mut MethodPool,
+    cfg: &MethodCfg,
+    job: Job,
+    submit_sw: Stopwatch,
+    rtx: Sender<JobEvent>,
+) -> Option<ActiveJob> {
+    let queue_s = submit_sw.secs();
+    if ctx.take_cancel(job.id) {
+        reject(ctx, &job, queue_s, 0.0, 0.0, "cancelled", &rtx);
+        return None;
+    }
+    if past_deadline(&job, &submit_sw) {
+        reject(ctx, &job, queue_s, 0.0, 0.0, "deadline_ms exceeded while queued", &rtx);
+        return None;
+    }
+    // work clock: the test throttle, method build/compile, and start()
+    // are all real worker occupancy and count toward busy_s
+    let work_sw = Stopwatch::start();
+    ctx.sleep_throttle();
+    let mut method = match checkout(pool, rt, init_err, cfg, &job.method) {
+        Ok(m) => m,
+        Err(msg) => {
+            reject(ctx, &job, queue_s, 0.0, work_sw.secs(), &msg, &rtx);
+            return None;
+        }
     };
-    let lsw = Stopwatch::start();
     let req = GenRequest {
         prompt_tokens: tokenizer::encode(&job.prompt, true),
         max_new: job.max_new,
@@ -399,25 +581,155 @@ fn run_job(
             ..Default::default()
         },
     };
-    match method.generate(&req) {
-        Ok(out) => {
-            let metrics = out.metrics.clone();
-            (
-                JobResult {
-                    id: job.id,
-                    text: tokenizer::decode(&out.tokens),
-                    tokens: out.tokens.len(),
-                    tau: out.metrics.tau(),
-                    latency_s: lsw.secs(),
-                    queue_s,
-                    worker,
-                    error: None,
-                },
-                Some(metrics),
-            )
+    let run_sw = Stopwatch::start();
+    // a panicking method (bad logits, artifact mismatch...) must cost one
+    // error response, not the engine thread — and certainly not a client
+    // hung waiting for a reply
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+        let r = method.start(&req);
+        (method, r)
+    }));
+    let cpu_s = work_sw.secs();
+    match caught {
+        Err(p) => {
+            // instance sessions are mid-mutation: drop the instance
+            let msg = panic_text(p.as_ref());
+            reject(ctx, &job, queue_s, run_sw.secs(), cpu_s, &format!("engine panic: {msg}"), &rtx);
+            None
         }
-        Err(err) => (err_result(job, queue_s, lsw.secs(), &format!("{err:#}"), worker), None),
+        Ok((method, Err(e))) => {
+            checkin(pool, &job.method, method);
+            reject(ctx, &job, queue_s, run_sw.secs(), cpu_s, &format!("{e:#}"), &rtx);
+            None
+        }
+        Ok((method, Ok(state))) => {
+            let mut a = ActiveJob {
+                job,
+                rtx,
+                submit_sw,
+                queue_s,
+                run_sw,
+                cpu_s,
+                sent: 0,
+                state,
+                method,
+            };
+            flush_delta(&mut a);
+            if a.state.done {
+                complete(ctx, &mut a, None);
+                let name = a.job.method.clone();
+                checkin(pool, &name, a.method);
+                None
+            } else {
+                Some(a)
+            }
+        }
     }
+}
+
+/// Advance one live session by one cycle (cancel/deadline checked first).
+fn step_active(ctx: &WorkerCtx, a: &mut ActiveJob) -> StepVerdict {
+    if ctx.take_cancel(a.job.id) {
+        complete(ctx, a, Some("cancelled".to_string()));
+        return StepVerdict::Done { reuse: true };
+    }
+    if past_deadline(&a.job, &a.submit_sw) {
+        let ms = a.job.deadline_ms.unwrap_or(0);
+        complete(ctx, a, Some(format!("deadline_ms exceeded ({ms} ms)")));
+        return StepVerdict::Done { reuse: true };
+    }
+    let cpu_sw = Stopwatch::start();
+    let caught =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| a.method.step(&mut a.state)));
+    a.cpu_s += cpu_sw.secs();
+    ctx.sleep_throttle();
+    match caught {
+        Err(p) => {
+            let msg = panic_text(p.as_ref());
+            complete(ctx, a, Some(format!("engine panic: {msg}")));
+            StepVerdict::Done { reuse: false }
+        }
+        Ok(Err(e)) => {
+            complete(ctx, a, Some(format!("{e:#}")));
+            StepVerdict::Done { reuse: true }
+        }
+        Ok(Ok(_outcome)) => {
+            flush_delta(a);
+            if a.state.done {
+                complete(ctx, a, None);
+                StepVerdict::Done { reuse: true }
+            } else {
+                StepVerdict::Continue
+            }
+        }
+    }
+}
+
+/// Send any not-yet-delivered tokens as a stream delta.
+fn flush_delta(a: &mut ActiveJob) {
+    if !a.job.stream || a.state.tokens.len() <= a.sent {
+        return;
+    }
+    let text = tokenizer::decode(&a.state.tokens[a.sent..]);
+    a.sent = a.state.tokens.len();
+    if !text.is_empty() {
+        let _ = a.rtx.send(JobEvent::Delta { id: a.job.id, text, tokens: a.sent });
+    }
+}
+
+/// Finish a live session: record stats, send the terminal event.
+fn complete(ctx: &WorkerCtx, a: &mut ActiveJob, error: Option<String>) {
+    // clear any cancel marker that raced in after the last check
+    ctx.take_cancel(a.job.id);
+    let result = match error {
+        Some(msg) => err_result(&a.job, a.queue_s, a.run_sw.secs(), &msg, ctx.id),
+        None => JobResult {
+            id: a.job.id,
+            text: tokenizer::decode(&a.state.tokens),
+            tokens: a.state.tokens.len(),
+            tau: a.state.metrics.tau(),
+            latency_s: a.run_sw.secs(),
+            queue_s: a.queue_s,
+            worker: ctx.id,
+            stream: a.job.stream,
+            error: None,
+        },
+    };
+    {
+        let mut stats = ctx.stats.lock().unwrap_or_else(|p| p.into_inner());
+        let w = &mut stats[ctx.id];
+        w.busy_s += a.cpu_s;
+        a.cpu_s = 0.0;
+        w.tokens += result.tokens as u64;
+        match &result.error {
+            Some(_) => w.jobs_err += 1,
+            None => {
+                w.jobs_ok += 1;
+                w.metrics.merge(&a.state.metrics);
+            }
+        }
+    }
+    let _ = a.rtx.send(JobEvent::Done(result));
+}
+
+/// Fail a job that never became a live session.  `busy_s` is whatever
+/// admission work (throttle, method build, start) was already spent.
+fn reject(
+    ctx: &WorkerCtx,
+    job: &Job,
+    queue_s: f64,
+    latency_s: f64,
+    busy_s: f64,
+    msg: &str,
+    rtx: &Sender<JobEvent>,
+) {
+    ctx.take_cancel(job.id);
+    {
+        let mut stats = ctx.stats.lock().unwrap_or_else(|p| p.into_inner());
+        stats[ctx.id].jobs_err += 1;
+        stats[ctx.id].busy_s += busy_s;
+    }
+    let _ = rtx.send(JobEvent::Done(err_result(job, queue_s, latency_s, msg, ctx.id)));
 }
 
 fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
@@ -439,6 +751,7 @@ fn err_result(job: &Job, queue_s: f64, latency_s: f64, err: &str, worker: usize)
         latency_s,
         queue_s,
         worker,
+        stream: job.stream,
         error: Some(err.to_string()),
     }
 }
@@ -455,6 +768,31 @@ mod tests {
             max_new: 4,
             temperature: 0.0,
             seed: 0,
+            stream: false,
+            deadline_ms: None,
+        }
+    }
+
+    fn mock_job(id: u64, max_new: usize, stream: bool) -> Job {
+        Job {
+            id,
+            method: "mock".into(),
+            prompt: "hi".into(),
+            max_new,
+            temperature: 0.0,
+            seed: 1,
+            stream,
+            deadline_ms: None,
+        }
+    }
+
+    /// Block until the job's terminal event arrives (skipping deltas).
+    fn recv_done(rx: &Receiver<JobEvent>) -> JobResult {
+        loop {
+            match rx.recv().expect("scheduler dropped a job") {
+                JobEvent::Done(r) => return r,
+                JobEvent::Delta { .. } => {}
+            }
         }
     }
 
@@ -466,10 +804,10 @@ mod tests {
 
     #[test]
     fn pool_serves_error_results_without_artifacts() {
-        let sched = Scheduler::start(bad_dir(), MethodCfg::default(), 16, 2);
+        let sched = Scheduler::start(bad_dir(), MethodCfg::default(), 16, 2, 1);
         let rxs: Vec<_> = (0..8).map(|i| sched.submit(job(i), true).unwrap()).collect();
         for (i, rx) in rxs.into_iter().enumerate() {
-            let r = rx.recv().unwrap();
+            let r = recv_done(&rx);
             assert_eq!(r.id, i as u64);
             assert!(r.worker < 2);
             let err = r.error.expect("no artifacts must surface an error result");
@@ -486,7 +824,7 @@ mod tests {
 
     #[test]
     fn submit_after_shutdown_fails() {
-        let sched = Scheduler::start(bad_dir(), MethodCfg::default(), 4, 1);
+        let sched = Scheduler::start(bad_dir(), MethodCfg::default(), 4, 1, 1);
         sched.shutdown();
         assert!(sched.submit(job(1), true).is_err());
         assert!(sched.submit(job(2), false).is_err());
@@ -495,7 +833,7 @@ mod tests {
 
     #[test]
     fn shutdown_drains_queued_jobs() {
-        let sched = Scheduler::start(bad_dir(), MethodCfg::default(), 32, 2);
+        let sched = Scheduler::start(bad_dir(), MethodCfg::default(), 32, 2, 1);
         let rxs: Vec<_> = (0..12).map(|i| sched.submit(job(i), true).unwrap()).collect();
         sched.shutdown();
         for rx in rxs {
@@ -511,28 +849,126 @@ mod tests {
         // inject the per-job delay directly (mutating the process env from
         // a parallel test races other threads reading it) so one worker
         // can't drain the queue alone
-        let sched = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 32, 2, Some(20));
+        let sched = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 32, 2, 1, Some(20));
         let rxs: Vec<_> = (0..8).map(|i| sched.submit(job(i), true).unwrap()).collect();
         let served: std::collections::HashSet<usize> =
-            rxs.into_iter().map(|rx| rx.recv().unwrap().worker).collect();
+            rxs.into_iter().map(|rx| recv_done(&rx).worker).collect();
         assert_eq!(served.len(), 2, "both engine threads must serve jobs");
         let stats = sched.stats();
         assert!(stats.workers.iter().all(|w| w.jobs() > 0));
+        // admission work (throttle + failed checkout) counts as busy
         assert!(stats.busy_s() > 0.0);
         sched.shutdown();
     }
 
     #[test]
     fn submit_to_collects_many_jobs_on_one_channel() {
-        let sched = Scheduler::start(bad_dir(), MethodCfg::default(), 16, 2);
+        let sched = Scheduler::start(bad_dir(), MethodCfg::default(), 16, 2, 1);
         let (rtx, rrx) = std::sync::mpsc::channel();
         for i in 0..6 {
             sched.submit_to(job(i), true, rtx.clone()).unwrap();
         }
         drop(rtx);
-        let mut ids: Vec<u64> = rrx.iter().map(|r: JobResult| r.id).collect();
+        let mut ids: Vec<u64> =
+            rrx.iter().filter_map(JobEvent::into_result).map(|r| r.id).collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..6).collect::<Vec<u64>>());
+        sched.shutdown();
+    }
+
+    /// Runtime-free `mock` jobs succeed even where every real method
+    /// errors at init — the serving path is testable without artifacts.
+    #[test]
+    fn mock_jobs_run_without_artifacts() {
+        let sched = Scheduler::start(bad_dir(), MethodCfg::default(), 8, 1, 1);
+        let r = recv_done(&sched.submit(mock_job(1, 8, false), true).unwrap());
+        assert!(r.error.is_none(), "mock job failed: {:?}", r.error);
+        assert_eq!(r.tokens, 8);
+        assert_eq!(r.text.len(), 8);
+        let stats = sched.stats();
+        assert_eq!(stats.jobs_ok(), 1);
+        assert_eq!(stats.tokens(), 8);
+        sched.shutdown();
+    }
+
+    /// THE continuous-batching acceptance test: one worker interleaving
+    /// two sessions must finish a short job submitted *behind* a long one
+    /// first (cycle-granular scheduling beats head-of-line blocking).
+    #[test]
+    fn short_job_overtakes_long_job_when_interleaving() {
+        let sched = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 32, 1, 2, Some(3));
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        sched.submit_to(mock_job(1, 64, false), true, rtx.clone()).unwrap();
+        sched.submit_to(mock_job(2, 4, false), true, rtx).unwrap();
+        let first = recv_done(&rrx);
+        assert_eq!(first.id, 2, "4-token job must return before the 64-token job");
+        assert!(first.error.is_none());
+        assert_eq!(first.tokens, 4);
+        let second = recv_done(&rrx);
+        assert_eq!(second.id, 1);
+        assert!(second.error.is_none());
+        assert_eq!(second.tokens, 64);
+        sched.shutdown();
+    }
+
+    /// A cancelled job returns an error result and does not block the
+    /// queue behind it.
+    #[test]
+    fn cancelled_job_errors_without_blocking_queue() {
+        let sched = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 32, 1, 1, Some(3));
+        let rx1 = sched.submit(mock_job(1, 100_000, false), true).unwrap();
+        sched.cancel(1);
+        let rx2 = sched.submit(mock_job(2, 4, false), true).unwrap();
+        let r1 = recv_done(&rx1);
+        let err = r1.error.expect("cancelled job must error");
+        assert!(err.contains("cancel"), "unexpected error: {err}");
+        let r2 = recv_done(&rx2);
+        assert!(r2.error.is_none(), "queue blocked behind cancelled job: {:?}", r2.error);
+        assert_eq!(r2.tokens, 4);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn deadline_exceeded_job_errors() {
+        let sched = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 8, 1, 1, Some(5));
+        let mut j = mock_job(1, 100_000, false);
+        j.deadline_ms = Some(20);
+        let r = recv_done(&sched.submit(j, true).unwrap());
+        let err = r.error.expect("deadline must abort the job");
+        assert!(err.contains("deadline"), "unexpected error: {err}");
+        sched.shutdown();
+    }
+
+    /// Streamed deltas concatenate to exactly the non-streamed text for a
+    /// fixed seed, with at least two delta events before the terminal one.
+    #[test]
+    fn streamed_deltas_concatenate_to_final_text() {
+        let sched = Scheduler::start(bad_dir(), MethodCfg::default(), 8, 1, 2);
+        let mut j = mock_job(7, 12, true);
+        j.seed = 42;
+        let rx = sched.submit(j, true).unwrap();
+        let mut concat = String::new();
+        let mut n_deltas = 0usize;
+        let fin = loop {
+            match rx.recv().unwrap() {
+                JobEvent::Delta { id, text, tokens } => {
+                    assert_eq!(id, 7);
+                    concat.push_str(&text);
+                    assert_eq!(tokens, concat.len(), "delta token counter out of sync");
+                    n_deltas += 1;
+                }
+                JobEvent::Done(r) => break r,
+            }
+        };
+        assert!(n_deltas >= 2, "want >= 2 deltas, got {n_deltas}");
+        assert!(fin.error.is_none());
+        assert!(fin.stream);
+        assert_eq!(concat, fin.text, "deltas must concatenate to the final text");
+        // same seed, non-streamed: identical text
+        let mut j2 = mock_job(8, 12, false);
+        j2.seed = 42;
+        let r2 = recv_done(&sched.submit(j2, true).unwrap());
+        assert_eq!(r2.text, fin.text);
         sched.shutdown();
     }
 }

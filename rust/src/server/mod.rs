@@ -2,22 +2,34 @@
 //!
 //! Protocol: one JSON object per line.
 //!   generate: {"prompt": "...", "max_tokens": 64, "temperature": 0.0,
-//!              "method": "hass", "seed": 1}
+//!              "method": "hass", "seed": 1, "stream": false,
+//!              "deadline_ms": 2000}
 //!          -> {"id": 1, "text": "...", "tokens": 12, "tau": 4.2,
 //!              "latency_ms": 180.0, "queue_ms": 2.0, "worker": 0}
+//!   streaming ("stream": true): one line per drafting-verification cycle
+//!          -> {"id": 1, "delta": "...", "tokens": 3, "done": false}
+//!             ... then the normal final object with "done": true
+//!   cancel:   {"cancel": 1}   fire-and-forget — no ack line; the
+//!             cancelled job reports {"id": 1, "error": "cancelled", ...}
+//!             through its own response (queued or mid-generation).
+//!             Only ids submitted on the same connection are honored;
+//!             foreign/unknown ids are silently ignored.
 //!   stats:    {"stats": true}
 //!          -> {"stats": {"workers": [{"worker": 0, "jobs_ok": 3, ...}],
 //!              "aggregate": {"jobs": 3, "tokens": 120, "tau": 3.1, ...}}}
 //!   error:    {"id": 1, "error": "..."}  ("id" omitted when the line
 //!             could not be parsed; messages are JSON-escaped)
 //!
+//! `deadline_ms` counts from submission; the worker aborts the job with an
+//! error result once exceeded (checked between cycles).
+//!
 //! Connections are pipelined over the worker pool: each generate request
 //! is submitted to the scheduler as soon as its line is read, and a
 //! single per-connection pump thread writes each response line when its
-//! job finishes (`Scheduler::submit_to` routes every job's result onto
+//! event arrives (`Scheduler::submit_to` routes every job's events onto
 //! one channel).  Responses carry "id" so clients can pair them; with
-//! N>1 engine workers they may arrive out of order relative to the
-//! requests on the same connection.
+//! N>1 engine workers (or in-worker interleaving) they may arrive out of
+//! order relative to the requests on the same connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -25,9 +37,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::scheduler::{Job, JobResult, PoolStats, Scheduler};
+use crate::scheduler::{Job, JobEvent, JobResult, PoolStats, Scheduler};
 use crate::util::json::{self, Json};
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
@@ -36,20 +48,36 @@ static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 pub enum Request {
     Gen(Job),
     Stats,
+    Cancel(u64),
 }
 
 pub fn parse_request(line: &str) -> Result<Request> {
+    parse_request_with(line, &NEXT_ID)
+}
+
+/// `next_id` is injected so tests can assert id accounting: the old
+/// field-order initializer ran `fetch_add` *before* the prompt check,
+/// burning an id on every invalid line.
+pub fn parse_request_with(line: &str, next_id: &AtomicU64) -> Result<Request> {
     let j = json::parse(line)?;
     if j.get("stats").and_then(|v| v.as_bool()).unwrap_or(false) {
         return Ok(Request::Stats);
     }
+    if let Some(v) = j.get("cancel") {
+        let id = v.as_usize().context("'cancel' must be a job id")?;
+        return Ok(Request::Cancel(id as u64));
+    }
+    // validate the line fully BEFORE allocating an id
+    let prompt = j.str_at("prompt").context("missing 'prompt'")?.to_string();
     Ok(Request::Gen(Job {
-        id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+        id: next_id.fetch_add(1, Ordering::Relaxed),
         method: j.str_at("method").unwrap_or("hass").to_string(),
-        prompt: j.str_at("prompt").context("missing 'prompt'")?.to_string(),
+        prompt,
         max_new: j.usize_at("max_tokens").unwrap_or(64),
         temperature: j.f64_at("temperature").unwrap_or(0.0) as f32,
         seed: j.usize_at("seed").unwrap_or(0) as u64,
+        stream: j.get("stream").and_then(|v| v.as_bool()).unwrap_or(false),
+        deadline_ms: j.usize_at("deadline_ms").map(|v| v as u64),
     }))
 }
 
@@ -63,9 +91,18 @@ fn wire_r3(x: f64) -> f64 {
     (x * 1000.0).round() / 1000.0
 }
 
-pub fn format_response(r: &JobResult) -> String {
+fn error_json(id: Option<u64>, msg: &str) -> Json {
+    let mut kv: Vec<(&str, Json)> = Vec::new();
+    if let Some(id) = id {
+        kv.push(("id", Json::num(id as f64)));
+    }
+    kv.push(("error", Json::str(msg)));
+    Json::obj(kv)
+}
+
+fn response_json(r: &JobResult) -> Json {
     match &r.error {
-        Some(e) => format_error(Some(r.id), e),
+        Some(e) => error_json(Some(r.id), e),
         None => Json::obj(vec![
             ("id", Json::num(r.id as f64)),
             ("text", Json::str(r.text.clone())),
@@ -74,21 +111,43 @@ pub fn format_response(r: &JobResult) -> String {
             ("latency_ms", Json::num(wire_ms(r.latency_s))),
             ("queue_ms", Json::num(wire_ms(r.queue_s))),
             ("worker", Json::num(r.worker as f64)),
-        ])
-        .to_string(),
+        ]),
     }
+}
+
+pub fn format_response(r: &JobResult) -> String {
+    response_json(r).to_string()
 }
 
 /// Escape-safe error line.  Built through the JSON writer so messages
 /// containing quotes/backslashes stay valid JSON (the old `format!`
 /// interpolation emitted them raw).
 pub fn format_error(id: Option<u64>, msg: &str) -> String {
-    let mut kv: Vec<(&str, Json)> = Vec::new();
-    if let Some(id) = id {
-        kv.push(("id", Json::num(id as f64)));
+    error_json(id, msg).to_string()
+}
+
+/// Wire line for one scheduler event.  Streamed jobs get per-cycle delta
+/// lines and a final line tagged `"done": true` (success or error); the
+/// non-streamed final line keeps the legacy shape.
+pub fn format_event(ev: &JobEvent) -> String {
+    match ev {
+        JobEvent::Delta { id, text, tokens } => Json::obj(vec![
+            ("id", Json::num(*id as f64)),
+            ("delta", Json::str(text.clone())),
+            ("tokens", Json::num(*tokens as f64)),
+            ("done", Json::Bool(false)),
+        ])
+        .to_string(),
+        JobEvent::Done(r) => {
+            let mut j = response_json(r);
+            if r.stream {
+                if let Json::Obj(kv) = &mut j {
+                    kv.push(("done".to_string(), Json::Bool(true)));
+                }
+            }
+            j.to_string()
+        }
     }
-    kv.push(("error", Json::str(msg)));
-    Json::obj(kv).to_string()
 }
 
 /// Render a pool snapshot as the `{"stats": ...}` response line.
@@ -129,9 +188,10 @@ pub fn format_pool_stats(p: &PoolStats) -> String {
 /// to the shared scheduler pool.
 pub fn serve(listener: TcpListener, scheduler: Arc<Scheduler>) -> Result<()> {
     eprintln!(
-        "[server] listening on {} ({} engine workers)",
+        "[server] listening on {} ({} engine workers, {} sessions each)",
         listener.local_addr()?,
-        scheduler.workers()
+        scheduler.workers(),
+        scheduler.max_active()
     );
     for stream in listener.incoming() {
         let stream = stream?;
@@ -155,22 +215,27 @@ fn handle_conn(stream: TcpStream, sched: &Arc<Scheduler>) -> Result<()> {
     let peer = stream.peer_addr()?;
     let writer = Arc::new(Mutex::new(stream.try_clone()?));
     let reader = BufReader::new(stream);
-    // One pump thread per connection drains every job result.  The
-    // channel is unbounded on purpose: engine workers must never block
-    // handing a result to a slow client (that would stall the shared
-    // pool for every other connection) — a client that never reads only
-    // grows its own connection's buffer.
-    let (rtx, rrx) = channel::<JobResult>();
+    // One pump thread per connection drains every job event.  The channel
+    // is unbounded on purpose: engine workers must never block handing an
+    // event to a slow client (that would stall the shared pool for every
+    // other connection) — a client that never reads only grows its own
+    // connection's buffer.
+    let (rtx, rrx) = channel::<JobEvent>();
     let pump = {
         let w = writer.clone();
         std::thread::spawn(move || {
-            for r in rrx {
-                if write_line(&w, &format_response(&r)).is_err() {
+            for ev in rrx {
+                if write_line(&w, &format_event(&ev)).is_err() {
                     return; // client gone; drain-by-drop
                 }
             }
         })
     };
+    // ids submitted on THIS connection: a cancel is only forwarded for
+    // one of them, so a client can neither kill another connection's job
+    // nor plant a marker for a not-yet-allocated id (which would cancel
+    // whatever unrelated job eventually received it)
+    let mut submitted: std::collections::HashSet<u64> = std::collections::HashSet::new();
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
@@ -178,8 +243,15 @@ fn handle_conn(stream: TcpStream, sched: &Arc<Scheduler>) -> Result<()> {
         }
         match parse_request(&line) {
             Ok(Request::Stats) => write_line(&writer, &format_pool_stats(&sched.stats()))?,
+            Ok(Request::Cancel(id)) => {
+                // no ack either way (module docs); foreign ids are ignored
+                if submitted.contains(&id) {
+                    sched.cancel(id);
+                }
+            }
             Ok(Request::Gen(job)) => {
                 let id = job.id;
+                submitted.insert(id);
                 if let Err(e) = sched.submit_to(job, true, rtx.clone()) {
                     write_line(&writer, &format_error(Some(id), &format!("{e:#}")))?;
                 }
@@ -195,14 +267,60 @@ fn handle_conn(stream: TcpStream, sched: &Arc<Scheduler>) -> Result<()> {
     Ok(())
 }
 
+/// Options for one [`Client`] generate request.
+#[derive(Clone, Debug)]
+pub struct ReqOpts {
+    pub method: String,
+    pub max_tokens: usize,
+    pub temperature: f32,
+    pub seed: u64,
+    pub stream: bool,
+    pub deadline_ms: Option<u64>,
+}
+
+impl Default for ReqOpts {
+    fn default() -> Self {
+        ReqOpts {
+            method: "hass".into(),
+            max_tokens: 64,
+            temperature: 0.0,
+            seed: 0,
+            stream: false,
+            deadline_ms: None,
+        }
+    }
+}
+
 /// Simple blocking client for examples/load generators.
 pub struct Client {
     stream: TcpStream,
+    /// One persistent reader for the connection's lifetime.  The old code
+    /// built a fresh `BufReader` per call, which buffered bytes past the
+    /// first line and dropped them on return — losing pipelined and
+    /// streamed responses (satellite regression fix).
+    reader: BufReader<TcpStream>,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
-        Ok(Client { stream: TcpStream::connect(addr)? })
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    fn send_line(&mut self, line: &str) -> Result<()> {
+        self.stream.write_all(line.as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        Ok(())
+    }
+
+    fn read_json(&mut self) -> Result<Json> {
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp)?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        Ok(json::parse(resp.trim())?)
     }
 
     pub fn request(
@@ -212,28 +330,56 @@ impl Client {
         max_tokens: usize,
         temperature: f32,
     ) -> Result<Json> {
-        let req = Json::obj(vec![
-            ("method", Json::str(method)),
+        let opts = ReqOpts {
+            method: method.to_string(),
+            max_tokens,
+            temperature,
+            ..Default::default()
+        };
+        self.generate(prompt, &opts, |_| {})
+    }
+
+    /// Send a generate request; `on_delta` fires once per streamed delta
+    /// line (never for `stream: false`); returns the final response line.
+    pub fn generate(
+        &mut self,
+        prompt: &str,
+        opts: &ReqOpts,
+        mut on_delta: impl FnMut(&str),
+    ) -> Result<Json> {
+        let mut kv = vec![
+            ("method", Json::str(opts.method.clone())),
             ("prompt", Json::str(prompt)),
-            ("max_tokens", Json::num(max_tokens as f64)),
-            ("temperature", Json::num(temperature as f64)),
-        ])
-        .to_string();
-        self.roundtrip(&req)
+            ("max_tokens", Json::num(opts.max_tokens as f64)),
+            ("temperature", Json::num(opts.temperature as f64)),
+            ("seed", Json::num(opts.seed as f64)),
+        ];
+        if opts.stream {
+            kv.push(("stream", Json::Bool(true)));
+        }
+        if let Some(d) = opts.deadline_ms {
+            kv.push(("deadline_ms", Json::num(d as f64)));
+        }
+        self.send_line(&Json::obj(kv).to_string())?;
+        loop {
+            let j = self.read_json()?;
+            match j.str_at("delta") {
+                Some(d) => on_delta(d),
+                None => return Ok(j), // final line (success or error)
+            }
+        }
     }
 
     /// Fetch the pool's `{"stats": ...}` snapshot.
     pub fn stats(&mut self) -> Result<Json> {
-        self.roundtrip(r#"{"stats":true}"#)
+        self.send_line(r#"{"stats":true}"#)?;
+        self.read_json()
     }
 
-    fn roundtrip(&mut self, line: &str) -> Result<Json> {
-        self.stream.write_all(line.as_bytes())?;
-        self.stream.write_all(b"\n")?;
-        let mut reader = BufReader::new(self.stream.try_clone()?);
-        let mut resp = String::new();
-        reader.read_line(&mut resp)?;
-        Ok(json::parse(resp.trim())?)
+    /// Fire-and-forget cancel: the cancelled job answers with its own
+    /// error result (no ack line for the cancel itself).
+    pub fn cancel(&mut self, id: u64) -> Result<()> {
+        self.send_line(&format!("{{\"cancel\":{id}}}"))
     }
 }
 
@@ -246,7 +392,21 @@ mod tests {
     fn gen(line: &str) -> Job {
         match parse_request(line).unwrap() {
             Request::Gen(j) => j,
-            Request::Stats => panic!("expected a generate request"),
+            _ => panic!("expected a generate request"),
+        }
+    }
+
+    fn result(id: u64, text: &str, stream: bool, error: Option<&str>) -> JobResult {
+        JobResult {
+            id,
+            text: text.to_string(),
+            tokens: text.len(),
+            tau: 1.0,
+            latency_s: 0.5,
+            queue_s: 0.001,
+            worker: 1,
+            stream,
+            error: error.map(str::to_string),
         }
     }
 
@@ -257,6 +417,8 @@ mod tests {
         assert_eq!(j.max_new, 10);
         assert_eq!(j.method, "eagle2");
         assert!((j.temperature - 1.0).abs() < 1e-6);
+        assert!(!j.stream);
+        assert_eq!(j.deadline_ms, None);
     }
 
     #[test]
@@ -268,8 +430,51 @@ mod tests {
     }
 
     #[test]
+    fn parse_request_stream_and_deadline() {
+        let j = gen(r#"{"prompt": "x", "stream": true, "deadline_ms": 1500}"#);
+        assert!(j.stream);
+        assert_eq!(j.deadline_ms, Some(1500));
+        // "stream": false is a plain request
+        assert!(!gen(r#"{"prompt": "x", "stream": false}"#).stream);
+    }
+
+    #[test]
+    fn parse_cancel_request() {
+        assert!(matches!(
+            parse_request(r#"{"cancel": 17}"#).unwrap(),
+            Request::Cancel(17)
+        ));
+        // non-numeric cancel is a bad request
+        assert!(parse_request(r#"{"cancel": "x"}"#).is_err());
+    }
+
+    #[test]
     fn missing_prompt_is_error() {
         assert!(parse_request(r#"{"max_tokens": 3}"#).is_err());
+    }
+
+    /// Satellite regression: an invalid line must not consume a job id
+    /// (the old field-order initializer ran `fetch_add` before the
+    /// prompt validation).
+    #[test]
+    fn invalid_line_does_not_burn_an_id() {
+        let next = AtomicU64::new(10);
+        assert!(parse_request_with(r#"{"max_tokens": 3}"#, &next).is_err());
+        assert!(parse_request_with("not json at all", &next).is_err());
+        assert_eq!(next.load(Ordering::Relaxed), 10, "invalid lines must not consume ids");
+        let j = match parse_request_with(r#"{"prompt": "x"}"#, &next).unwrap() {
+            Request::Gen(j) => j,
+            _ => panic!("expected gen"),
+        };
+        assert_eq!(j.id, 10);
+        assert_eq!(next.load(Ordering::Relaxed), 11);
+        // stats/cancel lines don't consume ids either
+        assert!(matches!(parse_request_with(r#"{"stats": true}"#, &next).unwrap(), Request::Stats));
+        assert!(matches!(
+            parse_request_with(r#"{"cancel": 3}"#, &next).unwrap(),
+            Request::Cancel(3)
+        ));
+        assert_eq!(next.load(Ordering::Relaxed), 11);
     }
 
     #[test]
@@ -281,16 +486,7 @@ mod tests {
 
     #[test]
     fn response_roundtrips_as_json() {
-        let r = JobResult {
-            id: 7,
-            text: "a\"b".into(),
-            tokens: 3,
-            tau: 4.25,
-            latency_s: 0.5,
-            queue_s: 0.001,
-            worker: 1,
-            error: None,
-        };
+        let r = result(7, "a\"b", false, None);
         let j = json::parse(&format_response(&r)).unwrap();
         assert_eq!(j.usize_at("id"), Some(7));
         assert_eq!(j.str_at("text"), Some("a\"b"));
@@ -311,18 +507,61 @@ mod tests {
         assert!(j.get("id").is_none());
         assert_eq!(j.str_at("error"), Some("a \"b\" c"));
         // and through a JobResult carrying a quoted error
-        let r = JobResult {
-            id: 9,
-            text: String::new(),
-            tokens: 0,
-            tau: 0.0,
-            latency_s: 0.0,
-            queue_s: 0.0,
-            worker: 0,
-            error: Some("engine said \"no\"".into()),
-        };
-        let j = json::parse(&format_response(&r)).unwrap();
+        let j = json::parse(&format_response(&result(9, "", false, Some("engine said \"no\""))))
+            .unwrap();
         assert_eq!(j.str_at("error"), Some("engine said \"no\""));
+    }
+
+    /// Stream wire format: deltas carry done:false, the streamed final
+    /// line (success or error) carries done:true, and non-streamed final
+    /// lines keep the legacy shape (no "done" key).
+    #[test]
+    fn stream_wire_format() {
+        let ev = JobEvent::Delta { id: 4, text: "ab".into(), tokens: 2 };
+        let j = json::parse(&format_event(&ev)).unwrap();
+        assert_eq!(j.usize_at("id"), Some(4));
+        assert_eq!(j.str_at("delta"), Some("ab"));
+        assert_eq!(j.usize_at("tokens"), Some(2));
+        assert_eq!(j.get("done").and_then(|v| v.as_bool()), Some(false));
+
+        let j = json::parse(&format_event(&JobEvent::Done(result(4, "abc", true, None)))).unwrap();
+        assert_eq!(j.get("done").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(j.str_at("text"), Some("abc"));
+
+        let j = json::parse(&format_event(&JobEvent::Done(result(4, "", true, Some("cancelled")))))
+            .unwrap();
+        assert_eq!(j.get("done").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(j.str_at("error"), Some("cancelled"));
+
+        let j = json::parse(&format_event(&JobEvent::Done(result(5, "xy", false, None)))).unwrap();
+        assert!(j.get("done").is_none(), "legacy final line must not grow a done key");
+    }
+
+    /// Satellite regression: the client must keep ONE BufReader for the
+    /// connection.  The fake server answers the first request with BOTH
+    /// response lines in one write — the old per-call reader buffered the
+    /// second line and dropped it, so the second request would hang.
+    #[test]
+    fn client_pipelined_responses_survive_buffering() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap(); // request 1
+            let mut w = stream.try_clone().unwrap();
+            w.write_all(b"{\"id\":1,\"text\":\"first\"}\n{\"id\":2,\"text\":\"second\"}\n")
+                .unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap(); // request 2 (ignored)
+        });
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let r1 = c.request("hass", "p1", 4, 0.0).unwrap();
+        assert_eq!(r1.str_at("text"), Some("first"));
+        let r2 = c.request("hass", "p2", 4, 0.0).unwrap();
+        assert_eq!(r2.str_at("text"), Some("second"), "buffered response lost");
+        server.join().unwrap();
     }
 
     #[test]

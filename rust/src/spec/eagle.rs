@@ -3,7 +3,7 @@
 //! the paper's point is that *decoding is identical*, all gains come from
 //! harmonized training).
 //!
-//! Per cycle:
+//! Per cycle (one `step` call):
 //!   1. **commit call** — the tokens accepted last cycle (+ bonus) run
 //!      through the draft net with their *target* features (now known from
 //!      verification), writing committed draft-KV rows; the last row's
@@ -20,16 +20,13 @@
 
 use std::rc::Rc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::engine::metrics::Metrics;
 use crate::engine::sessions::{DraftSession, TargetSession};
 use crate::runtime::{Checkpoint, Runtime};
 use crate::sampling::{log_softmax, process_logits, sample_token, topk};
-use crate::spec::{accept_walk, truncate_eos, GenOutput, GenRequest, Method};
-use crate::tokenizer::EOS;
+use crate::spec::{accept_walk, GenRequest, GenState, Method, StepOutcome};
 use crate::tree::{eagle_static_template, Tree};
-use crate::util::rng::Rng;
 use crate::util::stats::Stopwatch;
 
 #[derive(Clone, Copy, PartialEq)]
@@ -49,6 +46,14 @@ pub struct Eagle {
     pub depth: usize,
     pub beam: usize,
     pub total_tokens: usize,
+}
+
+/// Per-session carry-over between draft-expand-verify cycles.
+struct EagleState {
+    /// tokens emitted last cycle, paired with their parents' features —
+    /// the next cycle's commit rows
+    pending_tokens: Vec<i32>,
+    pending_feats: Vec<Vec<f32>>,
 }
 
 struct NodeInfo {
@@ -86,6 +91,7 @@ pub fn static_tree_children(
 }
 
 /// Construct an EAGLE-family method (static or dynamic tree).
+#[allow(clippy::too_many_arguments)]
 pub fn build_eagle(
     rt: Rc<Runtime>,
     target_w: Rc<Checkpoint>,
@@ -114,209 +120,222 @@ impl Method for Eagle {
         self.label.clone()
     }
 
-    fn generate(&mut self, req: &GenRequest) -> Result<GenOutput> {
-        let mut metrics = Metrics::default();
-        let mut rng = Rng::new(req.params.seed);
+    fn start(&mut self, req: &GenRequest) -> Result<GenState> {
+        let plen = req.prompt_tokens.len();
         self.target.reset();
         self.draft.reset();
-        let plen = req.prompt_tokens.len();
-        let block = self.draft.block;
 
+        let mut state = GenState::new(
+            req,
+            EagleState { pending_tokens: Vec::new(), pending_feats: Vec::new() },
+        );
         let sw = Stopwatch::start();
         let last_logits = self.target.prefill(&req.prompt_tokens)?;
-        metrics.phases.verify_s += sw.secs();
-        metrics.target_calls += 1;
+        state.metrics.phases.verify_s += sw.secs();
+        state.metrics.target_calls += 1;
         let sw = Stopwatch::start();
         self.draft.prefill(&req.prompt_tokens, &self.target.feats)?;
-        metrics.phases.draft_s += sw.secs();
-        metrics.draft_calls += 1;
+        state.metrics.phases.draft_s += sw.secs();
+        state.metrics.draft_calls += 1;
 
-        let mut out_tokens: Vec<i32> = Vec::new();
         let probs = process_logits(&last_logits, &req.params);
-        out_tokens.push(sample_token(&probs, &mut rng) as i32);
+        let first = sample_token(&probs, &mut state.rng) as i32;
+        state.tokens.push(first);
+        let inner = state
+            .inner
+            .downcast_mut::<EagleState>()
+            .context("fresh eagle state")?;
+        inner.pending_tokens = vec![first];
+        inner.pending_feats = vec![self.target.feats[plen - 1].clone()];
+        state.clamp();
+        Ok(state)
+    }
 
-        // tokens emitted last cycle, paired with their parents' features —
-        // the next cycle's commit rows
-        let mut pending_tokens: Vec<i32> = vec![*out_tokens.last().unwrap()];
-        let mut pending_feats: Vec<Vec<f32>> = vec![self.target.feats[plen - 1].clone()];
+    fn step(&mut self, state: &mut GenState) -> Result<StepOutcome> {
+        let block = self.draft.block;
+        let verify_n = (self.total_tokens + 1).max(self.template.len() + 1);
+        let inner = state
+            .inner
+            .downcast_mut::<EagleState>()
+            .context("eagle step on a foreign GenState")?;
+        if state.done
+            || self.target.cache.remaining() < verify_n + 2
+            || self.draft.remaining() < inner.pending_tokens.len() + self.depth * block + 2
+        {
+            state.finish();
+            return Ok(StepOutcome { emitted: 0, done: true });
+        }
+        let plen = state.req.prompt_tokens.len();
+        let last = *state.tokens.last().context("session has no tokens")?;
 
-        loop {
-            let last = *out_tokens.last().unwrap();
-            let verify_n = (self.total_tokens + 1).max(self.template.len() + 1);
-            if out_tokens.len() >= req.max_new
-                || last == EOS
-                || self.target.cache.remaining() < verify_n + 2
-                || self.draft.remaining() < pending_tokens.len() + self.depth * block + 2
-            {
-                break;
-            }
+        // ---- 1. commit call (also the root expansion) ----
+        let sw = Stopwatch::start();
+        let k = inner.pending_tokens.len();
+        let write_start = self.draft.committed;
+        let base_pos = plen + state.tokens.len() - 1; // seq position of the root
+        let positions: Vec<usize> = (0..k).map(|i| base_pos + 1 + i - k).collect();
+        let extra: Vec<Vec<usize>> =
+            (0..k).map(|i| (write_start..write_start + i).collect()).collect();
+        let feats_refs: Vec<&[f32]> = inner.pending_feats.iter().map(|f| f.as_slice()).collect();
+        let commit_out = self.draft.decode(
+            &inner.pending_tokens,
+            &feats_refs,
+            &positions,
+            &extra,
+            write_start,
+        )?;
+        self.draft.commit(k)?;
+        state.metrics.draft_calls += 1;
 
-            // ---- 1. commit call (also the root expansion) ----
-            let sw = Stopwatch::start();
-            let k = pending_tokens.len();
-            let write_start = self.draft.committed;
-            let base_pos = plen + out_tokens.len() - 1; // seq position of the root
-            let positions: Vec<usize> = (0..k).map(|i| base_pos + 1 + i - k).collect();
-            let extra: Vec<Vec<usize>> =
-                (0..k).map(|i| (write_start..write_start + i).collect()).collect();
-            let feats_refs: Vec<&[f32]> = pending_feats.iter().map(|f| f.as_slice()).collect();
-            let commit_out =
-                self.draft.decode(&pending_tokens, &feats_refs, &positions, &extra, write_start)?;
-            self.draft.commit(k)?;
-            metrics.draft_calls += 1;
-
-            // ---- 2. tree expansion ----
-            let root_token = last;
-            let mut tree = Tree::new(root_token);
-            let mut info: Vec<NodeInfo> = vec![NodeInfo {
-                g: Some(commit_out.feats.row(k - 1).to_vec()),
-                slot: None, // committed -> visible via the committed mask
-                anc_slots: vec![],
-                path: vec![],
-            }];
-            let add_children =
-                |tree: &mut Tree,
-                 info: &mut Vec<NodeInfo>,
-                 parent: usize,
-                 logits: &[f32],
-                 kind: TreeKind,
-                 template: &[Vec<usize>],
-                 beam: usize| {
-                    let sm = log_softmax(logits);
-                    match kind {
-                        TreeKind::Dynamic => {
-                            for (lp, tok) in topk(&sm, beam) {
-                                let _idx = tree.add_child(parent, tok as i32, lp);
-                                let mut anc = info[parent].anc_slots.clone();
-                                if let Some(s) = info[parent].slot {
-                                    anc.push(s);
-                                }
-                                info.push(NodeInfo {
-                                    g: None,
-                                    slot: None,
-                                    anc_slots: anc,
-                                    path: vec![],
-                                });
+        // ---- 2. tree expansion ----
+        let root_token = last;
+        let mut tree = Tree::new(root_token);
+        let mut info: Vec<NodeInfo> = vec![NodeInfo {
+            g: Some(commit_out.feats.row(k - 1).to_vec()),
+            slot: None, // committed -> visible via the committed mask
+            anc_slots: vec![],
+            path: vec![],
+        }];
+        let add_children =
+            |tree: &mut Tree,
+             info: &mut Vec<NodeInfo>,
+             parent: usize,
+             logits: &[f32],
+             kind: TreeKind,
+             template: &[Vec<usize>],
+             beam: usize| {
+                let sm = log_softmax(logits);
+                match kind {
+                    TreeKind::Dynamic => {
+                        for (lp, tok) in topk(&sm, beam) {
+                            let _idx = tree.add_child(parent, tok as i32, lp);
+                            let mut anc = info[parent].anc_slots.clone();
+                            if let Some(s) = info[parent].slot {
+                                anc.push(s);
                             }
-                        }
-                        TreeKind::Static => {
-                            let ppath = info[parent].path.clone();
-                            for (r, lp, tok) in static_tree_children(&sm, &ppath, template) {
-                                let _idx = tree.add_child(parent, tok, lp);
-                                let mut anc = info[parent].anc_slots.clone();
-                                if let Some(s) = info[parent].slot {
-                                    anc.push(s);
-                                }
-                                let mut path = ppath.clone();
-                                path.push(r);
-                                info.push(NodeInfo { g: None, slot: None, anc_slots: anc, path });
-                            }
+                            info.push(NodeInfo {
+                                g: None,
+                                slot: None,
+                                anc_slots: anc,
+                                path: vec![],
+                            });
                         }
                     }
-                };
-
-            add_children(
-                &mut tree,
-                &mut info,
-                0,
-                commit_out.logits.row(k - 1),
-                self.kind,
-                &self.template,
-                self.beam,
-            );
-            let mut frontier: Vec<usize> = (1..tree.len()).collect();
-
-            let scratch_base = self.draft.committed;
-            for level in 1..self.depth {
-                // choose which frontier nodes to run through the draft net
-                let expand: Vec<usize> = match self.kind {
-                    TreeKind::Dynamic => tree.select_beam(&frontier, self.beam),
-                    TreeKind::Static => frontier
-                        .iter()
-                        .copied()
-                        .filter(|&n| {
-                            let p = &info[n].path;
-                            self.template
-                                .iter()
-                                .any(|t| t.len() == p.len() + 1 && t[..p.len()] == p[..])
-                        })
-                        .take(block)
-                        .collect(),
-                };
-                if expand.is_empty() {
-                    break;
+                    TreeKind::Static => {
+                        let ppath = info[parent].path.clone();
+                        for (r, lp, tok) in static_tree_children(&sm, &ppath, template) {
+                            let _idx = tree.add_child(parent, tok, lp);
+                            let mut anc = info[parent].anc_slots.clone();
+                            if let Some(s) = info[parent].slot {
+                                anc.push(s);
+                            }
+                            let mut path = ppath.clone();
+                            path.push(r);
+                            info.push(NodeInfo { g: None, slot: None, anc_slots: anc, path });
+                        }
+                    }
                 }
-                let level_base = scratch_base + (level - 1) * block;
-                let tokens: Vec<i32> = expand.iter().map(|&n| tree.nodes[n].token).collect();
-                let feats: Vec<&[f32]> = expand
-                    .iter()
-                    .map(|&n| {
-                        let parent = tree.nodes[n].parent.unwrap();
-                        info[parent].g.as_deref().expect("parent expanded")
-                    })
-                    .collect();
-                let positions: Vec<usize> =
-                    expand.iter().map(|&n| base_pos + tree.nodes[n].depth).collect();
-                let extra: Vec<Vec<usize>> =
-                    expand.iter().map(|&n| info[n].anc_slots.clone()).collect();
-                let out = self
-                    .draft
-                    .decode(&tokens, &feats, &positions, &extra, level_base)?;
-                metrics.draft_calls += 1;
-
-                let mut next_frontier = Vec::new();
-                for (i, &n) in expand.iter().enumerate() {
-                    info[n].g = Some(out.feats.row(i).to_vec());
-                    info[n].slot = Some(level_base + i);
-                    let before = tree.len();
-                    add_children(
-                        &mut tree,
-                        &mut info,
-                        n,
-                        out.logits.row(i),
-                        self.kind,
-                        &self.template,
-                        self.beam,
-                    );
-                    next_frontier.extend(before..tree.len());
-                }
-                frontier = next_frontier;
-            }
-            metrics.phases.draft_s += sw.secs();
-
-            // ---- 3. rerank + flatten ----
-            let sw = Stopwatch::start();
-            let plan = match self.kind {
-                TreeKind::Dynamic => tree.rerank(self.total_tokens),
-                TreeKind::Static => tree.flatten_all(),
             };
-            let positions: Vec<usize> = plan.depths.iter().map(|&d| base_pos + d).collect();
-            let anc = plan.block_mask();
-            metrics.phases.host_s += sw.secs();
 
-            // ---- 4. verify + accept ----
-            let sw = Stopwatch::start();
-            let ver = self.target.decode(&plan.tokens, &positions, Some(&anc))?;
-            metrics.phases.verify_s += sw.secs();
-            metrics.target_calls += 1;
+        add_children(
+            &mut tree,
+            &mut info,
+            0,
+            commit_out.logits.row(k - 1),
+            self.kind,
+            &self.template,
+            self.beam,
+        );
+        let mut frontier: Vec<usize> = (1..tree.len()).collect();
 
-            let sw = Stopwatch::start();
-            let walk = accept_walk(&plan, &ver, &req.params, &mut rng, &mut metrics);
-            self.target.commit_rows(&walk.accepted_rows, &ver.feats)?;
-            pending_feats = walk
-                .accepted_rows
+        let scratch_base = self.draft.committed;
+        for level in 1..self.depth {
+            // choose which frontier nodes to run through the draft net
+            let expand: Vec<usize> = match self.kind {
+                TreeKind::Dynamic => tree.select_beam(&frontier, self.beam),
+                TreeKind::Static => frontier
+                    .iter()
+                    .copied()
+                    .filter(|&n| {
+                        let p = &info[n].path;
+                        self.template
+                            .iter()
+                            .any(|t| t.len() == p.len() + 1 && t[..p.len()] == p[..])
+                    })
+                    .take(block)
+                    .collect(),
+            };
+            if expand.is_empty() {
+                break;
+            }
+            let level_base = scratch_base + (level - 1) * block;
+            let tokens: Vec<i32> = expand.iter().map(|&n| tree.nodes[n].token).collect();
+            let feats: Vec<&[f32]> = expand
                 .iter()
-                .map(|&r| ver.feats.row(r).to_vec())
+                .map(|&n| {
+                    let parent = tree.nodes[n].parent.unwrap();
+                    info[parent].g.as_deref().expect("parent expanded")
+                })
                 .collect();
-            pending_tokens = walk.new_tokens.clone();
-            out_tokens.extend(&walk.new_tokens);
-            metrics.phases.sample_s += sw.secs();
+            let positions: Vec<usize> =
+                expand.iter().map(|&n| base_pos + tree.nodes[n].depth).collect();
+            let extra: Vec<Vec<usize>> =
+                expand.iter().map(|&n| info[n].anc_slots.clone()).collect();
+            let out = self
+                .draft
+                .decode(&tokens, &feats, &positions, &extra, level_base)?;
+            state.metrics.draft_calls += 1;
+
+            let mut next_frontier = Vec::new();
+            for (i, &n) in expand.iter().enumerate() {
+                info[n].g = Some(out.feats.row(i).to_vec());
+                info[n].slot = Some(level_base + i);
+                let before = tree.len();
+                add_children(
+                    &mut tree,
+                    &mut info,
+                    n,
+                    out.logits.row(i),
+                    self.kind,
+                    &self.template,
+                    self.beam,
+                );
+                next_frontier.extend(before..tree.len());
+            }
+            frontier = next_frontier;
         }
-        if out_tokens.len() > req.max_new {
-            out_tokens.truncate(req.max_new);
-        }
-        truncate_eos(&mut out_tokens);
-        Ok(GenOutput { tokens: out_tokens, metrics })
+        state.metrics.phases.draft_s += sw.secs();
+
+        // ---- 3. rerank + flatten ----
+        let sw = Stopwatch::start();
+        let plan = match self.kind {
+            TreeKind::Dynamic => tree.rerank(self.total_tokens),
+            TreeKind::Static => tree.flatten_all(),
+        };
+        let positions: Vec<usize> = plan.depths.iter().map(|&d| base_pos + d).collect();
+        let anc = plan.block_mask();
+        state.metrics.phases.host_s += sw.secs();
+
+        // ---- 4. verify + accept ----
+        let sw = Stopwatch::start();
+        let ver = self.target.decode(&plan.tokens, &positions, Some(&anc))?;
+        state.metrics.phases.verify_s += sw.secs();
+        state.metrics.target_calls += 1;
+
+        let sw = Stopwatch::start();
+        let walk = accept_walk(&plan, &ver, &state.req.params, &mut state.rng, &mut state.metrics);
+        self.target.commit_rows(&walk.accepted_rows, &ver.feats)?;
+        inner.pending_feats = walk
+            .accepted_rows
+            .iter()
+            .map(|&r| ver.feats.row(r).to_vec())
+            .collect();
+        inner.pending_tokens = walk.new_tokens.clone();
+        let before = state.tokens.len();
+        state.tokens.extend(&walk.new_tokens);
+        state.metrics.phases.sample_s += sw.secs();
+        let done = state.clamp();
+        Ok(StepOutcome { emitted: state.tokens.len().saturating_sub(before), done })
     }
 }
 

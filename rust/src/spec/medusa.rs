@@ -1,25 +1,28 @@
 //! Medusa (Cai et al. 2024): K independent feature heads on the frozen
 //! target predict tokens t+1..t+K; a sparse static tree over per-head
-//! top-k ranks is verified in one target call.
+//! top-k ranks is verified in one target call.  One head-predict +
+//! tree-verify cycle per `step` call.
 
 use std::rc::Rc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::engine::metrics::Metrics;
 use crate::engine::sessions::{MedusaHeads, TargetSession};
 use crate::runtime::{Checkpoint, Runtime};
 use crate::sampling::{process_logits, sample_token, topk};
-use crate::spec::{accept_walk, truncate_eos, GenOutput, GenRequest, Method};
-use crate::tokenizer::EOS;
+use crate::spec::{accept_walk, GenRequest, GenState, Method, StepOutcome};
 use crate::tree::{medusa_template, Tree};
-use crate::util::rng::Rng;
 use crate::util::stats::Stopwatch;
 
 pub struct Medusa {
     target: TargetSession,
     heads: MedusaHeads,
     template: Vec<Vec<usize>>,
+}
+
+/// Per-session carry-over: the feature row the heads read next cycle.
+struct MedusaState {
+    head_feat: Vec<f32>,
 }
 
 impl Medusa {
@@ -89,56 +92,66 @@ impl Method for Medusa {
         "medusa".into()
     }
 
-    fn generate(&mut self, req: &GenRequest) -> Result<GenOutput> {
-        let mut metrics = Metrics::default();
-        let mut rng = Rng::new(req.params.seed);
-        self.target.reset();
+    fn start(&mut self, req: &GenRequest) -> Result<GenState> {
         let plen = req.prompt_tokens.len();
+        self.target.reset();
 
+        let mut state = GenState::new(req, MedusaState { head_feat: Vec::new() });
         let sw = Stopwatch::start();
         let last_logits = self.target.prefill(&req.prompt_tokens)?;
-        metrics.phases.verify_s += sw.secs();
-        metrics.target_calls += 1;
+        state.metrics.phases.verify_s += sw.secs();
+        state.metrics.target_calls += 1;
 
-        let mut out_tokens = Vec::new();
         let probs = process_logits(&last_logits, &req.params);
-        out_tokens.push(sample_token(&probs, &mut rng) as i32);
+        let first = sample_token(&probs, &mut state.rng) as i32;
+        state.tokens.push(first);
         // heads read the feature of the last committed position
-        let mut head_feat: Vec<f32> = self.target.feats[plen - 1].clone();
+        state
+            .inner
+            .downcast_mut::<MedusaState>()
+            .context("fresh medusa state")?
+            .head_feat = self.target.feats[plen - 1].clone();
+        state.clamp();
+        Ok(state)
+    }
 
-        while out_tokens.len() < req.max_new
-            && *out_tokens.last().unwrap() != EOS
-            && self.target.cache.remaining() > self.template.len() + 3
-        {
-            let root = *out_tokens.last().unwrap();
-            let sw = Stopwatch::start();
-            let head_logits = self.heads.predict(&head_feat)?;
-            metrics.draft_calls += 1;
-            let tree = self.build_tree(root, &head_logits);
-            let plan = tree.flatten_all();
-            metrics.phases.draft_s += sw.secs();
-
-            let base_pos = plen + out_tokens.len() - 1;
-            let positions: Vec<usize> = plan.depths.iter().map(|&d| base_pos + d).collect();
-            let anc = plan.block_mask();
-
-            let sw = Stopwatch::start();
-            let ver = self.target.decode(&plan.tokens, &positions, Some(&anc))?;
-            metrics.phases.verify_s += sw.secs();
-            metrics.target_calls += 1;
-
-            let sw = Stopwatch::start();
-            let walk = accept_walk(&plan, &ver, &req.params, &mut rng, &mut metrics);
-            metrics.phases.sample_s += sw.secs();
-
-            self.target.commit_rows(&walk.accepted_rows, &ver.feats)?;
-            head_feat = ver.feats.row(walk.bonus_parent_row).to_vec();
-            out_tokens.extend(&walk.new_tokens);
+    fn step(&mut self, state: &mut GenState) -> Result<StepOutcome> {
+        let inner = state
+            .inner
+            .downcast_mut::<MedusaState>()
+            .context("medusa step on a foreign GenState")?;
+        if state.done || self.target.cache.remaining() <= self.template.len() + 3 {
+            state.finish();
+            return Ok(StepOutcome { emitted: 0, done: true });
         }
-        if out_tokens.len() > req.max_new {
-            out_tokens.truncate(req.max_new);
-        }
-        truncate_eos(&mut out_tokens);
-        Ok(GenOutput { tokens: out_tokens, metrics })
+        let plen = state.req.prompt_tokens.len();
+        let root = *state.tokens.last().context("session has no tokens")?;
+
+        let sw = Stopwatch::start();
+        let head_logits = self.heads.predict(&inner.head_feat)?;
+        state.metrics.draft_calls += 1;
+        let tree = self.build_tree(root, &head_logits);
+        let plan = tree.flatten_all();
+        state.metrics.phases.draft_s += sw.secs();
+
+        let base_pos = plen + state.tokens.len() - 1;
+        let positions: Vec<usize> = plan.depths.iter().map(|&d| base_pos + d).collect();
+        let anc = plan.block_mask();
+
+        let sw = Stopwatch::start();
+        let ver = self.target.decode(&plan.tokens, &positions, Some(&anc))?;
+        state.metrics.phases.verify_s += sw.secs();
+        state.metrics.target_calls += 1;
+
+        let sw = Stopwatch::start();
+        let walk = accept_walk(&plan, &ver, &state.req.params, &mut state.rng, &mut state.metrics);
+        state.metrics.phases.sample_s += sw.secs();
+
+        self.target.commit_rows(&walk.accepted_rows, &ver.feats)?;
+        inner.head_feat = ver.feats.row(walk.bonus_parent_row).to_vec();
+        let before = state.tokens.len();
+        state.tokens.extend(&walk.new_tokens);
+        let done = state.clamp();
+        Ok(StepOutcome { emitted: state.tokens.len().saturating_sub(before), done })
     }
 }

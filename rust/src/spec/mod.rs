@@ -18,8 +18,11 @@
 pub mod eagle;
 pub mod lookup;
 pub mod medusa;
+pub mod mock;
 pub mod sps;
 pub mod vanilla;
+
+use std::any::Any;
 
 use anyhow::Result;
 
@@ -43,9 +46,105 @@ pub struct GenOutput {
     pub metrics: Metrics,
 }
 
+/// Resumable per-request generation state.  The shared fields (emitted
+/// tokens, metrics, RNG stream) live here so schedulers can observe
+/// progress between steps without knowing the method; `inner` carries the
+/// method-specific carry-over (pending commit rows, n-gram pools, ...).
+pub struct GenState {
+    pub req: GenRequest,
+    pub rng: Rng,
+    /// tokens emitted so far (clamped to `max_new`, cut at EOS)
+    pub tokens: Vec<i32>,
+    pub metrics: Metrics,
+    /// the output is final; further `step` calls are no-ops
+    pub done: bool,
+    /// method-specific resumable state (downcast by the owning method)
+    pub inner: Box<dyn Any>,
+    /// `tokens[..checked]` is known EOS-free (incremental clamp watermark)
+    checked: usize,
+}
+
+impl GenState {
+    pub fn new<T: Any>(req: &GenRequest, inner: T) -> GenState {
+        GenState {
+            req: req.clone(),
+            rng: Rng::new(req.params.seed),
+            tokens: Vec::new(),
+            metrics: Metrics::default(),
+            done: false,
+            inner: Box::new(inner),
+            checked: 0,
+        }
+    }
+
+    /// Enforce the output invariants after a cycle extended `tokens`:
+    /// truncate at (and including) the first EOS, clamp to `max_new`, and
+    /// mark the session done when either fires.  Only the newly appended
+    /// suffix is scanned, so per-step cost stays O(new tokens).
+    pub fn clamp(&mut self) -> bool {
+        if let Some(p) = self.tokens[self.checked..].iter().position(|&t| t == EOS) {
+            self.tokens.truncate(self.checked + p + 1);
+            self.done = true;
+        }
+        if self.tokens.len() >= self.req.max_new {
+            self.tokens.truncate(self.req.max_new);
+            self.done = true;
+        }
+        self.checked = self.tokens.len();
+        self.done
+    }
+
+    /// Clamp and mark done unconditionally (cache exhausted, EOS, ...).
+    pub fn finish(&mut self) {
+        self.clamp();
+        self.done = true;
+    }
+
+    pub fn into_output(self) -> GenOutput {
+        GenOutput { tokens: self.tokens, metrics: self.metrics }
+    }
+}
+
+/// What one `Method::step` call did.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutcome {
+    /// tokens appended to `GenState::tokens` by this step (post-clamp)
+    pub emitted: usize,
+    /// the session is finished (mirrors `GenState::done`)
+    pub done: bool,
+}
+
+/// A speculative-decoding method as a resumable state machine.
+///
+/// `start` prefills and samples the first token; each `step` advances one
+/// unit of work — a draft-expand-verify cycle (eagle/medusa), one γ-chain
+/// or lookup chain (sps/pld/lookahead), one AR token (vanilla).  Schedulers
+/// interleave steps of many sessions for cycle-granular continuous
+/// batching; `generate` is the run-to-completion wrapper the suite/bench
+/// callers use.
+///
+/// A `Method` instance hosts at most ONE live session at a time (its model
+/// sessions/KV caches are per-instance): calling `start` again invalidates
+/// any earlier `GenState` from the same instance.
 pub trait Method {
     fn name(&self) -> String;
-    fn generate(&mut self, req: &GenRequest) -> Result<GenOutput>;
+
+    /// Begin a session: reset model sessions, prefill the prompt, sample
+    /// the first token.  The returned state may already be `done` (e.g.
+    /// `max_new <= 1`).
+    fn start(&mut self, req: &GenRequest) -> Result<GenState>;
+
+    /// Advance the session by one cycle; sets `state.done` when final.
+    fn step(&mut self, state: &mut GenState) -> Result<StepOutcome>;
+
+    /// Run a session to completion (default loop over `start` + `step`).
+    fn generate(&mut self, req: &GenRequest) -> Result<GenOutput> {
+        let mut state = self.start(req)?;
+        while !state.done {
+            self.step(&mut state)?;
+        }
+        Ok(state.into_output())
+    }
 }
 
 /// Method configuration (paper hyper-parameters + ablation knobs).
@@ -236,6 +335,40 @@ mod tests {
         let params = SampleParams { temperature: 0.0, ..Default::default() };
         let w = accept_walk(&plan, &out, &params, &mut rng, &mut m);
         assert_eq!(w.new_tokens, vec![EOS]);
+    }
+
+    #[test]
+    fn genstate_clamp_limits_max_new() {
+        let req = GenRequest {
+            prompt_tokens: vec![1],
+            max_new: 4,
+            params: SampleParams::default(),
+        };
+        let mut st = GenState::new(&req, ());
+        st.tokens.extend([10, 11]);
+        assert!(!st.clamp());
+        assert!(!st.done);
+        st.tokens.extend([12, 13, 14]);
+        assert!(st.clamp());
+        assert_eq!(st.tokens, vec![10, 11, 12, 13]);
+        assert!(st.done);
+    }
+
+    #[test]
+    fn genstate_clamp_cuts_at_eos_incrementally() {
+        let req = GenRequest {
+            prompt_tokens: vec![1],
+            max_new: 100,
+            params: SampleParams::default(),
+        };
+        let mut st = GenState::new(&req, ());
+        st.tokens.extend([10, 11]);
+        assert!(!st.clamp());
+        st.tokens.extend([12, EOS, 13]);
+        assert!(st.clamp());
+        assert_eq!(st.tokens, vec![10, 11, 12, EOS]);
+        let out = st.into_output();
+        assert_eq!(out.tokens.last(), Some(&EOS));
     }
 
     #[test]

@@ -2,25 +2,28 @@
 //! an independent tiny LM drafts a γ-token chain sampled from its own
 //! distribution; the target verifies in one call; canonical rejection
 //! sampling (accept w.p. min(1, p/q), residual on reject) keeps the output
-//! exactly target-distributed.
+//! exactly target-distributed.  One γ-chain per `step` call.
 
 use std::rc::Rc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::engine::metrics::Metrics;
 use crate::engine::sessions::{SpsSession, TargetSession};
 use crate::runtime::{Checkpoint, Runtime};
-use crate::sampling::{process_logits, sample_token, verify_chain, SampleParams};
-use crate::spec::{truncate_eos, GenOutput, GenRequest, Method};
-use crate::tokenizer::EOS;
-use crate::util::rng::Rng;
+use crate::sampling::{process_logits, sample_token, verify_chain};
+use crate::spec::{GenRequest, GenState, Method, StepOutcome};
 use crate::util::stats::Stopwatch;
 
 pub struct Sps {
     target: TargetSession,
     draft: SpsSession,
     gamma: usize,
+}
+
+/// Per-session carry-over between γ-chain cycles.
+struct SpsState {
+    /// tokens emitted but not yet in the draft LM's cache
+    draft_backlog: Vec<i32>,
 }
 
 impl Sps {
@@ -43,103 +46,113 @@ impl Method for Sps {
         format!("sps(gamma={})", self.gamma)
     }
 
-    fn generate(&mut self, req: &GenRequest) -> Result<GenOutput> {
-        let mut metrics = Metrics::default();
-        let mut rng = Rng::new(req.params.seed);
+    fn start(&mut self, req: &GenRequest) -> Result<GenState> {
+        let mut state = GenState::new(req, SpsState { draft_backlog: Vec::new() });
         self.target.reset();
         self.draft.reset();
-        let plen = req.prompt_tokens.len();
 
         let sw = Stopwatch::start();
         let last_logits = self.target.prefill(&req.prompt_tokens)?;
-        metrics.phases.verify_s += sw.secs();
-        metrics.target_calls += 1;
+        state.metrics.phases.verify_s += sw.secs();
+        state.metrics.target_calls += 1;
         let sw = Stopwatch::start();
         self.draft.prefill(&req.prompt_tokens)?;
-        metrics.phases.draft_s += sw.secs();
+        state.metrics.phases.draft_s += sw.secs();
 
-        let mut out_tokens: Vec<i32> = Vec::new();
         let probs = process_logits(&last_logits, &req.params);
-        out_tokens.push(sample_token(&probs, &mut rng) as i32);
+        let first = sample_token(&probs, &mut state.rng) as i32;
+        state.tokens.push(first);
+        state
+            .inner
+            .downcast_mut::<SpsState>()
+            .context("fresh sps state")?
+            .draft_backlog
+            .push(first);
+        state.clamp();
+        Ok(state)
+    }
 
-        // tokens emitted but not yet in the draft LM's cache
-        let mut draft_backlog: Vec<i32> = vec![*out_tokens.last().unwrap()];
-
-        while out_tokens.len() < req.max_new
-            && *out_tokens.last().unwrap() != EOS
-            && self.target.cache.remaining() > self.gamma + 2
-            && self.draft.cache.remaining() > self.gamma + draft_backlog.len() + 2
+    fn step(&mut self, state: &mut GenState) -> Result<StepOutcome> {
+        let gamma = self.gamma;
+        let inner = state
+            .inner
+            .downcast_mut::<SpsState>()
+            .context("sps step on a foreign GenState")?;
+        if state.done
+            || self.target.cache.remaining() <= gamma + 2
+            || self.draft.cache.remaining() <= gamma + inner.draft_backlog.len() + 2
         {
-            let root = *out_tokens.last().unwrap();
-            // ---- draft a chain of gamma tokens sampled from q ----
-            let sw = Stopwatch::start();
-            let mut chain: Vec<i32> = Vec::new();
-            let mut chain_q: Vec<Vec<f32>> = Vec::new();
-            // catch the draft cache up on the backlog (incl. current root)
-            let mut logits = Vec::new();
-            for (i, &t) in draft_backlog.iter().enumerate() {
-                let pos = plen + out_tokens.len() - draft_backlog.len() + i;
-                logits = self.draft.decode1(t, pos)?;
-                metrics.draft_calls += 1;
-            }
-            draft_backlog.clear();
-            for g in 0..self.gamma {
-                let q = process_logits(&logits, &req.params);
-                let tok = sample_token(&q, &mut rng) as i32;
-                chain.push(tok);
-                chain_q.push(q);
-                if g + 1 < self.gamma {
-                    let pos = plen + out_tokens.len() + g;
-                    logits = self.draft.decode1(tok, pos)?;
-                    metrics.draft_calls += 1;
-                }
-            }
-            metrics.phases.draft_s += sw.secs();
-
-            // ---- verify [root, chain...] in one target call ----
-            let sw = Stopwatch::start();
-            let mut block = vec![root];
-            block.extend(&chain);
-            let base_pos = plen + out_tokens.len() - 1;
-            let positions: Vec<usize> = (0..block.len()).map(|i| base_pos + i).collect();
-            let ver = self.target.decode(&block, &positions, None)?;
-            metrics.phases.verify_s += sw.secs();
-            metrics.target_calls += 1;
-            metrics.draft_tokens_verified += chain.len();
-
-            // ---- rejection sampling ----
-            let sw = Stopwatch::start();
-            let target_probs: Vec<Vec<f32>> = (0..block.len())
-                .map(|i| process_logits(ver.logits.row(i), &req.params))
-                .collect();
-            let verdict = verify_chain(&chain, &chain_q, &target_probs, &mut rng);
-            metrics.phases.sample_s += sw.secs();
-
-            let accepted_rows: Vec<usize> = (0..=verdict.accepted).collect();
-            self.target.commit_rows(&accepted_rows, &ver.feats)?;
-            let mut emitted: Vec<i32> = chain[..verdict.accepted].to_vec();
-            emitted.push(verdict.bonus);
-            metrics.record_cycle(verdict.accepted, emitted.len());
-
-            // draft cache holds [root, chain[..gamma-1]]: keep root +
-            // accepted prefix that it has seen; roll back the rest.
-            let in_cache = self.gamma; // root + gamma-1 chain tokens
-            let keep = 1 + verdict.accepted.min(self.gamma - 1);
-            self.draft.rollback(in_cache - keep);
-            // backlog: accepted chain tail not in cache (the last accepted
-            // token if it was chain[gamma-1]) + the bonus token
-            if verdict.accepted == self.gamma {
-                draft_backlog.push(chain[self.gamma - 1]);
-            }
-            draft_backlog.push(verdict.bonus);
-
-            out_tokens.extend(emitted);
+            state.finish();
+            return Ok(StepOutcome { emitted: 0, done: true });
         }
-        if out_tokens.len() > req.max_new {
-            out_tokens.truncate(req.max_new);
+        let plen = state.req.prompt_tokens.len();
+        let root = *state.tokens.last().context("session has no tokens")?;
+
+        // ---- draft a chain of gamma tokens sampled from q ----
+        let sw = Stopwatch::start();
+        let mut chain: Vec<i32> = Vec::new();
+        let mut chain_q: Vec<Vec<f32>> = Vec::new();
+        // catch the draft cache up on the backlog (incl. current root)
+        let mut logits = Vec::new();
+        for (i, &t) in inner.draft_backlog.iter().enumerate() {
+            let pos = plen + state.tokens.len() - inner.draft_backlog.len() + i;
+            logits = self.draft.decode1(t, pos)?;
+            state.metrics.draft_calls += 1;
         }
-        truncate_eos(&mut out_tokens);
-        let _ = &req.params as &SampleParams;
-        Ok(GenOutput { tokens: out_tokens, metrics })
+        inner.draft_backlog.clear();
+        for g in 0..gamma {
+            let q = process_logits(&logits, &state.req.params);
+            let tok = sample_token(&q, &mut state.rng) as i32;
+            chain.push(tok);
+            chain_q.push(q);
+            if g + 1 < gamma {
+                let pos = plen + state.tokens.len() + g;
+                logits = self.draft.decode1(tok, pos)?;
+                state.metrics.draft_calls += 1;
+            }
+        }
+        state.metrics.phases.draft_s += sw.secs();
+
+        // ---- verify [root, chain...] in one target call ----
+        let sw = Stopwatch::start();
+        let mut block = vec![root];
+        block.extend(&chain);
+        let base_pos = plen + state.tokens.len() - 1;
+        let positions: Vec<usize> = (0..block.len()).map(|i| base_pos + i).collect();
+        let ver = self.target.decode(&block, &positions, None)?;
+        state.metrics.phases.verify_s += sw.secs();
+        state.metrics.target_calls += 1;
+        state.metrics.draft_tokens_verified += chain.len();
+
+        // ---- rejection sampling ----
+        let sw = Stopwatch::start();
+        let target_probs: Vec<Vec<f32>> = (0..block.len())
+            .map(|i| process_logits(ver.logits.row(i), &state.req.params))
+            .collect();
+        let verdict = verify_chain(&chain, &chain_q, &target_probs, &mut state.rng);
+        state.metrics.phases.sample_s += sw.secs();
+
+        let accepted_rows: Vec<usize> = (0..=verdict.accepted).collect();
+        self.target.commit_rows(&accepted_rows, &ver.feats)?;
+        let mut emitted: Vec<i32> = chain[..verdict.accepted].to_vec();
+        emitted.push(verdict.bonus);
+        state.metrics.record_cycle(verdict.accepted, emitted.len());
+
+        // draft cache holds [root, chain[..gamma-1]]: keep root +
+        // accepted prefix that it has seen; roll back the rest.
+        let in_cache = gamma; // root + gamma-1 chain tokens
+        let keep = 1 + verdict.accepted.min(gamma - 1);
+        self.draft.rollback(in_cache - keep);
+        // backlog: accepted chain tail not in cache (the last accepted
+        // token if it was chain[gamma-1]) + the bonus token
+        if verdict.accepted == gamma {
+            inner.draft_backlog.push(chain[gamma - 1]);
+        }
+        inner.draft_backlog.push(verdict.bonus);
+
+        let before = state.tokens.len();
+        state.tokens.extend(emitted);
+        let done = state.clamp();
+        Ok(StepOutcome { emitted: state.tokens.len().saturating_sub(before), done })
     }
 }

@@ -1,21 +1,24 @@
 //! Vanilla auto-regressive decoding — the 1.00x baseline every speedup in
-//! Table 2 is measured against.
+//! Table 2 is measured against.  One target AR step per `step` call.
 
 use std::rc::Rc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::engine::metrics::Metrics;
 use crate::engine::sessions::TargetSession;
 use crate::runtime::{Checkpoint, Runtime};
 use crate::sampling::{process_logits, sample_token};
-use crate::spec::{truncate_eos, GenOutput, GenRequest, Method};
-use crate::util::rng::Rng;
+use crate::spec::{GenRequest, GenState, Method, StepOutcome};
 use crate::util::stats::Stopwatch;
 
 pub struct Vanilla {
     target: TargetSession,
 }
+
+/// Marker state: vanilla carries nothing between steps (the prompt
+/// length comes from `GenState::req`), but the typed marker still
+/// catches a `GenState` from a different method.
+struct VanillaState;
 
 impl Vanilla {
     pub fn new(rt: Rc<Runtime>, target_w: Rc<Checkpoint>) -> Result<Vanilla> {
@@ -28,40 +31,50 @@ impl Method for Vanilla {
         "vanilla".into()
     }
 
-    fn generate(&mut self, req: &GenRequest) -> Result<GenOutput> {
-        let mut metrics = Metrics::default();
-        let mut rng = Rng::new(req.params.seed);
+    fn start(&mut self, req: &GenRequest) -> Result<GenState> {
+        let mut state = GenState::new(req, VanillaState);
         self.target.reset();
 
         let sw = Stopwatch::start();
         let last_logits = self.target.prefill(&req.prompt_tokens)?;
-        metrics.phases.verify_s += sw.secs();
-        metrics.target_calls += 1;
+        state.metrics.phases.verify_s += sw.secs();
+        state.metrics.target_calls += 1;
 
-        let mut out_tokens = Vec::new();
         let probs = process_logits(&last_logits, &req.params);
-        let mut next = sample_token(&probs, &mut rng) as i32;
-        out_tokens.push(next);
+        let first = sample_token(&probs, &mut state.rng) as i32;
+        state.tokens.push(first);
+        state.clamp();
+        Ok(state)
+    }
 
-        while out_tokens.len() < req.max_new
-            && *out_tokens.last().unwrap() != crate::tokenizer::EOS
-            && self.target.cache.remaining() > 1
-        {
-            let pos = req.prompt_tokens.len() + out_tokens.len() - 1;
-            let sw = Stopwatch::start();
-            let out = self.target.decode(&[next], &[pos], None)?;
-            metrics.phases.verify_s += sw.secs();
-            metrics.target_calls += 1;
-            self.target.commit_rows(&[0], &out.feats)?;
-
-            let sw = Stopwatch::start();
-            let probs = process_logits(out.logits.row(0), &req.params);
-            next = sample_token(&probs, &mut rng) as i32;
-            metrics.phases.sample_s += sw.secs();
-            out_tokens.push(next);
-            metrics.record_cycle(0, 1);
+    fn step(&mut self, state: &mut GenState) -> Result<StepOutcome> {
+        state
+            .inner
+            .downcast_ref::<VanillaState>()
+            .context("vanilla step on a foreign GenState")?;
+        let plen = state.req.prompt_tokens.len();
+        if state.done || self.target.cache.remaining() <= 1 {
+            state.finish();
+            return Ok(StepOutcome { emitted: 0, done: true });
         }
-        truncate_eos(&mut out_tokens);
-        Ok(GenOutput { tokens: out_tokens, metrics })
+        let next = *state.tokens.last().context("session has no tokens")?;
+        let pos = plen + state.tokens.len() - 1;
+
+        let sw = Stopwatch::start();
+        let out = self.target.decode(&[next], &[pos], None)?;
+        state.metrics.phases.verify_s += sw.secs();
+        state.metrics.target_calls += 1;
+        self.target.commit_rows(&[0], &out.feats)?;
+
+        let sw = Stopwatch::start();
+        let probs = process_logits(out.logits.row(0), &state.req.params);
+        let tok = sample_token(&probs, &mut state.rng) as i32;
+        state.metrics.phases.sample_s += sw.secs();
+
+        let before = state.tokens.len();
+        state.tokens.push(tok);
+        state.metrics.record_cycle(0, 1);
+        let done = state.clamp();
+        Ok(StepOutcome { emitted: state.tokens.len().saturating_sub(before), done })
     }
 }

@@ -62,6 +62,13 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Optional u64 flag: absent (or unparseable) stays `None` — for
+    /// knobs like `--deadline-ms` where "unset" must stay distinguishable
+    /// from any numeric default.
+    pub fn u64_opt(&self, key: &str) -> Option<u64> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
@@ -144,6 +151,15 @@ mod tests {
         // fully unparseable values fall back to the default, not []
         let c = args("serve --workers two,4x");
         assert_eq!(c.usize_list_or("workers", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn optional_u64_flags() {
+        let a = args("client --deadline-ms 1500");
+        assert_eq!(a.u64_opt("deadline-ms"), Some(1500));
+        assert_eq!(a.u64_opt("missing"), None);
+        let b = args("client --deadline-ms soon");
+        assert_eq!(b.u64_opt("deadline-ms"), None);
     }
 
     #[test]

@@ -110,12 +110,6 @@ impl Json {
     }
 
     // ---- writer ----
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -151,6 +145,17 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// The writer is exposed through `Display`, so both `format!("{j}")` and
+/// the blanket `ToString::to_string` work (an inherent `to_string` would
+/// shadow the trait and trip clippy's `inherent_to_string`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -231,6 +231,7 @@ fn server_roundtrip() {
         MethodCfg::default(),
         8,
         1,
+        2,
     ));
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
@@ -257,6 +258,7 @@ fn pool_tcp_serves_and_reports_stats_without_artifacts() {
         MethodCfg::default(),
         16,
         2,
+        1,
     ));
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
@@ -315,6 +317,7 @@ fn pool_roundtrip_with_artifacts() {
         MethodCfg::default(),
         16,
         2,
+        2,
     ));
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
@@ -353,5 +356,115 @@ fn pool_roundtrip_with_artifacts() {
     assert!(stats.tokens() > 0);
     let tau = stats.tau();
     assert!(tau.is_finite() && tau >= 1.0, "merged pool tau: {tau}");
+    sched.shutdown();
+}
+
+/// Spawn a TCP server over a fresh pool (no artifacts needed for `mock`).
+fn mock_server(workers: usize, max_active: usize) -> (Arc<hass::scheduler::Scheduler>, String) {
+    let sched = Arc::new(hass::scheduler::Scheduler::start(
+        std::path::PathBuf::from("/nonexistent/hass-artifacts"),
+        MethodCfg::default(),
+        16,
+        workers,
+        max_active,
+    ));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let s2 = sched.clone();
+    std::thread::spawn(move || {
+        let _ = hass::server::serve(listener, s2);
+    });
+    (sched, addr)
+}
+
+/// End-to-end streaming over TCP: `{"stream": true}` must emit >= 2
+/// delta lines before the final done line, the deltas must concatenate
+/// to the final text, and a non-streamed request with the same seed must
+/// produce the identical text.  Runs everywhere — `mock` needs no
+/// artifacts.
+#[test]
+fn tcp_streaming_deltas_concatenate_to_text() {
+    let (sched, addr) = mock_server(1, 2);
+    let mut c = hass::server::Client::connect(&addr).unwrap();
+    let mut deltas: Vec<String> = Vec::new();
+    let opts = hass::server::ReqOpts {
+        method: "mock".into(),
+        max_tokens: 8,
+        seed: 3,
+        stream: true,
+        ..Default::default()
+    };
+    let fin = c.generate("hello", &opts, |d| deltas.push(d.to_string())).unwrap();
+    assert!(fin.get("error").is_none(), "stream failed: {fin:?}");
+    assert!(deltas.len() >= 2, "want >= 2 delta lines, got {}", deltas.len());
+    assert_eq!(fin.get("done").and_then(|v| v.as_bool()), Some(true));
+    let text = fin.str_at("text").unwrap().to_string();
+    assert_eq!(deltas.concat(), text, "deltas must concatenate to the final text");
+    assert_eq!(fin.usize_at("tokens"), Some(8));
+
+    // same seed without streaming -> same text, no delta callbacks
+    let opts = hass::server::ReqOpts { stream: false, ..opts };
+    let fin2 = c
+        .generate("hello", &opts, |_| panic!("non-streamed request must not emit deltas"))
+        .unwrap();
+    assert_eq!(fin2.str_at("text"), Some(text.as_str()));
+    assert!(fin2.get("done").is_none(), "legacy final line must not carry done");
+    sched.shutdown();
+}
+
+/// End-to-end cancellation over TCP: cancel a streaming job mid-flight
+/// (the job id comes from its first delta line); the job's final line
+/// must be a done-tagged error mentioning the cancel, and the connection
+/// must stay usable for a follow-up request.
+#[test]
+fn tcp_cancel_aborts_streaming_job() {
+    use std::io::{BufRead, BufReader, Write};
+
+    // throttle steps so the job is reliably still running when the cancel
+    // lands (the env knob is read once at pool start; the brief window
+    // only slows, never breaks, concurrently starting pools)
+    std::env::set_var("HASS_TEST_JOB_DELAY_MS", "2");
+    let (sched, addr) = mock_server(1, 1);
+    std::env::remove_var("HASS_TEST_JOB_DELAY_MS");
+
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream.try_clone().unwrap();
+    w.write_all(b"{\"prompt\": \"long job\", \"method\": \"mock\", \"max_tokens\": 5000, \"stream\": true}\n")
+        .unwrap();
+
+    // first delta line carries the job id
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let first = hass::util::json::parse(line.trim()).unwrap();
+    assert!(first.str_at("delta").is_some(), "expected a delta line, got: {line}");
+    let id = first.usize_at("id").expect("delta line carries the job id");
+    w.write_all(format!("{{\"cancel\": {id}}}\n").as_bytes()).unwrap();
+
+    // drain remaining deltas until the terminal line
+    let fin = loop {
+        line.clear();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "connection closed early");
+        let j = hass::util::json::parse(line.trim()).unwrap();
+        if j.str_at("delta").is_none() {
+            break j;
+        }
+    };
+    let err = fin.str_at("error").expect("cancelled job must report an error");
+    assert!(err.contains("cancel"), "unexpected error: {err}");
+    assert_eq!(fin.get("done").and_then(|v| v.as_bool()), Some(true));
+
+    // the worker survives: a fresh request on the same connection succeeds
+    w.write_all(b"{\"prompt\": \"after\", \"method\": \"mock\", \"max_tokens\": 3}\n").unwrap();
+    let after = loop {
+        line.clear();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "connection closed early");
+        let j = hass::util::json::parse(line.trim()).unwrap();
+        if j.str_at("delta").is_none() {
+            break j;
+        }
+    };
+    assert!(after.get("error").is_none(), "follow-up failed: {after:?}");
+    assert_eq!(after.usize_at("tokens"), Some(3));
     sched.shutdown();
 }
