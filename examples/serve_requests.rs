@@ -12,8 +12,11 @@
 //! ```
 //!
 //! `--max-active` sets how many jobs each engine worker interleaves
-//! round-robin (cycle-granular continuous batching); the run ends with a
-//! streamed request that counts per-cycle delta lines.
+//! (cycle-granular continuous batching with fused cross-session
+//! verification); the run ends with a streamed request that counts
+//! per-cycle delta lines, followed by a fused-vs-solo verification
+//! comparison (one worker, `--max-active 1` vs `4`, same jobs) whose
+//! numbers are written to `BENCH_fused_verify.json`.
 
 use std::sync::Arc;
 
@@ -151,5 +154,128 @@ fn main() -> anyhow::Result<()> {
     for line in summary {
         println!("{line}");
     }
+
+    fused_verify_bench(&dir, &wl, &method, n_requests)?;
+    Ok(())
+}
+
+/// Fused-vs-solo verification comparison: the same jobs through one
+/// worker at `--max-active 1` (every session verifies alone) and
+/// `--max-active 4` (co-active sessions share fused target forwards).
+/// Results go to stdout and `BENCH_fused_verify.json`.
+fn fused_verify_bench(
+    dir: &std::path::Path,
+    wl: &Workloads,
+    method: &str,
+    n_requests: usize,
+) -> anyhow::Result<()> {
+    use hass::scheduler::{Job, Scheduler};
+    use hass::util::json::Json;
+
+    // preflight: without an executable backend, fall back to the
+    // runtime-free mock so the comparison still demonstrates the path
+    let method = {
+        let probe = Scheduler::start(dir.to_path_buf(), MethodCfg::default(), 4, 1, 1);
+        let job = Job {
+            id: 1,
+            method: method.to_string(),
+            prompt: "probe".into(),
+            max_new: 2,
+            temperature: 0.0,
+            seed: 0,
+            stream: false,
+            deadline_ms: None,
+        };
+        let rx = probe.submit(job, true)?;
+        let ok = loop {
+            match rx.recv() {
+                Ok(ev) => {
+                    if let Some(r) = ev.into_result() {
+                        break r.error.is_none();
+                    }
+                }
+                Err(_) => break false,
+            }
+        };
+        probe.shutdown();
+        if ok {
+            method.to_string()
+        } else {
+            println!("\n(fused-verify bench: '{method}' unavailable, using 'mock')");
+            "mock".to_string()
+        }
+    };
+
+    let trace: Vec<(String, String, usize)> = wl
+        .trace_split(n_requests.max(8), 321, 1)
+        .into_iter()
+        .flatten()
+        .collect();
+    println!("\n== fused-vs-solo verification ({} jobs, method '{method}') ==", trace.len());
+    let mut report: Vec<(&str, Json)> = Vec::new();
+    let mut tok_per_s = [0.0f64; 2];
+    for (pass, &(label, max_active)) in [("solo", 1usize), ("fused", 4usize)].iter().enumerate() {
+        let sched = Scheduler::start(dir.to_path_buf(), MethodCfg::default(), 64, 1, max_active);
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let t0 = std::time::Instant::now();
+        for (i, (_suite, prompt, max_new)) in trace.iter().enumerate() {
+            let job = Job {
+                id: i as u64 + 1,
+                method: method.clone(),
+                prompt: prompt.clone(),
+                max_new: *max_new,
+                temperature: 0.0,
+                seed: i as u64,
+                stream: false,
+                deadline_ms: None,
+            };
+            sched.submit_to(job, true, rtx.clone())?;
+        }
+        drop(rtx);
+        let mut tokens = 0usize;
+        let mut errors = 0usize;
+        for r in rrx.iter().filter_map(hass::scheduler::JobEvent::into_result) {
+            match r.error {
+                Some(_) => errors += 1,
+                None => tokens += r.tokens,
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = sched.stats();
+        sched.shutdown();
+        tok_per_s[pass] = if wall > 0.0 { tokens as f64 / wall } else { 0.0 };
+        println!(
+            "  {label:<5} (max-active {max_active}): {tokens} tokens in {wall:.2}s \
+             ({:.1} tok/s)  verify_calls={} fused={} solo={} mean_rows_per_fused={:.1} errors={errors}",
+            tok_per_s[pass],
+            stats.verify_calls(),
+            stats.fused_calls(),
+            stats.solo_calls(),
+            stats.mean_fused_rows(),
+        );
+        report.push((
+            label,
+            Json::obj(vec![
+                ("max_active", Json::num(max_active as f64)),
+                ("jobs", Json::num(trace.len() as f64)),
+                ("errors", Json::num(errors as f64)),
+                ("tokens", Json::num(tokens as f64)),
+                ("wall_s", Json::num(wall)),
+                ("tok_per_s", Json::num(tok_per_s[pass])),
+                ("verify_calls", Json::num(stats.verify_calls() as f64)),
+                ("fused_calls", Json::num(stats.fused_calls() as f64)),
+                ("solo_calls", Json::num(stats.solo_calls() as f64)),
+                ("mean_fused_rows", Json::num(stats.mean_fused_rows())),
+            ]),
+        ));
+    }
+    let speedup = if tok_per_s[0] > 0.0 { tok_per_s[1] / tok_per_s[0] } else { 0.0 };
+    println!("  fused/solo throughput: {speedup:.2}x");
+    let mut kv = vec![("method", Json::str(method))];
+    kv.extend(report);
+    kv.push(("fused_over_solo_tok_per_s", Json::num(speedup)));
+    let out = Json::obj(kv).to_string();
+    std::fs::write("BENCH_fused_verify.json", &out)?;
+    println!("  wrote BENCH_fused_verify.json");
     Ok(())
 }

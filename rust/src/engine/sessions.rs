@@ -10,17 +10,55 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
-use crate::kvcache::KvCache;
+use crate::kvcache::{KvCache, PackedLayout};
 use crate::runtime::{scalar_i32, Checkpoint, Runtime, TensorF, TensorI};
+use crate::spec::VerifyRows;
+
+/// Compiled decode-block widths, ascending (see `python/compile/aot.py`).
+pub const BLOCK_WIDTHS: &[usize] = &[1, 8, 64, 128];
+
+/// Largest compiled decode-block width.
+pub const MAX_BLOCK: usize = 128;
 
 /// Pick the smallest compiled decode-block width that fits `n` rows.
-pub fn pick_block(n: usize) -> Result<usize> {
-    for cand in [1usize, 8, 64, 128] {
+/// Row sets beyond the largest artifact are CHUNKED by the caller (see
+/// [`plan_chunks`]), so this clamps to [`MAX_BLOCK`] instead of failing —
+/// a wide tree + long γ must degrade to extra calls, not kill the job.
+pub fn pick_block(n: usize) -> usize {
+    for &cand in BLOCK_WIDTHS {
         if n <= cand {
-            return Ok(cand);
+            return cand;
         }
     }
-    bail!("verification block of {n} rows exceeds the largest artifact (128)")
+    MAX_BLOCK
+}
+
+/// Split an oversized row set into chunk sizes, each fitting a compiled
+/// width (all but the last are `MAX_BLOCK`).
+pub fn plan_chunks(n: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(n / MAX_BLOCK + 1);
+    let mut left = n;
+    while left > MAX_BLOCK {
+        out.push(MAX_BLOCK);
+        left -= MAX_BLOCK;
+    }
+    out.push(left);
+    out
+}
+
+/// Cache slots a (possibly chunked) decode of `n` rows actually consumes:
+/// every chunk is padded to a compiled width, so this is what capacity
+/// checks must compare against `remaining()` — comparing against `n`
+/// alone lets a session reach a boundary where the padded call no longer
+/// fits and errors instead of finishing gracefully.
+pub fn padded_span(n: usize) -> usize {
+    if n <= MAX_BLOCK {
+        return pick_block(n);
+    }
+    match n % MAX_BLOCK {
+        0 => n,
+        rem => (n / MAX_BLOCK) * MAX_BLOCK + pick_block(rem),
+    }
 }
 
 fn call(
@@ -114,6 +152,13 @@ impl TargetSession {
     /// mask (None = chain).  Returns per-row logits + features; KV rows are
     /// written at the committed boundary (commit/compact is the caller's
     /// decision).
+    ///
+    /// Row sets wider than the largest compiled artifact are chunked into
+    /// several calls: chunk c's rows are written at `committed + c *
+    /// MAX_BLOCK`, and since block row b always lands at slot `committed +
+    /// b`, later chunks see earlier chunks' rows through the same
+    /// row→slot mapping — the concatenated outputs are exactly those of a
+    /// hypothetical single wide call.
     pub fn decode(
         &mut self,
         tokens: &[i32],
@@ -121,9 +166,49 @@ impl TargetSession {
         block_anc: Option<&[Vec<bool>]>,
     ) -> Result<DecodeOut> {
         let n = tokens.len();
-        let nb = pick_block(n)?;
-        if self.cache.committed + nb > self.slots {
-            bail!("target cache exhausted ({} + {nb} > {})", self.cache.committed, self.slots);
+        if n <= MAX_BLOCK {
+            return self.decode_at(tokens, positions, block_anc, 0);
+        }
+        let mut logits = Vec::with_capacity(n * self.vocab);
+        let mut feats = Vec::new();
+        let mut feat_w = 1usize;
+        let mut off = 0usize;
+        for take in plan_chunks(n) {
+            let out = self.decode_at(
+                &tokens[off..off + take],
+                &positions[off..off + take],
+                block_anc,
+                off,
+            )?;
+            for r in 0..take {
+                logits.extend_from_slice(out.logits.row(r));
+                feats.extend_from_slice(out.feats.row(r));
+            }
+            feat_w = out.feats.dims[1];
+            off += take;
+        }
+        Ok(DecodeOut {
+            logits: TensorF::new(vec![n, self.vocab], logits)?,
+            feats: TensorF::new(vec![n, feat_w], feats)?,
+        })
+    }
+
+    /// One compiled decode call over `tokens` (≤ MAX_BLOCK rows), written
+    /// at `committed + base`.  `block_anc` rows are indexed by ABSOLUTE
+    /// block row (this chunk's row i is block row `base + i`), so a
+    /// chunked tree mask can reference earlier chunks' rows.
+    fn decode_at(
+        &mut self,
+        tokens: &[i32],
+        positions: &[usize],
+        block_anc: Option<&[Vec<bool>]>,
+        base: usize,
+    ) -> Result<DecodeOut> {
+        let n = tokens.len();
+        let nb = pick_block(n);
+        let c = self.cache.committed;
+        if c + base + nb > self.slots {
+            bail!("target cache exhausted ({c} + {base} + {nb} > {})", self.slots);
         }
         // pad rows to the block width
         let mut tok = vec![0i32; nb];
@@ -132,27 +217,33 @@ impl TargetSession {
         for (i, &p) in positions.iter().enumerate() {
             pos[i] = p as i32;
         }
-        // pad ancestor mask with all-false rows (padding rows see nothing)
-        let mask = match block_anc {
-            Some(anc) => {
-                let mut padded: Vec<Vec<bool>> = anc.to_vec();
-                for row in padded.iter_mut() {
-                    row.resize(nb, false);
-                }
-                padded.resize(nb, vec![false; nb]);
-                self.cache.block_mask(nb, Some(&padded))
+        // visibility: committed prefix + in-block ancestors at slot
+        // `committed + block_row`; padding rows see nothing (the masked
+        // attention returns zeros for them, and their KV is never read)
+        let mut mask = vec![0i32; nb * self.slots];
+        for i in 0..n {
+            let a = base + i;
+            let off = i * self.slots;
+            for s in 0..c {
+                mask[off + s] = 1;
             }
-            None => {
-                let mut m = self.cache.block_mask(nb, None);
-                // zero out padding rows entirely
-                for row in n..nb {
-                    for s in 0..self.slots {
-                        m.data[row * self.slots + s] = 0;
+            match block_anc {
+                Some(anc) => {
+                    // valid ancestor masks only reference earlier rows
+                    // (BFS order), so b <= a keeps every slot in range
+                    for (b, &vis) in anc[a].iter().enumerate().take(a + 1) {
+                        if vis {
+                            mask[off + c + b] = 1;
+                        }
                     }
                 }
-                m
+                None => {
+                    for b in 0..=a {
+                        mask[off + c + b] = 1;
+                    }
+                }
             }
-        };
+        }
         let graph = format!("target_decode_n{nb}");
         let out = call(
             &self.rt,
@@ -166,12 +257,13 @@ impl TargetSession {
                 crate::runtime::tensor::f32_literal(
                     &[self.cache.layers, self.cache.slots, self.cache.heads, self.cache.head_dim],
                     &self.cache.v)?,
-                scalar_i32(self.cache.committed as i32),
+                scalar_i32((c + base) as i32),
                 TensorI::new(vec![nb], tok)?.to_literal()?,
                 TensorI::new(vec![nb], pos)?.to_literal()?,
-                mask.to_literal()?,
+                TensorI { dims: vec![nb, self.slots], data: mask }.to_literal()?,
             ],
         )?;
+        self.rt.record_rows(&graph, n);
         let logits = tensor_out(&out, 0)?;
         let feats = tensor_out(&out, 1)?;
         self.cache.absorb(tensor_out(&out, 2)?, tensor_out(&out, 3)?)?;
@@ -187,6 +279,119 @@ impl TargetSession {
         }
         Ok(())
     }
+}
+
+// ---------------------------------------------------------------------------
+// fused cross-session verification
+// ---------------------------------------------------------------------------
+
+/// One fused target forward over several sessions' verification blocks.
+///
+/// Packs every member's committed KV prefix and candidate rows into one
+/// synthetic cache (layout: [`PackedLayout`]) and runs a SINGLE compiled
+/// decode-block call with a block-diagonal visibility mask — the graph is
+/// purely mask-driven (positions feed only the positional embedding, the
+/// write pointer is an input scalar), so relocating each member's prefix
+/// to a packed offset is exact.  Afterwards the per-row logits/features
+/// are scattered back per member, and each member's freshly written KV
+/// rows are copied into its own cache at its own committed boundary —
+/// leaving every session byte-identical to having run its solo `decode`.
+///
+/// All members must share one runtime (same worker thread), one target
+/// checkpoint, and one cache geometry; the caller is responsible for
+/// grouping by capacity (`Σ prefixes + pick_block(Σ rows) <= slots`,
+/// `Σ rows <= MAX_BLOCK`).
+pub fn fused_decode(batch: &mut [(&mut TargetSession, &VerifyRows)]) -> Result<Vec<DecodeOut>> {
+    if batch.is_empty() {
+        bail!("empty fused batch");
+    }
+    let rows_total: usize = batch.iter().map(|(_, r)| r.len()).sum();
+    if rows_total > MAX_BLOCK {
+        bail!("fused batch of {rows_total} rows exceeds the largest artifact ({MAX_BLOCK})");
+    }
+    let nb = pick_block(rows_total);
+    let (layers, slots, heads, hd) = {
+        let c = &batch[0].0.cache;
+        (c.layers, c.slots, c.heads, c.head_dim)
+    };
+    for (t, _) in batch.iter() {
+        if !Rc::ptr_eq(&t.weights, &batch[0].0.weights) {
+            bail!("fused members must share one target checkpoint");
+        }
+        if t.cache.layers != layers
+            || t.cache.slots != slots
+            || t.cache.heads != heads
+            || t.cache.head_dim != hd
+        {
+            bail!("fused members must share one cache geometry");
+        }
+    }
+    let prefix_lens: Vec<usize> = batch.iter().map(|(t, _)| t.cache.committed).collect();
+    let row_lens: Vec<usize> = batch.iter().map(|(_, r)| r.len()).collect();
+    let layout = PackedLayout::plan(&prefix_lens, &row_lens, slots, nb)?;
+
+    // ---- pack: prefixes, rows, positions, block-diagonal mask ----
+    let mut fused = KvCache::new(layers, slots, heads, hd);
+    for (j, (t, _)) in batch.iter().enumerate() {
+        fused.copy_slots_from(&t.cache, 0, layout.prefix_start[j], t.cache.committed)?;
+    }
+    let mut tok = vec![0i32; nb];
+    let mut pos = vec![0i32; nb];
+    for (j, (_, r)) in batch.iter().enumerate() {
+        let off = layout.row_off[j];
+        for i in 0..r.len() {
+            tok[off + i] = r.tokens[i];
+            pos[off + i] = r.positions[i] as i32;
+        }
+    }
+    let ancs: Vec<Option<&[Vec<bool>]>> =
+        batch.iter().map(|(_, r)| r.block_anc.as_deref()).collect();
+    let mask = layout.mask(nb, &ancs);
+
+    // ---- one graph call for every member ----
+    let rt = &batch[0].0.rt;
+    let graph = format!("target_decode_n{nb}");
+    let out = call(
+        rt,
+        &graph,
+        &batch[0].0.weights.literals,
+        &[],
+        &[
+            crate::runtime::tensor::f32_literal(&[layers, slots, heads, hd], &fused.k)?,
+            crate::runtime::tensor::f32_literal(&[layers, slots, heads, hd], &fused.v)?,
+            scalar_i32(layout.base as i32),
+            TensorI::new(vec![nb], tok)?.to_literal()?,
+            TensorI::new(vec![nb], pos)?.to_literal()?,
+            mask.to_literal()?,
+        ],
+    )?;
+    rt.record_rows(&graph, rows_total);
+    let logits = tensor_out(&out, 0)?;
+    let feats = tensor_out(&out, 1)?;
+    let new_k = tensor_out(&out, 2)?;
+    let new_v = tensor_out(&out, 3)?;
+
+    // ---- scatter: per-member outputs + KV rows ----
+    let vocab = logits.dims[1];
+    let d = feats.dims[1];
+    let mut outs = Vec::with_capacity(batch.len());
+    for (j, (t, r)) in batch.iter_mut().enumerate() {
+        let off = layout.row_off[j];
+        let n_j = r.len();
+        let mut lj = Vec::with_capacity(n_j * vocab);
+        let mut fj = Vec::with_capacity(n_j * d);
+        for i in 0..n_j {
+            lj.extend_from_slice(logits.row(off + i));
+            fj.extend_from_slice(feats.row(off + i));
+        }
+        let dst = t.cache.committed;
+        t.cache.write_rows_from(&new_k, &new_v, layout.base + off, dst, n_j)?;
+        outs.push(DecodeOut {
+            logits: TensorF::new(vec![n_j, vocab], lj)?,
+            feats: TensorF::new(vec![n_j, d], fj)?,
+        });
+    }
+    Ok(outs)
 }
 
 // ---------------------------------------------------------------------------
@@ -341,6 +546,7 @@ impl DraftSession {
         args.push(kv_v);
         args.extend(inputs.iter());
         let mut out = self.rt.call("draft_decode_b10", &args)?;
+        self.rt.record_rows("draft_decode_b10", n);
         let logits = tensor_out(&out, 0)?;
         let g = tensor_out(&out, 1)?;
         self.kv_v = Some(out.swap_remove(3));
@@ -413,6 +619,7 @@ impl SpsSession {
                 mask.to_literal()?,
             ],
         )?;
+        self.rt.record_rows("sps_decode_n1", 1);
         let logits = tensor_out(&out, 0)?;
         self.cache.absorb(tensor_out(&out, 2)?, tensor_out(&out, 3)?)?;
         self.cache.commit(1)?;
@@ -472,16 +679,51 @@ impl MedusaHeads {
 
 #[cfg(test)]
 mod tests {
-    use super::pick_block;
+    use super::{padded_span, pick_block, plan_chunks, MAX_BLOCK};
 
     #[test]
     fn pick_block_choices() {
-        assert_eq!(pick_block(1).unwrap(), 1);
-        assert_eq!(pick_block(2).unwrap(), 8);
-        assert_eq!(pick_block(8).unwrap(), 8);
-        assert_eq!(pick_block(9).unwrap(), 64);
-        assert_eq!(pick_block(61).unwrap(), 64);
-        assert_eq!(pick_block(101).unwrap(), 128);
-        assert!(pick_block(129).is_err());
+        assert_eq!(pick_block(1), 1);
+        assert_eq!(pick_block(2), 8);
+        assert_eq!(pick_block(8), 8);
+        assert_eq!(pick_block(9), 64);
+        assert_eq!(pick_block(61), 64);
+        assert_eq!(pick_block(101), 128);
+        // satellite: oversized row sets clamp (and get chunked) instead
+        // of erroring out of the whole job
+        assert_eq!(pick_block(129), MAX_BLOCK);
+        assert_eq!(pick_block(1000), MAX_BLOCK);
+    }
+
+    #[test]
+    fn padded_span_matches_chunked_writes() {
+        assert_eq!(padded_span(1), 1);
+        assert_eq!(padded_span(5), 8);
+        assert_eq!(padded_span(61), 64);
+        assert_eq!(padded_span(128), 128);
+        assert_eq!(padded_span(129), 129); // 128 + pick_block(1)
+        assert_eq!(padded_span(200), 256); // 128 + pick_block(72) = 128 + 128
+        assert_eq!(padded_span(256), 256);
+        // the span covers every chunk's padded width
+        for n in [1usize, 7, 64, 100, 128, 129, 200, 300] {
+            let mut base = 0usize;
+            for take in plan_chunks(n) {
+                base += if take == MAX_BLOCK { MAX_BLOCK } else { pick_block(take) };
+            }
+            assert_eq!(padded_span(n), base, "n={n}");
+        }
+    }
+
+    #[test]
+    fn plan_chunks_covers_all_rows() {
+        assert_eq!(plan_chunks(1), vec![1]);
+        assert_eq!(plan_chunks(128), vec![128]);
+        assert_eq!(plan_chunks(129), vec![128, 1]);
+        assert_eq!(plan_chunks(300), vec![128, 128, 44]);
+        for n in [1usize, 64, 128, 129, 256, 257, 999] {
+            let chunks = plan_chunks(n);
+            assert_eq!(chunks.iter().sum::<usize>(), n);
+            assert!(chunks.iter().all(|&c| c >= 1 && c <= MAX_BLOCK));
+        }
     }
 }

@@ -136,6 +136,70 @@ impl KvCache {
         // buffers need no clearing: masks hide stale rows
     }
 
+    /// Copy `n` slot rows (every layer) from `src` starting at
+    /// `src_start` into this cache at `dst_start` — the gather half of
+    /// packing several sessions' committed prefixes into one fused cache.
+    pub fn copy_slots_from(
+        &mut self,
+        src: &KvCache,
+        src_start: usize,
+        dst_start: usize,
+        n: usize,
+    ) -> Result<()> {
+        if self.layers != src.layers || self.row_size() != src.row_size() {
+            bail!("kv cache geometry mismatch");
+        }
+        if src_start + n > src.slots || dst_start + n > self.slots {
+            bail!(
+                "kv slot copy out of range: {src_start}+{n} > {} or {dst_start}+{n} > {}",
+                src.slots,
+                self.slots
+            );
+        }
+        let rs = self.row_size();
+        for l in 0..self.layers {
+            let s0 = l * src.layer_stride() + src_start * rs;
+            let d0 = l * self.layer_stride() + dst_start * rs;
+            self.k[d0..d0 + n * rs].copy_from_slice(&src.k[s0..s0 + n * rs]);
+            self.v[d0..d0 + n * rs].copy_from_slice(&src.v[s0..s0 + n * rs]);
+        }
+        Ok(())
+    }
+
+    /// Copy `n` slot rows (every layer) from graph-output `[L,S,H,hd]`
+    /// tensors into this cache — the scatter half of a fused call: the
+    /// rows a fused decode wrote at `src` land at `dst`, exactly where a
+    /// solo decode would have written them.
+    pub fn write_rows_from(
+        &mut self,
+        k: &TensorF,
+        v: &TensorF,
+        src: usize,
+        dst: usize,
+        n: usize,
+    ) -> Result<()> {
+        let rs = self.row_size();
+        let expect = self.layers * self.slots * rs;
+        if k.data.len() != expect || v.data.len() != expect {
+            bail!(
+                "kv scatter size mismatch: got {}/{}, want {expect}",
+                k.data.len(),
+                v.data.len()
+            );
+        }
+        if src + n > self.slots || dst + n > self.slots {
+            bail!("kv scatter out of range: {src}+{n} / {dst}+{n} > {}", self.slots);
+        }
+        for l in 0..self.layers {
+            let ls = l * self.layer_stride();
+            let s0 = ls + src * rs;
+            let d0 = ls + dst * rs;
+            self.k[d0..d0 + n * rs].copy_from_slice(&k.data[s0..s0 + n * rs]);
+            self.v[d0..d0 + n * rs].copy_from_slice(&v.data[s0..s0 + n * rs]);
+        }
+        Ok(())
+    }
+
     /// Visibility mask rows for a decode block: row n sees all committed
     /// slots, plus (optionally) block ancestors at `base + ancestor_row`,
     /// plus its own slot `base + n`.
@@ -168,6 +232,114 @@ impl KvCache {
             }
         }
         TensorI { dims: vec![n, self.slots], data }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fused-verification packing
+// ---------------------------------------------------------------------------
+
+/// Row-offset bookkeeping for several sessions' segments packed into one
+/// fused decode block.
+///
+/// Layout of the synthetic cache: every member's committed prefix first
+/// (member j's prefix occupies fused slots `[prefix_start[j],
+/// prefix_start[j] + prefix_len[j])`), then all members' candidate rows
+/// contiguously above the packed prefixes — member j's block row i is
+/// fused block row `row_off[j] + i`, written at fused slot `base +
+/// row_off[j] + i` (the graph's write pointer is `base`, the fused
+/// `committed`).  Visibility is block-diagonal: a row sees only its own
+/// member's prefix and its own member's in-block ancestors.
+#[derive(Clone, Debug)]
+pub struct PackedLayout {
+    pub slots: usize,
+    /// fused slot where member j's committed prefix starts
+    pub prefix_start: Vec<usize>,
+    /// member j's committed prefix length
+    pub prefix_len: Vec<usize>,
+    /// member j's first block row (row `i` of member j = `row_off[j] + i`)
+    pub row_off: Vec<usize>,
+    /// member j's candidate row count
+    pub rows: Vec<usize>,
+    /// total packed prefix == fused committed == block write base
+    pub base: usize,
+    /// total candidate rows across members
+    pub n_rows: usize,
+}
+
+impl PackedLayout {
+    /// Plan the packing of `prefix_lens[j]` committed slots + `rows[j]`
+    /// candidate rows per member into a `slots`-slot cache, padding the
+    /// block to the compiled `width`.  Fails when the pack cannot fit.
+    pub fn plan(
+        prefix_lens: &[usize],
+        rows: &[usize],
+        slots: usize,
+        width: usize,
+    ) -> Result<PackedLayout> {
+        if prefix_lens.len() != rows.len() || prefix_lens.is_empty() {
+            bail!("packed layout needs matching, non-empty member lists");
+        }
+        let base: usize = prefix_lens.iter().sum();
+        let n_rows: usize = rows.iter().sum();
+        if n_rows > width {
+            bail!("packed rows {n_rows} exceed block width {width}");
+        }
+        if base + width > slots {
+            bail!(
+                "packed segments do not fit: {base} prefix + {width} block > {slots} slots"
+            );
+        }
+        let mut prefix_start = Vec::with_capacity(prefix_lens.len());
+        let mut row_off = Vec::with_capacity(rows.len());
+        let (mut p, mut r) = (0usize, 0usize);
+        for j in 0..prefix_lens.len() {
+            prefix_start.push(p);
+            p += prefix_lens[j];
+            row_off.push(r);
+            r += rows[j];
+        }
+        Ok(PackedLayout {
+            slots,
+            prefix_start,
+            prefix_len: prefix_lens.to_vec(),
+            row_off,
+            rows: rows.to_vec(),
+            base,
+            n_rows,
+        })
+    }
+
+    /// Compose the fused visibility mask `[width, slots]`: member j's row
+    /// i sees member j's committed prefix plus its in-block ancestors per
+    /// `ancs[j]` (`None` = chain semantics, rows 0..=i of member j).
+    /// Padding rows (`n_rows..width`) see nothing.
+    pub fn mask(&self, width: usize, ancs: &[Option<&[Vec<bool>]>]) -> TensorI {
+        let mut data = vec![0i32; width * self.slots];
+        for j in 0..self.rows.len() {
+            for i in 0..self.rows[j] {
+                let off = (self.row_off[j] + i) * self.slots;
+                for s in self.prefix_start[j]..self.prefix_start[j] + self.prefix_len[j] {
+                    data[off + s] = 1;
+                }
+                let block0 = self.base + self.row_off[j];
+                match ancs.get(j).copied().flatten() {
+                    Some(anc) => {
+                        for b in 0..self.rows[j] {
+                            if anc[i][b] {
+                                data[off + block0 + b] = 1;
+                            }
+                        }
+                    }
+                    None => {
+                        for b in 0..=i {
+                            data[off + block0 + b] = 1;
+                        }
+                    }
+                }
+            }
+        }
+        TensorI { dims: vec![width, self.slots], data }
     }
 }
 
@@ -262,6 +434,95 @@ mod tests {
         ];
         let m = c.block_mask(3, Some(&anc));
         assert_eq!(&m.data[16..24], &[1, 1, 1, 0, 1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn copy_slots_then_scatter_roundtrip() {
+        let src = filled(2, 16);
+        let mut fused = KvCache::new(2, 16, 2, 4);
+        // gather src slots [3, 7) into fused slots [5, 9)
+        fused.copy_slots_from(&src, 3, 5, 4).unwrap();
+        let rs = src.row_size();
+        let l1 = 16 * rs;
+        assert_eq!(&fused.k[5 * rs..6 * rs], &src.k[3 * rs..4 * rs]);
+        assert_eq!(&fused.k[l1 + 8 * rs..l1 + 9 * rs], &src.k[l1 + 6 * rs..l1 + 7 * rs]);
+        assert_eq!(&fused.v[5 * rs..6 * rs], &src.v[3 * rs..4 * rs]);
+        // scatter fused rows [5, 7) back into a fresh cache at [0, 2)
+        let mut dst = KvCache::new(2, 16, 2, 4);
+        dst.write_rows_from(&fused.k_tensor(), &fused.v_tensor(), 5, 0, 2).unwrap();
+        assert_eq!(&dst.k[0..2 * rs], &src.k[3 * rs..5 * rs]);
+        assert_eq!(&dst.k[l1..l1 + rs], &src.k[l1 + 3 * rs..l1 + 4 * rs]);
+        // bounds are enforced
+        assert!(dst.write_rows_from(&fused.k_tensor(), &fused.v_tensor(), 15, 0, 2).is_err());
+        let other = KvCache::new(1, 16, 2, 4);
+        assert!(fused.copy_slots_from(&other, 0, 0, 1).is_err(), "geometry must match");
+    }
+
+    /// A single-member pack must reproduce the solo `block_mask` exactly
+    /// (same prefix visibility, same in-block ancestors).
+    #[test]
+    fn packed_mask_single_member_matches_block_mask() {
+        let mut c = KvCache::new(1, 32, 2, 4);
+        c.committed = 5;
+        let anc = vec![
+            vec![true, false, false],
+            vec![true, true, false],
+            vec![true, false, true],
+        ];
+        let solo = c.block_mask(3, Some(&anc));
+        let layout = PackedLayout::plan(&[5], &[3], 32, 3).unwrap();
+        let fused = layout.mask(3, &[Some(&anc[..])]);
+        assert_eq!(solo.data, fused.data);
+        // chain semantics too
+        let solo = c.block_mask(3, None);
+        let fused = layout.mask(3, &[None]);
+        assert_eq!(solo.data, fused.data);
+    }
+
+    /// Two members packed block-diagonally: no row may see the other
+    /// member's prefix or rows, and each member's visibility matches its
+    /// own solo mask shifted to its segment offsets.
+    #[test]
+    fn packed_mask_is_block_diagonal() {
+        let slots = 64;
+        let anc1 = vec![vec![true, false], vec![true, true]];
+        let layout = PackedLayout::plan(&[4, 6], &[2, 3], slots, 8).unwrap();
+        assert_eq!(layout.prefix_start, vec![0, 4]);
+        assert_eq!(layout.row_off, vec![0, 2]);
+        assert_eq!(layout.base, 10);
+        let m = layout.mask(8, &[Some(&anc1[..]), None]);
+        assert_eq!(m.dims, vec![8, slots]);
+        let row = |r: usize| &m.data[r * slots..(r + 1) * slots];
+        // member 0, row 1: own prefix [0,4) + block rows {0,1} at base 10
+        let r = row(1);
+        for s in 0..4 {
+            assert_eq!(r[s], 1, "own prefix slot {s}");
+        }
+        for s in 4..10 {
+            assert_eq!(r[s], 0, "member 1 prefix must be invisible at {s}");
+        }
+        assert_eq!(&r[10..15], &[1, 1, 0, 0, 0]);
+        // member 1, row 1 (fused row 3): prefix [4,10) + own chain rows
+        let r = row(3);
+        for s in 0..4 {
+            assert_eq!(r[s], 0, "member 0 prefix must be invisible at {s}");
+        }
+        for s in 4..10 {
+            assert_eq!(r[s], 1);
+        }
+        // member 1's block rows start at base + row_off = 12
+        assert_eq!(&r[10..16], &[0, 0, 1, 1, 0, 0]);
+        // padding rows see nothing
+        assert!(row(6).iter().all(|&x| x == 0));
+        assert!(row(7).iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn packed_layout_rejects_overflow() {
+        assert!(PackedLayout::plan(&[30, 30], &[4, 4], 64, 8).is_err(), "prefix + width > slots");
+        assert!(PackedLayout::plan(&[1, 1], &[5, 5], 64, 8).is_err(), "rows > width");
+        assert!(PackedLayout::plan(&[], &[], 64, 8).is_err());
+        assert!(PackedLayout::plan(&[1], &[1, 2], 64, 8).is_err());
     }
 
     #[test]

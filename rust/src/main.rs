@@ -126,7 +126,17 @@ fn run(args: &Args) -> Result<()> {
             let addr = args.get_or("addr", "127.0.0.1:7777");
             let mut c = hass::server::Client::connect(&addr)?;
             if args.has("stats") {
-                println!("{}", c.stats()?);
+                let stats = c.stats()?;
+                println!("{stats}");
+                // headline batch occupancy (fused cross-session verification)
+                if let Some(agg) = stats.get("stats").and_then(|s| s.get("aggregate")) {
+                    println!(
+                        "batch occupancy: fused={} solo={} mean_rows_per_fused={}",
+                        agg.usize_at("fused_calls").unwrap_or(0),
+                        agg.usize_at("solo_calls").unwrap_or(0),
+                        agg.f64_at("mean_fused_rows").unwrap_or(0.0),
+                    );
+                }
                 return Ok(());
             }
             let opts = hass::server::ReqOpts {
@@ -201,8 +211,10 @@ fn run(args: &Args) -> Result<()> {
                      r.metrics.phases.sample_s, r.metrics.phases.host_s);
             println!("\nper-graph call stats:");
             for (g, s) in rt.call_stats() {
-                println!("  {g:<22} calls={:>6}  total={:>8.3}s  mean={:>7.3}ms",
-                         s.calls, s.secs, s.secs / s.calls.max(1) as f64 * 1e3);
+                println!(
+                    "  {g:<22} calls={:>6}  rows/call={:>6.1}  total={:>8.3}s  mean={:>7.3}ms",
+                    s.calls, s.rows_per_call(), s.secs,
+                    s.secs / s.calls.max(1) as f64 * 1e3);
             }
             Ok(())
         }

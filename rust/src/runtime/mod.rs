@@ -27,6 +27,22 @@ pub use weights::Checkpoint;
 pub struct CallStats {
     pub calls: u64,
     pub secs: f64,
+    /// real (un-padded) rows covered by decode-block calls — callers
+    /// report them via [`Runtime::record_rows`]; `rows / calls` is the
+    /// graph's batch occupancy (fused cross-session verification packs
+    /// many sessions' rows into one call, so occupancy rises while
+    /// `calls` falls)
+    pub rows: u64,
+}
+
+impl CallStats {
+    /// Mean real rows per call (0 when the graph reports no rows).
+    pub fn rows_per_call(&self) -> f64 {
+        if self.calls == 0 {
+            return 0.0;
+        }
+        self.rows as f64 / self.calls as f64
+    }
 }
 
 pub struct Runtime {
@@ -146,6 +162,12 @@ impl Runtime {
             }
         }
         Ok(())
+    }
+
+    /// Attribute `rows` real (un-padded) block rows to `graph`'s stats —
+    /// decode callers report how much useful work each call carried.
+    pub fn record_rows(&self, graph: &str, rows: usize) {
+        self.stats.borrow_mut().entry(graph.to_string()).or_default().rows += rows as u64;
     }
 
     pub fn call_stats(&self) -> Vec<(String, CallStats)> {

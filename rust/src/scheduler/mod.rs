@@ -1,23 +1,34 @@
-//! Request scheduler: bounded FIFO queue + a pool of engine workers with
-//! cycle-granular continuous batching inside each worker.
+//! Request scheduler: least-loaded per-worker queues + a shared overflow
+//! queue feeding a pool of engine workers, each running cycle-granular
+//! continuous batching with FUSED cross-session verification.
 //!
 //! The PJRT client (and thus every session) is thread-pinned, so each of
 //! the N engine worker threads constructs its own `Runtime` and per-method
-//! instance pool locally and serves jobs off a shared work queue.
-//! Dispatch is work-stealing off one bounded `Receiver` behind a mutex: a
-//! worker holds the lock only while *waiting* for a message, never while
-//! running a job.  Producers (server connections, load generators) submit
-//! over the bounded channel — backpressure is the channel bound.
+//! instance pool locally.  **Dispatch is least-loaded**: `submit` enqueues
+//! onto the worker with the fewest (live sessions + queued jobs), so
+//! session-heavy jobs spread instead of piling onto the first worker to
+//! poll.  When the pool-wide backlog reaches `queue_cap`, submissions
+//! spill to the shared bounded channel, whose blocking `send` provides
+//! the backpressure (workers steal from it between cycles — the
+//! steal-from-shared fallback; at most ~2×`queue_cap` jobs sit unserved).
 //!
-//! **Continuous batching.**  `Method` is a resumable state machine
-//! (`start`/`step`, see `spec`), so a worker no longer runs one job to
-//! completion: it interleaves up to `max_active` live sessions
-//! round-robin, one drafting-verification cycle per turn, polling the
-//! queue between cycles.  A short job submitted behind a long one starts
-//! immediately and finishes first instead of waiting out the long job's
-//! tail (head-of-line blocking at job granularity becomes cycle
-//! granularity).  Each live session checks out its own `Method` instance
-//! (own KV caches) from a per-name free list, returned at completion.
+//! **Continuous batching + fused verification.**  `Method` is a resumable
+//! state machine split into a two-phase protocol (`plan`/`absorb`, see
+//! `spec`): each cycle the worker plans EVERY live session (drafting, tree
+//! expansion), packs all batchable sessions' candidate rows into as few
+//! compiled decode-block calls as capacity allows
+//! (`engine::sessions::fused_decode` — ONE target forward per cycle per
+//! worker in the common case), scatters the outputs, and absorbs each
+//! session independently.  Methods that cannot batch
+//! (`StepPlan::Unbatchable`: pld/lookahead) fall back to their solo
+//! `step` within the same cycle.  A short job submitted behind a long one
+//! still starts immediately and finishes first (cycle granularity), and
+//! each live session owns its `Method` instance (own KV caches) checked
+//! out of a per-name free list, returned at completion.  Sessions without
+//! a compiled target (`mock`) batch through their method's
+//! `HostVerifier`: rows from all such sessions go through one host batch
+//! call, exercising the identical pack/scatter choreography without
+//! artifacts.
 //!
 //! **Streaming / cancellation / deadlines.**  Results travel as
 //! [`JobEvent`]s on an *unbounded* channel (a worker must never block
@@ -34,32 +45,37 @@
 //!
 //! Observability: every worker maintains a [`WorkerStats`] slot (jobs
 //! served, tokens, busy/idle seconds, acceptance [`Metrics`] merged over
-//! its jobs — busy counts in-step CPU time, not interleaved wall time);
-//! [`Scheduler::stats`] snapshots them as a [`PoolStats`] aggregate, which
-//! the server exposes through the `{"stats": true}` JSON-lines request.
+//! its jobs — busy counts in-step CPU time, not interleaved wall time —
+//! plus batch occupancy: fused vs. solo verify call counts and the rows
+//! fused calls carried); [`Scheduler::stats`] snapshots them as a
+//! [`PoolStats`] aggregate, which the server exposes through the
+//! `{"stats": true}` JSON-lines request.
 //! [`Scheduler::shutdown`] is graceful: queued jobs drain (FIFO) before
 //! the per-worker stop markers are consumed — a worker that sees its
 //! marker finishes its live sessions, then exits.  `HASS_TEST_JOB_DELAY_MS`
 //! injects an artificial delay at job admission *and* after every step
 //! (test-only throttle for pool scheduling tests and queueing demos).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::PathBuf;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
 };
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 
 use anyhow::Result;
 
 use crate::engine::build_method;
 use crate::engine::metrics::Metrics;
+use crate::engine::sessions::{fused_decode, pick_block, TargetSession, MAX_BLOCK};
 use crate::runtime::Runtime;
 use crate::sampling::SampleParams;
-use crate::spec::{GenRequest, GenState, Method, MethodCfg};
+use crate::spec::{
+    GenRequest, GenState, HostVerifier, Method, MethodCfg, StepPlan, VerifyOut, VerifyRows,
+};
 use crate::tokenizer;
 use crate::util::stats::Stopwatch;
 
@@ -144,6 +160,12 @@ pub struct WorkerStats {
     pub busy_s: f64,
     /// seconds spent waiting for work
     pub idle_s: f64,
+    /// verify executions that fused >= 2 sessions into one call
+    pub fused_calls: u64,
+    /// single-session verify executions (lone planner, or fused fallback)
+    pub solo_calls: u64,
+    /// candidate rows covered by fused calls (occupancy numerator)
+    pub fused_rows: u64,
     /// acceptance metrics merged over every successful job
     pub metrics: Metrics,
 }
@@ -151,6 +173,14 @@ pub struct WorkerStats {
 impl WorkerStats {
     pub fn jobs(&self) -> u64 {
         self.jobs_ok + self.jobs_err
+    }
+
+    /// Mean sessions' rows per fused verify call.
+    pub fn mean_fused_rows(&self) -> f64 {
+        if self.fused_calls == 0 {
+            return 0.0;
+        }
+        self.fused_rows as f64 / self.fused_calls as f64
     }
 }
 
@@ -192,6 +222,86 @@ impl PoolStats {
     pub fn tau(&self) -> f64 {
         self.metrics().tau()
     }
+
+    pub fn fused_calls(&self) -> u64 {
+        self.workers.iter().map(|w| w.fused_calls).sum()
+    }
+
+    pub fn solo_calls(&self) -> u64 {
+        self.workers.iter().map(|w| w.solo_calls).sum()
+    }
+
+    pub fn fused_rows(&self) -> u64 {
+        self.workers.iter().map(|w| w.fused_rows).sum()
+    }
+
+    /// Pool-wide verify executions (each serves >= 1 session's cycle).
+    pub fn verify_calls(&self) -> u64 {
+        self.fused_calls() + self.solo_calls()
+    }
+
+    /// Pool-wide mean rows per fused verify call.
+    pub fn mean_fused_rows(&self) -> f64 {
+        let calls = self.fused_calls();
+        if calls == 0 {
+            return 0.0;
+        }
+        self.fused_rows() as f64 / calls as f64
+    }
+}
+
+/// One worker's direct-dispatch queue + its load gauge (queued jobs +
+/// live sessions), the least-loaded selection key.
+struct WorkerQueue {
+    q: Mutex<VecDeque<Msg>>,
+    cv: Condvar,
+    load: AtomicUsize,
+}
+
+impl WorkerQueue {
+    fn new() -> WorkerQueue {
+        WorkerQueue {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            load: AtomicUsize::new(0),
+        }
+    }
+
+    /// Enqueue a job for this worker (load counts it until admission).
+    fn push(&self, msg: Msg) {
+        self.q.lock().unwrap_or_else(|p| p.into_inner()).push_back(msg);
+        self.load.fetch_add(1, Ordering::Relaxed);
+        self.cv.notify_all();
+    }
+
+    fn pop(&self) -> Option<Msg> {
+        let m = self.q.lock().unwrap_or_else(|p| p.into_inner()).pop_front();
+        if m.is_some() {
+            self.load.fetch_sub(1, Ordering::Relaxed);
+        }
+        m
+    }
+
+    fn is_empty(&self) -> bool {
+        self.q.lock().unwrap_or_else(|p| p.into_inner()).is_empty()
+    }
+
+    /// Park until (maybe) more work exists.  Re-checks the private queue
+    /// under the same lock a `push` holds, so wakeups cannot be lost; the
+    /// timeout is a safety net for shared-queue traffic.
+    fn park(&self) {
+        let g = self.q.lock().unwrap_or_else(|p| p.into_inner());
+        if g.is_empty() {
+            let _ = self
+                .cv
+                .wait_timeout(g, std::time::Duration::from_millis(25))
+                .unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    fn notify(&self) {
+        self.cv.notify_all();
+    }
 }
 
 pub struct Scheduler {
@@ -199,6 +309,11 @@ pub struct Scheduler {
     /// stop markers are enqueued guarantees no job can land behind them
     /// (it would be dropped unserved and hang its client).
     tx: RwLock<Option<SyncSender<Msg>>>,
+    /// per-worker direct-dispatch queues (least-loaded routing)
+    queues: Vec<Arc<WorkerQueue>>,
+    /// pool-wide backlog bound before submissions spill to the shared
+    /// channel (whose own bound provides the blocking backpressure)
+    queue_cap: usize,
     workers: usize,
     max_active: usize,
     handles: Mutex<Vec<JoinHandle<()>>>,
@@ -235,11 +350,14 @@ impl Scheduler {
     ) -> Scheduler {
         let workers = workers.max(1);
         let max_active = max_active.max(1);
-        let (tx, rx) = sync_channel::<Msg>(queue_cap.max(1));
+        let queue_cap = queue_cap.max(1);
+        let (tx, rx) = sync_channel::<Msg>(queue_cap);
         let rx = Arc::new(Mutex::new(rx));
         let stats: Arc<Mutex<Vec<WorkerStats>>> = Arc::new(Mutex::new(
             (0..workers).map(|w| WorkerStats { worker: w, ..WorkerStats::default() }).collect(),
         ));
+        let queues: Vec<Arc<WorkerQueue>> =
+            (0..workers).map(|_| Arc::new(WorkerQueue::new())).collect();
         let queue_depth = Arc::new(AtomicUsize::new(0));
         let cancels: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
         let mut handles = Vec::with_capacity(workers);
@@ -247,6 +365,7 @@ impl Scheduler {
             let ctx = WorkerCtx {
                 id: w,
                 stats: stats.clone(),
+                queue: queues[w].clone(),
                 queue_depth: queue_depth.clone(),
                 cancels: cancels.clone(),
                 max_active,
@@ -264,6 +383,8 @@ impl Scheduler {
         }
         Scheduler {
             tx: RwLock::new(Some(tx)),
+            queues,
+            queue_cap,
             workers,
             max_active,
             handles: Mutex::new(handles),
@@ -292,6 +413,12 @@ impl Scheduler {
     /// Submit with a caller-supplied event channel.  One channel can
     /// collect many jobs (events carry the job id), which lets a server
     /// connection drain all its responses with a single pump thread.
+    ///
+    /// Dispatch is least-loaded: while the pool-wide backlog is under
+    /// `queue_cap`, the job goes straight onto the queue of the worker
+    /// with the fewest (live sessions + queued jobs).  Beyond that the
+    /// job spills to the shared bounded channel — `blocking` waits for
+    /// space there (backpressure), otherwise a full queue is an error.
     pub fn submit_to(&self, job: Job, blocking: bool, rtx: Sender<JobEvent>) -> Result<()> {
         // holding the read lock across the send excludes shutdown()'s
         // write-locked sender teardown, so an accepted job always sits
@@ -304,7 +431,11 @@ impl Scheduler {
         let msg = Msg::Run(job, Stopwatch::start(), rtx);
         // count before sending so the gauge never underflows when a worker
         // dequeues between the send and the increment
-        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+        let backlog = self.queue_depth.fetch_add(1, Ordering::Relaxed);
+        if backlog < self.queue_cap {
+            self.queues[self.least_loaded()].push(msg);
+            return Ok(());
+        }
         let sent = if blocking {
             tx.send(msg).map_err(|_| anyhow::anyhow!("scheduler down"))
         } else {
@@ -318,7 +449,27 @@ impl Scheduler {
             self.queue_depth.fetch_sub(1, Ordering::Relaxed);
             return Err(e);
         }
+        // shared-queue work: wake any parked worker to steal it
+        for q in &self.queues {
+            q.notify();
+        }
         Ok(())
+    }
+
+    /// Worker with the fewest queued jobs + live sessions (ties -> lowest
+    /// index).  The gauges are racy by design; dispatch just needs to
+    /// spread load, not be exact.
+    fn least_loaded(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_load = usize::MAX;
+        for (w, q) in self.queues.iter().enumerate() {
+            let load = q.load.load(Ordering::Relaxed);
+            if load < best_load {
+                best = w;
+                best_load = load;
+            }
+        }
+        best
     }
 
     /// Request cancellation of a job by id.  The job — queued or live —
@@ -337,15 +488,21 @@ impl Scheduler {
     }
 
     /// Graceful shutdown: submissions close first (the write lock waits
-    /// out in-flight submits), then the per-worker stop markers are
-    /// enqueued — the queue is FIFO, so every accepted job drains before
-    /// a worker stops — and all engine threads are joined.  Idempotent.
+    /// out in-flight submits), then the per-worker stop markers go onto
+    /// the SHARED queue — it is FIFO and jobs only ever precede markers
+    /// there, so every spilled job drains before a worker stops, and a
+    /// worker that takes its marker keeps serving its own direct queue
+    /// until empty.  All engine threads are then joined.  Idempotent.
     pub fn shutdown(&self) {
         let tx = self.tx.write().unwrap_or_else(|p| p.into_inner()).take();
         if let Some(tx) = tx {
             for _ in 0..self.workers {
                 let _ = tx.send(Msg::Shutdown);
             }
+        }
+        // wake parked workers so they steal their markers
+        for q in &self.queues {
+            q.notify();
         }
         let mut handles = self.handles.lock().unwrap_or_else(|p| p.into_inner());
         for h in handles.drain(..) {
@@ -363,9 +520,11 @@ impl Drop for Scheduler {
 struct WorkerCtx {
     id: usize,
     stats: Arc<Mutex<Vec<WorkerStats>>>,
+    /// this worker's direct-dispatch queue (+ load gauge)
+    queue: Arc<WorkerQueue>,
     queue_depth: Arc<AtomicUsize>,
     cancels: Arc<Mutex<HashSet<u64>>>,
-    /// sessions this worker interleaves round-robin
+    /// sessions this worker interleaves per fused cycle
     max_active: usize,
     /// artificial admission + per-step delay (test throttle; module docs)
     test_delay_ms: Option<u64>,
@@ -375,6 +534,17 @@ impl WorkerCtx {
     fn add_idle(&self, idle_s: f64) {
         let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
         stats[self.id].idle_s += idle_s;
+    }
+
+    fn note_fused(&self, rows: usize) {
+        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
+        stats[self.id].fused_calls += 1;
+        stats[self.id].fused_rows += rows as u64;
+    }
+
+    fn note_solo(&self) {
+        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
+        stats[self.id].solo_calls += 1;
     }
 
     /// Consume a pending cancel marker for `id`.
@@ -404,19 +574,37 @@ struct ActiveJob {
     queue_s: f64,
     /// clock since admission (reported latency)
     run_sw: Stopwatch,
-    /// seconds spent inside start/step for this job
+    /// seconds spent inside start/plan/verify/absorb for this job
     cpu_s: f64,
     /// tokens already delivered as stream deltas
     sent: usize,
     state: GenState,
     method: Box<dyn Method>,
+    /// set once the session finished this cycle: Some(reuse) — `reuse`
+    /// returns the method instance to the pool (false after a panic left
+    /// its sessions mid-mutation).  Swept between cycles.
+    ended: Option<bool>,
 }
 
-enum StepVerdict {
-    Continue,
-    /// job finished; `reuse` returns the method instance to the pool
-    /// (false after a panic left its sessions mid-mutation)
-    Done { reuse: bool },
+/// What a worker decided about dequeuing more work.
+enum Polled {
+    Msg(Msg),
+    Empty,
+    Disconnected,
+}
+
+/// Non-blocking steal off the shared overflow queue.
+fn try_steal(rx: &Arc<Mutex<Receiver<Msg>>>) -> Polled {
+    let recv = |g: &Receiver<Msg>| match g.try_recv() {
+        Ok(m) => Polled::Msg(m),
+        Err(TryRecvError::Empty) => Polled::Empty,
+        Err(TryRecvError::Disconnected) => Polled::Disconnected,
+    };
+    match rx.try_lock() {
+        Ok(guard) => recv(&guard),
+        Err(std::sync::TryLockError::WouldBlock) => Polled::Empty,
+        Err(std::sync::TryLockError::Poisoned(p)) => recv(&p.into_inner()),
+    }
 }
 
 fn worker(ctx: WorkerCtx, artifact_dir: PathBuf, cfg: MethodCfg, rx: Arc<Mutex<Receiver<Msg>>>) {
@@ -434,77 +622,102 @@ fn worker(ctx: WorkerCtx, artifact_dir: PathBuf, cfg: MethodCfg, rx: Arc<Mutex<R
     let mut pool: MethodPool = HashMap::new();
     let mut active: Vec<ActiveJob> = Vec::new();
     let mut draining = false;
-    let mut cursor = 0usize;
     loop {
         // ---- admit new jobs up to max_active ----
-        while !draining && active.len() < ctx.max_active {
-            let msg = if active.is_empty() {
-                // nothing to step: block for work (counted as idle)
+        while active.len() < ctx.max_active {
+            let msg = if draining {
+                // stop pulling shared work (other workers' markers), but
+                // keep serving jobs routed directly to this worker
+                match ctx.queue.pop() {
+                    Some(m) => m,
+                    None => break,
+                }
+            } else if active.is_empty() {
+                // nothing to step: park for work (counted as idle)
                 let idle_sw = Stopwatch::start();
-                let m = {
-                    let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
-                    guard.recv()
+                let m = loop {
+                    if let Some(m) = ctx.queue.pop() {
+                        break Some(m);
+                    }
+                    match try_steal(&rx) {
+                        Polled::Msg(m) => break Some(m),
+                        Polled::Disconnected => break None,
+                        Polled::Empty => ctx.queue.park(),
+                    }
                 };
                 ctx.add_idle(idle_sw.secs());
                 match m {
-                    Ok(m) => m,
-                    Err(_) => return, // channel gone, nothing in flight
+                    Some(m) => m,
+                    None => {
+                        // shared channel gone: drain our own queue and exit
+                        draining = true;
+                        continue;
+                    }
                 }
             } else {
-                // Live sessions waiting: poll without blocking.  try_lock,
-                // not lock — an *idle* worker parks inside recv() while
-                // holding the rx mutex, so lock() here would stall our
-                // active sessions until new work arrived.  If the mutex is
-                // held, whoever holds it will take the next job anyway.
-                let m = match rx.try_lock() {
-                    Ok(guard) => guard.try_recv(),
-                    Err(std::sync::TryLockError::WouldBlock) => Err(TryRecvError::Empty),
-                    Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner().try_recv(),
-                };
-                match m {
-                    Ok(m) => m,
-                    Err(TryRecvError::Empty) => break,
-                    Err(TryRecvError::Disconnected) => {
-                        draining = true;
-                        break;
-                    }
+                // live sessions waiting: poll both sources without blocking
+                match ctx.queue.pop() {
+                    Some(m) => m,
+                    None => match try_steal(&rx) {
+                        Polled::Msg(m) => m,
+                        Polled::Empty => break,
+                        Polled::Disconnected => {
+                            draining = true;
+                            continue;
+                        }
+                    },
                 }
             };
             match msg {
                 Msg::Shutdown => {
-                    if active.is_empty() {
-                        return;
-                    }
-                    // finish live sessions, stop pulling new work
+                    // finish live sessions + our own queued jobs, stop
+                    // stealing shared work
                     draining = true;
                 }
                 Msg::Run(job, submit_sw, rtx) => {
                     ctx.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                    if let Some(a) =
-                        admit(&ctx, rt.as_ref(), &init_err, &mut pool, &cfg, job, submit_sw, rtx)
+                    // reserve the session slot in the load gauge BEFORE the
+                    // (possibly throttled) admission work, so least-loaded
+                    // dispatch never sees this worker as idle mid-admit
+                    ctx.queue.load.fetch_add(1, Ordering::Relaxed);
+                    match admit(&ctx, rt.as_ref(), &init_err, &mut pool, &cfg, job, submit_sw, rtx)
                     {
-                        active.push(a);
+                        Some(a) => active.push(a),
+                        None => {
+                            ctx.queue.load.fetch_sub(1, Ordering::Relaxed);
+                        }
                     }
                 }
             }
         }
         if active.is_empty() {
-            if draining {
+            if draining && ctx.queue.is_empty() {
                 return;
             }
-            continue; // blocking recv above admitted nothing (rejected job)
+            continue;
         }
-        // ---- one cycle of one live session, round-robin ----
-        cursor %= active.len();
-        match step_active(&ctx, &mut active[cursor]) {
-            StepVerdict::Continue => cursor += 1,
-            StepVerdict::Done { reuse } => {
-                let a = active.swap_remove(cursor);
+        // ---- one fused verification cycle over every live session ----
+        run_cycle(&ctx, &mut active);
+        sweep_ended(&ctx, &mut pool, &mut active);
+    }
+}
+
+/// Remove sessions that finished during the last cycle, returning
+/// reusable method instances to the per-name free list.
+fn sweep_ended(ctx: &WorkerCtx, pool: &mut MethodPool, active: &mut Vec<ActiveJob>) {
+    let mut i = 0;
+    while i < active.len() {
+        let ended = active[i].ended;
+        match ended {
+            Some(reuse) => {
+                let a = active.swap_remove(i);
+                ctx.queue.load.fetch_sub(1, Ordering::Relaxed);
                 if reuse {
                     let name = a.job.method.clone();
-                    checkin(&mut pool, &name, a.method);
+                    checkin(pool, &name, a.method);
                 }
             }
+            None => i += 1,
         }
     }
 }
@@ -613,6 +826,7 @@ fn admit(
                 sent: 0,
                 state,
                 method,
+                ended: None,
             };
             flush_delta(&mut a);
             if a.state.done {
@@ -627,39 +841,371 @@ fn admit(
     }
 }
 
-/// Advance one live session by one cycle (cancel/deadline checked first).
-fn step_active(ctx: &WorkerCtx, a: &mut ActiveJob) -> StepVerdict {
-    if ctx.take_cancel(a.job.id) {
-        complete(ctx, a, Some("cancelled".to_string()));
-        return StepVerdict::Done { reuse: true };
+/// How a planned session's verification will be executed (probed without
+/// holding any session borrow).
+#[derive(Clone, Copy)]
+enum VerKind {
+    /// compiled target graph; fused by (weights ptr, capacity)
+    Target { committed: usize, slots: usize, wptr: usize },
+    /// runtime-free host verifier; fused by method name
+    Host,
+    /// no executor handle — verify through the method's own `verify`
+    Solo,
+}
+
+/// One fused verification cycle over every live session:
+///
+/// 1. check cancel/deadline, then `plan` each session (drafting);
+/// 2. pack batchable sessions' rows into as few verify executions as
+///    capacity allows — compiled sessions through `fused_decode` (one
+///    graph call per group), host sessions through one batch call of
+///    their shared `HostVerifier`;
+/// 3. scatter the outputs and `absorb` each session;
+/// 4. run `Unbatchable` sessions through their solo `step`.
+///
+/// Sessions that finish (or fail) anywhere in the cycle are completed
+/// inline and marked `ended` for the caller's sweep.  A failed fused
+/// call falls back to per-session solo verifies — packing happens before
+/// any session state changes, so the retry is safe.
+fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob]) {
+    let n = active.len();
+    // ---- phase 1: checks + plan ----
+    let mut rows_of: Vec<Option<VerifyRows>> = (0..n).map(|_| None).collect();
+    let mut solo: Vec<bool> = vec![false; n];
+    for i in 0..n {
+        let a = &mut active[i];
+        if a.ended.is_some() {
+            continue;
+        }
+        if ctx.take_cancel(a.job.id) {
+            complete(ctx, a, Some("cancelled".to_string()));
+            a.ended = Some(true);
+            continue;
+        }
+        if past_deadline(&a.job, &a.submit_sw) {
+            let ms = a.job.deadline_ms.unwrap_or(0);
+            complete(ctx, a, Some(format!("deadline_ms exceeded ({ms} ms)")));
+            a.ended = Some(true);
+            continue;
+        }
+        let cpu_sw = Stopwatch::start();
+        let caught =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| a.method.plan(&mut a.state)));
+        a.cpu_s += cpu_sw.secs();
+        match caught {
+            Err(p) => {
+                complete(ctx, a, Some(format!("engine panic: {}", panic_text(p.as_ref()))));
+                a.ended = Some(false);
+            }
+            Ok(Err(e)) => {
+                complete(ctx, a, Some(format!("{e:#}")));
+                a.ended = Some(true);
+            }
+            Ok(Ok(StepPlan::Finished(_))) => {
+                flush_delta(a);
+                complete(ctx, a, None);
+                a.ended = Some(true);
+                ctx.sleep_throttle();
+            }
+            Ok(Ok(StepPlan::Unbatchable)) => solo[i] = true,
+            Ok(Ok(StepPlan::Verify(rows))) => rows_of[i] = Some(rows),
+        }
     }
-    if past_deadline(&a.job, &a.submit_sw) {
-        let ms = a.job.deadline_ms.unwrap_or(0);
-        complete(ctx, a, Some(format!("deadline_ms exceeded ({ms} ms)")));
-        return StepVerdict::Done { reuse: true };
+
+    // ---- phase 2: probe executors + group by capacity ----
+    let mut kinds: Vec<Option<VerKind>> = (0..n).map(|_| None).collect();
+    for i in 0..n {
+        if rows_of[i].is_none() {
+            continue;
+        }
+        let a = &mut active[i];
+        kinds[i] = Some(if a.method.host_verifier().is_some() {
+            VerKind::Host
+        } else if let Some(t) = a.method.fused_handle() {
+            VerKind::Target {
+                committed: t.cache.committed,
+                slots: t.cache.slots,
+                wptr: Rc::as_ptr(&t.weights) as usize,
+            }
+        } else {
+            VerKind::Solo
+        });
     }
+    // compiled-target groups: greedy pack while one decode-block call can
+    // hold every member's committed prefix + padded rows
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    {
+        let mut cur: Vec<usize> = Vec::new();
+        let (mut cur_prefix, mut cur_rows) = (0usize, 0usize);
+        let (mut cur_wptr, mut cur_slots) = (0usize, 0usize);
+        for i in 0..n {
+            let Some(VerKind::Target { committed, slots, wptr }) = kinds[i] else { continue };
+            let r = rows_of[i].as_ref().map_or(0, VerifyRows::len);
+            let fits = !cur.is_empty()
+                && wptr == cur_wptr
+                && slots == cur_slots
+                && cur_rows + r <= MAX_BLOCK
+                && cur_prefix + committed + pick_block(cur_rows + r) <= slots;
+            if fits {
+                cur.push(i);
+                cur_prefix += committed;
+                cur_rows += r;
+            } else {
+                if !cur.is_empty() {
+                    groups.push(std::mem::take(&mut cur));
+                }
+                cur.push(i);
+                cur_prefix = committed;
+                cur_rows = r;
+                cur_wptr = wptr;
+                cur_slots = slots;
+            }
+        }
+        if !cur.is_empty() {
+            groups.push(cur);
+        }
+    }
+    // host groups: every host-verified session of the same method shares
+    // one batch call (the verifier is a pure per-row function)
+    let mut host_groups: Vec<(String, Vec<usize>)> = Vec::new();
+    for i in 0..n {
+        if !matches!(kinds[i], Some(VerKind::Host)) {
+            continue;
+        }
+        let name = active[i].job.method.clone();
+        match host_groups.iter().position(|(k, _)| *k == name) {
+            Some(p) => host_groups[p].1.push(i),
+            None => host_groups.push((name, vec![i])),
+        }
+    }
+    // sessions with no executor handle verify solo
+    for i in 0..n {
+        if matches!(kinds[i], Some(VerKind::Solo)) {
+            let rows = rows_of[i].take().unwrap();
+            solo_verify_absorb(ctx, &mut active[i], &rows);
+            ctx.sleep_throttle();
+        }
+    }
+
+    // ---- phase 3a: fused compiled groups ----
+    for g in &groups {
+        if g.len() == 1 {
+            let i = g[0];
+            let rows = rows_of[i].take().unwrap();
+            solo_verify_absorb(ctx, &mut active[i], &rows);
+            ctx.sleep_throttle();
+            continue;
+        }
+        let total_rows: usize = g.iter().map(|&i| rows_of[i].as_ref().unwrap().len()).sum();
+        let sw = Stopwatch::start();
+        let outs = {
+            let mut batch: Vec<(&mut TargetSession, &VerifyRows)> = Vec::with_capacity(g.len());
+            for (i, a) in active.iter_mut().enumerate() {
+                if !g.contains(&i) {
+                    continue;
+                }
+                if let (Some(t), Some(rows)) = (a.method.fused_handle(), rows_of[i].as_ref()) {
+                    batch.push((t, rows));
+                }
+            }
+            if batch.len() == g.len() {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| fused_decode(&mut batch)))
+                    .unwrap_or_else(|p| {
+                        Err(anyhow::anyhow!("engine panic: {}", panic_text(p.as_ref())))
+                    })
+            } else {
+                Err(anyhow::anyhow!("fused handle disappeared between probe and pack"))
+            }
+        };
+        let verify_s = sw.secs();
+        match outs {
+            Ok(outs) => {
+                ctx.note_fused(total_rows);
+                let share = verify_s / g.len() as f64;
+                let mut oi = 0usize;
+                for (i, a) in active.iter_mut().enumerate() {
+                    if !g.contains(&i) {
+                        continue;
+                    }
+                    rows_of[i] = None;
+                    a.state.metrics.phases.verify_s += share;
+                    a.state.metrics.target_calls += 1;
+                    a.cpu_s += share;
+                    absorb_one(ctx, a, &outs[oi]);
+                    oi += 1;
+                    ctx.sleep_throttle();
+                }
+            }
+            Err(e) => {
+                // the pack mutates nothing until the call succeeds, so
+                // every member can retry through its solo verify
+                eprintln!(
+                    "[scheduler] worker {}: fused verify failed ({e:#}); retrying solo",
+                    ctx.id
+                );
+                for &i in g {
+                    let rows = rows_of[i].take().unwrap();
+                    solo_verify_absorb(ctx, &mut active[i], &rows);
+                    ctx.sleep_throttle();
+                }
+            }
+        }
+    }
+
+    // ---- phase 3b: fused host groups ----
+    for (_, g) in &host_groups {
+        if g.len() == 1 {
+            let i = g[0];
+            let rows = rows_of[i].take().unwrap();
+            solo_verify_absorb(ctx, &mut active[i], &rows);
+            ctx.sleep_throttle();
+            continue;
+        }
+        // pack every member's rows into one host batch call
+        let hv: Option<HostVerifier> = active[g[0]].method.host_verifier();
+        let Some(hv) = hv else {
+            // probe went stale (cannot happen for stateless verifiers):
+            // degrade to per-member solo verifies instead of stalling
+            for &i in g {
+                let rows = rows_of[i].take().unwrap();
+                solo_verify_absorb(ctx, &mut active[i], &rows);
+                ctx.sleep_throttle();
+            }
+            continue;
+        };
+        let mut tokens: Vec<i32> = Vec::new();
+        let mut positions: Vec<usize> = Vec::new();
+        for &i in g {
+            let rows = rows_of[i].as_ref().unwrap();
+            tokens.extend_from_slice(&rows.tokens);
+            positions.extend_from_slice(&rows.positions);
+        }
+        let sw = Stopwatch::start();
+        let caught =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| hv(&tokens, &positions)));
+        let verify_s = sw.secs();
+        let out = match caught {
+            Ok(out) => out,
+            Err(p) => {
+                // a panicking verifier costs this cycle's members one
+                // error response each, not the engine thread
+                let msg = panic_text(p.as_ref());
+                for (i, a) in active.iter_mut().enumerate() {
+                    if !g.contains(&i) {
+                        continue;
+                    }
+                    rows_of[i] = None;
+                    complete(ctx, a, Some(format!("engine panic: {msg}")));
+                    a.ended = Some(true);
+                }
+                continue;
+            }
+        };
+        ctx.note_fused(tokens.len());
+        // scatter rows back per member
+        let vocab = out.logits.dims[1];
+        let fdim = out.feats.dims[1];
+        let share = verify_s / g.len() as f64;
+        let mut off = 0usize;
+        for (i, a) in active.iter_mut().enumerate() {
+            if !g.contains(&i) {
+                continue;
+            }
+            let n_i = rows_of[i].take().map_or(0, |r| r.len());
+            let mut lj = Vec::with_capacity(n_i * vocab);
+            let mut fj = Vec::with_capacity(n_i * fdim);
+            for r in off..off + n_i {
+                lj.extend_from_slice(out.logits.row(r));
+                fj.extend_from_slice(out.feats.row(r));
+            }
+            off += n_i;
+            let member_out = VerifyOut {
+                logits: crate::runtime::TensorF { dims: vec![n_i, vocab], data: lj },
+                feats: crate::runtime::TensorF { dims: vec![n_i, fdim], data: fj },
+            };
+            a.state.metrics.phases.verify_s += share;
+            a.state.metrics.target_calls += 1;
+            absorb_one(ctx, a, &member_out);
+            ctx.sleep_throttle();
+        }
+    }
+
+    // ---- phase 4: unbatchable sessions run their opaque solo step ----
+    for i in 0..n {
+        if !solo[i] {
+            continue;
+        }
+        let a = &mut active[i];
+        let cpu_sw = Stopwatch::start();
+        let caught =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| a.method.step(&mut a.state)));
+        a.cpu_s += cpu_sw.secs();
+        ctx.sleep_throttle();
+        match caught {
+            Err(p) => {
+                complete(ctx, a, Some(format!("engine panic: {}", panic_text(p.as_ref()))));
+                a.ended = Some(false);
+            }
+            Ok(Err(e)) => {
+                complete(ctx, a, Some(format!("{e:#}")));
+                a.ended = Some(true);
+            }
+            Ok(Ok(_outcome)) => {
+                flush_delta(a);
+                if a.state.done {
+                    complete(ctx, a, None);
+                    a.ended = Some(true);
+                }
+            }
+        }
+    }
+}
+
+/// Verify one session through its own solo executor, then absorb.
+fn solo_verify_absorb(ctx: &WorkerCtx, a: &mut ActiveJob, rows: &VerifyRows) {
     let cpu_sw = Stopwatch::start();
-    let caught =
-        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| a.method.step(&mut a.state)));
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        a.method.verify(&mut a.state, rows)
+    }));
     a.cpu_s += cpu_sw.secs();
-    ctx.sleep_throttle();
     match caught {
         Err(p) => {
-            let msg = panic_text(p.as_ref());
-            complete(ctx, a, Some(format!("engine panic: {msg}")));
-            StepVerdict::Done { reuse: false }
+            complete(ctx, a, Some(format!("engine panic: {}", panic_text(p.as_ref()))));
+            a.ended = Some(false);
         }
         Ok(Err(e)) => {
             complete(ctx, a, Some(format!("{e:#}")));
-            StepVerdict::Done { reuse: true }
+            a.ended = Some(true);
+        }
+        Ok(Ok(out)) => {
+            ctx.note_solo();
+            absorb_one(ctx, a, &out);
+        }
+    }
+}
+
+/// Absorb externally produced verify outputs into one session, with the
+/// same completion/panic discipline as a solo step.
+fn absorb_one(ctx: &WorkerCtx, a: &mut ActiveJob, out: &VerifyOut) {
+    let cpu_sw = Stopwatch::start();
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        a.method.absorb(&mut a.state, out)
+    }));
+    a.cpu_s += cpu_sw.secs();
+    match caught {
+        Err(p) => {
+            complete(ctx, a, Some(format!("engine panic: {}", panic_text(p.as_ref()))));
+            a.ended = Some(false);
+        }
+        Ok(Err(e)) => {
+            complete(ctx, a, Some(format!("{e:#}")));
+            a.ended = Some(true);
         }
         Ok(Ok(_outcome)) => {
             flush_delta(a);
             if a.state.done {
                 complete(ctx, a, None);
-                StepVerdict::Done { reuse: true }
-            } else {
-                StepVerdict::Continue
+                a.ended = Some(true);
             }
         }
     }
@@ -936,6 +1482,88 @@ mod tests {
         let r = recv_done(&sched.submit(j, true).unwrap());
         let err = r.error.expect("deadline must abort the job");
         assert!(err.contains("deadline"), "unexpected error: {err}");
+        sched.shutdown();
+    }
+
+    /// THE batched-verification acceptance test: one worker fusing 4
+    /// co-active sessions must produce token-for-token the outputs (and
+    /// acceptance metrics) of 4 sequential solo runs with the same seeds,
+    /// while issuing at least 2x fewer verify executions.
+    #[test]
+    fn fused_verify_matches_sequential_solo_runs() {
+        let jobs = |offset: u64| -> Vec<Job> {
+            (0..4u64)
+                .map(|i| {
+                    let mut j = mock_job(offset + i, 24 + 7 * i as usize, false);
+                    j.seed = 100 + i;
+                    j
+                })
+                .collect()
+        };
+        // sequential baseline: one worker, one session at a time
+        let solo = Scheduler::start(bad_dir(), MethodCfg::default(), 16, 1, 1);
+        let mut want = Vec::new();
+        for j in jobs(1) {
+            let r = recv_done(&solo.submit(j, true).unwrap());
+            assert!(r.error.is_none(), "solo run failed: {:?}", r.error);
+            want.push((r.text, r.tokens, r.tau));
+        }
+        let solo_stats = solo.stats();
+        assert!(solo_stats.solo_calls() > 0, "sequential runs must verify solo");
+        assert_eq!(solo_stats.fused_calls(), 0, "nothing to fuse at max_active 1");
+        solo.shutdown();
+
+        // fused: one worker interleaving all four (admission throttled so
+        // every session is co-active before the first cycle)
+        let fused = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 16, 1, 4, Some(2));
+        let rxs: Vec<_> =
+            jobs(1).into_iter().map(|j| fused.submit(j, true).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = recv_done(&rx);
+            assert!(r.error.is_none(), "fused run failed: {:?}", r.error);
+            let (text, tokens, tau) = &want[i];
+            assert_eq!(&r.text, text, "job {i}: fused text diverged from solo");
+            assert_eq!(r.tokens, *tokens, "job {i}: token count diverged");
+            assert!((r.tau - tau).abs() < 1e-9, "job {i}: tau diverged ({} vs {tau})", r.tau);
+        }
+        let fused_stats = fused.stats();
+        assert!(fused_stats.fused_calls() > 0, "fused path must be exercised");
+        assert!(
+            fused_stats.mean_fused_rows() > 5.0,
+            "fused calls must carry multiple sessions' rows (mean {})",
+            fused_stats.mean_fused_rows()
+        );
+        // the scaling lever: >= 2x fewer verify executions for the same jobs
+        assert!(
+            fused_stats.verify_calls() * 2 <= solo_stats.verify_calls(),
+            "fused {} vs solo {} verify calls",
+            fused_stats.verify_calls(),
+            solo_stats.verify_calls()
+        );
+        fused.shutdown();
+    }
+
+    /// Least-loaded dispatch: with every worker idle, consecutive submits
+    /// spread round-robin-ish instead of piling onto worker 0.
+    #[test]
+    fn least_loaded_dispatch_spreads_queued_jobs() {
+        // throttled so queued jobs stay queued while we submit
+        let sched = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 64, 3, 1, Some(10));
+        let rxs: Vec<_> =
+            (0..9).map(|i| sched.submit(mock_job(i, 4, false), true).unwrap()).collect();
+        let mut served = std::collections::HashMap::new();
+        for rx in rxs {
+            let r = recv_done(&rx);
+            assert!(r.error.is_none());
+            *served.entry(r.worker).or_insert(0usize) += 1;
+        }
+        assert_eq!(served.len(), 3, "all three workers must serve: {served:?}");
+        // round-robin-ish: allow a couple of racy misroutes, but nothing
+        // resembling a pile-up on one worker
+        assert!(
+            served.values().all(|&c| (1..=5).contains(&c)),
+            "least-loaded dispatch must spread 9 jobs over 3 workers: {served:?}"
+        );
         sched.shutdown();
     }
 

@@ -15,8 +15,13 @@
 //!             Only ids submitted on the same connection are honored;
 //!             foreign/unknown ids are silently ignored.
 //!   stats:    {"stats": true}
-//!          -> {"stats": {"workers": [{"worker": 0, "jobs_ok": 3, ...}],
+//!          -> {"stats": {"workers": [{"worker": 0, "jobs_ok": 3,
+//!              "fused_calls": 9, "solo_calls": 2, "mean_fused_rows": 17.5,
+//!              ...}],
 //!              "aggregate": {"jobs": 3, "tokens": 120, "tau": 3.1, ...}}}
+//!             (fused_calls/solo_calls/fused_rows are the worker's batch
+//!             occupancy: how many verify executions covered >= 2
+//!             sessions, and how many candidate rows those carried)
 //!   error:    {"id": 1, "error": "..."}  ("id" omitted when the line
 //!             could not be parsed; messages are JSON-escaped)
 //!
@@ -163,6 +168,10 @@ pub fn format_pool_stats(p: &PoolStats) -> String {
                 ("tokens", Json::num(w.tokens as f64)),
                 ("busy_ms", Json::num(wire_ms(w.busy_s))),
                 ("idle_ms", Json::num(wire_ms(w.idle_s))),
+                ("fused_calls", Json::num(w.fused_calls as f64)),
+                ("solo_calls", Json::num(w.solo_calls as f64)),
+                ("fused_rows", Json::num(w.fused_rows as f64)),
+                ("mean_fused_rows", Json::num(wire_r3(w.mean_fused_rows()))),
                 ("tau", Json::num(wire_r3(w.metrics.tau()))),
             ])
         })
@@ -175,6 +184,10 @@ pub fn format_pool_stats(p: &PoolStats) -> String {
         ("tokens", Json::num(p.tokens() as f64)),
         ("queue_depth", Json::num(p.queue_depth as f64)),
         ("busy_ms", Json::num(wire_ms(p.busy_s()))),
+        ("fused_calls", Json::num(p.fused_calls() as f64)),
+        ("solo_calls", Json::num(p.solo_calls() as f64)),
+        ("fused_rows", Json::num(p.fused_rows() as f64)),
+        ("mean_fused_rows", Json::num(wire_r3(p.mean_fused_rows()))),
         ("tau", Json::num(wire_r3(p.tau()))),
     ]);
     Json::obj(vec![(
@@ -577,6 +590,9 @@ mod tests {
                     tokens: 30,
                     busy_s: 0.5,
                     idle_s: 0.1,
+                    fused_calls: 4,
+                    solo_calls: 2,
+                    fused_rows: 70,
                     metrics: m.clone(),
                 },
                 WorkerStats {
@@ -586,6 +602,9 @@ mod tests {
                     tokens: 20,
                     busy_s: 0.25,
                     idle_s: 0.2,
+                    fused_calls: 1,
+                    solo_calls: 3,
+                    fused_rows: 10,
                     metrics: m,
                 },
             ],
@@ -599,9 +618,17 @@ mod tests {
         assert_eq!(agg.usize_at("tokens"), Some(50));
         assert_eq!(agg.usize_at("queue_depth"), Some(4));
         assert_eq!(agg.f64_at("tau"), Some(3.0));
+        // batch-occupancy satellite: fused/solo counts + mean rows/fused
+        assert_eq!(agg.usize_at("fused_calls"), Some(5));
+        assert_eq!(agg.usize_at("solo_calls"), Some(5));
+        assert_eq!(agg.usize_at("fused_rows"), Some(80));
+        assert_eq!(agg.f64_at("mean_fused_rows"), Some(16.0));
         let workers = stats.get("workers").unwrap().as_arr().unwrap();
         assert_eq!(workers.len(), 2);
         assert_eq!(workers[0].usize_at("jobs_ok"), Some(3));
+        assert_eq!(workers[0].usize_at("fused_calls"), Some(4));
+        assert_eq!(workers[0].f64_at("mean_fused_rows"), Some(17.5));
         assert_eq!(workers[1].usize_at("worker"), Some(1));
+        assert_eq!(workers[1].usize_at("solo_calls"), Some(3));
     }
 }

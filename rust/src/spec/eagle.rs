@@ -25,8 +25,10 @@ use anyhow::{Context, Result};
 use crate::engine::sessions::{DraftSession, TargetSession};
 use crate::runtime::{Checkpoint, Runtime};
 use crate::sampling::{log_softmax, process_logits, sample_token, topk};
-use crate::spec::{accept_walk, GenRequest, GenState, Method, StepOutcome};
-use crate::tree::{eagle_static_template, Tree};
+use crate::spec::{
+    accept_walk, GenRequest, GenState, Method, StepOutcome, StepPlan, VerifyOut, VerifyRows,
+};
+use crate::tree::{eagle_static_template, Tree, VerifyPlan};
 use crate::util::stats::Stopwatch;
 
 #[derive(Clone, Copy, PartialEq)]
@@ -54,6 +56,8 @@ struct EagleState {
     /// the next cycle's commit rows
     pending_tokens: Vec<i32>,
     pending_feats: Vec<Vec<f32>>,
+    /// the tree `plan` flattened for verification, awaiting `absorb`
+    pending_plan: Option<VerifyPlan>,
 }
 
 struct NodeInfo {
@@ -127,7 +131,11 @@ impl Method for Eagle {
 
         let mut state = GenState::new(
             req,
-            EagleState { pending_tokens: Vec::new(), pending_feats: Vec::new() },
+            EagleState {
+                pending_tokens: Vec::new(),
+                pending_feats: Vec::new(),
+                pending_plan: None,
+            },
         );
         let sw = Stopwatch::start();
         let last_logits = self.target.prefill(&req.prompt_tokens)?;
@@ -151,19 +159,26 @@ impl Method for Eagle {
         Ok(state)
     }
 
-    fn step(&mut self, state: &mut GenState) -> Result<StepOutcome> {
+    fn fused_handle(&mut self) -> Option<&mut TargetSession> {
+        Some(&mut self.target)
+    }
+
+    fn plan(&mut self, state: &mut GenState) -> Result<StepPlan> {
         let block = self.draft.block;
-        let verify_n = (self.total_tokens + 1).max(self.template.len() + 1);
+        // the verify call consumes a full padded decode block of cache
+        // slots, so capacity is checked against that, not the raw rows
+        let rows_max = (self.total_tokens + 1).max(self.template.len() + 1);
+        let verify_n = crate::engine::sessions::padded_span(rows_max);
         let inner = state
             .inner
             .downcast_mut::<EagleState>()
-            .context("eagle step on a foreign GenState")?;
+            .context("eagle plan on a foreign GenState")?;
         if state.done
             || self.target.cache.remaining() < verify_n + 2
             || self.draft.remaining() < inner.pending_tokens.len() + self.depth * block + 2
         {
             state.finish();
-            return Ok(StepOutcome { emitted: 0, done: true });
+            return Ok(StepPlan::Finished(StepOutcome { emitted: 0, done: true }));
         }
         let plen = state.req.prompt_tokens.len();
         let last = *state.tokens.last().context("session has no tokens")?;
@@ -306,7 +321,7 @@ impl Method for Eagle {
         }
         state.metrics.phases.draft_s += sw.secs();
 
-        // ---- 3. rerank + flatten ----
+        // ---- 3. rerank + flatten (the verify rows for this cycle) ----
         let sw = Stopwatch::start();
         let plan = match self.kind {
             TreeKind::Dynamic => tree.rerank(self.total_tokens),
@@ -315,15 +330,22 @@ impl Method for Eagle {
         let positions: Vec<usize> = plan.depths.iter().map(|&d| base_pos + d).collect();
         let anc = plan.block_mask();
         state.metrics.phases.host_s += sw.secs();
+        let rows = VerifyRows { tokens: plan.tokens.clone(), positions, block_anc: Some(anc) };
+        inner.pending_plan = Some(plan);
+        Ok(StepPlan::Verify(rows))
+    }
 
-        // ---- 4. verify + accept ----
+    fn absorb(&mut self, state: &mut GenState, ver: &VerifyOut) -> Result<StepOutcome> {
+        let inner = state
+            .inner
+            .downcast_mut::<EagleState>()
+            .context("eagle absorb on a foreign GenState")?;
+        let plan = inner
+            .pending_plan
+            .take()
+            .context("eagle absorb without a planned cycle")?;
         let sw = Stopwatch::start();
-        let ver = self.target.decode(&plan.tokens, &positions, Some(&anc))?;
-        state.metrics.phases.verify_s += sw.secs();
-        state.metrics.target_calls += 1;
-
-        let sw = Stopwatch::start();
-        let walk = accept_walk(&plan, &ver, &state.req.params, &mut state.rng, &mut state.metrics);
+        let walk = accept_walk(&plan, ver, &state.req.params, &mut state.rng, &mut state.metrics);
         self.target.commit_rows(&walk.accepted_rows, &ver.feats)?;
         inner.pending_feats = walk
             .accepted_rows

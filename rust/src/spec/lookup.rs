@@ -20,7 +20,7 @@ use anyhow::{Context, Result};
 use crate::engine::sessions::TargetSession;
 use crate::runtime::{Checkpoint, Runtime};
 use crate::sampling::{process_logits, sample_token};
-use crate::spec::{GenRequest, GenState, Method, StepOutcome};
+use crate::spec::{GenRequest, GenState, Method, StepOutcome, StepPlan};
 use crate::tokenizer::EOS;
 use crate::util::stats::Stopwatch;
 
@@ -131,12 +131,25 @@ impl Method for Lookup {
         Ok(state)
     }
 
+    /// Lookup chains cannot batch: the proposal depends on the emitted
+    /// history *at verify time* (the n-gram pool is harvested from the
+    /// accept walk), and the chain walk re-reads the proposal inline — so
+    /// the method declares itself unbatchable and keeps the solo `step`
+    /// path.  Explicit (rather than inheriting the default) so the intent
+    /// survives refactors.
+    fn plan(&mut self, state: &mut GenState) -> Result<StepPlan> {
+        let _ = state;
+        Ok(StepPlan::Unbatchable)
+    }
+
     fn step(&mut self, state: &mut GenState) -> Result<StepOutcome> {
         let inner = state
             .inner
             .downcast_mut::<LookupState>()
             .context("lookup step on a foreign GenState")?;
-        if state.done || self.target.cache.remaining() <= self.max_chain + 2 {
+        // the verify call burns a full padded decode block of target slots
+        let verify_n = crate::engine::sessions::padded_span(self.max_chain + 1);
+        if state.done || self.target.cache.remaining() <= verify_n + 1 {
             state.finish();
             return Ok(StepOutcome { emitted: 0, done: true });
         }

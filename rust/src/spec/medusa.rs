@@ -10,8 +10,10 @@ use anyhow::{Context, Result};
 use crate::engine::sessions::{MedusaHeads, TargetSession};
 use crate::runtime::{Checkpoint, Runtime};
 use crate::sampling::{process_logits, sample_token, topk};
-use crate::spec::{accept_walk, GenRequest, GenState, Method, StepOutcome};
-use crate::tree::{medusa_template, Tree};
+use crate::spec::{
+    accept_walk, GenRequest, GenState, Method, StepOutcome, StepPlan, VerifyOut, VerifyRows,
+};
+use crate::tree::{medusa_template, Tree, VerifyPlan};
 use crate::util::stats::Stopwatch;
 
 pub struct Medusa {
@@ -20,9 +22,11 @@ pub struct Medusa {
     template: Vec<Vec<usize>>,
 }
 
-/// Per-session carry-over: the feature row the heads read next cycle.
+/// Per-session carry-over: the feature row the heads read next cycle,
+/// plus the flattened tree awaiting `absorb`.
 struct MedusaState {
     head_feat: Vec<f32>,
+    pending_plan: Option<VerifyPlan>,
 }
 
 impl Medusa {
@@ -96,7 +100,8 @@ impl Method for Medusa {
         let plen = req.prompt_tokens.len();
         self.target.reset();
 
-        let mut state = GenState::new(req, MedusaState { head_feat: Vec::new() });
+        let mut state =
+            GenState::new(req, MedusaState { head_feat: Vec::new(), pending_plan: None });
         let sw = Stopwatch::start();
         let last_logits = self.target.prefill(&req.prompt_tokens)?;
         state.metrics.phases.verify_s += sw.secs();
@@ -115,14 +120,21 @@ impl Method for Medusa {
         Ok(state)
     }
 
-    fn step(&mut self, state: &mut GenState) -> Result<StepOutcome> {
+    fn fused_handle(&mut self) -> Option<&mut TargetSession> {
+        Some(&mut self.target)
+    }
+
+    fn plan(&mut self, state: &mut GenState) -> Result<StepPlan> {
         let inner = state
             .inner
             .downcast_mut::<MedusaState>()
-            .context("medusa step on a foreign GenState")?;
-        if state.done || self.target.cache.remaining() <= self.template.len() + 3 {
+            .context("medusa plan on a foreign GenState")?;
+        // capacity vs the PADDED verify block (the call burns a full
+        // compiled width of slots), plus the post-accept margin
+        let verify_n = crate::engine::sessions::padded_span(self.template.len() + 1);
+        if state.done || self.target.cache.remaining() <= verify_n + 2 {
             state.finish();
-            return Ok(StepOutcome { emitted: 0, done: true });
+            return Ok(StepPlan::Finished(StepOutcome { emitted: 0, done: true }));
         }
         let plen = state.req.prompt_tokens.len();
         let root = *state.tokens.last().context("session has no tokens")?;
@@ -137,14 +149,22 @@ impl Method for Medusa {
         let base_pos = plen + state.tokens.len() - 1;
         let positions: Vec<usize> = plan.depths.iter().map(|&d| base_pos + d).collect();
         let anc = plan.block_mask();
+        let rows = VerifyRows { tokens: plan.tokens.clone(), positions, block_anc: Some(anc) };
+        inner.pending_plan = Some(plan);
+        Ok(StepPlan::Verify(rows))
+    }
 
+    fn absorb(&mut self, state: &mut GenState, ver: &VerifyOut) -> Result<StepOutcome> {
+        let inner = state
+            .inner
+            .downcast_mut::<MedusaState>()
+            .context("medusa absorb on a foreign GenState")?;
+        let plan = inner
+            .pending_plan
+            .take()
+            .context("medusa absorb without a planned cycle")?;
         let sw = Stopwatch::start();
-        let ver = self.target.decode(&plan.tokens, &positions, Some(&anc))?;
-        state.metrics.phases.verify_s += sw.secs();
-        state.metrics.target_calls += 1;
-
-        let sw = Stopwatch::start();
-        let walk = accept_walk(&plan, &ver, &state.req.params, &mut state.rng, &mut state.metrics);
+        let walk = accept_walk(&plan, ver, &state.req.params, &mut state.rng, &mut state.metrics);
         state.metrics.phases.sample_s += sw.secs();
 
         self.target.commit_rows(&walk.accepted_rows, &ver.feats)?;

@@ -1,23 +1,94 @@
 //! Deterministic runtime-free method for serving-path tests and demos.
 //!
-//! `mock` emits one pseudo-random printable-ASCII token per step from the
-//! request seed — no `Runtime`, no artifacts, no KV cache.  It exists so
-//! the scheduler/server machinery (continuous batching, streaming,
-//! cancellation, deadlines) can be exercised end-to-end on machines
-//! without trained artifacts, where every real method errors at init.
+//! `mock` is a miniature speculative method over a host-side "target
+//! model": [`mock_logits`] is a pure hash of (token, position) with its
+//! mass on printable ASCII, so decoded ids concatenate to exactly the
+//! streamed text.  Each cycle drafts a short chain ([`MOCK_GAMMA`] tokens,
+//! deliberately missing the target argmax every third position so partial
+//! acceptance paths are exercised), plans it as [`StepPlan::Verify`] rows,
+//! and absorbs the verified logits through the real `accept_walk` — no
+//! `Runtime`, no artifacts, no KV cache.
+//!
+//! Because the model is a [`HostVerifier`] (a pure batch function), a
+//! scheduler can pack many mock sessions' rows into ONE host call and
+//! scatter the outputs — the exact choreography of the compiled fused
+//! path — which is what lets CI exercise cross-session batched
+//! verification on machines without trained artifacts, where every real
+//! method errors at init.  Only the first token draws from the request
+//! RNG (seed-dependent streams); everything after is a deterministic
+//! function of it, so fused and solo drives are token-for-token equal.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::spec::{GenRequest, GenState, Method, StepOutcome};
+use crate::spec::{
+    accept_walk, GenRequest, GenState, HostVerifier, Method, StepOutcome, StepPlan, VerifyOut,
+    VerifyRows,
+};
+use crate::tokenizer;
+use crate::tree::{Tree, VerifyPlan};
+
+/// Draft-chain length per cycle.
+pub const MOCK_GAMMA: usize = 4;
+
+fn mock_hash(token: i32, position: usize) -> u64 {
+    let mut z = (token as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((position as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// First- and second-choice printable tokens at (token, position).
+fn mock_top2(token: i32, position: usize) -> (i32, i32) {
+    let h = mock_hash(token, position);
+    (32 + (h % 95) as i32, 32 + ((h >> 7) % 95) as i32)
+}
+
+/// The mock target's next-token logits at (token, position): one row over
+/// the real tokenizer vocab, peaked on two hash-derived printable tokens.
+pub fn mock_logits_row(token: i32, position: usize) -> Vec<f32> {
+    let (a, b) = mock_top2(token, position);
+    let mut row = vec![-8.0f32; tokenizer::VOCAB];
+    row[a as usize] = 6.0;
+    if b != a {
+        row[b as usize] = 4.0;
+    }
+    row
+}
+
+/// Batch verifier over packed rows from any number of sessions — each
+/// row's logits depend only on its own (token, position), so one host
+/// call over a concatenation is exact (see module docs).
+pub fn mock_verify(tokens: &[i32], positions: &[usize]) -> VerifyOut {
+    let n = tokens.len();
+    let v = tokenizer::VOCAB;
+    let mut logits = Vec::with_capacity(n * v);
+    for i in 0..n {
+        logits.extend_from_slice(&mock_logits_row(tokens[i], positions[i]));
+    }
+    VerifyOut {
+        logits: crate::runtime::TensorF { dims: vec![n, v], data: logits },
+        feats: crate::runtime::TensorF::zeros(&[n, 1]),
+    }
+}
+
+/// Draft proposal at (token, position): the target's argmax, except every
+/// third absolute position proposes the runner-up (a deliberate miss so
+/// rejection + bonus paths run).
+fn mock_draft(token: i32, position: usize) -> i32 {
+    let (best, second) = mock_top2(token, position);
+    if position % 3 == 2 {
+        second
+    } else {
+        best
+    }
+}
 
 pub struct Mock;
 
-struct MockState;
-
-fn next_token(state: &mut GenState) -> i32 {
-    // printable ASCII (32..=126): ids decode to themselves, so streamed
-    // deltas concatenate to exactly the full decoded text
-    32 + state.rng.gen_range(95) as i32
+struct MockState {
+    pending_plan: Option<VerifyPlan>,
 }
 
 impl Method for Mock {
@@ -26,23 +97,66 @@ impl Method for Mock {
     }
 
     fn start(&mut self, req: &GenRequest) -> Result<GenState> {
-        let mut state = GenState::new(req, MockState);
-        let tok = next_token(&mut state);
+        let mut state = GenState::new(req, MockState { pending_plan: None });
+        // printable ASCII (32..=126): ids decode to themselves, so the
+        // first (seed-dependent) token is stream-safe like all the rest
+        let tok = 32 + state.rng.gen_range(95) as i32;
         state.tokens.push(tok);
         state.metrics.record_cycle(0, 1);
         state.clamp();
         Ok(state)
     }
 
-    fn step(&mut self, state: &mut GenState) -> Result<StepOutcome> {
+    fn host_verifier(&self) -> Option<HostVerifier> {
+        Some(mock_verify)
+    }
+
+    fn plan(&mut self, state: &mut GenState) -> Result<StepPlan> {
+        let inner = state
+            .inner
+            .downcast_mut::<MockState>()
+            .context("mock plan on a foreign GenState")?;
         if state.done {
-            return Ok(StepOutcome { emitted: 0, done: true });
+            state.finish();
+            return Ok(StepPlan::Finished(StepOutcome { emitted: 0, done: true }));
         }
-        let tok = next_token(state);
-        state.tokens.push(tok);
-        state.metrics.record_cycle(0, 1);
+        let root = *state.tokens.last().context("session has no tokens")?;
+        let base_pos = state.req.prompt_tokens.len() + state.tokens.len() - 1;
+
+        let mut tree = Tree::new(root);
+        let mut parent = 0usize;
+        let mut tok = root;
+        for i in 0..MOCK_GAMMA {
+            let next = mock_draft(tok, base_pos + i);
+            parent = tree.add_child(parent, next, -0.1);
+            tok = next;
+        }
+        let plan = tree.flatten_all();
+        let positions: Vec<usize> = plan.depths.iter().map(|&d| base_pos + d).collect();
+        state.metrics.draft_calls += 1;
+        let rows = VerifyRows {
+            tokens: plan.tokens.clone(),
+            positions,
+            block_anc: Some(plan.block_mask()),
+        };
+        inner.pending_plan = Some(plan);
+        Ok(StepPlan::Verify(rows))
+    }
+
+    fn absorb(&mut self, state: &mut GenState, out: &VerifyOut) -> Result<StepOutcome> {
+        let inner = state
+            .inner
+            .downcast_mut::<MockState>()
+            .context("mock absorb on a foreign GenState")?;
+        let plan = inner
+            .pending_plan
+            .take()
+            .context("mock absorb without a planned cycle")?;
+        let walk = accept_walk(&plan, out, &state.req.params, &mut state.rng, &mut state.metrics);
+        let before = state.tokens.len();
+        state.tokens.extend(&walk.new_tokens);
         let done = state.clamp();
-        Ok(StepOutcome { emitted: 1, done })
+        Ok(StepOutcome { emitted: state.tokens.len().saturating_sub(before), done })
     }
 }
 
@@ -56,7 +170,7 @@ mod tests {
         GenRequest {
             prompt_tokens: vec![1],
             max_new,
-            params: SampleParams { seed, ..Default::default() },
+            params: SampleParams { seed, temperature: 0.0, ..Default::default() },
         }
     }
 
@@ -91,6 +205,46 @@ mod tests {
         assert_eq!(st.metrics.cycles, whole.metrics.cycles);
     }
 
+    /// A manual plan -> (batched) verify -> absorb drive must equal the
+    /// step drive token-for-token AND metric-for-metric — the per-session
+    /// half of the fused-verification equivalence contract.
+    #[test]
+    fn plan_absorb_drive_matches_step_drive() {
+        let mut m = Mock;
+        let whole = m.generate(&req(20, 5)).unwrap();
+        let mut st = m.start(&req(20, 5)).unwrap();
+        while !st.done {
+            match m.plan(&mut st).unwrap() {
+                StepPlan::Finished(_) => break,
+                StepPlan::Unbatchable => panic!("mock must be batchable"),
+                StepPlan::Verify(rows) => {
+                    // through the host verifier, as a fused scheduler would
+                    let hv = m.host_verifier().expect("mock has a host verifier");
+                    let out = hv(&rows.tokens, &rows.positions);
+                    m.absorb(&mut st, &out).unwrap();
+                }
+            }
+        }
+        assert_eq!(st.tokens, whole.tokens);
+        assert_eq!(st.metrics.cycles, whole.metrics.cycles);
+        assert_eq!(st.metrics.new_tokens, whole.metrics.new_tokens);
+    }
+
+    /// Speculation must actually happen: multi-token cycles (tau > 1) and
+    /// at least one rejection (the drafted miss every third position).
+    #[test]
+    fn mock_speculates_with_partial_acceptance() {
+        let mut m = Mock;
+        let out = m.generate(&req(40, 11)).unwrap();
+        assert_eq!(out.tokens.len(), 40);
+        assert!(out.metrics.tau() > 1.0, "tau={}", out.metrics.tau());
+        assert!(out.metrics.cycles < 40, "no speculation happened");
+        assert!(
+            out.metrics.draft_tokens_verified > 0,
+            "verification must see draft tokens"
+        );
+    }
+
     #[test]
     fn mock_respects_degenerate_max_new() {
         let mut m = Mock;
@@ -98,5 +252,17 @@ mod tests {
         assert_eq!(out.tokens.len(), 1);
         let out = m.generate(&req(0, 0)).unwrap();
         assert!(out.tokens.is_empty());
+    }
+
+    #[test]
+    fn mock_verify_batches_like_per_row_calls() {
+        let tokens = [40i32, 55, 70];
+        let positions = [3usize, 9, 4];
+        let batched = mock_verify(&tokens, &positions);
+        assert_eq!(batched.logits.dims, vec![3, tokenizer::VOCAB]);
+        for i in 0..3 {
+            let solo = mock_verify(&tokens[i..i + 1], &positions[i..i + 1]);
+            assert_eq!(batched.logits.row(i), solo.logits.row(0), "row {i} scattered wrong");
+        }
     }
 }

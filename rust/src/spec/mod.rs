@@ -14,6 +14,36 @@
 //! All methods share the target session + the lossless verification walk;
 //! HASS differs from EAGLE-2 *only* by its draft checkpoint — exactly the
 //! paper's setup (training-time contribution, zero inference overhead).
+//!
+//! ## The plan/absorb protocol (cross-session batched verification)
+//!
+//! A drafting-verification cycle is split into two phases so a scheduler
+//! can *fuse* the target forward passes of many live sessions into one
+//! compiled decode-block call (the target forward dominates wall time,
+//! so verification throughput — not draft quality — bounds speedup once
+//! hardware is shared across requests):
+//!
+//! * [`Method::plan`] runs everything up to the target call — drafting,
+//!   tree expansion, rerank — and returns a [`StepPlan`]:
+//!   [`StepPlan::Verify`] carries the candidate rows ([`VerifyRows`]:
+//!   tokens, absolute positions, per-row tree mask) for this cycle;
+//!   [`StepPlan::Finished`] means the session ended while planning (cache
+//!   exhausted, already done); [`StepPlan::Unbatchable`] means the method
+//!   cannot express this cycle as an external verify (lookup chains) and
+//!   the caller must fall back to the opaque [`Method::step`].
+//! * [`Method::absorb`] consumes the externally produced target outputs
+//!   ([`VerifyOut`]: per-row logits + features) for the planned rows —
+//!   acceptance walk, KV commit, token emission — exactly as if the
+//!   session had run the verify itself.
+//!
+//! [`Method::step`] is re-derived as `plan` + single-session verify +
+//! `absorb` (the default [`Method::verify`] executor), so `generate`,
+//! `run_suite`, bench and table callers are untouched, and a solo drive
+//! is token-for-token identical to a fused one: each phase only touches
+//! per-session state (own RNG stream, own KV caches, own metrics).
+//! Schedulers call `plan` on every live session, pack the `Verify` rows
+//! into one block-diagonal target call (`engine::sessions::fused_decode`),
+//! scatter the outputs, and `absorb` each session independently.
 
 pub mod eagle;
 pub mod lookup;
@@ -27,11 +57,12 @@ use std::any::Any;
 use anyhow::Result;
 
 use crate::engine::metrics::Metrics;
-use crate::engine::sessions::DecodeOut;
+use crate::engine::sessions::{DecodeOut, TargetSession};
 use crate::sampling::{accept_at_node, process_logits, SampleParams};
 use crate::tokenizer::EOS;
 use crate::tree::VerifyPlan;
 use crate::util::rng::Rng;
+use crate::util::stats::Stopwatch;
 
 #[derive(Clone, Debug)]
 pub struct GenRequest {
@@ -114,6 +145,50 @@ pub struct StepOutcome {
     pub done: bool,
 }
 
+/// Target outputs for one session's planned verification rows (per-row
+/// logits + post-LN features) — produced by a solo verify or scattered
+/// out of a fused call.
+pub type VerifyOut = DecodeOut;
+
+/// Candidate rows one session wants target-verified this cycle (row 0 is
+/// the tree root / chain head).
+#[derive(Clone, Debug)]
+pub struct VerifyRows {
+    pub tokens: Vec<i32>,
+    /// absolute sequence position of each row
+    pub positions: Vec<usize>,
+    /// intra-block visibility: `mask[a][b]` == row a may attend to row b
+    /// (self included).  `None` = chain semantics (row i sees rows 0..=i).
+    pub block_anc: Option<Vec<Vec<bool>>>,
+}
+
+impl VerifyRows {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// What `Method::plan` decided for this cycle (module docs).
+pub enum StepPlan {
+    /// verify these rows through one (possibly fused) target forward,
+    /// then call `absorb` with the outputs
+    Verify(VerifyRows),
+    /// this cycle cannot be expressed as plan/absorb — drive the session
+    /// with `step` instead (plan had no side effects)
+    Unbatchable,
+    /// the session finished while planning (no verify needed)
+    Finished(StepOutcome),
+}
+
+/// A runtime-free batch verifier shared by every instance of a method
+/// (e.g. `mock`): rows from many sessions are concatenated into one call
+/// and the outputs scattered back, mirroring the compiled fused path.
+pub type HostVerifier = fn(&[i32], &[usize]) -> VerifyOut;
+
 /// A speculative-decoding method as a resumable state machine.
 ///
 /// `start` prefills and samples the first token; each `step` advances one
@@ -134,8 +209,68 @@ pub trait Method {
     /// `max_new <= 1`).
     fn start(&mut self, req: &GenRequest) -> Result<GenState>;
 
+    /// Phase 1 of a cycle: draft/expand and emit this cycle's candidate
+    /// rows (module docs).  The default declares the method unbatchable,
+    /// which routes schedulers to the opaque `step`.
+    fn plan(&mut self, state: &mut GenState) -> Result<StepPlan> {
+        let _ = state;
+        Ok(StepPlan::Unbatchable)
+    }
+
+    /// Phase 2 of a cycle: acceptance walk + KV commit from externally
+    /// supplied target outputs for the rows the last `plan` emitted.
+    fn absorb(&mut self, state: &mut GenState, out: &VerifyOut) -> Result<StepOutcome> {
+        let _ = (state, out);
+        anyhow::bail!("method '{}' does not implement plan/absorb", self.name())
+    }
+
+    /// The target session used for fused verification, if this method
+    /// verifies through a compiled target graph.  Schedulers pack the
+    /// sessions of co-active `plan`s into one decode-block call.
+    fn fused_handle(&mut self) -> Option<&mut TargetSession> {
+        None
+    }
+
+    /// Runtime-free batch verifier (see [`HostVerifier`]); methods expose
+    /// one *instead of* a `fused_handle`.
+    fn host_verifier(&self) -> Option<HostVerifier> {
+        None
+    }
+
+    /// Single-session verify executor for the rows `plan` emitted: the
+    /// solo counterpart of a fused call, charging the session one target
+    /// call.  Methods normally inherit this.
+    fn verify(&mut self, state: &mut GenState, rows: &VerifyRows) -> Result<VerifyOut> {
+        let sw = Stopwatch::start();
+        let out = if let Some(hv) = self.host_verifier() {
+            hv(&rows.tokens, &rows.positions)
+        } else if let Some(t) = self.fused_handle() {
+            t.decode(&rows.tokens, &rows.positions, rows.block_anc.as_deref())?
+        } else {
+            anyhow::bail!("method '{}' has no verify executor", self.name())
+        };
+        state.metrics.phases.verify_s += sw.secs();
+        state.metrics.target_calls += 1;
+        Ok(out)
+    }
+
     /// Advance the session by one cycle; sets `state.done` when final.
-    fn step(&mut self, state: &mut GenState) -> Result<StepOutcome>;
+    /// Re-derived as `plan` + solo `verify` + `absorb`, so a step-driven
+    /// session is token-for-token identical to a fused one.  Unbatchable
+    /// methods override this directly.
+    fn step(&mut self, state: &mut GenState) -> Result<StepOutcome> {
+        match self.plan(state)? {
+            StepPlan::Finished(o) => Ok(o),
+            StepPlan::Verify(rows) => {
+                let out = self.verify(state, &rows)?;
+                self.absorb(state, &out)
+            }
+            StepPlan::Unbatchable => anyhow::bail!(
+                "method '{}' implements neither `step` nor a batchable plan",
+                self.name()
+            ),
+        }
+    }
 
     /// Run a session to completion (default loop over `start` + `step`).
     fn generate(&mut self, req: &GenRequest) -> Result<GenOutput> {

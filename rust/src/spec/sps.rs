@@ -11,7 +11,7 @@ use anyhow::{Context, Result};
 use crate::engine::sessions::{SpsSession, TargetSession};
 use crate::runtime::{Checkpoint, Runtime};
 use crate::sampling::{process_logits, sample_token, verify_chain};
-use crate::spec::{GenRequest, GenState, Method, StepOutcome};
+use crate::spec::{GenRequest, GenState, Method, StepOutcome, StepPlan, VerifyOut, VerifyRows};
 use crate::util::stats::Stopwatch;
 
 pub struct Sps {
@@ -24,6 +24,15 @@ pub struct Sps {
 struct SpsState {
     /// tokens emitted but not yet in the draft LM's cache
     draft_backlog: Vec<i32>,
+    /// the γ-chain drafted by `plan`, awaiting `absorb`
+    pending: Option<SpsPending>,
+}
+
+/// A drafted chain in flight between `plan` and `absorb`.
+struct SpsPending {
+    chain: Vec<i32>,
+    /// full draft distribution at each chain position (rejection sampling)
+    chain_q: Vec<Vec<f32>>,
 }
 
 impl Sps {
@@ -47,7 +56,7 @@ impl Method for Sps {
     }
 
     fn start(&mut self, req: &GenRequest) -> Result<GenState> {
-        let mut state = GenState::new(req, SpsState { draft_backlog: Vec::new() });
+        let mut state = GenState::new(req, SpsState { draft_backlog: Vec::new(), pending: None });
         self.target.reset();
         self.draft.reset();
 
@@ -72,18 +81,24 @@ impl Method for Sps {
         Ok(state)
     }
 
-    fn step(&mut self, state: &mut GenState) -> Result<StepOutcome> {
+    fn fused_handle(&mut self) -> Option<&mut TargetSession> {
+        Some(&mut self.target)
+    }
+
+    fn plan(&mut self, state: &mut GenState) -> Result<StepPlan> {
         let gamma = self.gamma;
         let inner = state
             .inner
             .downcast_mut::<SpsState>()
-            .context("sps step on a foreign GenState")?;
+            .context("sps plan on a foreign GenState")?;
+        // the verify call burns a full padded decode block of target slots
+        let verify_n = crate::engine::sessions::padded_span(gamma + 1);
         if state.done
-            || self.target.cache.remaining() <= gamma + 2
+            || self.target.cache.remaining() <= verify_n + 1
             || self.draft.cache.remaining() <= gamma + inner.draft_backlog.len() + 2
         {
             state.finish();
-            return Ok(StepOutcome { emitted: 0, done: true });
+            return Ok(StepPlan::Finished(StepOutcome { emitted: 0, done: true }));
         }
         let plen = state.req.prompt_tokens.len();
         let root = *state.tokens.last().context("session has no tokens")?;
@@ -113,20 +128,30 @@ impl Method for Sps {
         }
         state.metrics.phases.draft_s += sw.secs();
 
-        // ---- verify [root, chain...] in one target call ----
-        let sw = Stopwatch::start();
+        // ---- the verify rows: [root, chain...] as one chain block ----
         let mut block = vec![root];
         block.extend(&chain);
         let base_pos = plen + state.tokens.len() - 1;
         let positions: Vec<usize> = (0..block.len()).map(|i| base_pos + i).collect();
-        let ver = self.target.decode(&block, &positions, None)?;
-        state.metrics.phases.verify_s += sw.secs();
-        state.metrics.target_calls += 1;
+        inner.pending = Some(SpsPending { chain, chain_q });
+        Ok(StepPlan::Verify(VerifyRows { tokens: block, positions, block_anc: None }))
+    }
+
+    fn absorb(&mut self, state: &mut GenState, ver: &VerifyOut) -> Result<StepOutcome> {
+        let gamma = self.gamma;
+        let inner = state
+            .inner
+            .downcast_mut::<SpsState>()
+            .context("sps absorb on a foreign GenState")?;
+        let SpsPending { chain, chain_q } = inner
+            .pending
+            .take()
+            .context("sps absorb without a planned cycle")?;
         state.metrics.draft_tokens_verified += chain.len();
 
         // ---- rejection sampling ----
         let sw = Stopwatch::start();
-        let target_probs: Vec<Vec<f32>> = (0..block.len())
+        let target_probs: Vec<Vec<f32>> = (0..chain.len() + 1)
             .map(|i| process_logits(ver.logits.row(i), &state.req.params))
             .collect();
         let verdict = verify_chain(&chain, &chain_q, &target_probs, &mut state.rng);

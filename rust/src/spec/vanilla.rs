@@ -8,7 +8,7 @@ use anyhow::{Context, Result};
 use crate::engine::sessions::TargetSession;
 use crate::runtime::{Checkpoint, Runtime};
 use crate::sampling::{process_logits, sample_token};
-use crate::spec::{GenRequest, GenState, Method, StepOutcome};
+use crate::spec::{GenRequest, GenState, Method, StepOutcome, StepPlan, VerifyOut, VerifyRows};
 use crate::util::stats::Stopwatch;
 
 pub struct Vanilla {
@@ -47,23 +47,37 @@ impl Method for Vanilla {
         Ok(state)
     }
 
-    fn step(&mut self, state: &mut GenState) -> Result<StepOutcome> {
+    fn fused_handle(&mut self) -> Option<&mut TargetSession> {
+        Some(&mut self.target)
+    }
+
+    /// One AR step as a single-row verify block: even the baseline rides
+    /// the fused path, so a pool mixing vanilla and tree methods still
+    /// runs one target forward per cycle.
+    fn plan(&mut self, state: &mut GenState) -> Result<StepPlan> {
         state
             .inner
             .downcast_ref::<VanillaState>()
-            .context("vanilla step on a foreign GenState")?;
+            .context("vanilla plan on a foreign GenState")?;
         let plen = state.req.prompt_tokens.len();
         if state.done || self.target.cache.remaining() <= 1 {
             state.finish();
-            return Ok(StepOutcome { emitted: 0, done: true });
+            return Ok(StepPlan::Finished(StepOutcome { emitted: 0, done: true }));
         }
         let next = *state.tokens.last().context("session has no tokens")?;
         let pos = plen + state.tokens.len() - 1;
+        Ok(StepPlan::Verify(VerifyRows {
+            tokens: vec![next],
+            positions: vec![pos],
+            block_anc: None,
+        }))
+    }
 
-        let sw = Stopwatch::start();
-        let out = self.target.decode(&[next], &[pos], None)?;
-        state.metrics.phases.verify_s += sw.secs();
-        state.metrics.target_calls += 1;
+    fn absorb(&mut self, state: &mut GenState, out: &VerifyOut) -> Result<StepOutcome> {
+        state
+            .inner
+            .downcast_ref::<VanillaState>()
+            .context("vanilla absorb on a foreign GenState")?;
         self.target.commit_rows(&[0], &out.feats)?;
 
         let sw = Stopwatch::start();

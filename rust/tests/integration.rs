@@ -359,14 +359,22 @@ fn pool_roundtrip_with_artifacts() {
     sched.shutdown();
 }
 
+/// Pool-shape override for the CI matrix: `HASS_TEST_POOL_WORKERS` /
+/// `HASS_TEST_POOL_MAX_ACTIVE` re-run the pool-shape-agnostic serving
+/// tests with e.g. 2 workers x 4 sessions, so the fused verification
+/// path is exercised end-to-end in CI (see .github/workflows/ci.yml).
+fn env_pool(var: &str, default: usize) -> usize {
+    std::env::var(var).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 /// Spawn a TCP server over a fresh pool (no artifacts needed for `mock`).
 fn mock_server(workers: usize, max_active: usize) -> (Arc<hass::scheduler::Scheduler>, String) {
     let sched = Arc::new(hass::scheduler::Scheduler::start(
         std::path::PathBuf::from("/nonexistent/hass-artifacts"),
         MethodCfg::default(),
         16,
-        workers,
-        max_active,
+        env_pool("HASS_TEST_POOL_WORKERS", workers),
+        env_pool("HASS_TEST_POOL_MAX_ACTIVE", max_active),
     ));
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
@@ -410,6 +418,82 @@ fn tcp_streaming_deltas_concatenate_to_text() {
     assert_eq!(fin2.str_at("text"), Some(text.as_str()));
     assert!(fin2.get("done").is_none(), "legacy final line must not carry done");
     sched.shutdown();
+}
+
+/// Batched-verification equivalence over the seed artifacts: one worker
+/// fusing 4 co-active `hass` sessions must produce token-for-token the
+/// texts (and tau) of 4 sequential solo runs with the same seeds, with
+/// >= 2x fewer verify executions (the fused/solo counters mirror the
+/// runtime's target decode-block call counts).  Skips without artifacts
+/// or an executable backend, like every artifact test.
+#[test]
+fn fused_pool_matches_sequential_with_artifacts() {
+    let Some(dir) = serving_dir() else { return };
+    let run_batch = |sched: &hass::scheduler::Scheduler, temperature: f32| {
+        let rxs: Vec<_> = (0..4u64)
+            .map(|i| {
+                sched
+                    .submit(
+                        hass::scheduler::Job {
+                            id: i + 1,
+                            method: "hass".into(),
+                            prompt: PROMPT.into(),
+                            max_new: 24,
+                            temperature,
+                            seed: i,
+                            stream: false,
+                            deadline_ms: None,
+                        },
+                        true,
+                    )
+                    .unwrap()
+            })
+            .collect();
+        rxs.into_iter()
+            .map(|rx| loop {
+                match rx.recv().expect("scheduler dropped a job") {
+                    hass::scheduler::JobEvent::Done(r) => {
+                        assert!(r.error.is_none(), "job failed: {:?}", r.error);
+                        break (r.text, r.tokens, r.tau);
+                    }
+                    hass::scheduler::JobEvent::Delta { .. } => {}
+                }
+            })
+            .collect::<Vec<_>>()
+    };
+
+    // ---- equivalence: stochastic jobs, per-seed streams must match ----
+    let solo = hass::scheduler::Scheduler::start(dir.clone(), MethodCfg::default(), 16, 1, 1);
+    let want = run_batch(&solo, 1.0);
+    solo.shutdown();
+    let fused = hass::scheduler::Scheduler::start(dir.clone(), MethodCfg::default(), 16, 1, 4);
+    let got = run_batch(&fused, 1.0);
+    let eq_stats = fused.stats();
+    fused.shutdown();
+    for (i, (w, g)) in want.iter().zip(got.iter()).enumerate() {
+        assert_eq!(g.0, w.0, "job {i}: fused text diverged from sequential solo");
+        assert_eq!(g.1, w.1, "job {i}: token count diverged");
+        assert!((g.2 - w.2).abs() < 1e-9, "job {i}: tau diverged");
+    }
+    assert!(eq_stats.fused_calls() > 0, "fused path must be exercised");
+
+    // ---- call reduction: equal-length greedy jobs run in lockstep, so
+    // the fused pool must issue >= 2x fewer verify executions (each
+    // execution is one target decode-block graph call) ----
+    let solo = hass::scheduler::Scheduler::start(dir.clone(), MethodCfg::default(), 16, 1, 1);
+    run_batch(&solo, 0.0);
+    let solo_stats = solo.stats();
+    solo.shutdown();
+    let fused = hass::scheduler::Scheduler::start(dir, MethodCfg::default(), 16, 1, 4);
+    run_batch(&fused, 0.0);
+    let fused_stats = fused.stats();
+    fused.shutdown();
+    assert!(
+        fused_stats.verify_calls() * 2 <= solo_stats.verify_calls(),
+        "expected >= 2x fewer target verify calls: fused {} vs solo {}",
+        fused_stats.verify_calls(),
+        solo_stats.verify_calls()
+    );
 }
 
 /// End-to-end cancellation over TCP: cancel a streaming job mid-flight
