@@ -16,7 +16,10 @@
 //! verification); the run ends with a streamed request that counts
 //! per-cycle delta lines, followed by a fused-vs-solo verification
 //! comparison (one worker, `--max-active 1` vs `4`, same jobs) whose
-//! numbers are written to `BENCH_fused_verify.json`.
+//! numbers are written to `BENCH_fused_verify.json`, and a paged-KV
+//! shared-prompt scenario (host pack bytes/cycle and fusion capacity,
+//! paged vs. contiguous, plus scheduler pack counters) written to
+//! `BENCH_paged_kv.json`.
 
 use std::sync::Arc;
 
@@ -156,6 +159,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     fused_verify_bench(&dir, &wl, &method, n_requests)?;
+    paged_kv_bench(&dir, &method)?;
     Ok(())
 }
 
@@ -277,5 +281,187 @@ fn fused_verify_bench(
     let out = Json::obj(kv).to_string();
     std::fs::write("BENCH_fused_verify.json", &out)?;
     println!("  wrote BENCH_fused_verify.json");
+    Ok(())
+}
+
+/// Paged-KV shared-prompt scenario (PR 4): N sessions share one prompt,
+/// then run fused verify cycles.
+///
+/// Two parts:
+/// * a host-level packing microbench over real `KvCache`/`FusedScratch`
+///   state (no artifacts needed): steady-state pack bytes per cycle under
+///   paged staging vs. the contiguous gather the old packer did, plus the
+///   fusion-capacity ceiling (max co-active sessions) old vs. new;
+/// * the same shared-prompt fleet through a 1-worker scheduler pool, so
+///   the wire counters (`pack_pages_copied` / `pack_pages_reused` /
+///   `shared_pages`) land in the report when a runnable method exists.
+///
+/// Results go to stdout and `BENCH_paged_kv.json`.
+fn paged_kv_bench(dir: &std::path::Path, method: &str) -> anyhow::Result<()> {
+    use hass::engine::sessions::pick_block;
+    use hass::kvcache::{FusedScratch, KvCache, PackMember, PackedLayout};
+    use hass::runtime::TensorF;
+    use hass::scheduler::{Job, Scheduler};
+    use hass::spec::MethodCfg;
+    use hass::util::json::Json;
+
+    // ---- host microbench: paged vs contiguous pack cost ----
+    let (layers, slots, heads, hd) = (2usize, 512usize, 2usize, 8usize);
+    let rs = heads * hd;
+    let page = KvCache::new(layers, slots, heads, hd).page_size();
+    // 8 sessions x 128-slot shared prompt: the contiguous packer's bound
+    // ((slots - block) / prompt = 3 sessions) is exceeded, the paged one
+    // holds the prompt pages once + one private tail page per session
+    let (n_sessions, prompt_len, rows_per, cycles) = (8usize, 128usize, 4usize, 8usize);
+
+    let full_tensors = |seed: u32| -> (TensorF, TensorF) {
+        let n = layers * slots * rs;
+        let f =
+            |i: usize| ((i as u32).wrapping_mul(2654435761).wrapping_add(seed) % 9973) as f32 * 0.1;
+        (
+            TensorF { dims: vec![layers, slots, heads, hd], data: (0..n).map(f).collect() },
+            TensorF { dims: vec![layers, slots, heads, hd], data: (0..n).map(|i| -f(i)).collect() },
+        )
+    };
+    // identical prompt KV -> prefill dedup shares the prompt pages
+    let mut sessions: Vec<KvCache> = (0..n_sessions)
+        .map(|_| {
+            let mut c = KvCache::new(layers, slots, heads, hd);
+            let (k, v) = full_tensors(7);
+            c.absorb(k, v, prompt_len).expect("absorb prompt");
+            c.committed = prompt_len;
+            c
+        })
+        .collect();
+
+    let mut scratch = FusedScratch::new();
+    let width = pick_block(n_sessions * rows_per);
+    let mut copied_per_cycle = Vec::new();
+    let mut reused_per_cycle = Vec::new();
+    let mut shared_last = 0usize;
+    let mut fused_ok = true;
+    for cycle in 0..cycles {
+        let mut handles = Vec::new();
+        let mut members = Vec::new();
+        for c in sessions.iter_mut() {
+            let pages = c.committed_pages();
+            members.push(PackMember {
+                page_ids: pages.iter().map(|p| p.id()).collect(),
+                prefix_len: c.committed,
+                rows: rows_per,
+            });
+            handles.push(pages);
+        }
+        let layout = match PackedLayout::plan(&members, slots, page, width) {
+            Ok(l) => l,
+            Err(e) => {
+                println!("  paged pack stopped at cycle {cycle}: {e:#}");
+                fused_ok = false;
+                break;
+            }
+        };
+        let st = scratch.pack(&layout, &handles, layers, rs)?;
+        // release handles before the writes below (as fused_decode does)
+        drop(handles);
+        copied_per_cycle.push(st.pages_copied);
+        reused_per_cycle.push(st.pages_reused);
+        shared_last = st.shared_pages;
+        // each session accepts 2 rows: write at committed, then commit
+        for (si, c) in sessions.iter_mut().enumerate() {
+            let (k, v) = full_tensors(1000 + (cycle * n_sessions + si) as u32);
+            let at = c.committed;
+            c.write_rows_from(&k, &v, at, at, 2)?;
+            c.commit(2)?;
+        }
+    }
+    let page_bytes = 2 * layers * page * rs * 4; // k + v, f32
+    let steady_copied = copied_per_cycle.last().copied().unwrap_or(0);
+    let paged_bytes_cycle = steady_copied * page_bytes;
+    // the old packer gathered every member's whole committed prefix
+    let contiguous_bytes_cycle: usize =
+        sessions.iter().map(|c| 2 * layers * c.committed * rs * 4).sum();
+    // fusion capacity for this shared-prompt fleet: old counted each
+    // member's full prefix; paged counts the shared pages once + each
+    // member's private tail page(s)
+    let prompt_pages = prompt_len.div_ceil(page);
+    let old_capacity = (slots.saturating_sub(width)) / prompt_len;
+    let mut new_capacity = 0usize;
+    while (prompt_pages + (new_capacity + 1)) * page + width <= slots {
+        new_capacity += 1; // shared prompt pages + one private tail each
+    }
+    println!("\n== paged KV: shared-prompt pack cost (host microbench) ==");
+    println!(
+        "  {n_sessions} sessions x {prompt_len}-slot shared prompt, page={page}, \
+         {rows_per} rows/cycle"
+    );
+    println!(
+        "  steady-state pack: {steady_copied} pages copied/cycle ({paged_bytes_cycle} B) vs \
+         contiguous gather {contiguous_bytes_cycle} B; shared_pages={shared_last}"
+    );
+    println!(
+        "  fusion capacity (shared prompt): {old_capacity} sessions (contiguous bound) -> \
+         {new_capacity} (paged bound)"
+    );
+
+    // ---- the same fleet through a scheduler pool (wire counters) ----
+    let shared_prompt = "User: Summarize the history of container shipping.\nAssistant:";
+    let sched = Scheduler::start(dir.to_path_buf(), MethodCfg::default(), 64, 1, n_sessions);
+    let (rtx, rrx) = std::sync::mpsc::channel();
+    for i in 0..n_sessions {
+        let job = Job {
+            id: i as u64 + 1,
+            method: method.to_string(),
+            prompt: shared_prompt.to_string(),
+            max_new: 24,
+            temperature: 0.0,
+            seed: i as u64,
+            stream: false,
+            deadline_ms: None,
+        };
+        sched.submit_to(job, true, rtx.clone())?;
+    }
+    drop(rtx);
+    let mut sched_errors = 0usize;
+    for r in rrx.iter().filter_map(hass::scheduler::JobEvent::into_result) {
+        if r.error.is_some() {
+            sched_errors += 1;
+        }
+    }
+    let pool = sched.stats();
+    sched.shutdown();
+    println!(
+        "  scheduler fleet ('{method}', {n_sessions} shared-prompt jobs): \
+         pack_copied={} pack_reused={} shared_pages={} errors={sched_errors}",
+        pool.pack_pages_copied(),
+        pool.pack_pages_reused(),
+        pool.shared_pages(),
+    );
+
+    let report = Json::obj(vec![
+        ("page_size", Json::num(page as f64)),
+        ("sessions", Json::num(n_sessions as f64)),
+        ("prompt_len", Json::num(prompt_len as f64)),
+        ("rows_per_cycle", Json::num(rows_per as f64)),
+        ("fused_ok", Json::Bool(fused_ok)),
+        (
+            "pages_copied_per_cycle",
+            Json::Arr(copied_per_cycle.iter().map(|&c| Json::num(c as f64)).collect()),
+        ),
+        (
+            "pages_reused_per_cycle",
+            Json::Arr(reused_per_cycle.iter().map(|&c| Json::num(c as f64)).collect()),
+        ),
+        ("shared_pages", Json::num(shared_last as f64)),
+        ("paged_pack_bytes_per_cycle", Json::num(paged_bytes_cycle as f64)),
+        ("contiguous_pack_bytes_per_cycle", Json::num(contiguous_bytes_cycle as f64)),
+        ("fused_capacity_sessions_contiguous", Json::num(old_capacity as f64)),
+        ("fused_capacity_sessions_paged", Json::num(new_capacity as f64)),
+        ("scheduler_pack_pages_copied", Json::num(pool.pack_pages_copied() as f64)),
+        ("scheduler_pack_pages_reused", Json::num(pool.pack_pages_reused() as f64)),
+        ("scheduler_shared_pages", Json::num(pool.shared_pages() as f64)),
+        ("scheduler_errors", Json::num(sched_errors as f64)),
+    ]);
+    std::fs::write("BENCH_paged_kv.json", report.to_string())?;
+    println!("  wrote BENCH_paged_kv.json");
     Ok(())
 }

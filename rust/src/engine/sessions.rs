@@ -10,7 +10,7 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
-use crate::kvcache::{KvCache, PackedLayout};
+use crate::kvcache::{FusedScratch, KvCache, PackMember, PackedLayout};
 use crate::runtime::{scalar_i32, Checkpoint, Runtime, TensorF, TensorI};
 use crate::spec::VerifyRows;
 
@@ -141,7 +141,7 @@ impl TargetSession {
         let kv_k = tensor_out(&out, 1)?;
         let kv_v = tensor_out(&out, 2)?;
         let logits = tensor_out(&out, 3)?;
-        self.cache.absorb(kv_k, kv_v)?;
+        self.cache.absorb(kv_k, kv_v, tokens.len())?;
         self.cache.committed = tokens.len();
         self.feats = (0..tokens.len()).map(|i| feats.row(i).to_vec()).collect();
         Ok(logits.row(tokens.len() - 1).to_vec())
@@ -245,18 +245,24 @@ impl TargetSession {
             }
         }
         let graph = format!("target_decode_n{nb}");
+        // borrow the incrementally synced image (O(changed pages), no
+        // full-buffer clone per call) just long enough to build literals
+        let dims = [self.cache.layers, self.cache.slots, self.cache.heads, self.cache.head_dim];
+        let (kv_k, kv_v) = {
+            let (ik, iv) = self.cache.sync_image();
+            (
+                crate::runtime::tensor::f32_literal(&dims, ik)?,
+                crate::runtime::tensor::f32_literal(&dims, iv)?,
+            )
+        };
         let out = call(
             &self.rt,
             &graph,
             &self.weights.literals,
             &[],
             &[
-                crate::runtime::tensor::f32_literal(
-                    &[self.cache.layers, self.cache.slots, self.cache.heads, self.cache.head_dim],
-                    &self.cache.k)?,
-                crate::runtime::tensor::f32_literal(
-                    &[self.cache.layers, self.cache.slots, self.cache.heads, self.cache.head_dim],
-                    &self.cache.v)?,
+                kv_k,
+                kv_v,
                 scalar_i32((c + base) as i32),
                 TensorI::new(vec![nb], tok)?.to_literal()?,
                 TensorI::new(vec![nb], pos)?.to_literal()?,
@@ -266,7 +272,11 @@ impl TargetSession {
         self.rt.record_rows(&graph, n);
         let logits = tensor_out(&out, 0)?;
         let feats = tensor_out(&out, 1)?;
-        self.cache.absorb(tensor_out(&out, 2)?, tensor_out(&out, 3)?)?;
+        // the graph only writes the nb block rows at c + base; scatter
+        // exactly those back instead of replacing the whole paged cache
+        let new_k = tensor_out(&out, 2)?;
+        let new_v = tensor_out(&out, 3)?;
+        self.cache.write_rows_from(&new_k, &new_v, c + base, c + base, nb)?;
         Ok(DecodeOut { logits, feats })
     }
 
@@ -287,21 +297,29 @@ impl TargetSession {
 
 /// One fused target forward over several sessions' verification blocks.
 ///
-/// Packs every member's committed KV prefix and candidate rows into one
-/// synthetic cache (layout: [`PackedLayout`]) and runs a SINGLE compiled
-/// decode-block call with a block-diagonal visibility mask — the graph is
-/// purely mask-driven (positions feed only the positional embedding, the
-/// write pointer is an input scalar), so relocating each member's prefix
-/// to a packed offset is exact.  Afterwards the per-row logits/features
-/// are scattered back per member, and each member's freshly written KV
-/// rows are copied into its own cache at its own committed boundary —
-/// leaving every session byte-identical to having run its solo `decode`.
+/// Packs every member's committed KV pages and candidate rows into the
+/// worker's persistent [`FusedScratch`] image (layout: [`PackedLayout`])
+/// and runs a SINGLE compiled decode-block call with a block-diagonal
+/// visibility mask — the graph is purely mask-driven (positions feed only
+/// the positional embedding, the write pointer is an input scalar), so
+/// relocating each member's pages to packed offsets is exact.  Packing is
+/// O(changed pages): whole pages are memcpy'd, pages already staged from
+/// a previous cycle (same `(id, stamp)`) are skipped, and a page shared
+/// by several members (identical prompt prefix) occupies ONE fused
+/// segment.  Afterwards the per-row logits/features are scattered back
+/// per member, and each member's freshly written KV rows are copied into
+/// its own cache at its own committed boundary — leaving every session
+/// byte-identical to having run its solo `decode`.
 ///
 /// All members must share one runtime (same worker thread), one target
-/// checkpoint, and one cache geometry; the caller is responsible for
-/// grouping by capacity (`Σ prefixes + pick_block(Σ rows) <= slots`,
+/// checkpoint, and one cache geometry + page size; the caller is
+/// responsible for grouping by capacity
+/// (`(unique pages)·page_size + pick_block(Σ rows) <= slots`,
 /// `Σ rows <= MAX_BLOCK`).
-pub fn fused_decode(batch: &mut [(&mut TargetSession, &VerifyRows)]) -> Result<Vec<DecodeOut>> {
+pub fn fused_decode(
+    scratch: &mut FusedScratch,
+    batch: &mut [(&mut TargetSession, &VerifyRows)],
+) -> Result<Vec<DecodeOut>> {
     if batch.is_empty() {
         bail!("empty fused batch");
     }
@@ -310,9 +328,9 @@ pub fn fused_decode(batch: &mut [(&mut TargetSession, &VerifyRows)]) -> Result<V
         bail!("fused batch of {rows_total} rows exceeds the largest artifact ({MAX_BLOCK})");
     }
     let nb = pick_block(rows_total);
-    let (layers, slots, heads, hd) = {
+    let (layers, slots, heads, hd, page_size) = {
         let c = &batch[0].0.cache;
-        (c.layers, c.slots, c.heads, c.head_dim)
+        (c.layers, c.slots, c.heads, c.head_dim, c.page_size())
     };
     for (t, _) in batch.iter() {
         if !Rc::ptr_eq(&t.weights, &batch[0].0.weights) {
@@ -322,19 +340,31 @@ pub fn fused_decode(batch: &mut [(&mut TargetSession, &VerifyRows)]) -> Result<V
             || t.cache.slots != slots
             || t.cache.heads != heads
             || t.cache.head_dim != hd
+            || t.cache.page_size() != page_size
         {
             bail!("fused members must share one cache geometry");
         }
     }
-    let prefix_lens: Vec<usize> = batch.iter().map(|(t, _)| t.cache.committed).collect();
-    let row_lens: Vec<usize> = batch.iter().map(|(_, r)| r.len()).collect();
-    let layout = PackedLayout::plan(&prefix_lens, &row_lens, slots, nb)?;
 
-    // ---- pack: prefixes, rows, positions, block-diagonal mask ----
-    let mut fused = KvCache::new(layers, slots, heads, hd);
-    for (j, (t, _)) in batch.iter().enumerate() {
-        fused.copy_slots_from(&t.cache, 0, layout.prefix_start[j], t.cache.committed)?;
+    // ---- pack: page handles -> layout -> incremental image assembly ----
+    let mut handles = Vec::with_capacity(batch.len());
+    let mut members = Vec::with_capacity(batch.len());
+    for (t, r) in batch.iter_mut() {
+        let pages = t.cache.committed_pages();
+        members.push(PackMember {
+            page_ids: pages.iter().map(|p| p.id()).collect(),
+            prefix_len: t.cache.committed,
+            rows: r.len(),
+        });
+        handles.push(pages);
     }
+    let layout = PackedLayout::plan(&members, slots, page_size, nb)?;
+    scratch.pack(&layout, &handles, layers, heads * hd)?;
+    // release the page handles NOW: holding them through the scatter
+    // would push every member's tail page to refcount > 1 and force a
+    // whole-page COW on the per-row write below, every cycle
+    drop(handles);
+
     let mut tok = vec![0i32; nb];
     let mut pos = vec![0i32; nb];
     for (j, (_, r)) in batch.iter().enumerate() {
@@ -346,7 +376,7 @@ pub fn fused_decode(batch: &mut [(&mut TargetSession, &VerifyRows)]) -> Result<V
     }
     let ancs: Vec<Option<&[Vec<bool>]>> =
         batch.iter().map(|(_, r)| r.block_anc.as_deref()).collect();
-    let mask = layout.mask(nb, &ancs);
+    let mask = layout.mask(nb, &ancs)?;
 
     // ---- one graph call for every member ----
     let rt = &batch[0].0.rt;
@@ -357,8 +387,8 @@ pub fn fused_decode(batch: &mut [(&mut TargetSession, &VerifyRows)]) -> Result<V
         &batch[0].0.weights.literals,
         &[],
         &[
-            crate::runtime::tensor::f32_literal(&[layers, slots, heads, hd], &fused.k)?,
-            crate::runtime::tensor::f32_literal(&[layers, slots, heads, hd], &fused.v)?,
+            crate::runtime::tensor::f32_literal(&[layers, slots, heads, hd], scratch.k())?,
+            crate::runtime::tensor::f32_literal(&[layers, slots, heads, hd], scratch.v())?,
             scalar_i32(layout.base as i32),
             TensorI::new(vec![nb], tok)?.to_literal()?,
             TensorI::new(vec![nb], pos)?.to_literal()?,
@@ -592,7 +622,7 @@ impl SpsSession {
         padded[..tokens.len()].copy_from_slice(tokens);
         let inp = TensorI::new(vec![self.slots], padded)?.to_literal()?;
         let out = call(&self.rt, "sps_prefill", &self.weights.literals, &[], &[inp])?;
-        self.cache.absorb(tensor_out(&out, 1)?, tensor_out(&out, 2)?)?;
+        self.cache.absorb(tensor_out(&out, 1)?, tensor_out(&out, 2)?, tokens.len())?;
         self.cache.committed = tokens.len();
         let logits = tensor_out(&out, 3)?;
         Ok(logits.row(tokens.len() - 1).to_vec())
@@ -600,19 +630,23 @@ impl SpsSession {
 
     /// One AR step; writes the token's KV at `committed` and commits it.
     pub fn decode1(&mut self, token: i32, position: usize) -> Result<Vec<f32>> {
-        let mask = self.cache.block_mask(1, None);
+        let mask = self.cache.block_mask(1, None)?;
+        let dims = [self.cache.layers, self.cache.slots, self.cache.heads, self.cache.head_dim];
+        let (kv_k, kv_v) = {
+            let (ik, iv) = self.cache.sync_image();
+            (
+                crate::runtime::tensor::f32_literal(&dims, ik)?,
+                crate::runtime::tensor::f32_literal(&dims, iv)?,
+            )
+        };
         let out = call(
             &self.rt,
             "sps_decode_n1",
             &self.weights.literals,
             &[],
             &[
-                crate::runtime::tensor::f32_literal(
-                    &[self.cache.layers, self.cache.slots, self.cache.heads, self.cache.head_dim],
-                    &self.cache.k)?,
-                crate::runtime::tensor::f32_literal(
-                    &[self.cache.layers, self.cache.slots, self.cache.heads, self.cache.head_dim],
-                    &self.cache.v)?,
+                kv_k,
+                kv_v,
                 scalar_i32(self.cache.committed as i32),
                 TensorI::new(vec![1], vec![token])?.to_literal()?,
                 TensorI::new(vec![1], vec![position as i32])?.to_literal()?,
@@ -621,7 +655,10 @@ impl SpsSession {
         )?;
         self.rt.record_rows("sps_decode_n1", 1);
         let logits = tensor_out(&out, 0)?;
-        self.cache.absorb(tensor_out(&out, 2)?, tensor_out(&out, 3)?)?;
+        let new_k = tensor_out(&out, 2)?;
+        let new_v = tensor_out(&out, 3)?;
+        let at = self.cache.committed;
+        self.cache.write_rows_from(&new_k, &new_v, at, at, 1)?;
         self.cache.commit(1)?;
         Ok(logits.row(0).to_vec())
     }

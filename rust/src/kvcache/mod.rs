@@ -1,42 +1,342 @@
-//! Host-side KV-cache manager.
+//! Host-side **paged** KV-cache manager.
 //!
-//! Serving graphs are functional: they take the whole cache, write N new
-//! rows at `write_start`, and return the updated cache.  The engine keeps
-//! the authoritative copy host-side and owns the commit/rollback policy:
+//! Serving graphs are functional: they take the whole `[L,S,H,hd]` cache,
+//! write N new rows at `write_start`, and return the updated cache.  The
+//! engine keeps the authoritative copy host-side and owns the
+//! commit/rollback policy — but since PR 4 the authoritative storage is
+//! **paged**, not one flat `Vec<f32>`:
 //!
-//! * tree verification writes its N rows at `committed`; after acceptance
-//!   the accepted rows are *compacted* down so the committed region stays
-//!   contiguous and the 512-slot cache isn't burned at N slots/cycle;
-//! * rejected rows need no cleanup — visibility masks are built from
-//!   `committed`, so stale rows are simply never attended to.
+//! * Storage is split into fixed-size [`Page`]s of `page_size` slots
+//!   (every layer of those slots lives in the page), refcounted via `Rc`.
+//!   A [`KvCache`] is a *block table*: `ceil(slots / page_size)` page
+//!   references, allocated lazily on first write.
+//! * **Copy-on-write**: writing through [`KvCache::write_rows_from`] or
+//!   [`KvCache::compact_accepted`] clones a page first when anyone else
+//!   still references it (another session, or the prompt-dedup registry
+//!   below).  Cloning a `KvCache` is therefore cheap and safe: both
+//!   copies share pages until they diverge.
+//! * **Shared prompt pages**: [`KvCache::absorb`] (the prefill path)
+//!   rebuilds the pages covering the prompt from the graph output
+//!   (later pages are dropped — masked until rewritten) and runs each
+//!   through a per-thread content-addressed registry — sessions admitted
+//!   with an identical prompt prefix end up referencing the *same*
+//!   physical pages.  The registry holds `Weak` references only,
+//!   verifies byte-for-byte equality on every hit (so a page mutated
+//!   after registration can never be falsely shared), and sweeps dead
+//!   entries periodically.
+//! * Each page carries a unique `id` plus a `stamp` bumped on every
+//!   in-place mutation.  `(id, stamp)` identifies page *content*, which
+//!   is what makes O(changed-pages) packing possible (below).
+//!
+//! Commit semantics are unchanged: tree verification writes its N rows at
+//! `committed`; after acceptance the accepted rows are *compacted* down
+//! (tail-page writes only) so the committed region stays contiguous;
+//! rejected rows need no cleanup — visibility masks are built from
+//! `committed`, so stale rows are simply never attended to.
+//!
+//! ## Packing: when bytes are copied vs. referenced
+//!
+//! The compiled graphs still want one contiguous `[L,S,H,hd]` buffer per
+//! call, so pages are materialized at two boundaries, both incrementally:
+//!
+//! * **Solo decode** ([`KvCache::sync_image`]): each cache lazily owns a
+//!   contiguous image plus a per-page `(id, stamp)` staging map; a decode
+//!   call refreshes only the pages whose stamp changed since the last
+//!   call (normally just the tail page) and hands the graph a borrowed
+//!   slice — no full-buffer clone per call.
+//! * **Fused verification** ([`FusedScratch`]): one per-worker synthetic
+//!   image packs many sessions' prefixes.  [`PackedLayout::plan`] assigns
+//!   each *distinct* page (by id) one page-aligned segment — co-active
+//!   sessions that share prompt pages reference the **same fused
+//!   segment**, which lifts the old `Σ prefixes + block <= slots` fusion
+//!   ceiling to `(unique pages) · page_size + block <= slots`.
+//!   [`FusedScratch::pack`] memcpys whole pages, skipping every page
+//!   whose `(id, stamp)` is already staged from a previous cycle, so the
+//!   steady-state host cost per cycle is bounded by the *changed* (tail)
+//!   pages, not the total prefix.  [`PackedLayout::mask`] composes the
+//!   block-diagonal visibility mask from each member's own page segments
+//!   (a shared segment is visible to every sharer; padding slots inside a
+//!   tail page are visible to no one).
+//!
+//! Masks make all of this exact: the graphs are purely mask-driven
+//! (positions feed only the positional embedding; prefix KV carries its
+//! positions baked in), so relocating a page to any slot offset changes
+//! nothing a visible row can observe.
+
+use std::cell::{Cell, RefCell};
+use std::collections::{HashMap, HashSet};
+use std::rc::{Rc, Weak};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 use anyhow::{bail, Result};
 
 use crate::runtime::{TensorF, TensorI};
 
+/// Default page size in slots; `HASS_TEST_PAGE_SIZE` overrides it (the CI
+/// matrix runs the suite at an odd size so page-boundary edge cases are
+/// exercised in every build).
+pub fn default_page_size() -> usize {
+    static PS: OnceLock<usize> = OnceLock::new();
+    *PS.get_or_init(|| {
+        std::env::var("HASS_TEST_PAGE_SIZE")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&p| p > 0)
+            .unwrap_or(32)
+    })
+}
+
+/// Monotonic source for page ids and mutation stamps (never reused, so an
+/// `(id, stamp)` staging key can never alias two different contents).
+static NEXT_PAGE_STAMP: AtomicU64 = AtomicU64::new(1);
+
+fn next_stamp() -> u64 {
+    NEXT_PAGE_STAMP.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One fixed-size block of KV storage: `page_size` slots across every
+/// layer, for both K and V (layout `[L, page_size, H*hd]`, layer-major).
+/// Pages are shared by `Rc`; mutation goes through the owning cache's
+/// copy-on-write discipline ([`KvCache`] module docs).
+#[derive(Debug)]
+pub struct Page {
+    id: u64,
+    /// bumped on every in-place mutation — `(id, stamp)` is the staging
+    /// key that lets packers skip unchanged pages
+    stamp: Cell<u64>,
+    layers: usize,
+    page_size: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Page {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn stamp(&self) -> u64 {
+        self.stamp.get()
+    }
+}
+
+/// Shared handle to one physical page.
+pub type PageRef = Rc<Page>;
+
+/// Per-thread content-addressed page registry (prompt sharing).  Keyed by
+/// a content hash; every hit is verified byte-for-byte, so hash collisions
+/// and post-registration mutations are both harmless.  Dead entries are
+/// pruned per-bucket on every access and globally every
+/// [`DEDUP_SWEEP_EVERY`] registrations, so unique-prompt traffic cannot
+/// grow the registry without bound.
+thread_local! {
+    static PAGE_DEDUP: RefCell<PageRegistry> = RefCell::new(PageRegistry::default());
+}
+
+/// Global sweep cadence: after this many registrations, drop every bucket
+/// entry whose page died (a dead `Weak` still pins the `RcBox`).
+const DEDUP_SWEEP_EVERY: usize = 1024;
+
+#[derive(Default)]
+struct PageRegistry {
+    buckets: HashMap<u64, Vec<Weak<Page>>>,
+    /// registrations since the last global sweep
+    since_sweep: usize,
+}
+
+impl PageRegistry {
+    fn sweep_if_due(&mut self) {
+        self.since_sweep += 1;
+        if self.since_sweep < DEDUP_SWEEP_EVERY {
+            return;
+        }
+        self.since_sweep = 0;
+        self.buckets.retain(|_, bucket| {
+            bucket.retain(|w| w.strong_count() > 0);
+            !bucket.is_empty()
+        });
+    }
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// One prospective page viewed in place inside full-cache `[L,S,H,hd]`
+/// tensors: slots `[p0, p0+valid)` per layer, zero padding beyond.
+/// Hashing and equality run over this view directly, so a dedup-registry
+/// HIT costs no page allocation or copy at all.
+struct PageSrc<'a> {
+    k: &'a [f32],
+    v: &'a [f32],
+    layers: usize,
+    slots: usize,
+    page_size: usize,
+    rs: usize,
+    /// first slot of the page
+    p0: usize,
+    /// valid slots (the rest of the page is zero padding)
+    valid: usize,
+}
+
+impl PageSrc<'_> {
+    fn hash(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut eat = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        eat(self.layers as u64);
+        eat(self.page_size as u64);
+        eat(self.rs as u64);
+        for buf in [self.k, self.v] {
+            for l in 0..self.layers {
+                let s0 = l * self.slots * self.rs + self.p0 * self.rs;
+                for &f in &buf[s0..s0 + self.valid * self.rs] {
+                    eat(f.to_bits() as u64);
+                }
+                for _ in self.valid * self.rs..self.page_size * self.rs {
+                    eat(0);
+                }
+            }
+        }
+        h
+    }
+
+    /// Byte-exact match against a materialized page (valid region equals
+    /// the tensor slices, padding region is bit-zero).
+    fn matches(&self, p: &Page) -> bool {
+        let (ps, rs) = (self.page_size, self.rs);
+        if p.layers != self.layers || p.page_size != ps || p.k.len() != self.layers * ps * rs {
+            return false;
+        }
+        for (buf, pbuf) in [(self.k, &p.k), (self.v, &p.v)] {
+            for l in 0..self.layers {
+                let s0 = l * self.slots * rs + self.p0 * rs;
+                let d0 = l * ps * rs;
+                if !bits_eq(&buf[s0..s0 + self.valid * rs], &pbuf[d0..d0 + self.valid * rs]) {
+                    return false;
+                }
+                if pbuf[d0 + self.valid * rs..d0 + ps * rs].iter().any(|f| f.to_bits() != 0) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    fn materialize(&self) -> (Vec<f32>, Vec<f32>) {
+        let (ps, rs) = (self.page_size, self.rs);
+        let n = self.layers * ps * rs;
+        let mut pk = vec![0.0f32; n];
+        let mut pv = vec![0.0f32; n];
+        for l in 0..self.layers {
+            let s0 = l * self.slots * rs + self.p0 * rs;
+            let d0 = l * ps * rs;
+            pk[d0..d0 + self.valid * rs].copy_from_slice(&self.k[s0..s0 + self.valid * rs]);
+            pv[d0..d0 + self.valid * rs].copy_from_slice(&self.v[s0..s0 + self.valid * rs]);
+        }
+        (pk, pv)
+    }
+}
+
+/// Return a shared page for this content if a live byte-identical one is
+/// registered, otherwise materialize, register and return a fresh page.
+fn dedup_page(src: &PageSrc) -> PageRef {
+    let h = src.hash();
+    PAGE_DEDUP.with(|reg| {
+        let mut reg = reg.borrow_mut();
+        reg.sweep_if_due();
+        let bucket = reg.buckets.entry(h).or_default();
+        bucket.retain(|w| w.strong_count() > 0);
+        for w in bucket.iter() {
+            if let Some(p) = w.upgrade() {
+                if src.matches(&p) {
+                    return p;
+                }
+            }
+        }
+        let (pk, pv) = src.materialize();
+        let p = Rc::new(Page {
+            id: next_stamp(),
+            stamp: Cell::new(next_stamp()),
+            layers: src.layers,
+            page_size: src.page_size,
+            k: pk,
+            v: pv,
+        });
+        bucket.push(Rc::downgrade(&p));
+        p
+    })
+}
+
+/// Solo-decode staging state: a contiguous `[L,S,H,hd]` image of the
+/// paged cache plus the `(id, stamp)` each image region was staged from.
+/// `staged[pi] == None` means the region holds zeros (unallocated page).
 #[derive(Clone, Debug)]
+struct CacheImage {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    staged: Vec<Option<(u64, u64)>>,
+}
+
+#[derive(Debug)]
 pub struct KvCache {
     pub layers: usize,
     pub slots: usize,
     pub heads: usize,
     pub head_dim: usize,
-    pub k: Vec<f32>,
-    pub v: Vec<f32>,
     /// committed prefix length (slots [0, committed) are canonical context)
     pub committed: usize,
+    page_size: usize,
+    /// block table: page `pi` backs slots `[pi*page_size, (pi+1)*page_size)`
+    pages: Vec<Option<PageRef>>,
+    /// lazily materialized contiguous image (solo decode calls)
+    image: Option<CacheImage>,
+}
+
+impl Clone for KvCache {
+    /// Clones share pages (copy-on-write protects both sides) and drop
+    /// the materialized image — a clone costs one block table, not two
+    /// full `[L,S,H,hd]` buffers.
+    fn clone(&self) -> KvCache {
+        KvCache {
+            layers: self.layers,
+            slots: self.slots,
+            heads: self.heads,
+            head_dim: self.head_dim,
+            committed: self.committed,
+            page_size: self.page_size,
+            pages: self.pages.clone(),
+            image: None,
+        }
+    }
 }
 
 impl KvCache {
     pub fn new(layers: usize, slots: usize, heads: usize, head_dim: usize) -> KvCache {
-        let n = layers * slots * heads * head_dim;
+        KvCache::with_page_size(layers, slots, heads, head_dim, default_page_size())
+    }
+
+    pub fn with_page_size(
+        layers: usize,
+        slots: usize,
+        heads: usize,
+        head_dim: usize,
+        page_size: usize,
+    ) -> KvCache {
+        let page_size = page_size.max(1);
+        let n_pages = slots.div_ceil(page_size);
         KvCache {
             layers,
             slots,
             heads,
             head_dim,
-            k: vec![0.0; n],
-            v: vec![0.0; n],
             committed: 0,
+            page_size,
+            pages: vec![None; n_pages],
+            image: None,
         }
     }
 
@@ -44,47 +344,195 @@ impl KvCache {
         self.heads * self.head_dim
     }
 
-    fn layer_stride(&self) -> usize {
-        self.slots * self.row_size()
+    pub fn page_size(&self) -> usize {
+        self.page_size
     }
 
     pub fn remaining(&self) -> usize {
         self.slots - self.committed
     }
 
-    /// Replace buffers from graph outputs ([L,S,H,hd] tensors).
-    pub fn absorb(&mut self, k: TensorF, v: TensorF) -> Result<()> {
-        if k.data.len() != self.k.len() || v.data.len() != self.v.len() {
-            bail!(
-                "kv absorb size mismatch: got {}/{}, want {}",
-                k.data.len(),
-                v.data.len(),
-                self.k.len()
-            );
+    /// Pages whose refcount shows another holder (another session's block
+    /// table; the dedup registry holds only weak refs and doesn't count).
+    pub fn shared_pages(&self) -> usize {
+        self.pages
+            .iter()
+            .flatten()
+            .filter(|p| Rc::strong_count(p) > 1)
+            .count()
+    }
+
+    fn ensure_page(&mut self, pi: usize) {
+        if self.pages[pi].is_none() {
+            let n = self.layers * self.page_size * self.row_size();
+            self.pages[pi] = Some(Rc::new(Page {
+                id: next_stamp(),
+                stamp: Cell::new(next_stamp()),
+                layers: self.layers,
+                page_size: self.page_size,
+                k: vec![0.0; n],
+                v: vec![0.0; n],
+            }));
         }
-        self.k = k.data;
-        self.v = v.data;
+    }
+
+    /// Writable access to page `pi` — the copy-on-write gate.  A page
+    /// referenced by anyone else (refcount, or a dedup-registry weak) is
+    /// cloned with a fresh id; a uniquely owned page is mutated in place
+    /// with a stamp bump, so staging caches keyed by `(id, stamp)` stay
+    /// exact either way.
+    fn page_mut(&mut self, pi: usize) -> &mut Page {
+        self.ensure_page(pi);
+        let slot = self.pages[pi].as_mut().expect("page just ensured");
+        if Rc::strong_count(slot) > 1 || Rc::weak_count(slot) > 0 {
+            *slot = Rc::new(Page {
+                id: next_stamp(),
+                stamp: Cell::new(next_stamp()),
+                layers: slot.layers,
+                page_size: slot.page_size,
+                k: slot.k.clone(),
+                v: slot.v.clone(),
+            });
+        } else {
+            slot.stamp.set(next_stamp());
+        }
+        Rc::get_mut(slot).expect("uniquely owned page after COW")
+    }
+
+    /// Handles for the pages backing the committed prefix (allocating any
+    /// the caller committed without writing), for fused packing.
+    pub fn committed_pages(&mut self) -> Vec<PageRef> {
+        let n = self.committed.div_ceil(self.page_size);
+        (0..n)
+            .map(|pi| {
+                self.ensure_page(pi);
+                self.pages[pi].clone().expect("page just ensured")
+            })
+            .collect()
+    }
+
+    /// Ids of the committed-prefix pages (capacity probing: distinct ids
+    /// are what page-granular occupancy counts).  Allocates missing pages
+    /// like [`KvCache::committed_pages`] but clones no handles.
+    pub fn committed_page_ids(&mut self) -> Vec<u64> {
+        let n = self.committed.div_ceil(self.page_size);
+        (0..n)
+            .map(|pi| {
+                self.ensure_page(pi);
+                self.pages[pi].as_ref().expect("page just ensured").id()
+            })
+            .collect()
+    }
+
+    /// Replace the cache from graph outputs (`[L,S,H,hd]` tensors) — the
+    /// prefill path.  Only the pages covering the `prefix` valid slots
+    /// (the prompt) are materialized, each routed through the per-thread
+    /// dedup registry so sessions prefilled with an identical prompt
+    /// share physical pages until they diverge; pages beyond the prefix
+    /// are dropped (their slots are masked until rewritten), keeping the
+    /// per-admission cost O(prompt pages), not O(cache).
+    pub fn absorb(&mut self, k: TensorF, v: TensorF, prefix: usize) -> Result<()> {
+        let n = self.layers * self.slots * self.row_size();
+        if k.data.len() != n || v.data.len() != n {
+            bail!("kv absorb size mismatch: got {}/{}, want {n}", k.data.len(), v.data.len());
+        }
+        if prefix > self.slots {
+            bail!("kv absorb prefix {prefix} > {} slots", self.slots);
+        }
+        let (layers, slots, ps, rs) = (self.layers, self.slots, self.page_size, self.row_size());
+        let n_prefix = prefix.div_ceil(ps);
+        for pi in 0..self.pages.len() {
+            if pi >= n_prefix {
+                self.pages[pi] = None;
+                continue;
+            }
+            let p0 = pi * ps;
+            let src = PageSrc {
+                k: &k.data,
+                v: &v.data,
+                layers,
+                slots,
+                page_size: ps,
+                rs,
+                p0,
+                valid: ps.min(slots - p0),
+            };
+            self.pages[pi] = Some(dedup_page(&src));
+        }
         Ok(())
     }
 
-    pub fn k_tensor(&self) -> TensorF {
-        TensorF {
-            dims: vec![self.layers, self.slots, self.heads, self.head_dim],
-            data: self.k.clone(),
+    /// Refresh and borrow the contiguous `[L,S,H,hd]` images (k, v).
+    /// Only pages whose `(id, stamp)` changed since the last call are
+    /// copied — normally just the tail page — so a steady-state decode
+    /// call costs O(changed pages), not O(context).
+    pub fn sync_image(&mut self) -> (&[f32], &[f32]) {
+        let rs = self.heads * self.head_dim;
+        let (layers, slots, ps) = (self.layers, self.slots, self.page_size);
+        let n = layers * slots * rs;
+        let n_pages = self.pages.len();
+        let image = self.image.get_or_insert_with(|| CacheImage {
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            staged: vec![None; n_pages],
+        });
+        for (pi, slot) in self.pages.iter().enumerate() {
+            let key = slot.as_ref().map(|p| (p.id, p.stamp.get()));
+            if image.staged[pi] == key {
+                continue;
+            }
+            let p0 = pi * ps;
+            let valid = ps.min(slots - p0);
+            match slot {
+                Some(p) => {
+                    for l in 0..layers {
+                        let io = l * slots * rs + p0 * rs;
+                        let po = l * ps * rs;
+                        image.k[io..io + valid * rs].copy_from_slice(&p.k[po..po + valid * rs]);
+                        image.v[io..io + valid * rs].copy_from_slice(&p.v[po..po + valid * rs]);
+                    }
+                }
+                None => {
+                    for l in 0..layers {
+                        let io = l * slots * rs + p0 * rs;
+                        image.k[io..io + valid * rs].fill(0.0);
+                        image.v[io..io + valid * rs].fill(0.0);
+                    }
+                }
+            }
+            image.staged[pi] = key;
         }
+        (&image.k, &image.v)
     }
 
-    pub fn v_tensor(&self) -> TensorF {
-        TensorF { dims: vec![self.layers, self.slots, self.heads, self.head_dim], data: self.v.clone() }
+    /// Materialized `[L,S,H,hd]` K tensor (test/inspection convenience;
+    /// the decode path borrows [`KvCache::sync_image`] slices instead of
+    /// cloning).
+    pub fn k_tensor(&mut self) -> TensorF {
+        let dims = vec![self.layers, self.slots, self.heads, self.head_dim];
+        let (k, _) = self.sync_image();
+        TensorF { dims, data: k.to_vec() }
+    }
+
+    pub fn v_tensor(&mut self) -> TensorF {
+        let dims = vec![self.layers, self.slots, self.heads, self.head_dim];
+        let (_, v) = self.sync_image();
+        TensorF { dims, data: v.to_vec() }
     }
 
     /// Single-layer tensors shaped [S,H,hd] (draft cache graphs).
-    pub fn k_tensor_2d(&self) -> TensorF {
-        TensorF { dims: vec![self.slots, self.heads, self.head_dim], data: self.k.clone() }
+    pub fn k_tensor_2d(&mut self) -> TensorF {
+        let dims = vec![self.slots, self.heads, self.head_dim];
+        let n = self.slots * self.heads * self.head_dim;
+        let (k, _) = self.sync_image();
+        TensorF { dims, data: k[..n].to_vec() }
     }
 
-    pub fn v_tensor_2d(&self) -> TensorF {
-        TensorF { dims: vec![self.slots, self.heads, self.head_dim], data: self.v.clone() }
+    pub fn v_tensor_2d(&mut self) -> TensorF {
+        let dims = vec![self.slots, self.heads, self.head_dim];
+        let n = self.slots * self.heads * self.head_dim;
+        let (_, v) = self.sync_image();
+        TensorF { dims, data: v[..n].to_vec() }
     }
 
     /// Mark `n` rows starting at `committed` as committed (chain decode:
@@ -102,6 +550,8 @@ impl KvCache {
     /// A verification block of N rows was written at `base == committed`;
     /// `accepted_rows` are the accepted rows in increasing order.  Their KV
     /// rows move to `committed .. committed+len`, then commit advances.
+    /// Only the page(s) under the block region are touched (tail pages) —
+    /// the committed prefix pages are never written.
     pub fn compact_accepted(&mut self, accepted_rows: &[usize]) -> Result<()> {
         let base = self.committed;
         for w in accepted_rows.windows(2) {
@@ -115,30 +565,57 @@ impl KvCache {
             }
         }
         let rs = self.row_size();
-        for l in 0..self.layers {
-            let ls = l * self.layer_stride();
-            for (i, &r) in accepted_rows.iter().enumerate() {
-                let src = ls + (base + r) * rs;
-                let dst = ls + (base + i) * rs;
-                if src != dst {
-                    self.k.copy_within(src..src + rs, dst);
-                    self.v.copy_within(src..src + rs, dst);
+        let ps = self.page_size;
+        let layers = self.layers;
+        let mut tk = vec![0.0f32; layers * rs];
+        let mut tv = vec![0.0f32; layers * rs];
+        for (i, &r) in accepted_rows.iter().enumerate() {
+            let src = base + r;
+            let dst = base + i;
+            if src == dst {
+                continue;
+            }
+            // gather the source row (all layers), then scatter through the
+            // COW gate — src slots are always above every dst written so
+            // far (rows are strictly increasing), so order is safe
+            let spi = src / ps;
+            let so = (src % ps) * rs;
+            self.ensure_page(spi);
+            {
+                let p = self.pages[spi].as_ref().expect("page just ensured");
+                for l in 0..layers {
+                    let po = l * ps * rs + so;
+                    tk[l * rs..(l + 1) * rs].copy_from_slice(&p.k[po..po + rs]);
+                    tv[l * rs..(l + 1) * rs].copy_from_slice(&p.v[po..po + rs]);
                 }
+            }
+            let dof = (dst % ps) * rs;
+            let dp = self.page_mut(dst / ps);
+            for l in 0..layers {
+                let po = l * ps * rs + dof;
+                dp.k[po..po + rs].copy_from_slice(&tk[l * rs..(l + 1) * rs]);
+                dp.v[po..po + rs].copy_from_slice(&tv[l * rs..(l + 1) * rs]);
             }
         }
         self.committed += accepted_rows.len();
         Ok(())
     }
 
-    /// Reset to an empty cache (new request).
+    /// Reset to an empty cache (new request): drop every page reference.
+    /// Shared pages survive as long as another session still uses them.
     pub fn reset(&mut self) {
         self.committed = 0;
-        // buffers need no clearing: masks hide stale rows
+        for p in &mut self.pages {
+            *p = None;
+        }
     }
 
     /// Copy `n` slot rows (every layer) from `src` starting at
-    /// `src_start` into this cache at `dst_start` — the gather half of
-    /// packing several sessions' committed prefixes into one fused cache.
+    /// `src_start` into this cache at `dst_start`.  Slot-granular (the
+    /// two caches may use different page sizes); writes go through the
+    /// COW gate.  Test-only since fused packing moved to whole-page
+    /// staging ([`FusedScratch::pack`]).
+    #[cfg(test)]
     pub fn copy_slots_from(
         &mut self,
         src: &KvCache,
@@ -157,19 +634,43 @@ impl KvCache {
             );
         }
         let rs = self.row_size();
-        for l in 0..self.layers {
-            let s0 = l * src.layer_stride() + src_start * rs;
-            let d0 = l * self.layer_stride() + dst_start * rs;
-            self.k[d0..d0 + n * rs].copy_from_slice(&src.k[s0..s0 + n * rs]);
-            self.v[d0..d0 + n * rs].copy_from_slice(&src.v[s0..s0 + n * rs]);
+        let layers = self.layers;
+        let sps = src.page_size;
+        let ps = self.page_size;
+        let mut tk = vec![0.0f32; layers * rs];
+        let mut tv = vec![0.0f32; layers * rs];
+        for i in 0..n {
+            let s = src_start + i;
+            let d = dst_start + i;
+            match src.pages[s / sps].as_ref() {
+                Some(p) => {
+                    let so = (s % sps) * rs;
+                    for l in 0..layers {
+                        let po = l * sps * rs + so;
+                        tk[l * rs..(l + 1) * rs].copy_from_slice(&p.k[po..po + rs]);
+                        tv[l * rs..(l + 1) * rs].copy_from_slice(&p.v[po..po + rs]);
+                    }
+                }
+                None => {
+                    tk.fill(0.0);
+                    tv.fill(0.0);
+                }
+            }
+            let dof = (d % ps) * rs;
+            let dp = self.page_mut(d / ps);
+            for l in 0..layers {
+                let po = l * ps * rs + dof;
+                dp.k[po..po + rs].copy_from_slice(&tk[l * rs..(l + 1) * rs]);
+                dp.v[po..po + rs].copy_from_slice(&tv[l * rs..(l + 1) * rs]);
+            }
         }
         Ok(())
     }
 
     /// Copy `n` slot rows (every layer) from graph-output `[L,S,H,hd]`
-    /// tensors into this cache — the scatter half of a fused call: the
-    /// rows a fused decode wrote at `src` land at `dst`, exactly where a
-    /// solo decode would have written them.
+    /// tensors into this cache — the scatter half of a decode call: the
+    /// rows the graph wrote at `src` land at `dst`, exactly where a solo
+    /// decode would have written them.  Page-chunked; COW per page.
     pub fn write_rows_from(
         &mut self,
         k: &TensorF,
@@ -190,25 +691,42 @@ impl KvCache {
         if src + n > self.slots || dst + n > self.slots {
             bail!("kv scatter out of range: {src}+{n} / {dst}+{n} > {}", self.slots);
         }
-        for l in 0..self.layers {
-            let ls = l * self.layer_stride();
-            let s0 = ls + src * rs;
-            let d0 = ls + dst * rs;
-            self.k[d0..d0 + n * rs].copy_from_slice(&k.data[s0..s0 + n * rs]);
-            self.v[d0..d0 + n * rs].copy_from_slice(&v.data[s0..s0 + n * rs]);
+        let (layers, slots, ps) = (self.layers, self.slots, self.page_size);
+        let mut s = 0usize;
+        while s < n {
+            let pi = (dst + s) / ps;
+            let local = (dst + s) % ps;
+            let take = (ps - local).min(n - s);
+            let page = self.page_mut(pi);
+            for l in 0..layers {
+                let to = l * slots * rs + (src + s) * rs;
+                let po = l * ps * rs + local * rs;
+                page.k[po..po + take * rs].copy_from_slice(&k.data[to..to + take * rs]);
+                page.v[po..po + take * rs].copy_from_slice(&v.data[to..to + take * rs]);
+            }
+            s += take;
         }
         Ok(())
     }
 
     /// Visibility mask rows for a decode block: row n sees all committed
     /// slots, plus (optionally) block ancestors at `base + ancestor_row`,
-    /// plus its own slot `base + n`.
-    pub fn block_mask(
-        &self,
-        n: usize,
-        block_anc: Option<&[Vec<bool>]>,
-    ) -> TensorI {
+    /// plus its own slot `base + n`.  Fails with a descriptive capacity
+    /// error when the block cannot fit (`committed + n > slots`) instead
+    /// of indexing out of bounds deep in the mask loop.
+    pub fn block_mask(&self, n: usize, block_anc: Option<&[Vec<bool>]>) -> Result<TensorI> {
         let base = self.committed;
+        if base + n > self.slots {
+            bail!(
+                "mask block of {n} rows exceeds cache capacity ({base} committed + {n} > {} slots)",
+                self.slots
+            );
+        }
+        if let Some(anc) = block_anc {
+            if anc.len() < n || anc.iter().take(n).any(|row| row.len() < n) {
+                bail!("ancestor mask smaller than block ({n} rows)");
+            }
+        }
         let mut data = vec![0i32; n * self.slots];
         for row in 0..n {
             let off = row * self.slots;
@@ -231,99 +749,165 @@ impl KvCache {
                 }
             }
         }
-        TensorI { dims: vec![n, self.slots], data }
+        Ok(TensorI { dims: vec![n, self.slots], data })
     }
 }
 
 // ---------------------------------------------------------------------------
-// fused-verification packing
+// fused-verification packing (paged)
 // ---------------------------------------------------------------------------
 
-/// Row-offset bookkeeping for several sessions' segments packed into one
+/// One member of a fused pack, described at the page level.
+#[derive(Clone, Debug)]
+pub struct PackMember {
+    /// ids of the pages backing the committed prefix, in slot order
+    /// (`ceil(prefix_len / page_size)` of them)
+    pub page_ids: Vec<u64>,
+    /// committed prefix length in slots
+    pub prefix_len: usize,
+    /// candidate verification rows this cycle
+    pub rows: usize,
+}
+
+/// Page-granular layout of several sessions' segments packed into one
 /// fused decode block.
 ///
-/// Layout of the synthetic cache: every member's committed prefix first
-/// (member j's prefix occupies fused slots `[prefix_start[j],
-/// prefix_start[j] + prefix_len[j])`), then all members' candidate rows
-/// contiguously above the packed prefixes — member j's block row i is
-/// fused block row `row_off[j] + i`, written at fused slot `base +
-/// row_off[j] + i` (the graph's write pointer is `base`, the fused
-/// `committed`).  Visibility is block-diagonal: a row sees only its own
-/// member's prefix and its own member's in-block ancestors.
+/// Every *distinct* page (by id) across the members gets one page-aligned
+/// fused segment, in first-appearance order; members that share pages
+/// (identical prompt prefixes) reference the same segment, so the fused
+/// occupancy is `(unique pages) * page_size`, not `Σ prefixes`.  All
+/// members' candidate rows then sit contiguously above the packed pages:
+/// member j's block row i is fused block row `row_off[j] + i`, written at
+/// fused slot `base + row_off[j] + i` (the graph's write pointer is
+/// `base`).  Visibility is block-diagonal per member: a row sees the
+/// valid slots of its own member's pages plus its own member's in-block
+/// ancestors — padding slots inside a tail page are visible to no one.
 #[derive(Clone, Debug)]
 pub struct PackedLayout {
     pub slots: usize,
-    /// fused slot where member j's committed prefix starts
-    pub prefix_start: Vec<usize>,
+    pub page_size: usize,
+    /// fused page index of member j's p-th committed page
+    pub prefix_pages: Vec<Vec<usize>>,
     /// member j's committed prefix length
     pub prefix_len: Vec<usize>,
     /// member j's first block row (row `i` of member j = `row_off[j] + i`)
     pub row_off: Vec<usize>,
     /// member j's candidate row count
     pub rows: Vec<usize>,
-    /// total packed prefix == fused committed == block write base
+    /// total packed pages * page_size == fused committed == block write base
     pub base: usize,
     /// total candidate rows across members
     pub n_rows: usize,
 }
 
 impl PackedLayout {
-    /// Plan the packing of `prefix_lens[j]` committed slots + `rows[j]`
-    /// candidate rows per member into a `slots`-slot cache, padding the
-    /// block to the compiled `width`.  Fails when the pack cannot fit.
+    /// Plan the packing of `members` into a `slots`-slot cache with the
+    /// block padded to the compiled `width`.  Distinct pages are placed
+    /// once; a page id repeated *within* one member is given a separate
+    /// segment (aliasing it would double the member's visible copies of
+    /// those rows).  Fails when `(unique pages)·page_size + width > slots`
+    /// or the rows exceed the width.
     pub fn plan(
-        prefix_lens: &[usize],
-        rows: &[usize],
+        members: &[PackMember],
         slots: usize,
+        page_size: usize,
         width: usize,
     ) -> Result<PackedLayout> {
-        if prefix_lens.len() != rows.len() || prefix_lens.is_empty() {
-            bail!("packed layout needs matching, non-empty member lists");
+        if members.is_empty() {
+            bail!("packed layout needs at least one member");
         }
-        let base: usize = prefix_lens.iter().sum();
-        let n_rows: usize = rows.iter().sum();
+        if page_size == 0 {
+            bail!("packed layout needs a non-zero page size");
+        }
+        let n_rows: usize = members.iter().map(|m| m.rows).sum();
         if n_rows > width {
             bail!("packed rows {n_rows} exceed block width {width}");
         }
+        let mut fused_of: HashMap<u64, usize> = HashMap::new();
+        let mut n_fused = 0usize;
+        let mut prefix_pages = Vec::with_capacity(members.len());
+        let mut row_off = Vec::with_capacity(members.len());
+        let mut r = 0usize;
+        for (j, m) in members.iter().enumerate() {
+            let want = m.prefix_len.div_ceil(page_size);
+            if m.page_ids.len() != want {
+                bail!(
+                    "member {j}: {} pages != ceil({} / {page_size})",
+                    m.page_ids.len(),
+                    m.prefix_len
+                );
+            }
+            let mut seen: HashSet<u64> = HashSet::new();
+            let mut fp = Vec::with_capacity(want);
+            for &id in &m.page_ids {
+                let f = if !seen.insert(id) {
+                    // intra-member duplicate: force a distinct segment
+                    let f = n_fused;
+                    n_fused += 1;
+                    f
+                } else {
+                    *fused_of.entry(id).or_insert_with(|| {
+                        let f = n_fused;
+                        n_fused += 1;
+                        f
+                    })
+                };
+                fp.push(f);
+            }
+            prefix_pages.push(fp);
+            row_off.push(r);
+            r += m.rows;
+        }
+        let base = n_fused * page_size;
         if base + width > slots {
             bail!(
-                "packed segments do not fit: {base} prefix + {width} block > {slots} slots"
+                "packed segments do not fit: {n_fused} pages * {page_size} + {width} block > {slots} slots"
             );
-        }
-        let mut prefix_start = Vec::with_capacity(prefix_lens.len());
-        let mut row_off = Vec::with_capacity(rows.len());
-        let (mut p, mut r) = (0usize, 0usize);
-        for j in 0..prefix_lens.len() {
-            prefix_start.push(p);
-            p += prefix_lens[j];
-            row_off.push(r);
-            r += rows[j];
         }
         Ok(PackedLayout {
             slots,
-            prefix_start,
-            prefix_len: prefix_lens.to_vec(),
+            page_size,
+            prefix_pages,
+            prefix_len: members.iter().map(|m| m.prefix_len).collect(),
             row_off,
-            rows: rows.to_vec(),
+            rows: members.iter().map(|m| m.rows).collect(),
             base,
             n_rows,
         })
     }
 
     /// Compose the fused visibility mask `[width, slots]`: member j's row
-    /// i sees member j's committed prefix plus its in-block ancestors per
-    /// `ancs[j]` (`None` = chain semantics, rows 0..=i of member j).
-    /// Padding rows (`n_rows..width`) see nothing.
-    pub fn mask(&self, width: usize, ancs: &[Option<&[Vec<bool>]>]) -> TensorI {
+    /// i sees the valid slots of member j's page segments plus its
+    /// in-block ancestors per `ancs[j]` (`None` = chain semantics, rows
+    /// 0..=i of member j).  Padding rows (`n_rows..width`) see nothing.
+    pub fn mask(&self, width: usize, ancs: &[Option<&[Vec<bool>]>]) -> Result<TensorI> {
+        if width < self.n_rows {
+            bail!("mask width {width} < packed rows {}", self.n_rows);
+        }
+        if self.base + width > self.slots {
+            bail!("mask block exceeds fused capacity ({} + {width} > {})", self.base, self.slots);
+        }
         let mut data = vec![0i32; width * self.slots];
         for j in 0..self.rows.len() {
+            let anc = ancs.get(j).copied().flatten();
+            if let Some(anc) = anc {
+                if anc.len() < self.rows[j]
+                    || anc.iter().take(self.rows[j]).any(|r| r.len() < self.rows[j])
+                {
+                    bail!("member {j}: ancestor mask smaller than its rows");
+                }
+            }
             for i in 0..self.rows[j] {
                 let off = (self.row_off[j] + i) * self.slots;
-                for s in self.prefix_start[j]..self.prefix_start[j] + self.prefix_len[j] {
-                    data[off + s] = 1;
+                for (p, &f) in self.prefix_pages[j].iter().enumerate() {
+                    let valid = self.page_size.min(self.prefix_len[j] - p * self.page_size);
+                    let s0 = f * self.page_size;
+                    for s in s0..s0 + valid {
+                        data[off + s] = 1;
+                    }
                 }
                 let block0 = self.base + self.row_off[j];
-                match ancs.get(j).copied().flatten() {
+                match anc {
                     Some(anc) => {
                         for b in 0..self.rows[j] {
                             if anc[i][b] {
@@ -339,30 +923,200 @@ impl PackedLayout {
                 }
             }
         }
-        TensorI { dims: vec![width, self.slots], data }
+        Ok(TensorI { dims: vec![width, self.slots], data })
     }
 }
+
+/// What one [`FusedScratch::pack`] call did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PackStats {
+    /// pages memcpy'd into the fused image this pack
+    pub pages_copied: usize,
+    /// pages skipped because their `(id, stamp)` was already staged
+    pub pages_reused: usize,
+    /// distinct pages referenced by >= 2 members (cross-session sharing)
+    pub shared_pages: usize,
+}
+
+/// Persistent synthetic cache for fused verification (schedulers keep
+/// one per worker per fused-group ordinal): a contiguous `[L,S,H,hd]`
+/// image that survives across cycles, plus a per-fused-page `(id, stamp)`
+/// staging map so [`FusedScratch::pack`] copies only the pages that
+/// changed (or moved) since the previous cycle.
+pub struct FusedScratch {
+    layers: usize,
+    slots: usize,
+    rs: usize,
+    page_size: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    staged: Vec<Option<(u64, u64)>>,
+    /// cumulative counters (observability; the scheduler diffs them)
+    pub pages_copied: u64,
+    pub pages_reused: u64,
+    /// packs completed (lets callers tell "pack ran" from "pack bailed
+    /// early", so the gauge below is never read stale)
+    pub packs: u64,
+    /// cross-session shared pages observed by the most recent pack
+    pub shared_pages: u64,
+}
+
+impl FusedScratch {
+    pub fn new() -> FusedScratch {
+        FusedScratch {
+            layers: 0,
+            slots: 0,
+            rs: 0,
+            page_size: 0,
+            k: Vec::new(),
+            v: Vec::new(),
+            staged: Vec::new(),
+            pages_copied: 0,
+            pages_reused: 0,
+            packs: 0,
+            shared_pages: 0,
+        }
+    }
+
+    fn ensure(&mut self, layers: usize, slots: usize, rs: usize, page_size: usize) {
+        if (self.layers, self.slots, self.rs, self.page_size) == (layers, slots, rs, page_size) {
+            return;
+        }
+        self.layers = layers;
+        self.slots = slots;
+        self.rs = rs;
+        self.page_size = page_size;
+        let n = layers * slots * rs;
+        self.k = vec![0.0; n];
+        self.v = vec![0.0; n];
+        self.staged = vec![None; slots.div_ceil(page_size.max(1))];
+    }
+
+    /// The packed contiguous K image (graph input).
+    pub fn k(&self) -> &[f32] {
+        &self.k
+    }
+
+    pub fn v(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Assemble the fused image for `layout`: for every fused page slot,
+    /// memcpy the backing page unless its `(id, stamp)` is already staged
+    /// there from a previous cycle.  `members[j]` must be the page handles
+    /// whose ids produced `layout.prefix_pages[j]`.
+    pub fn pack(
+        &mut self,
+        layout: &PackedLayout,
+        members: &[Vec<PageRef>],
+        layers: usize,
+        rs: usize,
+    ) -> Result<PackStats> {
+        if members.len() != layout.prefix_pages.len() {
+            bail!("pack members/layout mismatch");
+        }
+        self.ensure(layers, layout.slots, rs, layout.page_size);
+        let ps = layout.page_size;
+        let n_fused = layout.base / ps;
+        let mut by_fused: Vec<Option<&PageRef>> = vec![None; n_fused];
+        let mut refs: Vec<usize> = vec![0; n_fused];
+        for (j, pages) in members.iter().enumerate() {
+            if pages.len() != layout.prefix_pages[j].len() {
+                bail!("pack member {j}: page count diverged from layout");
+            }
+            for (p, pg) in pages.iter().enumerate() {
+                let f = layout.prefix_pages[j][p];
+                if let Some(prev) = by_fused[f] {
+                    if prev.id != pg.id {
+                        bail!("pack member {j}: page id diverged from layout");
+                    }
+                }
+                by_fused[f] = Some(pg);
+                refs[f] += 1;
+            }
+        }
+        let mut stats = PackStats::default();
+        for (f, pg) in by_fused.iter().enumerate() {
+            let Some(pg) = pg else {
+                bail!("fused page {f} unassigned");
+            };
+            if pg.layers != layers || pg.page_size != ps || pg.k.len() != layers * ps * rs {
+                bail!("pack page geometry mismatch");
+            }
+            if refs[f] >= 2 {
+                stats.shared_pages += 1;
+            }
+            let key = Some((pg.id, pg.stamp.get()));
+            if self.staged[f] == key {
+                stats.pages_reused += 1;
+                continue;
+            }
+            let p0 = f * ps;
+            for l in 0..layers {
+                let io = l * self.slots * rs + p0 * rs;
+                let po = l * ps * rs;
+                self.k[io..io + ps * rs].copy_from_slice(&pg.k[po..po + ps * rs]);
+                self.v[io..io + ps * rs].copy_from_slice(&pg.v[po..po + ps * rs]);
+            }
+            self.staged[f] = key;
+            stats.pages_copied += 1;
+        }
+        self.pages_copied += stats.pages_copied as u64;
+        self.pages_reused += stats.pages_reused as u64;
+        self.packs += 1;
+        self.shared_pages = stats.shared_pages as u64;
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod props;
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::prop;
 
-    fn filled(layers: usize, slots: usize) -> KvCache {
-        let mut c = KvCache::new(layers, slots, 2, 4);
-        for (i, x) in c.k.iter_mut().enumerate() {
-            *x = i as f32;
-        }
-        for (i, x) in c.v.iter_mut().enumerate() {
-            *x = -(i as f32);
-        }
+    /// Full-cache tensors with deterministic content (k[i] = i + seed,
+    /// v[i] = -(i + seed)).
+    fn fill_tensors(layers: usize, slots: usize, rs: usize, seed: f32) -> (TensorF, TensorF) {
+        let n = layers * slots * rs;
+        let k = TensorF {
+            dims: vec![layers, slots, rs / 4, 4],
+            data: (0..n).map(|i| i as f32 + seed).collect(),
+        };
+        let v = TensorF {
+            dims: vec![layers, slots, rs / 4, 4],
+            data: (0..n).map(|i| -(i as f32 + seed)).collect(),
+        };
+        (k, v)
+    }
+
+    /// A cache with every slot filled (k[i] = i, v[i] = -i in image
+    /// coordinates), page size `ps`.
+    fn filled_ps(layers: usize, slots: usize, ps: usize) -> KvCache {
+        let mut c = KvCache::with_page_size(layers, slots, 2, 4, ps);
+        let (k, v) = fill_tensors(layers, slots, c.row_size(), 0.0);
+        c.write_rows_from(&k, &v, 0, 0, slots).unwrap();
         c
+    }
+
+    fn filled(layers: usize, slots: usize) -> KvCache {
+        filled_ps(layers, slots, 4)
+    }
+
+    /// K-image row of (layer, slot).
+    fn k_row(c: &mut KvCache, layer: usize, slot: usize) -> Vec<f32> {
+        let rs = c.row_size();
+        let slots = c.slots;
+        let (k, _) = c.sync_image();
+        k[layer * slots * rs + slot * rs..layer * slots * rs + (slot + 1) * rs].to_vec()
     }
 
     #[test]
     fn k_v_tensor_shapes_symmetric() {
         for layers in [1, 3] {
-            let c = KvCache::new(layers, 8, 2, 4);
+            let mut c = KvCache::new(layers, 8, 2, 4);
             assert_eq!(c.k_tensor().dims, c.v_tensor().dims);
             assert_eq!(c.k_tensor().dims, vec![layers, 8, 2, 4]);
             assert_eq!(c.k_tensor().data.len(), c.v_tensor().data.len());
@@ -381,17 +1135,15 @@ mod tests {
     fn compact_moves_rows_in_order() {
         let mut c = filled(2, 16);
         c.committed = 4;
-        let rs = c.row_size();
         // block rows 1 and 3 accepted -> slots 5 and 7 move to 4 and 5
-        let expect_k_slot4: Vec<f32> = c.k[5 * rs..6 * rs].to_vec();
-        let expect_k_slot5: Vec<f32> = c.k[7 * rs..8 * rs].to_vec();
-        let l1 = c.layer_stride();
-        let expect_l1_slot4: Vec<f32> = c.k[l1 + 5 * rs..l1 + 6 * rs].to_vec();
+        let expect_slot4 = k_row(&mut c, 0, 5);
+        let expect_slot5 = k_row(&mut c, 0, 7);
+        let expect_l1_slot4 = k_row(&mut c, 1, 5);
         c.compact_accepted(&[1, 3]).unwrap();
         assert_eq!(c.committed, 6);
-        assert_eq!(&c.k[4 * rs..5 * rs], &expect_k_slot4[..]);
-        assert_eq!(&c.k[5 * rs..6 * rs], &expect_k_slot5[..]);
-        assert_eq!(&c.k[l1 + 4 * rs..l1 + 5 * rs], &expect_l1_slot4[..]);
+        assert_eq!(k_row(&mut c, 0, 4), expect_slot4);
+        assert_eq!(k_row(&mut c, 0, 5), expect_slot5);
+        assert_eq!(k_row(&mut c, 1, 4), expect_l1_slot4);
     }
 
     #[test]
@@ -406,9 +1158,9 @@ mod tests {
     fn compact_accepted_row0_is_noop_move() {
         let mut c = filled(1, 8);
         c.committed = 3;
-        let before = c.k.clone();
+        let before = c.k_tensor().data;
         c.compact_accepted(&[0]).unwrap();
-        assert_eq!(c.k, before);
+        assert_eq!(c.k_tensor().data, before);
         assert_eq!(c.committed, 4);
     }
 
@@ -416,7 +1168,7 @@ mod tests {
     fn chain_mask_rows() {
         let mut c = KvCache::new(1, 8, 2, 4);
         c.committed = 3;
-        let m = c.block_mask(2, None);
+        let m = c.block_mask(2, None).unwrap();
         assert_eq!(m.dims, vec![2, 8]);
         assert_eq!(&m.data[0..8], &[1, 1, 1, 1, 0, 0, 0, 0]);
         assert_eq!(&m.data[8..16], &[1, 1, 1, 1, 1, 0, 0, 0]);
@@ -432,97 +1184,276 @@ mod tests {
             vec![true, true, false],
             vec![true, false, true],
         ];
-        let m = c.block_mask(3, Some(&anc));
+        let m = c.block_mask(3, Some(&anc)).unwrap();
         assert_eq!(&m.data[16..24], &[1, 1, 1, 0, 1, 0, 0, 0]);
+    }
+
+    /// Satellite: an oversized block must produce the descriptive capacity
+    /// error, not index out of bounds deep in the mask loop.
+    #[test]
+    fn block_mask_rejects_overflow() {
+        let mut c = KvCache::new(1, 8, 2, 4);
+        c.committed = 6;
+        assert!(c.block_mask(2, None).is_ok());
+        let err = c.block_mask(3, None).unwrap_err().to_string();
+        assert!(err.contains("capacity"), "unexpected error: {err}");
+        // undersized ancestor masks are rejected too
+        let anc = vec![vec![true]];
+        assert!(c.block_mask(2, Some(&anc)).is_err());
     }
 
     #[test]
     fn copy_slots_then_scatter_roundtrip() {
-        let src = filled(2, 16);
-        let mut fused = KvCache::new(2, 16, 2, 4);
+        let mut src = filled(2, 16);
+        let mut fused = KvCache::with_page_size(2, 16, 2, 4, 4);
         // gather src slots [3, 7) into fused slots [5, 9)
         fused.copy_slots_from(&src, 3, 5, 4).unwrap();
-        let rs = src.row_size();
-        let l1 = 16 * rs;
-        assert_eq!(&fused.k[5 * rs..6 * rs], &src.k[3 * rs..4 * rs]);
-        assert_eq!(&fused.k[l1 + 8 * rs..l1 + 9 * rs], &src.k[l1 + 6 * rs..l1 + 7 * rs]);
-        assert_eq!(&fused.v[5 * rs..6 * rs], &src.v[3 * rs..4 * rs]);
+        for i in 0..4 {
+            assert_eq!(k_row(&mut fused, 0, 5 + i), k_row(&mut src, 0, 3 + i));
+            assert_eq!(k_row(&mut fused, 1, 5 + i), k_row(&mut src, 1, 3 + i));
+        }
         // scatter fused rows [5, 7) back into a fresh cache at [0, 2)
-        let mut dst = KvCache::new(2, 16, 2, 4);
-        dst.write_rows_from(&fused.k_tensor(), &fused.v_tensor(), 5, 0, 2).unwrap();
-        assert_eq!(&dst.k[0..2 * rs], &src.k[3 * rs..5 * rs]);
-        assert_eq!(&dst.k[l1..l1 + rs], &src.k[l1 + 3 * rs..l1 + 4 * rs]);
+        let mut dst = KvCache::with_page_size(2, 16, 2, 4, 4);
+        let (fk, fv) = (fused.k_tensor(), fused.v_tensor());
+        dst.write_rows_from(&fk, &fv, 5, 0, 2).unwrap();
+        assert_eq!(k_row(&mut dst, 0, 0), k_row(&mut src, 0, 3));
+        assert_eq!(k_row(&mut dst, 0, 1), k_row(&mut src, 0, 4));
+        assert_eq!(k_row(&mut dst, 1, 0), k_row(&mut src, 1, 3));
         // bounds are enforced
-        assert!(dst.write_rows_from(&fused.k_tensor(), &fused.v_tensor(), 15, 0, 2).is_err());
+        assert!(dst.write_rows_from(&fk, &fv, 15, 0, 2).is_err());
         let other = KvCache::new(1, 16, 2, 4);
         assert!(fused.copy_slots_from(&other, 0, 0, 1).is_err(), "geometry must match");
     }
 
-    /// A single-member pack must reproduce the solo `block_mask` exactly
-    /// (same prefix visibility, same in-block ancestors).
+    /// A single-member pack must give every committed slot the same
+    /// visibility a solo `block_mask` gives it (page segments start at
+    /// fused slot 0 for the first member, so the prefix region coincides).
     #[test]
-    fn packed_mask_single_member_matches_block_mask() {
-        let mut c = KvCache::new(1, 32, 2, 4);
+    fn packed_mask_single_member_matches_block_mask_prefix() {
+        let ps = 8usize;
+        let mut c = KvCache::with_page_size(1, 64, 2, 4, ps);
         c.committed = 5;
         let anc = vec![
             vec![true, false, false],
             vec![true, true, false],
             vec![true, false, true],
         ];
-        let solo = c.block_mask(3, Some(&anc));
-        let layout = PackedLayout::plan(&[5], &[3], 32, 3).unwrap();
-        let fused = layout.mask(3, &[Some(&anc[..])]);
-        assert_eq!(solo.data, fused.data);
-        // chain semantics too
-        let solo = c.block_mask(3, None);
-        let fused = layout.mask(3, &[None]);
-        assert_eq!(solo.data, fused.data);
+        let solo = c.block_mask(3, Some(&anc)).unwrap();
+        let ids = c.committed_page_ids();
+        let m = PackMember { page_ids: ids, prefix_len: 5, rows: 3 };
+        let layout = PackedLayout::plan(&[m], 64, ps, 3).unwrap();
+        assert_eq!(layout.base, ps); // one page, aligned up
+        let fused = layout.mask(3, &[Some(&anc[..])]).unwrap();
+        for row in 0..3 {
+            // prefix visibility identical (slots [0, 5)); padding slots of
+            // the tail page ([5, 8)) invisible
+            for s in 0..5 {
+                assert_eq!(fused.data[row * 64 + s], 1, "row {row} slot {s}");
+            }
+            for s in 5..ps {
+                assert_eq!(fused.data[row * 64 + s], 0, "row {row} pad slot {s}");
+            }
+            // block ancestors shifted from committed=5 to base=8
+            for b in 0..3 {
+                assert_eq!(
+                    fused.data[row * 64 + ps + b],
+                    solo.data[row * 64 + 5 + b],
+                    "row {row} block col {b}"
+                );
+            }
+        }
     }
 
     /// Two members packed block-diagonally: no row may see the other
-    /// member's prefix or rows, and each member's visibility matches its
-    /// own solo mask shifted to its segment offsets.
+    /// member's pages or rows.
     #[test]
     fn packed_mask_is_block_diagonal() {
-        let slots = 64;
+        let (slots, ps) = (64usize, 4usize);
         let anc1 = vec![vec![true, false], vec![true, true]];
-        let layout = PackedLayout::plan(&[4, 6], &[2, 3], slots, 8).unwrap();
-        assert_eq!(layout.prefix_start, vec![0, 4]);
+        let members = [
+            PackMember { page_ids: vec![101], prefix_len: 4, rows: 2 },
+            PackMember { page_ids: vec![102, 103], prefix_len: 6, rows: 3 },
+        ];
+        let layout = PackedLayout::plan(&members, slots, ps, 8).unwrap();
+        assert_eq!(layout.prefix_pages, vec![vec![0], vec![1, 2]]);
         assert_eq!(layout.row_off, vec![0, 2]);
-        assert_eq!(layout.base, 10);
-        let m = layout.mask(8, &[Some(&anc1[..]), None]);
+        assert_eq!(layout.base, 12); // 3 unique pages * 4
+        let m = layout.mask(8, &[Some(&anc1[..]), None]).unwrap();
         assert_eq!(m.dims, vec![8, slots]);
         let row = |r: usize| &m.data[r * slots..(r + 1) * slots];
-        // member 0, row 1: own prefix [0,4) + block rows {0,1} at base 10
+        // member 0, row 1: own page [0,4) + block rows {0,1} at base 12
         let r = row(1);
         for s in 0..4 {
             assert_eq!(r[s], 1, "own prefix slot {s}");
         }
-        for s in 4..10 {
-            assert_eq!(r[s], 0, "member 1 prefix must be invisible at {s}");
+        for s in 4..12 {
+            assert_eq!(r[s], 0, "member 1 pages must be invisible at {s}");
         }
-        assert_eq!(&r[10..15], &[1, 1, 0, 0, 0]);
-        // member 1, row 1 (fused row 3): prefix [4,10) + own chain rows
+        assert_eq!(&r[12..17], &[1, 1, 0, 0, 0]);
+        // member 1, row 1 (fused row 3): pages [4,10) + own chain rows
         let r = row(3);
         for s in 0..4 {
-            assert_eq!(r[s], 0, "member 0 prefix must be invisible at {s}");
+            assert_eq!(r[s], 0, "member 0 page must be invisible at {s}");
         }
         for s in 4..10 {
             assert_eq!(r[s], 1);
         }
-        // member 1's block rows start at base + row_off = 12
-        assert_eq!(&r[10..16], &[0, 0, 1, 1, 0, 0]);
+        // tail-page padding slots [10,12) invisible
+        assert_eq!(&r[10..12], &[0, 0]);
+        // member 1's block rows start at base + row_off = 14
+        assert_eq!(&r[12..18], &[0, 0, 1, 1, 0, 0]);
         // padding rows see nothing
         assert!(row(6).iter().all(|&x| x == 0));
         assert!(row(7).iter().all(|&x| x == 0));
     }
 
+    /// Members sharing pages reference ONE fused segment — the lifted
+    /// fusion ceiling: a shared-prefix fleet fits where the old
+    /// `Σ prefixes + block <= slots` bound would overflow.
+    #[test]
+    fn shared_pages_lift_fusion_ceiling() {
+        let (slots, ps) = (128usize, 8usize);
+        // 7 members, each committed 20 over the same 3 pages, 1 row each:
+        // old bound: 7*20 + 8 = 148 > 128.  New: 3 pages * 8 + 8 = 32.
+        let members: Vec<PackMember> = (0..7)
+            .map(|_| PackMember { page_ids: vec![1, 2, 3], prefix_len: 20, rows: 1 })
+            .collect();
+        let old_bound: usize = members.iter().map(|m| m.prefix_len).sum::<usize>() + 8;
+        assert!(old_bound > slots, "test must exceed the old ceiling");
+        let layout = PackedLayout::plan(&members, slots, ps, 8).unwrap();
+        assert_eq!(layout.base, 24);
+        assert_eq!(layout.prefix_pages[0], layout.prefix_pages[6]);
+        let m = layout.mask(8, &[None; 7]).unwrap();
+        // every member sees the shared segment's valid slots [0, 20)
+        for j in 0..7 {
+            let off = layout.row_off[j] * slots;
+            for s in 0..20 {
+                assert_eq!(m.data[off + s], 1, "member {j} slot {s}");
+            }
+            for s in 20..24 {
+                assert_eq!(m.data[off + s], 0, "member {j} pad slot {s}");
+            }
+        }
+    }
+
     #[test]
     fn packed_layout_rejects_overflow() {
-        assert!(PackedLayout::plan(&[30, 30], &[4, 4], 64, 8).is_err(), "prefix + width > slots");
-        assert!(PackedLayout::plan(&[1, 1], &[5, 5], 64, 8).is_err(), "rows > width");
-        assert!(PackedLayout::plan(&[], &[], 64, 8).is_err());
-        assert!(PackedLayout::plan(&[1], &[1, 2], 64, 8).is_err());
+        let m = |pages: Vec<u64>, len: usize, rows: usize| PackMember {
+            page_ids: pages,
+            prefix_len: len,
+            rows,
+        };
+        // distinct pages: 2 members * 30 slots at page 8 = 8 pages = 64,
+        // + 8 block > 64 slots
+        assert!(
+            PackedLayout::plan(
+                &[m(vec![1, 2, 3, 4], 30, 4), m(vec![5, 6, 7, 8], 30, 4)],
+                64,
+                8,
+                8
+            )
+            .is_err(),
+            "pages + width > slots"
+        );
+        assert!(
+            PackedLayout::plan(&[m(vec![1], 1, 5), m(vec![2], 1, 5)], 64, 8, 8).is_err(),
+            "rows > width"
+        );
+        assert!(PackedLayout::plan(&[], 64, 8, 8).is_err());
+        // page count must match ceil(prefix_len / page_size)
+        assert!(PackedLayout::plan(&[m(vec![1], 20, 1)], 64, 8, 8).is_err());
+    }
+
+    /// An intra-member duplicate page id must get its own segment (one
+    /// segment would double that member's visible copies of those rows).
+    #[test]
+    fn intra_member_duplicate_pages_get_distinct_segments() {
+        let members = [PackMember { page_ids: vec![9, 9], prefix_len: 10, rows: 1 }];
+        let layout = PackedLayout::plan(&members, 64, 8, 1).unwrap();
+        assert_eq!(layout.prefix_pages[0], vec![0, 1]);
+        assert_eq!(layout.base, 16);
+    }
+
+    /// Prefill dedup: two caches absorbing identical tensors share every
+    /// page; the first divergent write COWs without touching the peer.
+    #[test]
+    fn absorb_dedups_and_cow_diverges() {
+        let (layers, slots, ps) = (2usize, 16usize, 4usize);
+        let mut a = KvCache::with_page_size(layers, slots, 2, 4, ps);
+        let mut b = KvCache::with_page_size(layers, slots, 2, 4, ps);
+        let (k, v) = fill_tensors(layers, slots, 8, 1000.0);
+        a.absorb(k.clone(), v.clone(), 10).unwrap();
+        b.absorb(k.clone(), v.clone(), 10).unwrap();
+        a.committed = 10;
+        b.committed = 10;
+        assert_eq!(a.committed_page_ids(), b.committed_page_ids(), "prompt pages must dedup");
+        assert!(a.shared_pages() > 0);
+        // divergence: b writes one row at its committed boundary
+        let (k2, v2) = fill_tensors(layers, slots, 8, -7.0);
+        b.write_rows_from(&k2, &v2, 10, 10, 1).unwrap();
+        assert_ne!(
+            a.committed_page_ids().last(),
+            b.committed_page_ids().last(),
+            "divergent tail page must COW to a fresh id"
+        );
+        // a's bytes are untouched
+        assert_eq!(k_row(&mut a, 0, 10), k.data[10 * 8..11 * 8].to_vec());
+        // b's written row took the new content
+        assert_eq!(k_row(&mut b, 0, 10), k2.data[10 * 8..11 * 8].to_vec());
+        // shared prefix pages still shared
+        assert_eq!(a.committed_page_ids()[0], b.committed_page_ids()[0]);
+    }
+
+    /// FusedScratch staging: a second pack with unchanged pages copies
+    /// nothing; a tail-page write invalidates exactly that page.
+    #[test]
+    fn fused_scratch_stages_by_page_stamp() {
+        let (layers, slots, ps) = (1usize, 32usize, 4usize);
+        let rs = 8usize;
+        let mut a = filled_ps(layers, slots, ps);
+        let mut b = filled_ps(layers, slots, ps);
+        a.committed = 6;
+        b.committed = 7;
+        let mut scratch = FusedScratch::new();
+        let plan_pack = |a: &mut KvCache, b: &mut KvCache, scratch: &mut FusedScratch| {
+            let pa = a.committed_pages();
+            let pb = b.committed_pages();
+            let members = [
+                PackMember {
+                    page_ids: pa.iter().map(|p| p.id()).collect(),
+                    prefix_len: a.committed,
+                    rows: 1,
+                },
+                PackMember {
+                    page_ids: pb.iter().map(|p| p.id()).collect(),
+                    prefix_len: b.committed,
+                    rows: 1,
+                },
+            ];
+            let layout = PackedLayout::plan(&members, slots, ps, 8).unwrap();
+            scratch.pack(&layout, &[pa, pb], layers, rs).unwrap()
+        };
+        let s1 = plan_pack(&mut a, &mut b, &mut scratch);
+        assert_eq!(s1.pages_copied, 4); // 2 pages each, nothing staged yet
+        assert_eq!(s1.pages_reused, 0);
+        let s2 = plan_pack(&mut a, &mut b, &mut scratch);
+        assert_eq!(s2.pages_copied, 0, "unchanged pages must be reused");
+        assert_eq!(s2.pages_reused, 4);
+        // dirty b's tail page only
+        let (k2, v2) = fill_tensors(layers, slots, rs, 3.0);
+        b.write_rows_from(&k2, &v2, 7, 7, 1).unwrap();
+        let s3 = plan_pack(&mut a, &mut b, &mut scratch);
+        assert_eq!(s3.pages_copied, 1, "only the dirtied tail page re-copies");
+        assert_eq!(s3.pages_reused, 3);
+        // the packed image matches the sessions' own images in the
+        // committed regions
+        let (ka, _) = a.sync_image();
+        let prefix_a = ka[..6 * rs].to_vec();
+        assert_eq!(&scratch.k()[..6 * rs], &prefix_a[..]);
+        let (kb, _) = b.sync_image();
+        // b's pages occupy fused pages [2, 4) (first-appearance order)
+        let prefix_b = kb[..7 * rs].to_vec();
+        assert_eq!(&scratch.k()[2 * ps * rs..2 * ps * rs + 7 * rs], &prefix_b[..]);
     }
 
     #[test]
@@ -532,6 +1463,7 @@ mod tests {
             |r| {
                 let slots = 16 + r.gen_range(16);
                 let committed = r.gen_range(slots / 2);
+                let page = 1 + r.gen_range(10);
                 let n_free = slots - committed;
                 let mut rows = Vec::new();
                 let mut cur = 0;
@@ -541,14 +1473,18 @@ mod tests {
                         rows.push(cur - 1);
                     }
                 }
-                (slots, committed, rows)
+                (slots, committed, page, rows)
             },
-            |(slots, committed, rows)| {
-                let mut c = filled(2, *slots);
+            |(slots, committed, page, rows)| {
+                let mut c = filled_ps(2, *slots, *page);
                 c.committed = *committed;
-                let prefix_k: Vec<f32> = c.k[..*committed * c.row_size()].to_vec();
+                let prefix_k: Vec<f32> = {
+                    let (k, _) = c.sync_image();
+                    k[..*committed * 8].to_vec()
+                };
                 c.compact_accepted(rows).map_err(|e| e.to_string())?;
-                if &c.k[..*committed * c.row_size()] != &prefix_k[..] {
+                let (k, _) = c.sync_image();
+                if k[..*committed * 8] != prefix_k[..] {
                     return Err("committed prefix mutated".into());
                 }
                 if c.committed != committed + rows.len() {

@@ -1,0 +1,391 @@
+//! Property tests: the paged cache must reproduce the old contiguous
+//! implementation byte-for-byte under random commit/compact/write/reset
+//! sequences (random page sizes, including `1` and `> slots`), clones
+//! must be copy-on-write-isolated, and fused packing over shared-prompt
+//! "mock sessions" must stay O(changed pages) per steady-state cycle.
+
+use anyhow::{bail, Result};
+
+use super::{FusedScratch, KvCache, PackMember, PackedLayout};
+use crate::runtime::TensorF;
+use crate::util::prop;
+use crate::util::rng::Rng;
+
+/// The pre-PR-4 contiguous cache, kept as the oracle.  `reset` zeroes the
+/// buffers (the paged cache drops its pages, whose image reads as zeros).
+struct Oracle {
+    layers: usize,
+    slots: usize,
+    rs: usize,
+    committed: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Oracle {
+    fn new(layers: usize, slots: usize, rs: usize) -> Oracle {
+        let n = layers * slots * rs;
+        Oracle { layers, slots, rs, committed: 0, k: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    fn write_rows_from(
+        &mut self,
+        k: &TensorF,
+        v: &TensorF,
+        src: usize,
+        dst: usize,
+        n: usize,
+    ) -> Result<()> {
+        if src + n > self.slots || dst + n > self.slots {
+            bail!("oracle scatter out of range");
+        }
+        for l in 0..self.layers {
+            let ls = l * self.slots * self.rs;
+            let s0 = ls + src * self.rs;
+            let d0 = ls + dst * self.rs;
+            self.k[d0..d0 + n * self.rs].copy_from_slice(&k.data[s0..s0 + n * self.rs]);
+            self.v[d0..d0 + n * self.rs].copy_from_slice(&v.data[s0..s0 + n * self.rs]);
+        }
+        Ok(())
+    }
+
+    fn commit(&mut self, n: usize) -> Result<()> {
+        if self.committed + n > self.slots {
+            bail!("oracle overflow");
+        }
+        self.committed += n;
+        Ok(())
+    }
+
+    fn compact_accepted(&mut self, rows: &[usize]) -> Result<()> {
+        let base = self.committed;
+        for w in rows.windows(2) {
+            if w[1] <= w[0] {
+                bail!("rows not increasing");
+            }
+        }
+        if let Some(&last) = rows.last() {
+            if base + last >= self.slots {
+                bail!("row out of cache");
+            }
+        }
+        for l in 0..self.layers {
+            let ls = l * self.slots * self.rs;
+            for (i, &r) in rows.iter().enumerate() {
+                let src = ls + (base + r) * self.rs;
+                let dst = ls + (base + i) * self.rs;
+                if src != dst {
+                    self.k.copy_within(src..src + self.rs, dst);
+                    self.v.copy_within(src..src + self.rs, dst);
+                }
+            }
+        }
+        self.committed += rows.len();
+        Ok(())
+    }
+
+    fn reset(&mut self) {
+        self.committed = 0;
+        self.k.fill(0.0);
+        self.v.fill(0.0);
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Op {
+    /// scatter `n` rows from a seeded full-size tensor, src == dst
+    Write { at: usize, n: usize, seed: u32 },
+    Commit(usize),
+    Compact(Vec<usize>),
+    Reset,
+}
+
+fn tensors(layers: usize, slots: usize, rs: usize, seed: u32) -> (TensorF, TensorF) {
+    let n = layers * slots * rs;
+    let f = |i: usize| ((i as u32).wrapping_mul(2654435761).wrapping_add(seed) % 10007) as f32;
+    let k = TensorF { dims: vec![layers, slots, rs, 1], data: (0..n).map(f).collect() };
+    let v = TensorF { dims: vec![layers, slots, rs, 1], data: (0..n).map(|i| -f(i)).collect() };
+    (k, v)
+}
+
+#[derive(Debug)]
+struct Case {
+    layers: usize,
+    slots: usize,
+    heads: usize,
+    page: usize,
+    ops: Vec<Op>,
+}
+
+fn gen_case(r: &mut Rng) -> Case {
+    let layers = 1 + r.gen_range(2);
+    let slots = 8 + r.gen_range(24);
+    let heads = 1 + r.gen_range(2);
+    let page = *r.choice(&[1, 2, 3, 5, 8, slots, slots + 7]);
+    let n_ops = 4 + r.gen_range(10);
+    let mut ops = Vec::with_capacity(n_ops);
+    let mut committed = 0usize;
+    for _ in 0..n_ops {
+        let remaining = slots - committed;
+        match r.gen_range(8) {
+            0 => {
+                ops.push(Op::Reset);
+                committed = 0;
+            }
+            1..=3 => {
+                if remaining == 0 {
+                    ops.push(Op::Reset);
+                    committed = 0;
+                    continue;
+                }
+                let n = 1 + r.gen_range(remaining.min(6));
+                ops.push(Op::Write { at: committed, n, seed: r.next_u64() as u32 });
+            }
+            4..=5 => {
+                if remaining == 0 {
+                    ops.push(Op::Reset);
+                    committed = 0;
+                    continue;
+                }
+                let n = 1 + r.gen_range(remaining.min(4));
+                ops.push(Op::Commit(n));
+                committed += n;
+            }
+            _ => {
+                if remaining < 2 {
+                    ops.push(Op::Reset);
+                    committed = 0;
+                    continue;
+                }
+                // strictly increasing accepted rows within the free region
+                let mut rows = Vec::new();
+                let mut cur = 0usize;
+                while rows.len() < 4 && cur + 1 < remaining {
+                    cur += 1 + r.gen_range(2);
+                    if cur < remaining {
+                        rows.push(cur - 1);
+                    }
+                }
+                if rows.is_empty() {
+                    rows.push(0);
+                }
+                committed += rows.len();
+                ops.push(Op::Compact(rows));
+            }
+        }
+    }
+    Case { layers, slots, heads, page, ops }
+}
+
+fn images_match(c: &mut KvCache, o: &Oracle) -> Result<(), String> {
+    let (k, v) = c.sync_image();
+    if k != &o.k[..] {
+        return Err("k image diverged from contiguous oracle".into());
+    }
+    if v != &o.v[..] {
+        return Err("v image diverged from contiguous oracle".into());
+    }
+    if c.committed != o.committed {
+        return Err(format!("committed diverged: {} vs {}", c.committed, o.committed));
+    }
+    Ok(())
+}
+
+/// Byte-for-byte equivalence with the contiguous implementation under
+/// random op sequences and page sizes (including 1 and > slots).
+#[test]
+fn prop_paged_matches_contiguous() {
+    prop::check(
+        "paged cache == contiguous oracle",
+        gen_case,
+        |case| {
+            let rs = case.heads * 4;
+            let mut c = KvCache::with_page_size(case.layers, case.slots, case.heads, 4, case.page);
+            let mut o = Oracle::new(case.layers, case.slots, rs);
+            for op in &case.ops {
+                let (a, b) = match op {
+                    Op::Write { at, n, seed } => {
+                        let (k, v) = tensors(case.layers, case.slots, rs, *seed);
+                        (
+                            c.write_rows_from(&k, &v, *at, *at, *n).map_err(|e| e.to_string()),
+                            o.write_rows_from(&k, &v, *at, *at, *n).map_err(|e| e.to_string()),
+                        )
+                    }
+                    Op::Commit(n) => (
+                        c.commit(*n).map_err(|e| e.to_string()),
+                        o.commit(*n).map_err(|e| e.to_string()),
+                    ),
+                    Op::Compact(rows) => (
+                        c.compact_accepted(rows).map_err(|e| e.to_string()),
+                        o.compact_accepted(rows).map_err(|e| e.to_string()),
+                    ),
+                    Op::Reset => {
+                        c.reset();
+                        o.reset();
+                        (Ok(()), Ok(()))
+                    }
+                };
+                if a.is_ok() != b.is_ok() {
+                    return Err(format!("status diverged on {op:?}: {a:?} vs {b:?}"));
+                }
+                images_match(&mut c, &o)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Clones share pages copy-on-write: mutating the original never changes
+/// the clone's bytes.
+#[test]
+fn prop_clone_is_cow_isolated() {
+    prop::check(
+        "clone is COW-isolated",
+        gen_case,
+        |case| {
+            let rs = case.heads * 4;
+            let mut c = KvCache::with_page_size(case.layers, case.slots, case.heads, 4, case.page);
+            // seed some content, then snapshot via clone
+            let (k, v) = tensors(case.layers, case.slots, rs, 42);
+            c.write_rows_from(&k, &v, 0, 0, case.slots).map_err(|e| e.to_string())?;
+            c.committed = case.slots / 2;
+            let mut snap = c.clone();
+            let want_k = snap.k_tensor().data;
+            let want_v = snap.v_tensor().data;
+            // hammer the original with the op sequence
+            for op in &case.ops {
+                match op {
+                    Op::Write { at, n, seed } => {
+                        let (k, v) = tensors(case.layers, case.slots, rs, *seed);
+                        let _ = c.write_rows_from(&k, &v, *at, *at, *n);
+                    }
+                    Op::Commit(n) => {
+                        let _ = c.commit(*n);
+                    }
+                    Op::Compact(rows) => {
+                        let _ = c.compact_accepted(rows);
+                    }
+                    Op::Reset => c.reset(),
+                }
+            }
+            if snap.k_tensor().data != want_k || snap.v_tensor().data != want_v {
+                return Err("clone bytes changed under the original's mutations".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// THE paged-packing acceptance test, CI flavor: N "mock sessions" share
+/// a prompt (dedup'd prefill), then run fused cycles.  Steady-state packs
+/// must copy only tail pages (not the whole prefix), report shared pages,
+/// and the fleet must fuse past the old `Σ prefixes + block <= slots`
+/// ceiling.  The packed image must reproduce each member's own committed
+/// bytes exactly.
+#[test]
+fn shared_prompt_fleet_packs_o_changed_pages() {
+    let (layers, slots, heads, hd, ps) = (2usize, 128usize, 2usize, 4usize, 8usize);
+    let rs = heads * hd;
+    let n_sessions = 7usize;
+    let prompt = 20usize;
+    let rows_per = 1usize;
+    let width = 8usize; // pick_block(7 rows) on the compiled ladder
+
+    // identical prompts -> dedup'd pages
+    let mut sessions: Vec<KvCache> = (0..n_sessions)
+        .map(|_| {
+            let mut c = KvCache::with_page_size(layers, slots, heads, hd, ps);
+            let (k, v) = {
+                let n = layers * slots * rs;
+                let f = |i: usize| (i % 8191) as f32 * 0.5;
+                (
+                    TensorF { dims: vec![layers, slots, heads, hd], data: (0..n).map(f).collect() },
+                    TensorF {
+                        dims: vec![layers, slots, heads, hd],
+                        data: (0..n).map(|i| -f(i)).collect(),
+                    },
+                )
+            };
+            c.absorb(k, v, prompt).unwrap();
+            c.committed = prompt;
+            c
+        })
+        .collect();
+
+    // the fleet exceeds the old contiguous fusion ceiling
+    let old_bound = n_sessions * prompt + width;
+    assert!(old_bound > slots, "fixture must exceed the old ceiling ({old_bound} <= {slots})");
+
+    let mut scratch = FusedScratch::new();
+    let mut copied_per_cycle = Vec::new();
+    let mut shared_per_cycle = Vec::new();
+    for cycle in 0..4usize {
+        let mut handles = Vec::with_capacity(n_sessions);
+        let mut members = Vec::with_capacity(n_sessions);
+        for c in sessions.iter_mut() {
+            let pages = c.committed_pages();
+            members.push(PackMember {
+                page_ids: pages.iter().map(|p| p.id()).collect(),
+                prefix_len: c.committed,
+                rows: rows_per,
+            });
+            handles.push(pages);
+        }
+        let layout = PackedLayout::plan(&members, slots, ps, width)
+            .expect("shared-prefix fleet must fit the lifted ceiling");
+        let stats = scratch.pack(&layout, &handles, layers, rs).unwrap();
+        // release handles before the absorb writes (as fused_decode does)
+        // so tail-page writes stay in place instead of COWing
+        drop(handles);
+        copied_per_cycle.push(stats.pages_copied);
+        shared_per_cycle.push(stats.shared_pages);
+
+        // the packed image reproduces every member's committed bytes
+        for (j, c) in sessions.iter_mut().enumerate() {
+            let committed = c.committed;
+            let (ck, _) = c.sync_image();
+            let ck = ck.to_vec();
+            for (p, &f) in layout.prefix_pages[j].iter().enumerate() {
+                let valid = ps.min(committed - p * ps);
+                let own = &ck[(p * ps) * rs..(p * ps + valid) * rs];
+                let packed = &scratch.k()[(f * ps) * rs..(f * ps + valid) * rs];
+                assert_eq!(own, packed, "cycle {cycle} member {j} page {p} bytes diverged");
+            }
+        }
+
+        // absorb: one fresh committed row per member (solo-equivalent
+        // write at the committed boundary, then commit)
+        for (j, c) in sessions.iter_mut().enumerate() {
+            let n = layers * slots * rs;
+            let f = |i: usize| ((i + 31 * j + 977 * cycle) % 4093) as f32;
+            let k = TensorF {
+                dims: vec![layers, slots, heads, hd],
+                data: (0..n).map(f).collect(),
+            };
+            let v = TensorF {
+                dims: vec![layers, slots, heads, hd],
+                data: (0..n).map(|i| -f(i)).collect(),
+            };
+            let at = c.committed;
+            c.write_rows_from(&k, &v, at, at, rows_per).unwrap();
+            c.commit(rows_per).unwrap();
+        }
+    }
+
+    // cycle 0 stages everything; the prompt pages are shared
+    assert!(shared_per_cycle[0] > 0, "identical prompts must share pages: {shared_per_cycle:?}");
+    // steady state: each cycle re-copies at most the per-session tail
+    // pages (the row written last cycle dirties <= 2 pages/session at
+    // these sizes), never the whole prefix
+    let prefix_pages_total: usize = n_sessions * prompt.div_ceil(ps);
+    for (cy, &copied) in copied_per_cycle.iter().enumerate().skip(1) {
+        assert!(
+            copied <= 2 * n_sessions,
+            "cycle {cy}: copied {copied} pages, want <= tail pages ({})",
+            2 * n_sessions
+        );
+        assert!(copied < prefix_pages_total, "cycle {cy} re-copied the whole prefix");
+    }
+    // and something was actually reused
+    assert!(scratch.pages_reused > 0);
+}

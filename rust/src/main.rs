@@ -136,6 +136,12 @@ fn run(args: &Args) -> Result<()> {
                         agg.usize_at("solo_calls").unwrap_or(0),
                         agg.f64_at("mean_fused_rows").unwrap_or(0.0),
                     );
+                    println!(
+                        "paged kv: pack_pages_copied={} pack_pages_reused={} shared_pages={}",
+                        agg.usize_at("pack_pages_copied").unwrap_or(0),
+                        agg.usize_at("pack_pages_reused").unwrap_or(0),
+                        agg.usize_at("shared_pages").unwrap_or(0),
+                    );
                 }
                 return Ok(());
             }

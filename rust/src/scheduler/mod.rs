@@ -19,7 +19,14 @@
 //! compiled decode-block calls as capacity allows
 //! (`engine::sessions::fused_decode` — ONE target forward per cycle per
 //! worker in the common case), scatters the outputs, and absorbs each
-//! session independently.  Methods that cannot batch
+//! session independently.  Grouping capacity is **page-granular** over
+//! the paged KV cache: a group must satisfy `(unique pages)·page_size +
+//! padded block <= slots`, where pages shared by several sessions
+//! (identical prompt prefixes, see `kvcache` COW/dedup) count once — so
+//! a shared-prefix fleet fuses past the old `Σ prefixes + block <=
+//! slots` ceiling, and the per-cycle host pack cost is bounded by the
+//! pages that actually changed (per-worker staging cache in
+//! `kvcache::FusedScratch`).  Methods that cannot batch
 //! (`StepPlan::Unbatchable`: pld/lookahead) fall back to their solo
 //! `step` within the same cycle.  A short job submitted behind a long one
 //! still starts immediately and finishes first (cycle granularity), and
@@ -71,6 +78,7 @@ use anyhow::Result;
 use crate::engine::build_method;
 use crate::engine::metrics::Metrics;
 use crate::engine::sessions::{fused_decode, pick_block, TargetSession, MAX_BLOCK};
+use crate::kvcache::FusedScratch;
 use crate::runtime::Runtime;
 use crate::sampling::SampleParams;
 use crate::spec::{
@@ -166,6 +174,14 @@ pub struct WorkerStats {
     pub solo_calls: u64,
     /// candidate rows covered by fused calls (occupancy numerator)
     pub fused_rows: u64,
+    /// KV pages memcpy'd into the fused image across all packs (paged KV:
+    /// steady-state cycles copy only changed tail pages)
+    pub pack_pages_copied: u64,
+    /// KV pages skipped because their `(id, stamp)` was already staged
+    pub pack_pages_reused: u64,
+    /// cross-session shared pages seen by this worker's most recent fused
+    /// pack (gauge; > 0 means co-active sessions share a prompt prefix)
+    pub shared_pages: u64,
     /// acceptance metrics merged over every successful job
     pub metrics: Metrics,
 }
@@ -233,6 +249,19 @@ impl PoolStats {
 
     pub fn fused_rows(&self) -> u64 {
         self.workers.iter().map(|w| w.fused_rows).sum()
+    }
+
+    pub fn pack_pages_copied(&self) -> u64 {
+        self.workers.iter().map(|w| w.pack_pages_copied).sum()
+    }
+
+    pub fn pack_pages_reused(&self) -> u64 {
+        self.workers.iter().map(|w| w.pack_pages_reused).sum()
+    }
+
+    /// Cross-session shared pages over the workers' latest fused packs.
+    pub fn shared_pages(&self) -> u64 {
+        self.workers.iter().map(|w| w.shared_pages).sum()
     }
 
     /// Pool-wide verify executions (each serves >= 1 session's cycle).
@@ -542,6 +571,21 @@ impl WorkerCtx {
         stats[self.id].fused_rows += rows as u64;
     }
 
+    /// Record one fused pack's page traffic (copied/reused deltas).
+    fn note_pack(&self, copied: u64, reused: u64) {
+        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
+        stats[self.id].pack_pages_copied += copied;
+        stats[self.id].pack_pages_reused += reused;
+    }
+
+    /// Update the shared-page gauge with a full cycle's total (summed
+    /// over every fused pack the cycle ran, so multi-group cycles don't
+    /// clobber one group's sharing with another's zero).
+    fn note_shared(&self, shared: u64) {
+        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
+        stats[self.id].shared_pages = shared;
+    }
+
     fn note_solo(&self) {
         let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
         stats[self.id].solo_calls += 1;
@@ -621,6 +665,12 @@ fn worker(ctx: WorkerCtx, artifact_dir: PathBuf, cfg: MethodCfg, rx: Arc<Mutex<R
     };
     let mut pool: MethodPool = HashMap::new();
     let mut active: Vec<ActiveJob> = Vec::new();
+    // persistent fused-pack images + page staging caches, one per fused
+    // group ordinal: pages staged in one cycle are reused by the next
+    // (same (id, stamp) at the same fused offset), which is what makes
+    // packing O(changed pages) — and a cycle that splits into several
+    // capacity groups must not let group B's pack evict group A's staging
+    let mut scratches: Vec<FusedScratch> = Vec::new();
     let mut draining = false;
     loop {
         // ---- admit new jobs up to max_active ----
@@ -697,7 +747,7 @@ fn worker(ctx: WorkerCtx, artifact_dir: PathBuf, cfg: MethodCfg, rx: Arc<Mutex<R
             continue;
         }
         // ---- one fused verification cycle over every live session ----
-        run_cycle(&ctx, &mut active);
+        run_cycle(&ctx, &mut active, &mut scratches);
         sweep_ended(&ctx, &mut pool, &mut active);
     }
 }
@@ -841,16 +891,88 @@ fn admit(
     }
 }
 
-/// How a planned session's verification will be executed (probed without
-/// holding any session borrow).
-#[derive(Clone, Copy)]
+/// A compiled-target session's fuse-relevant shape, probed without
+/// holding any session borrow.  Occupancy is page-granular: what a member
+/// adds to a group is its *distinct* page ids, so co-active sessions
+/// sharing a prompt prefix cost their shared pages only once.
+#[derive(Clone, Debug)]
+pub(crate) struct FuseCand {
+    /// target checkpoint identity (fused members must share weights)
+    pub wptr: usize,
+    pub slots: usize,
+    pub page_size: usize,
+    /// ids of the pages backing the committed prefix
+    pub pages: Vec<u64>,
+    /// candidate verification rows this cycle
+    pub rows: usize,
+}
+
+/// How a planned session's verification will be executed.
 enum VerKind {
-    /// compiled target graph; fused by (weights ptr, capacity)
-    Target { committed: usize, slots: usize, wptr: usize },
+    /// compiled target graph; fused by (weights ptr, page capacity)
+    Target(FuseCand),
     /// runtime-free host verifier; fused by method name
     Host,
     /// no executor handle — verify through the method's own `verify`
     Solo,
+}
+
+/// Greedily group compiled-target candidates while one decode-block call
+/// can hold every member: rows fit the widest artifact, and the group's
+/// *unique* pages plus the padded block fit the cache —
+/// `(unique pages)·page_size + pick_block(rows) <= slots`, the paged
+/// replacement for the old `Σ prefixes + block <= slots` ceiling (a
+/// shared-prefix fleet can therefore fuse past the old session bound).
+pub(crate) fn plan_fuse_groups(cands: &[Option<&FuseCand>]) -> Vec<Vec<usize>> {
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut cur: Vec<usize> = Vec::new();
+    let mut cur_pages: HashSet<u64> = HashSet::new();
+    // fused segments the group occupies — distinct ids once, plus one per
+    // intra-member duplicate occurrence, exactly mirroring
+    // `PackedLayout::plan` so an admitted group can never fail to pack
+    let mut cur_segments = 0usize;
+    let mut cur_rows = 0usize;
+    let (mut cur_wptr, mut cur_slots, mut cur_ps) = (0usize, 0usize, 0usize);
+    for (i, cand) in cands.iter().enumerate() {
+        let Some(c) = cand else { continue };
+        // segments this candidate would add to the current group
+        let mut seen: HashSet<u64> = HashSet::new();
+        let mut add = 0usize;
+        for &id in &c.pages {
+            if !seen.insert(id) || !cur_pages.contains(&id) {
+                add += 1;
+            }
+        }
+        let fits = !cur.is_empty()
+            && c.wptr == cur_wptr
+            && c.slots == cur_slots
+            && c.page_size == cur_ps
+            && cur_rows + c.rows <= MAX_BLOCK
+            && (cur_segments + add) * c.page_size + pick_block(cur_rows + c.rows) <= c.slots;
+        if fits {
+            cur.push(i);
+            cur_rows += c.rows;
+            cur_segments += add;
+            cur_pages.extend(c.pages.iter().copied());
+        } else {
+            if !cur.is_empty() {
+                groups.push(std::mem::take(&mut cur));
+            }
+            cur.push(i);
+            cur_pages.clear();
+            cur_pages.extend(c.pages.iter().copied());
+            // alone in a fresh group, every page occurrence is a segment
+            cur_segments = c.pages.len();
+            cur_rows = c.rows;
+            cur_wptr = c.wptr;
+            cur_slots = c.slots;
+            cur_ps = c.page_size;
+        }
+    }
+    if !cur.is_empty() {
+        groups.push(cur);
+    }
+    groups
 }
 
 /// One fused verification cycle over every live session:
@@ -865,9 +987,10 @@ enum VerKind {
 ///
 /// Sessions that finish (or fail) anywhere in the cycle are completed
 /// inline and marked `ended` for the caller's sweep.  A failed fused
-/// call falls back to per-session solo verifies — packing happens before
-/// any session state changes, so the retry is safe.
-fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob]) {
+/// call falls back to per-session solo verifies — packing copies pages
+/// *out* of the sessions and mutates only the worker's scratch image, so
+/// the retry is safe.
+fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob], scratches: &mut Vec<FusedScratch>) {
     let n = active.len();
     // ---- phase 1: checks + plan ----
     let mut rows_of: Vec<Option<VerifyRows>> = (0..n).map(|_| None).collect();
@@ -912,59 +1035,39 @@ fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob]) {
         }
     }
 
-    // ---- phase 2: probe executors + group by capacity ----
+    // ---- phase 2: probe executors + group by page-granular capacity ----
     let mut kinds: Vec<Option<VerKind>> = (0..n).map(|_| None).collect();
     for i in 0..n {
-        if rows_of[i].is_none() {
-            continue;
-        }
+        let Some(rows) = rows_of[i].as_ref() else { continue };
+        let r = rows.len();
         let a = &mut active[i];
         kinds[i] = Some(if a.method.host_verifier().is_some() {
             VerKind::Host
         } else if let Some(t) = a.method.fused_handle() {
-            VerKind::Target {
-                committed: t.cache.committed,
-                slots: t.cache.slots,
+            VerKind::Target(FuseCand {
                 wptr: Rc::as_ptr(&t.weights) as usize,
-            }
+                slots: t.cache.slots,
+                page_size: t.cache.page_size(),
+                pages: t.cache.committed_page_ids(),
+                rows: r,
+            })
         } else {
             VerKind::Solo
         });
     }
-    // compiled-target groups: greedy pack while one decode-block call can
-    // hold every member's committed prefix + padded rows
-    let mut groups: Vec<Vec<usize>> = Vec::new();
-    {
-        let mut cur: Vec<usize> = Vec::new();
-        let (mut cur_prefix, mut cur_rows) = (0usize, 0usize);
-        let (mut cur_wptr, mut cur_slots) = (0usize, 0usize);
-        for i in 0..n {
-            let Some(VerKind::Target { committed, slots, wptr }) = kinds[i] else { continue };
-            let r = rows_of[i].as_ref().map_or(0, VerifyRows::len);
-            let fits = !cur.is_empty()
-                && wptr == cur_wptr
-                && slots == cur_slots
-                && cur_rows + r <= MAX_BLOCK
-                && cur_prefix + committed + pick_block(cur_rows + r) <= slots;
-            if fits {
-                cur.push(i);
-                cur_prefix += committed;
-                cur_rows += r;
-            } else {
-                if !cur.is_empty() {
-                    groups.push(std::mem::take(&mut cur));
-                }
-                cur.push(i);
-                cur_prefix = committed;
-                cur_rows = r;
-                cur_wptr = wptr;
-                cur_slots = slots;
-            }
-        }
-        if !cur.is_empty() {
-            groups.push(cur);
-        }
-    }
+    // compiled-target groups: greedy while one decode-block call can hold
+    // every member's distinct pages + padded rows (shared prompt pages
+    // count once — the lifted fusion ceiling)
+    let groups = {
+        let cands: Vec<Option<&FuseCand>> = kinds
+            .iter()
+            .map(|k| match k {
+                Some(VerKind::Target(c)) => Some(c),
+                _ => None,
+            })
+            .collect();
+        plan_fuse_groups(&cands)
+    };
     // host groups: every host-verified session of the same method shares
     // one batch call (the verifier is a pure per-row function)
     let mut host_groups: Vec<(String, Vec<usize>)> = Vec::new();
@@ -988,7 +1091,8 @@ fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob]) {
     }
 
     // ---- phase 3a: fused compiled groups ----
-    for g in &groups {
+    let mut cycle_shared: Option<u64> = None;
+    for (gi, g) in groups.iter().enumerate() {
         if g.len() == 1 {
             let i = g[0];
             let rows = rows_of[i].take().unwrap();
@@ -996,7 +1100,14 @@ fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob]) {
             ctx.sleep_throttle();
             continue;
         }
+        // one scratch per group ordinal: with stable membership, group gi
+        // hits the same staging cache it filled last cycle
+        while scratches.len() <= gi {
+            scratches.push(FusedScratch::new());
+        }
+        let scratch = &mut scratches[gi];
         let total_rows: usize = g.iter().map(|&i| rows_of[i].as_ref().unwrap().len()).sum();
+        let pack_before = (scratch.pages_copied, scratch.pages_reused, scratch.packs);
         let sw = Stopwatch::start();
         let outs = {
             let mut batch: Vec<(&mut TargetSession, &VerifyRows)> = Vec::with_capacity(g.len());
@@ -1009,15 +1120,28 @@ fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob]) {
                 }
             }
             if batch.len() == g.len() {
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| fused_decode(&mut batch)))
-                    .unwrap_or_else(|p| {
-                        Err(anyhow::anyhow!("engine panic: {}", panic_text(p.as_ref())))
-                    })
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    fused_decode(scratch, &mut batch)
+                }))
+                .unwrap_or_else(|p| {
+                    Err(anyhow::anyhow!("engine panic: {}", panic_text(p.as_ref())))
+                })
             } else {
                 Err(anyhow::anyhow!("fused handle disappeared between probe and pack"))
             }
         };
         let verify_s = sw.secs();
+        // pack traffic happened whether or not the graph call succeeded —
+        // but only read the shared-page gauge if a pack actually ran this
+        // group (a call that bailed before packing would replay a stale
+        // value)
+        ctx.note_pack(
+            scratch.pages_copied - pack_before.0,
+            scratch.pages_reused - pack_before.1,
+        );
+        if scratch.packs != pack_before.2 {
+            *cycle_shared.get_or_insert(0) += scratch.shared_pages;
+        }
         match outs {
             Ok(outs) => {
                 ctx.note_fused(total_rows);
@@ -1037,8 +1161,8 @@ fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob]) {
                 }
             }
             Err(e) => {
-                // the pack mutates nothing until the call succeeds, so
-                // every member can retry through its solo verify
+                // packing only copies pages OUT of the sessions (into the
+                // worker scratch), so every member can retry solo
                 eprintln!(
                     "[scheduler] worker {}: fused verify failed ({e:#}); retrying solo",
                     ctx.id
@@ -1050,6 +1174,12 @@ fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob]) {
                 }
             }
         }
+    }
+    // gauge: this cycle's cross-session shared pages, summed over every
+    // fused pack (left untouched on cycles with no fused call, so a brief
+    // solo cycle doesn't zero an otherwise-sharing worker)
+    if let Some(shared) = cycle_shared {
+        ctx.note_shared(shared);
     }
 
     // ---- phase 3b: fused host groups ----
@@ -1541,6 +1671,69 @@ mod tests {
             solo_stats.verify_calls()
         );
         fused.shutdown();
+    }
+
+    fn cand(wptr: usize, pages: Vec<u64>, rows: usize) -> Option<FuseCand> {
+        Some(FuseCand { wptr, slots: 128, page_size: 8, pages, rows })
+    }
+
+    /// Call `plan_fuse_groups` over owned candidates (it takes borrows,
+    /// matching the probe loop's zero-copy path).
+    fn groups_of(cands: &[Option<FuseCand>]) -> Vec<Vec<usize>> {
+        let refs: Vec<Option<&FuseCand>> = cands.iter().map(|c| c.as_ref()).collect();
+        plan_fuse_groups(&refs)
+    }
+
+    /// Page-granular grouping: distinct-page fleets still respect the
+    /// slot budget, row counts respect the widest artifact, and weights
+    /// identity splits groups.
+    #[test]
+    fn fuse_groups_respect_page_capacity_and_rows() {
+        // 3 members, disjoint 4-page prefixes (32 slots each at page 8):
+        // 2 fit (8 pages * 8 + block), a 3rd overflows 128 slots
+        let cands = vec![
+            cand(1, vec![1, 2, 3, 4], 30),
+            cand(1, vec![5, 6, 7, 8], 30),
+            cand(1, vec![9, 10, 11, 12], 30),
+        ];
+        let groups = groups_of(&cands);
+        assert_eq!(groups, vec![vec![0, 1], vec![2]]);
+        // row overflow splits even when pages fit
+        let cands = vec![cand(1, vec![1], 100), cand(1, vec![2], 100)];
+        assert_eq!(groups_of(&cands), vec![vec![0], vec![1]]);
+        // different checkpoints never fuse
+        let cands = vec![cand(1, vec![1], 4), cand(2, vec![2], 4)];
+        assert_eq!(groups_of(&cands), vec![vec![0], vec![1]]);
+        // non-candidates are skipped without breaking a group
+        let cands = vec![cand(1, vec![1], 4), None, cand(1, vec![2], 4)];
+        assert_eq!(groups_of(&cands), vec![vec![0, 2]]);
+        // intra-member duplicate ids occupy one segment EACH (mirroring
+        // PackedLayout::plan's forced distinct segments): 7 + 9 segments
+        // at page 8 overflow 128 slots even though only 8 ids are distinct
+        let cands = vec![
+            cand(1, (1..=7).collect(), 4),
+            cand(1, vec![9; 9], 4),
+        ];
+        assert_eq!(groups_of(&cands), vec![vec![0], vec![1]]);
+    }
+
+    /// THE lifted-ceiling test: a shared-prefix fleet whose summed
+    /// prefixes blow the old `Σ prefixes + block <= slots` bound still
+    /// forms ONE fused group, because its shared pages count once.
+    #[test]
+    fn fuse_groups_share_prompt_pages_past_old_ceiling() {
+        // 7 members, each 20 committed slots over the SAME 3 pages:
+        // old bound 7*20 + 8 = 148 > 128; new bound 3*8 + 8 = 32
+        let cands: Vec<Option<FuseCand>> = (0..7).map(|_| cand(7, vec![1, 2, 3], 1)).collect();
+        let groups = groups_of(&cands);
+        assert_eq!(groups.len(), 1, "shared-prefix fleet must fuse into one group: {groups:?}");
+        assert_eq!(groups[0], (0..7).collect::<Vec<usize>>());
+        // sanity: the same fleet with disjoint pages cannot all fuse
+        let cands: Vec<Option<FuseCand>> = (0..7)
+            .map(|j| cand(7, vec![10 * j as u64, 10 * j as u64 + 1, 10 * j as u64 + 2], 1))
+            .collect();
+        let groups = groups_of(&cands);
+        assert!(groups.len() > 1, "disjoint prefixes must still hit the slot budget");
     }
 
     /// Least-loaded dispatch: with every worker idle, consecutive submits

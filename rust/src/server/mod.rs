@@ -17,11 +17,16 @@
 //!   stats:    {"stats": true}
 //!          -> {"stats": {"workers": [{"worker": 0, "jobs_ok": 3,
 //!              "fused_calls": 9, "solo_calls": 2, "mean_fused_rows": 17.5,
-//!              ...}],
+//!              "pack_pages_copied": 12, "pack_pages_reused": 87,
+//!              "shared_pages": 3, ...}],
 //!              "aggregate": {"jobs": 3, "tokens": 120, "tau": 3.1, ...}}}
 //!             (fused_calls/solo_calls/fused_rows are the worker's batch
 //!             occupancy: how many verify executions covered >= 2
-//!             sessions, and how many candidate rows those carried)
+//!             sessions, and how many candidate rows those carried;
+//!             pack_pages_copied/pack_pages_reused are the paged-KV pack
+//!             traffic — steady-state cycles copy only changed tail
+//!             pages — and shared_pages gauges cross-session prompt-page
+//!             sharing in the latest fused pack)
 //!   error:    {"id": 1, "error": "..."}  ("id" omitted when the line
 //!             could not be parsed; messages are JSON-escaped)
 //!
@@ -172,6 +177,9 @@ pub fn format_pool_stats(p: &PoolStats) -> String {
                 ("solo_calls", Json::num(w.solo_calls as f64)),
                 ("fused_rows", Json::num(w.fused_rows as f64)),
                 ("mean_fused_rows", Json::num(wire_r3(w.mean_fused_rows()))),
+                ("pack_pages_copied", Json::num(w.pack_pages_copied as f64)),
+                ("pack_pages_reused", Json::num(w.pack_pages_reused as f64)),
+                ("shared_pages", Json::num(w.shared_pages as f64)),
                 ("tau", Json::num(wire_r3(w.metrics.tau()))),
             ])
         })
@@ -188,6 +196,9 @@ pub fn format_pool_stats(p: &PoolStats) -> String {
         ("solo_calls", Json::num(p.solo_calls() as f64)),
         ("fused_rows", Json::num(p.fused_rows() as f64)),
         ("mean_fused_rows", Json::num(wire_r3(p.mean_fused_rows()))),
+        ("pack_pages_copied", Json::num(p.pack_pages_copied() as f64)),
+        ("pack_pages_reused", Json::num(p.pack_pages_reused() as f64)),
+        ("shared_pages", Json::num(p.shared_pages() as f64)),
         ("tau", Json::num(wire_r3(p.tau()))),
     ]);
     Json::obj(vec![(
@@ -593,6 +604,9 @@ mod tests {
                     fused_calls: 4,
                     solo_calls: 2,
                     fused_rows: 70,
+                    pack_pages_copied: 12,
+                    pack_pages_reused: 88,
+                    shared_pages: 3,
                     metrics: m.clone(),
                 },
                 WorkerStats {
@@ -605,6 +619,9 @@ mod tests {
                     fused_calls: 1,
                     solo_calls: 3,
                     fused_rows: 10,
+                    pack_pages_copied: 4,
+                    pack_pages_reused: 2,
+                    shared_pages: 0,
                     metrics: m,
                 },
             ],
@@ -623,11 +640,18 @@ mod tests {
         assert_eq!(agg.usize_at("solo_calls"), Some(5));
         assert_eq!(agg.usize_at("fused_rows"), Some(80));
         assert_eq!(agg.f64_at("mean_fused_rows"), Some(16.0));
+        // paged-KV satellite: pack traffic + shared-page gauge
+        assert_eq!(agg.usize_at("pack_pages_copied"), Some(16));
+        assert_eq!(agg.usize_at("pack_pages_reused"), Some(90));
+        assert_eq!(agg.usize_at("shared_pages"), Some(3));
         let workers = stats.get("workers").unwrap().as_arr().unwrap();
         assert_eq!(workers.len(), 2);
         assert_eq!(workers[0].usize_at("jobs_ok"), Some(3));
         assert_eq!(workers[0].usize_at("fused_calls"), Some(4));
         assert_eq!(workers[0].f64_at("mean_fused_rows"), Some(17.5));
+        assert_eq!(workers[0].usize_at("pack_pages_copied"), Some(12));
+        assert_eq!(workers[0].usize_at("pack_pages_reused"), Some(88));
+        assert_eq!(workers[0].usize_at("shared_pages"), Some(3));
         assert_eq!(workers[1].usize_at("worker"), Some(1));
         assert_eq!(workers[1].usize_at("solo_calls"), Some(3));
     }

@@ -42,8 +42,11 @@
 //! is token-for-token identical to a fused one: each phase only touches
 //! per-session state (own RNG stream, own KV caches, own metrics).
 //! Schedulers call `plan` on every live session, pack the `Verify` rows
-//! into one block-diagonal target call (`engine::sessions::fused_decode`),
-//! scatter the outputs, and `absorb` each session independently.
+//! into one block-diagonal target call (`engine::sessions::fused_decode`
+//! — page-granular since PR 4: each member's committed KV *pages* are
+//! staged into a per-worker scratch image, unchanged pages are skipped,
+//! and pages shared across sessions occupy one fused segment), scatter
+//! the outputs, and `absorb` each session independently.
 
 pub mod eagle;
 pub mod lookup;

@@ -476,6 +476,23 @@ fn fused_pool_matches_sequential_with_artifacts() {
         assert!((g.2 - w.2).abs() < 1e-9, "job {i}: tau diverged");
     }
     assert!(eq_stats.fused_calls() > 0, "fused path must be exercised");
+    // paged KV: fused packs copy pages, and with stable co-active
+    // membership the staging cache reuses unchanged prefix pages across
+    // cycles (pack cost O(changed pages), not O(context))
+    assert!(eq_stats.pack_pages_copied() > 0, "fused packs must stage pages");
+    assert!(
+        eq_stats.pack_pages_reused() > 0,
+        "steady-state packs must reuse staged prefix pages \
+         (copied {}, reused {})",
+        eq_stats.pack_pages_copied(),
+        eq_stats.pack_pages_reused()
+    );
+    // identical prompts across the 4 jobs -> dedup'd prompt pages are
+    // shared inside the fused image
+    assert!(
+        eq_stats.shared_pages() > 0,
+        "identical prompts must share physical pages in the fused pack"
+    );
 
     // ---- call reduction: equal-length greedy jobs run in lockstep, so
     // the fused pool must issue >= 2x fewer verify executions (each
