@@ -160,7 +160,40 @@ fn main() -> anyhow::Result<()> {
 
     fused_verify_bench(&dir, &wl, &method, n_requests)?;
     paged_kv_bench(&dir, &method)?;
+    draft_batch_bench(&dir, &wl, &method, n_requests)?;
     Ok(())
+}
+
+/// Resolve a runnable method: probe `method` through a 1-worker pool and
+/// fall back to the runtime-free `mock` when the backend cannot execute
+/// it (no artifacts / stand-in xla), so the comparison scenarios always
+/// demonstrate their path.
+fn resolve_runnable(dir: &std::path::Path, method: &str) -> anyhow::Result<String> {
+    use hass::scheduler::{Job, Scheduler};
+    let probe = Scheduler::start(dir.to_path_buf(), MethodCfg::default(), 4, 1, 1);
+    let job = Job {
+        id: 1,
+        method: method.to_string(),
+        prompt: "probe".into(),
+        max_new: 2,
+        temperature: 0.0,
+        seed: 0,
+        stream: false,
+        deadline_ms: None,
+    };
+    let rx = probe.submit(job, true)?;
+    let ok = loop {
+        match rx.recv() {
+            Ok(ev) => {
+                if let Some(r) = ev.into_result() {
+                    break r.error.is_none();
+                }
+            }
+            Err(_) => break false,
+        }
+    };
+    probe.shutdown();
+    Ok(if ok { method.to_string() } else { "mock".to_string() })
 }
 
 /// Fused-vs-solo verification comparison: the same jobs through one
@@ -179,35 +212,11 @@ fn fused_verify_bench(
     // preflight: without an executable backend, fall back to the
     // runtime-free mock so the comparison still demonstrates the path
     let method = {
-        let probe = Scheduler::start(dir.to_path_buf(), MethodCfg::default(), 4, 1, 1);
-        let job = Job {
-            id: 1,
-            method: method.to_string(),
-            prompt: "probe".into(),
-            max_new: 2,
-            temperature: 0.0,
-            seed: 0,
-            stream: false,
-            deadline_ms: None,
-        };
-        let rx = probe.submit(job, true)?;
-        let ok = loop {
-            match rx.recv() {
-                Ok(ev) => {
-                    if let Some(r) = ev.into_result() {
-                        break r.error.is_none();
-                    }
-                }
-                Err(_) => break false,
-            }
-        };
-        probe.shutdown();
-        if ok {
-            method.to_string()
-        } else {
+        let resolved = resolve_runnable(dir, method)?;
+        if resolved != method {
             println!("\n(fused-verify bench: '{method}' unavailable, using 'mock')");
-            "mock".to_string()
         }
+        resolved
     };
 
     let trace: Vec<(String, String, usize)> = wl
@@ -463,5 +472,112 @@ fn paged_kv_bench(dir: &std::path::Path, method: &str) -> anyhow::Result<()> {
     ]);
     std::fs::write("BENCH_paged_kv.json", report.to_string())?;
     println!("  wrote BENCH_paged_kv.json");
+    Ok(())
+}
+
+/// Draft-side batching scenario (PR 5): the same jobs through one worker
+/// at `--max-active 1` (every draft level runs solo inside `plan`) and
+/// `--max-active 4` (co-active sessions' levels fuse into one draft call
+/// per level), reporting draft executions per cycle and throughput.
+/// Results go to stdout and `BENCH_draft_batch.json`.
+fn draft_batch_bench(
+    dir: &std::path::Path,
+    wl: &Workloads,
+    method: &str,
+    n_requests: usize,
+) -> anyhow::Result<()> {
+    use hass::scheduler::{Job, Scheduler};
+    use hass::util::json::Json;
+
+    let method = {
+        let resolved = resolve_runnable(dir, method)?;
+        if resolved != method {
+            println!("\n(draft-batch bench: '{method}' unavailable, using 'mock')");
+        }
+        resolved
+    };
+    let trace: Vec<(String, String, usize)> = wl
+        .trace_split(n_requests.max(8), 555, 1)
+        .into_iter()
+        .flatten()
+        .collect();
+    println!("\n== draft-side batching ({} jobs, method '{method}') ==", trace.len());
+    let mut report: Vec<(&str, Json)> = Vec::new();
+    let mut tok_per_s = [0.0f64; 2];
+    for (pass, &(label, max_active)) in [("solo", 1usize), ("fused", 4usize)].iter().enumerate() {
+        let sched = Scheduler::start(dir.to_path_buf(), MethodCfg::default(), 64, 1, max_active);
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let t0 = std::time::Instant::now();
+        for (i, (_suite, prompt, max_new)) in trace.iter().enumerate() {
+            let job = Job {
+                id: i as u64 + 1,
+                method: method.clone(),
+                prompt: prompt.clone(),
+                max_new: *max_new,
+                temperature: 0.0,
+                seed: i as u64,
+                stream: false,
+                deadline_ms: None,
+            };
+            sched.submit_to(job, true, rtx.clone())?;
+        }
+        drop(rtx);
+        let mut tokens = 0usize;
+        let mut errors = 0usize;
+        for r in rrx.iter().filter_map(hass::scheduler::JobEvent::into_result) {
+            match r.error {
+                Some(_) => errors += 1,
+                None => tokens += r.tokens,
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = sched.stats();
+        sched.shutdown();
+        tok_per_s[pass] = if wall > 0.0 { tokens as f64 / wall } else { 0.0 };
+        let cycles = stats.metrics().cycles.max(1);
+        let drafts_per_cycle = stats.draft_execs() as f64 / cycles as f64;
+        println!(
+            "  {label:<5} (max-active {max_active}): {tokens} tokens in {wall:.2}s \
+             ({:.1} tok/s)  draft_execs={} fused={} solo={} \
+             drafts/cycle={drafts_per_cycle:.2} mean_rows_per_fused={:.1} errors={errors}",
+            tok_per_s[pass],
+            stats.draft_execs(),
+            stats.draft_fused_calls(),
+            stats.draft_solo_calls(),
+            stats.mean_draft_fused_rows(),
+        );
+        report.push((
+            label,
+            Json::obj(vec![
+                ("max_active", Json::num(max_active as f64)),
+                ("jobs", Json::num(trace.len() as f64)),
+                ("errors", Json::num(errors as f64)),
+                ("tokens", Json::num(tokens as f64)),
+                ("wall_s", Json::num(wall)),
+                ("tok_per_s", Json::num(tok_per_s[pass])),
+                ("cycles", Json::num(cycles as f64)),
+                ("draft_execs", Json::num(stats.draft_execs() as f64)),
+                ("draft_fused_calls", Json::num(stats.draft_fused_calls() as f64)),
+                ("draft_solo_calls", Json::num(stats.draft_solo_calls() as f64)),
+                ("draft_calls_per_cycle", Json::num(drafts_per_cycle)),
+                ("mean_draft_fused_rows", Json::num(stats.mean_draft_fused_rows())),
+                (
+                    "draft_pack_pages_copied",
+                    Json::num(stats.draft_pack_pages_copied() as f64),
+                ),
+                (
+                    "draft_pack_pages_reused",
+                    Json::num(stats.draft_pack_pages_reused() as f64),
+                ),
+            ]),
+        ));
+    }
+    let speedup = if tok_per_s[0] > 0.0 { tok_per_s[1] / tok_per_s[0] } else { 0.0 };
+    println!("  fused/solo throughput: {speedup:.2}x");
+    let mut kv = vec![("method", Json::str(method))];
+    kv.extend(report);
+    kv.push(("fused_over_solo_tok_per_s", Json::num(speedup)));
+    std::fs::write("BENCH_draft_batch.json", Json::obj(kv).to_string())?;
+    println!("  wrote BENCH_draft_batch.json");
     Ok(())
 }

@@ -18,7 +18,8 @@ Graphs (S=512 cache slots, d=128, L=4, H=4):
                         (w…, kv_k, kv_v, start, tok[N], pos[N], mask[N,S])
                                                                  -> logits, feats, kv_k', kv_v'
   draft_prefill         (w…, wte, tokens[S], tfeats[S,d])        -> kv_k, kv_v, g
-  draft_decode_b{10}    (w…, wte, kv, start, tok[B], feats[B,d], pos[B], mask[B,S])
+  draft_decode_b{4,10,40,80}
+                        (w…, wte, kv, start, tok[B], feats[B,d], pos[B], mask[B,S])
                                                                  -> logits, g, kv_k', kv_v'
   sps_prefill / sps_decode_n{1}  — same families for the SpS tiny LM
   medusa_heads          (w…, wte, feats[1,d])                    -> logits[1,4,V]
@@ -74,7 +75,7 @@ def tensor_names(params):
 # ---------------------------------------------------------------------------
 
 
-def build_graphs(decode_ns=(1, 8, 64, 128), draft_bs=(10,)):
+def build_graphs(decode_ns=(1, 8, 64, 128), draft_bs=(4, 10, 40, 80)):
     """Returns {name: (fn, arg_specs, param_names, input_specs, output_names)}."""
     tcfg, dcfg, scfg = TARGET_CFG, DRAFT_CFG, SPS_CFG
     d, L, H, hd, V = (tcfg.d_model, tcfg.n_layers, tcfg.n_heads,

@@ -10,9 +10,9 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
-use crate::kvcache::{FusedScratch, KvCache, PackMember, PackedLayout};
+use crate::kvcache::{draft_page_size, FusedScratch, KvCache, MemberVis, PackMember, PackedLayout};
 use crate::runtime::{scalar_i32, Checkpoint, Runtime, TensorF, TensorI};
-use crate::spec::VerifyRows;
+use crate::spec::{DraftRows, VerifyRows};
 
 /// Compiled decode-block widths, ascending (see `python/compile/aot.py`).
 pub const BLOCK_WIDTHS: &[usize] = &[1, 8, 64, 128];
@@ -33,17 +33,30 @@ pub fn pick_block(n: usize) -> usize {
     MAX_BLOCK
 }
 
-/// Split an oversized row set into chunk sizes, each fitting a compiled
-/// width (all but the last are `MAX_BLOCK`).
-pub fn plan_chunks(n: usize) -> Vec<usize> {
-    let mut out = Vec::with_capacity(n / MAX_BLOCK + 1);
+/// Split an oversized row set into chunk sizes, each fitting width `w`
+/// (all but the last are `w`).
+pub fn chunks_of(n: usize, w: usize) -> Vec<usize> {
+    let w = w.max(1);
+    let mut out = Vec::with_capacity(n / w + 1);
     let mut left = n;
-    while left > MAX_BLOCK {
-        out.push(MAX_BLOCK);
-        left -= MAX_BLOCK;
+    while left > w {
+        out.push(w);
+        left -= w;
     }
     out.push(left);
     out
+}
+
+/// Split an oversized row set into chunk sizes, each fitting a compiled
+/// target width (all but the last are `MAX_BLOCK`).
+pub fn plan_chunks(n: usize) -> Vec<usize> {
+    chunks_of(n, MAX_BLOCK)
+}
+
+/// Smallest width in `widths` (ascending) that fits `n` rows; `None` when
+/// `n` exceeds every compiled artifact (callers chunk, see [`chunks_of`]).
+pub fn pick_width(widths: &[usize], n: usize) -> Option<usize> {
+    widths.iter().copied().find(|&w| n <= w)
 }
 
 /// Cache slots a (possibly chunked) decode of `n` rows actually consumes:
@@ -431,18 +444,29 @@ pub fn fused_decode(
 pub struct DraftSession {
     rt: Rc<Runtime>,
     pub weights: Rc<Checkpoint>,
-    /// target wte literal (the draft decodes through the target's LM head)
+    /// target checkpoint identity (the draft decodes through the target's
+    /// LM head); fused batches must share it
+    pub target_weights: Rc<Checkpoint>,
+    /// target wte literal
     pub wte: Literal,
-    /// KV cache kept as pass-through literals: graph outputs are fed back
-    /// as the next call's inputs without host round-trips (perf pass §Perf;
-    /// the draft cache never needs compaction, so host access is never
-    /// required — unlike the target cache).
-    kv_k: Option<Literal>,
-    kv_v: Option<Literal>,
-    pub committed: usize,
+    /// Paged single-layer KV cache (PR 5) — the same COW pages, `(id,
+    /// stamp)` identity and content-addressed prompt dedup the target
+    /// cache uses, so draft pages are packable exactly like target pages.
+    /// Solo decodes borrow the incrementally synced image
+    /// (`sync_image`: O(changed pages) per call) and scatter back only
+    /// the written rows; the committed prefix advances with `commit`,
+    /// tree-scratch rows live above it and are simply overwritten next
+    /// cycle (masks never expose stale slots).
+    pub cache: KvCache,
     pub slots: usize,
     pub vocab: usize,
     pub d_model: usize,
+    /// compiled draft decode-block widths, ascending — derived from the
+    /// artifact metadata (`draft_decode_b{N}` graph inventory), not
+    /// hardcoded
+    widths: Vec<usize>,
+    /// largest compiled draft width (per-level expansion cap; oversized
+    /// row sets are CHUNKED across several calls, not rejected)
     pub block: usize,
 }
 
@@ -457,52 +481,77 @@ impl DraftSession {
             (m.cache_slots(), m.dim("draft", "d_model"),
              m.dim("draft", "n_heads"), m.dim("draft", "vocab"))
         };
-        let _ = heads;
+        let heads = heads.max(1);
+        let hd = d_model / heads;
         let wte = target
             .tensor("['wte']")
             .context("target checkpoint missing wte")?
             .to_literal()?;
+        // available decode widths come from the artifact inventory; the
+        // seed compile ships b10 only, so that stays the fallback when the
+        // metadata lists no draft decode graphs at all
+        let mut widths: Vec<usize> = rt
+            .meta()
+            .graphs
+            .keys()
+            .filter_map(|g| g.strip_prefix("draft_decode_b").and_then(|s| s.parse().ok()))
+            .filter(|&w: &usize| w > 0)
+            .collect();
+        widths.sort_unstable();
+        widths.dedup();
+        if widths.is_empty() {
+            widths.push(10);
+        }
+        let block = *widths.last().expect("at least one draft width");
         Ok(DraftSession {
             rt,
             weights,
+            target_weights: target.clone(),
             wte,
-            kv_k: None,
-            kv_v: None,
-            committed: 0,
+            cache: KvCache::with_page_size(1, slots, heads, hd, draft_page_size()),
             slots,
             vocab,
             d_model,
-            block: 10,
+            widths,
+            block,
         })
     }
 
+    /// Compiled draft decode-block widths, ascending.
+    pub fn widths(&self) -> &[usize] {
+        &self.widths
+    }
+
     pub fn reset(&mut self) {
-        self.committed = 0;
-        self.kv_k = None;
-        self.kv_v = None;
+        self.cache.reset();
+    }
+
+    pub fn committed(&self) -> usize {
+        self.cache.committed
     }
 
     pub fn remaining(&self) -> usize {
-        self.slots - self.committed
+        self.cache.remaining()
     }
 
     pub fn commit(&mut self, n: usize) -> Result<()> {
-        if self.committed + n > self.slots {
-            bail!("draft cache overflow");
-        }
-        self.committed += n;
-        Ok(())
+        self.cache.commit(n).context("draft cache overflow")
     }
 
-    /// Prefill: prompt tokens + target features (unshifted).
+    /// Prefill: prompt tokens + target features (unshifted).  The KV pages
+    /// route through the content-addressed dedup registry, so sessions
+    /// prefilled with an identical prompt share physical draft pages.
     pub fn prefill(&mut self, tokens: &[i32], target_feats: &[Vec<f32>]) -> Result<()> {
+        if tokens.is_empty() || tokens.len() > self.slots {
+            bail!("draft prompt length {} out of range", tokens.len());
+        }
         let mut padded = vec![0i32; self.slots];
         padded[..tokens.len()].copy_from_slice(tokens);
         let mut tf = vec![0.0f32; self.slots * self.d_model];
         for (i, row) in target_feats.iter().enumerate().take(tokens.len()) {
             tf[i * self.d_model..(i + 1) * self.d_model].copy_from_slice(row);
         }
-        let mut out = call(
+        let out = call(
             &self.rt,
             "draft_prefill",
             &self.weights.literals,
@@ -512,19 +561,34 @@ impl DraftSession {
                 TensorF::new(vec![self.slots, self.d_model], tf)?.to_literal()?,
             ],
         )?;
-        // keep the KV literals as-is: zero host conversions on this path
-        self.kv_v = Some(out.swap_remove(1));
-        self.kv_k = Some(out.swap_remove(0));
-        self.committed = tokens.len();
+        let kv_k = tensor_out(&out, 0)?;
+        let kv_v = tensor_out(&out, 1)?;
+        self.cache.absorb(kv_k, kv_v, tokens.len())?;
+        self.cache.committed = tokens.len();
         Ok(())
     }
 
-    /// One draft forward over up to `block` rows.
+    /// One draft forward over `rows` as produced by a method's draft walk.
+    pub fn decode_rows(&mut self, rows: &DraftRows) -> Result<DecodeOut> {
+        let feats: Vec<&[f32]> = rows.feats.iter().map(|f| f.as_slice()).collect();
+        self.decode(&rows.tokens, &feats, &rows.positions, &rows.extra_visible, rows.write_start)
+    }
+
+    /// One draft forward over any number of rows.
     ///
     /// `rows`: (token, input-feature, position, visible-slots) per row; KV
-    /// rows are written at `write_start` (contiguous).  `mask_rows[i]`
-    /// lists *extra* visible slots beyond the committed prefix (tree
-    /// ancestors); every row also sees its own slot.
+    /// rows are written at `write_start` (contiguous).  `extra_visible[i]`
+    /// lists visible slots beyond the committed prefix (tree ancestors —
+    /// absolute cache slots; slots of earlier rows of this same call are
+    /// legal, the graph updates the cache before attending); every row
+    /// also sees its own slot.
+    ///
+    /// Row sets wider than the largest compiled artifact are CHUNKED into
+    /// several calls (the old code bailed, killing EAGLE-2 jobs with
+    /// `beam > block`): chunk c's rows land at `write_start + c·block`,
+    /// and since each chunk scatters its KV rows back before the next
+    /// call, later chunks see earlier chunks' rows through the same
+    /// absolute slots — the concatenated outputs equal one wide call's.
     pub fn decode(
         &mut self,
         tokens: &[i32],
@@ -534,12 +598,50 @@ impl DraftSession {
         write_start: usize,
     ) -> Result<DecodeOut> {
         let n = tokens.len();
-        let b = self.block;
-        if n > b {
-            bail!("draft decode block too large: {n} > {b}");
+        if n == 0 {
+            bail!("empty draft decode");
         }
+        if n <= self.block {
+            return self.decode_at(tokens, in_feats, positions, extra_visible, write_start);
+        }
+        let mut logits = Vec::with_capacity(n * self.vocab);
+        let mut g = Vec::new();
+        let mut g_w = 1usize;
+        let mut off = 0usize;
+        for take in chunks_of(n, self.block) {
+            let out = self.decode_at(
+                &tokens[off..off + take],
+                &in_feats[off..off + take],
+                &positions[off..off + take],
+                &extra_visible[off..off + take],
+                write_start + off,
+            )?;
+            for r in 0..take {
+                logits.extend_from_slice(out.logits.row(r));
+                g.extend_from_slice(out.feats.row(r));
+            }
+            g_w = out.feats.dims[1];
+            off += take;
+        }
+        Ok(DecodeOut {
+            logits: TensorF::new(vec![n, self.vocab], logits)?,
+            feats: TensorF::new(vec![n, g_w], g)?,
+        })
+    }
+
+    /// One compiled draft call over ≤ `block` rows at `write_start`.
+    fn decode_at(
+        &mut self,
+        tokens: &[i32],
+        in_feats: &[&[f32]],
+        positions: &[usize],
+        extra_visible: &[Vec<usize>],
+        write_start: usize,
+    ) -> Result<DecodeOut> {
+        let n = tokens.len();
+        let b = pick_width(&self.widths, n).context("draft rows exceed the chunk width")?;
         if write_start + b > self.slots {
-            bail!("draft cache exhausted");
+            bail!("draft cache exhausted ({write_start} + {b} > {})", self.slots);
         }
         let mut tok = vec![0i32; b];
         tok[..n].copy_from_slice(tokens);
@@ -549,10 +651,11 @@ impl DraftSession {
             pos[i] = positions[i] as i32;
             feats[i * self.d_model..(i + 1) * self.d_model].copy_from_slice(in_feats[i]);
         }
+        let committed = self.cache.committed;
         let mut mask = vec![0i32; b * self.slots];
         for i in 0..n {
             let off = i * self.slots;
-            for s in 0..self.committed {
+            for s in 0..committed {
                 mask[off + s] = 1;
             }
             for &s in &extra_visible[i] {
@@ -560,29 +663,183 @@ impl DraftSession {
             }
             mask[off + write_start + i] = 1; // own slot
         }
-        let kv_k = self.kv_k.as_ref().context("draft decode before prefill")?;
-        let kv_v = self.kv_v.as_ref().context("draft decode before prefill")?;
+        let graph = format!("draft_decode_b{b}");
+        let dims = [self.slots, self.cache.heads, self.cache.head_dim];
+        let (kv_k, kv_v) = {
+            let (ik, iv) = self.cache.sync_image();
+            (
+                crate::runtime::tensor::f32_literal(&dims, ik)?,
+                crate::runtime::tensor::f32_literal(&dims, iv)?,
+            )
+        };
         let inputs = [
+            kv_k,
+            kv_v,
             scalar_i32(write_start as i32),
             TensorI::new(vec![b], tok)?.to_literal()?,
             TensorF::new(vec![b, self.d_model], feats)?.to_literal()?,
             TensorI::new(vec![b], pos)?.to_literal()?,
-            TensorI::new(vec![b, self.slots], mask)?.to_literal()?,
+            TensorI { dims: vec![b, self.slots], data: mask }.to_literal()?,
         ];
         let mut args: Vec<&Literal> = Vec::with_capacity(self.weights.literals.len() + 8);
         args.extend(self.weights.literals.iter());
         args.push(&self.wte);
-        args.push(kv_k);
-        args.push(kv_v);
         args.extend(inputs.iter());
-        let mut out = self.rt.call("draft_decode_b10", &args)?;
-        self.rt.record_rows("draft_decode_b10", n);
+        let out = self.rt.call(&graph, &args)?;
+        self.rt.record_rows(&graph, n);
         let logits = tensor_out(&out, 0)?;
         let g = tensor_out(&out, 1)?;
-        self.kv_v = Some(out.swap_remove(3));
-        self.kv_k = Some(out.swap_remove(2));
+        // scatter exactly the n real rows back (padding rows are never
+        // visible, so they need not dirty pages)
+        let new_k = tensor_out(&out, 2)?;
+        let new_v = tensor_out(&out, 3)?;
+        self.cache.write_rows_from(&new_k, &new_v, write_start, write_start, n)?;
         Ok(DecodeOut { logits, feats: g })
     }
+}
+
+// ---------------------------------------------------------------------------
+// fused cross-session draft expansion
+// ---------------------------------------------------------------------------
+
+/// One fused draft forward over several sessions' same-level tree rows —
+/// the draft-side mirror of [`fused_decode`].
+///
+/// Packs every member's draft pages covering `[0, write_start)` (committed
+/// prefix AND the scratch tree rows written by earlier levels this cycle)
+/// into the worker's persistent [`FusedScratch`] and runs ONE compiled
+/// `draft_decode_b{w}` call over the concatenated rows.  Visibility is
+/// composed sparsely ([`PackedLayout::mask_sparse`]): each row sees its
+/// member's committed prefix, its listed ancestor slots (scratch slots map
+/// through the member's page segments; same-call ancestors map into the
+/// block region), and its own slot.  Outputs and fresh KV rows scatter
+/// back per member at each member's own `write_start` — every session
+/// ends byte-identical to having run its solo `decode`.
+///
+/// All members must share one runtime (same worker thread), one draft AND
+/// target checkpoint, and one cache geometry + page size; the caller
+/// groups by capacity (`(unique pages)·page_size + width <= slots`,
+/// `Σ rows <=` widest artifact).
+pub fn fused_draft_decode(
+    scratch: &mut FusedScratch,
+    batch: &mut [(&mut DraftSession, &DraftRows)],
+) -> Result<Vec<DecodeOut>> {
+    if batch.is_empty() {
+        bail!("empty fused draft batch");
+    }
+    let rows_total: usize = batch.iter().map(|(_, r)| r.tokens.len()).sum();
+    let widths = batch[0].0.widths.clone();
+    let width = pick_width(&widths, rows_total).with_context(|| {
+        format!("fused draft batch of {rows_total} rows exceeds the widest artifact")
+    })?;
+    let (slots, heads, hd, page_size, d_model) = {
+        let d = &batch[0].0;
+        (d.slots, d.cache.heads, d.cache.head_dim, d.cache.page_size(), d.d_model)
+    };
+    for (d, r) in batch.iter() {
+        if !Rc::ptr_eq(&d.weights, &batch[0].0.weights)
+            || !Rc::ptr_eq(&d.target_weights, &batch[0].0.target_weights)
+        {
+            bail!("fused draft members must share draft + target checkpoints");
+        }
+        if d.slots != slots
+            || d.cache.heads != heads
+            || d.cache.head_dim != hd
+            || d.cache.page_size() != page_size
+            || d.d_model != d_model
+        {
+            bail!("fused draft members must share one cache geometry");
+        }
+        let n = r.tokens.len();
+        if n == 0 || r.positions.len() != n || r.feats.len() != n || r.extra_visible.len() != n {
+            bail!("fused draft rows are empty or ragged");
+        }
+    }
+
+    // ---- pack: pages up to each member's write_start ----
+    let mut handles = Vec::with_capacity(batch.len());
+    let mut members = Vec::with_capacity(batch.len());
+    for (d, r) in batch.iter_mut() {
+        let pages = d.cache.pages_covering(r.write_start);
+        members.push(PackMember {
+            page_ids: pages.iter().map(|p| p.id()).collect(),
+            prefix_len: r.write_start,
+            rows: r.tokens.len(),
+        });
+        handles.push(pages);
+    }
+    let layout = PackedLayout::plan(&members, slots, page_size, width)?;
+    scratch.pack(&layout, &handles, 1, heads * hd)?;
+    // release the handles before the per-member scatter below (held refs
+    // would force whole-page COWs on every tail write)
+    drop(handles);
+
+    let mut tok = vec![0i32; width];
+    let mut pos = vec![0i32; width];
+    let mut feats = vec![0.0f32; width * d_model];
+    for (j, (_, r)) in batch.iter().enumerate() {
+        let off = layout.row_off[j];
+        for i in 0..r.tokens.len() {
+            tok[off + i] = r.tokens[i];
+            pos[off + i] = r.positions[i] as i32;
+            feats[(off + i) * d_model..(off + i + 1) * d_model].copy_from_slice(&r.feats[i]);
+        }
+    }
+    let mask = {
+        let vis: Vec<MemberVis> = batch
+            .iter()
+            .map(|(d, r)| MemberVis { committed: d.cache.committed, extra: &r.extra_visible })
+            .collect();
+        layout.mask_sparse(width, &vis)?
+    };
+
+    // ---- one graph call for every member's level ----
+    let graph = format!("draft_decode_b{width}");
+    let dims = [slots, heads, hd];
+    let inputs = [
+        crate::runtime::tensor::f32_literal(&dims, scratch.k())?,
+        crate::runtime::tensor::f32_literal(&dims, scratch.v())?,
+        scalar_i32(layout.base as i32),
+        TensorI::new(vec![width], tok)?.to_literal()?,
+        TensorF::new(vec![width, d_model], feats)?.to_literal()?,
+        TensorI::new(vec![width], pos)?.to_literal()?,
+        mask.to_literal()?,
+    ];
+    let out = {
+        let first = &batch[0].0;
+        let mut args: Vec<&Literal> = Vec::with_capacity(first.weights.literals.len() + 8);
+        args.extend(first.weights.literals.iter());
+        args.push(&first.wte);
+        args.extend(inputs.iter());
+        let out = first.rt.call(&graph, &args)?;
+        first.rt.record_rows(&graph, rows_total);
+        out
+    };
+    let logits = tensor_out(&out, 0)?;
+    let g = tensor_out(&out, 1)?;
+    let new_k = tensor_out(&out, 2)?;
+    let new_v = tensor_out(&out, 3)?;
+
+    // ---- scatter: per-member outputs + KV rows at each write_start ----
+    let vocab = logits.dims[1];
+    let gd = g.dims[1];
+    let mut outs = Vec::with_capacity(batch.len());
+    for (j, (d, r)) in batch.iter_mut().enumerate() {
+        let off = layout.row_off[j];
+        let n_j = r.tokens.len();
+        let mut lj = Vec::with_capacity(n_j * vocab);
+        let mut fj = Vec::with_capacity(n_j * gd);
+        for i in 0..n_j {
+            lj.extend_from_slice(logits.row(off + i));
+            fj.extend_from_slice(g.row(off + i));
+        }
+        d.cache.write_rows_from(&new_k, &new_v, layout.base + off, r.write_start, n_j)?;
+        outs.push(DecodeOut {
+            logits: TensorF::new(vec![n_j, vocab], lj)?,
+            feats: TensorF::new(vec![n_j, gd], fj)?,
+        });
+    }
+    Ok(outs)
 }
 
 // ---------------------------------------------------------------------------
@@ -716,7 +973,34 @@ impl MedusaHeads {
 
 #[cfg(test)]
 mod tests {
-    use super::{padded_span, pick_block, plan_chunks, MAX_BLOCK};
+    use super::{chunks_of, padded_span, pick_block, pick_width, plan_chunks, MAX_BLOCK};
+
+    #[test]
+    fn pick_width_finds_smallest_fit() {
+        let widths = [4usize, 10, 40, 80];
+        assert_eq!(pick_width(&widths, 1), Some(4));
+        assert_eq!(pick_width(&widths, 4), Some(4));
+        assert_eq!(pick_width(&widths, 5), Some(10));
+        assert_eq!(pick_width(&widths, 40), Some(40));
+        assert_eq!(pick_width(&widths, 41), Some(80));
+        // beyond the widest artifact the caller must chunk
+        assert_eq!(pick_width(&widths, 81), None);
+        // the seed inventory (b10 only) still resolves
+        assert_eq!(pick_width(&[10], 3), Some(10));
+        assert_eq!(pick_width(&[10], 11), None);
+    }
+
+    #[test]
+    fn chunks_of_covers_all_rows_at_any_width() {
+        assert_eq!(chunks_of(25, 10), vec![10, 10, 5]);
+        assert_eq!(chunks_of(10, 10), vec![10]);
+        assert_eq!(chunks_of(11, 10), vec![10, 1]);
+        for (n, w) in [(1usize, 10usize), (9, 4), (30, 7), (100, 10)] {
+            let chunks = chunks_of(n, w);
+            assert_eq!(chunks.iter().sum::<usize>(), n);
+            assert!(chunks.iter().all(|&c| c >= 1 && c <= w));
+        }
+    }
 
     #[test]
     fn pick_block_choices() {

@@ -87,6 +87,21 @@ pub fn default_page_size() -> usize {
     })
 }
 
+/// Draft-cache page size: `HASS_TEST_DRAFT_PAGE_SIZE` overrides it (the
+/// CI matrix drives the draft cache at a tiny odd size so every fused
+/// draft level crosses page/COW boundaries); falls back to the shared
+/// [`default_page_size`].
+pub fn draft_page_size() -> usize {
+    static PS: OnceLock<usize> = OnceLock::new();
+    *PS.get_or_init(|| {
+        std::env::var("HASS_TEST_DRAFT_PAGE_SIZE")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&p| p > 0)
+            .unwrap_or_else(default_page_size)
+    })
+}
+
 /// Monotonic source for page ids and mutation stamps (never reused, so an
 /// `(id, stamp)` staging key can never alias two different contents).
 static NEXT_PAGE_STAMP: AtomicU64 = AtomicU64::new(1);
@@ -399,10 +414,12 @@ impl KvCache {
         Rc::get_mut(slot).expect("uniquely owned page after COW")
     }
 
-    /// Handles for the pages backing the committed prefix (allocating any
-    /// the caller committed without writing), for fused packing.
-    pub fn committed_pages(&mut self) -> Vec<PageRef> {
-        let n = self.committed.div_ceil(self.page_size);
+    /// Handles for the pages backing slots `[0, prefix)` (allocating any
+    /// the caller claimed without writing), for fused packing.  The draft
+    /// path packs past `committed` — its scratch tree rows live above the
+    /// committed boundary but must travel with the prefix.
+    pub fn pages_covering(&mut self, prefix: usize) -> Vec<PageRef> {
+        let n = prefix.min(self.slots).div_ceil(self.page_size);
         (0..n)
             .map(|pi| {
                 self.ensure_page(pi);
@@ -411,17 +428,31 @@ impl KvCache {
             .collect()
     }
 
-    /// Ids of the committed-prefix pages (capacity probing: distinct ids
-    /// are what page-granular occupancy counts).  Allocates missing pages
-    /// like [`KvCache::committed_pages`] but clones no handles.
-    pub fn committed_page_ids(&mut self) -> Vec<u64> {
-        let n = self.committed.div_ceil(self.page_size);
+    /// Handles for the pages backing the committed prefix, for fused
+    /// packing.
+    pub fn committed_pages(&mut self) -> Vec<PageRef> {
+        let c = self.committed;
+        self.pages_covering(c)
+    }
+
+    /// Ids of the pages backing slots `[0, prefix)` (capacity probing:
+    /// distinct ids are what page-granular occupancy counts).  Allocates
+    /// missing pages like [`KvCache::pages_covering`] but clones no
+    /// handles.
+    pub fn page_ids_covering(&mut self, prefix: usize) -> Vec<u64> {
+        let n = prefix.min(self.slots).div_ceil(self.page_size);
         (0..n)
             .map(|pi| {
                 self.ensure_page(pi);
                 self.pages[pi].as_ref().expect("page just ensured").id()
             })
             .collect()
+    }
+
+    /// Ids of the committed-prefix pages.
+    pub fn committed_page_ids(&mut self) -> Vec<u64> {
+        let c = self.committed;
+        self.page_ids_covering(c)
     }
 
     /// Replace the cache from graph outputs (`[L,S,H,hd]` tensors) — the
@@ -925,6 +956,80 @@ impl PackedLayout {
         }
         Ok(TensorI { dims: vec![width, self.slots], data })
     }
+
+    /// Compose a SPARSE fused visibility mask `[width, slots]` — the draft
+    /// expansion's shape: member j's row i sees the member's committed
+    /// prefix (`vis[j].committed` slots, mapped through the member's page
+    /// segments), the row's listed extra slots (tree ancestors — member-
+    /// local absolute slots; a slot `>= prefix_len[j]` names a row of THIS
+    /// call and maps into the block region), and its own block slot.
+    /// Unlike [`PackedLayout::mask`], nothing between `committed` and the
+    /// packed prefix is implicitly visible — scratch rows are only seen
+    /// where a row lists them.
+    pub fn mask_sparse(&self, width: usize, vis: &[MemberVis]) -> Result<TensorI> {
+        if vis.len() != self.rows.len() {
+            bail!("sparse mask: {} member specs != {} members", vis.len(), self.rows.len());
+        }
+        if width < self.n_rows {
+            bail!("mask width {width} < packed rows {}", self.n_rows);
+        }
+        if self.base + width > self.slots {
+            bail!("mask block exceeds fused capacity ({} + {width} > {})", self.base, self.slots);
+        }
+        let mut data = vec![0i32; width * self.slots];
+        for (j, v) in vis.iter().enumerate() {
+            if v.committed > self.prefix_len[j] {
+                bail!(
+                    "member {j}: committed {} beyond packed prefix {}",
+                    v.committed,
+                    self.prefix_len[j]
+                );
+            }
+            if v.extra.len() < self.rows[j] {
+                bail!("member {j}: {} extra-slot rows < {} rows", v.extra.len(), self.rows[j]);
+            }
+            let block0 = self.base + self.row_off[j];
+            for i in 0..self.rows[j] {
+                let off = (self.row_off[j] + i) * self.slots;
+                for (p, &f) in self.prefix_pages[j].iter().enumerate() {
+                    let lo = p * self.page_size;
+                    if lo >= v.committed {
+                        break;
+                    }
+                    let valid = self.page_size.min(v.committed - lo);
+                    let s0 = f * self.page_size;
+                    for s in s0..s0 + valid {
+                        data[off + s] = 1;
+                    }
+                }
+                for &s in &v.extra[i] {
+                    if s < self.prefix_len[j] {
+                        let f = self.prefix_pages[j][s / self.page_size];
+                        data[off + f * self.page_size + s % self.page_size] = 1;
+                    } else {
+                        let b = s - self.prefix_len[j];
+                        if b >= self.rows[j] {
+                            bail!("member {j} row {i}: extra slot {s} beyond its rows");
+                        }
+                        data[off + block0 + b] = 1;
+                    }
+                }
+                data[off + block0 + i] = 1; // own slot
+            }
+        }
+        Ok(TensorI { dims: vec![width, self.slots], data })
+    }
+}
+
+/// Per-member visibility spec for [`PackedLayout::mask_sparse`]: the
+/// committed prefix every row sees, plus each row's extra visible slots
+/// (member-local absolute; draft-tree ancestors live in the scratch
+/// region between `committed` and the packed prefix).
+pub struct MemberVis<'a> {
+    /// member-local committed prefix length (visible to every row)
+    pub committed: usize,
+    /// per-row extra visible member-local slots
+    pub extra: &'a [Vec<usize>],
 }
 
 /// What one [`FusedScratch::pack`] call did.
@@ -1454,6 +1559,78 @@ mod tests {
         // b's pages occupy fused pages [2, 4) (first-appearance order)
         let prefix_b = kb[..7 * rs].to_vec();
         assert_eq!(&scratch.k()[2 * ps * rs..2 * ps * rs + 7 * rs], &prefix_b[..]);
+    }
+
+    /// Sparse (draft-shape) fused mask: committed prefix visible to every
+    /// row, scratch rows only where listed, in-call ancestors map to the
+    /// block region, padding/unlisted scratch slots invisible.
+    #[test]
+    fn sparse_mask_maps_prefix_scratch_and_block() {
+        let (slots, ps) = (64usize, 4usize);
+        // two members: j0 committed 5 with 6 packed slots (one scratch row
+        // at slot 5), j1 committed 3 with 3 packed slots
+        let members = [
+            PackMember { page_ids: vec![11, 12], prefix_len: 6, rows: 2 },
+            PackMember { page_ids: vec![21], prefix_len: 3, rows: 1 },
+        ];
+        let layout = PackedLayout::plan(&members, slots, ps, 8).unwrap();
+        assert_eq!(layout.base, 12); // 3 unique pages * 4
+        // j0 row 0 sees scratch slot 5; row 1 sees scratch 5 + in-call row 0
+        let extra0 = vec![vec![5usize], vec![5, 6]]; // 6 == prefix_len -> block row 0
+        let extra1 = vec![vec![]];
+        let m = layout
+            .mask_sparse(
+                8,
+                &[
+                    MemberVis { committed: 5, extra: &extra0 },
+                    MemberVis { committed: 3, extra: &extra1 },
+                ],
+            )
+            .unwrap();
+        let row = |r: usize| &m.data[r * slots..(r + 1) * slots];
+        // member 0 row 0: committed [0,5) + scratch slot 5 + own block slot
+        let r = row(0);
+        assert_eq!(&r[0..8], &[1, 1, 1, 1, 1, 1, 0, 0]);
+        for s in 8..12 {
+            assert_eq!(r[s], 0, "member 1 pages must be invisible at {s}");
+        }
+        assert_eq!(&r[12..16], &[1, 0, 0, 0], "own slot only in the block");
+        // member 0 row 1: adds in-call row 0 at block0
+        let r = row(1);
+        assert_eq!(&r[12..16], &[1, 1, 0, 0]);
+        // member 1 (fused row 2): committed [8,11), own slot base+2
+        let r = row(2);
+        for s in 0..8 {
+            assert_eq!(r[s], 0, "member 0 region invisible at {s}");
+        }
+        assert_eq!(&r[8..12], &[1, 1, 1, 0]);
+        assert_eq!(&r[12..16], &[0, 0, 1, 0]);
+        // padding rows see nothing
+        assert!(row(5).iter().all(|&x| x == 0));
+        // validation: committed beyond the packed prefix is rejected, as
+        // is an extra slot past the member's own rows
+        let over = [
+            MemberVis { committed: 7, extra: &extra0 },
+            MemberVis { committed: 3, extra: &extra1 },
+        ];
+        assert!(layout.mask_sparse(8, &over).is_err());
+        let bad = vec![vec![9usize], vec![]]; // 9 - 6 = block row 3 >= rows 2
+        let oob = [
+            MemberVis { committed: 5, extra: &bad },
+            MemberVis { committed: 3, extra: &extra1 },
+        ];
+        assert!(layout.mask_sparse(8, &oob).is_err());
+    }
+
+    #[test]
+    fn pages_covering_extends_past_committed() {
+        let mut c = KvCache::with_page_size(1, 32, 2, 4, 4);
+        c.committed = 5;
+        assert_eq!(c.committed_pages().len(), 2);
+        // draft scratch packing covers slots beyond the committed prefix
+        assert_eq!(c.pages_covering(9).len(), 3);
+        assert_eq!(c.page_ids_covering(9).len(), 3);
+        assert_eq!(c.pages_covering(0).len(), 0);
     }
 
     #[test]

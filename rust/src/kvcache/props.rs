@@ -276,6 +276,138 @@ fn prop_clone_is_cow_isolated() {
     );
 }
 
+/// Draft-session op sequence for the passthrough-equivalence property.
+#[derive(Clone, Debug)]
+enum DraftOp {
+    /// prefill absorb: the prompt's rows replace the prefix; the tail
+    /// page is materialized whole (its over-prefix rows keep the graph
+    /// bytes, exactly like the old passthrough buffer kept them — never
+    /// visible under the masks), pages past it read as zeros
+    Prefill { len: usize, seed: u32 },
+    /// tree-level write at or above the committed boundary (src == dst)
+    Scratch { at: usize, n: usize, seed: u32 },
+    Commit(usize),
+    Reset,
+}
+
+/// PR 5: the paged DRAFT cache must reproduce the literal-passthrough
+/// implementation it replaced.  The old draft session fed one flat
+/// buffer back call-to-call; its visible semantics were: prefill
+/// replaces the prefix (absorb keeps the whole tail page's graph bytes
+/// — invisible under the masks, exactly like the passthrough buffer —
+/// and drops the pages past it, which read as zeros), each decode
+/// writes its rows at a `write_start` at or above the committed
+/// boundary, `commit` advances the boundary, `reset` clears.  Drive a
+/// single-layer paged cache with random such sequences (draft page
+/// sizes incl. 1 and > slots) against a flat oracle, byte-for-byte.
+#[test]
+fn prop_paged_draft_cache_matches_passthrough() {
+    prop::check(
+        "paged draft cache == passthrough oracle",
+        |r| {
+            let slots = 8 + r.gen_range(24);
+            let heads = 1 + r.gen_range(2);
+            let page = *r.choice(&[1, 2, 3, 5, 8, slots, slots + 7]);
+            let n_ops = 4 + r.gen_range(10);
+            let mut ops = Vec::with_capacity(n_ops + 2);
+            let mut committed = 0usize;
+            for _ in 0..n_ops {
+                match r.gen_range(6) {
+                    0 => {
+                        let len = 1 + r.gen_range(slots);
+                        ops.push(DraftOp::Prefill { len, seed: r.next_u64() as u32 });
+                        committed = len;
+                    }
+                    1 => {
+                        ops.push(DraftOp::Reset);
+                        committed = 0;
+                    }
+                    2..=3 => {
+                        // scratch level at an arbitrary offset above the
+                        // committed boundary (the walk's watermark)
+                        if committed >= slots {
+                            ops.push(DraftOp::Reset);
+                            committed = 0;
+                            continue;
+                        }
+                        let at = committed + r.gen_range(slots - committed);
+                        let n = 1 + r.gen_range((slots - at).min(5));
+                        ops.push(DraftOp::Scratch { at, n, seed: r.next_u64() as u32 });
+                    }
+                    _ => {
+                        // the commit call: rows written at the boundary,
+                        // then committed
+                        if committed >= slots {
+                            ops.push(DraftOp::Reset);
+                            committed = 0;
+                            continue;
+                        }
+                        let n = 1 + r.gen_range((slots - committed).min(4));
+                        ops.push(DraftOp::Scratch { at: committed, n, seed: r.next_u64() as u32 });
+                        ops.push(DraftOp::Commit(n));
+                        committed += n;
+                    }
+                }
+            }
+            (slots, heads, page, ops)
+        },
+        |(slots, heads, page, ops)| {
+            let rs = heads * 4;
+            let mut c = KvCache::with_page_size(1, *slots, *heads, 4, *page);
+            // flat single-layer passthrough oracle
+            let mut ok = vec![0.0f32; *slots * rs];
+            let mut ov = vec![0.0f32; *slots * rs];
+            let mut ocommitted = 0usize;
+            for op in ops {
+                match op {
+                    DraftOp::Prefill { len, seed } => {
+                        let (k, v) = tensors(1, *slots, rs, *seed);
+                        c.absorb(k.clone(), v.clone(), *len).map_err(|e| e.to_string())?;
+                        c.committed = *len;
+                        // absorb materializes whole pages: up to the tail
+                        // page's boundary the image carries the graph
+                        // bytes, beyond it zeros (dropped pages)
+                        let edge = len.div_ceil(*page).saturating_mul(*page).min(*slots);
+                        ok[..edge * rs].copy_from_slice(&k.data[..edge * rs]);
+                        ov[..edge * rs].copy_from_slice(&v.data[..edge * rs]);
+                        ok[edge * rs..].fill(0.0);
+                        ov[edge * rs..].fill(0.0);
+                        ocommitted = *len;
+                    }
+                    DraftOp::Scratch { at, n, seed } => {
+                        let (k, v) = tensors(1, *slots, rs, *seed);
+                        c.write_rows_from(&k, &v, *at, *at, *n).map_err(|e| e.to_string())?;
+                        let span = *at * rs..(*at + *n) * rs;
+                        ok[span.clone()].copy_from_slice(&k.data[span.clone()]);
+                        ov[span.clone()].copy_from_slice(&v.data[span]);
+                    }
+                    DraftOp::Commit(n) => {
+                        c.commit(*n).map_err(|e| e.to_string())?;
+                        ocommitted += n;
+                    }
+                    DraftOp::Reset => {
+                        c.reset();
+                        ok.fill(0.0);
+                        ov.fill(0.0);
+                        ocommitted = 0;
+                    }
+                }
+                let (ik, iv) = c.sync_image();
+                if ik != &ok[..] {
+                    return Err("draft k image diverged from passthrough oracle".into());
+                }
+                if iv != &ov[..] {
+                    return Err("draft v image diverged from passthrough oracle".into());
+                }
+                if c.committed != ocommitted {
+                    return Err(format!("committed diverged: {} vs {ocommitted}", c.committed));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// THE paged-packing acceptance test, CI flavor: N "mock sessions" share
 /// a prompt (dedup'd prefill), then run fused cycles.  Steady-state packs
 /// must copy only tail pages (not the whole prefix), report shared pages,

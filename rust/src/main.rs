@@ -137,10 +137,19 @@ fn run(args: &Args) -> Result<()> {
                         agg.f64_at("mean_fused_rows").unwrap_or(0.0),
                     );
                     println!(
-                        "paged kv: pack_pages_copied={} pack_pages_reused={} shared_pages={}",
+                        "draft batching: fused={} solo={} mean_rows_per_fused={}",
+                        agg.usize_at("draft_fused_calls").unwrap_or(0),
+                        agg.usize_at("draft_solo_calls").unwrap_or(0),
+                        agg.f64_at("mean_draft_fused_rows").unwrap_or(0.0),
+                    );
+                    println!(
+                        "paged kv: pack_pages_copied={} pack_pages_reused={} shared_pages={} \
+                         draft_pack_copied={} draft_pack_reused={}",
                         agg.usize_at("pack_pages_copied").unwrap_or(0),
                         agg.usize_at("pack_pages_reused").unwrap_or(0),
                         agg.usize_at("shared_pages").unwrap_or(0),
+                        agg.usize_at("draft_pack_pages_copied").unwrap_or(0),
+                        agg.usize_at("draft_pack_pages_reused").unwrap_or(0),
                     );
                 }
                 return Ok(());

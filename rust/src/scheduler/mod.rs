@@ -28,7 +28,20 @@
 //! pages that actually changed (per-worker staging cache in
 //! `kvcache::FusedScratch`).  Methods that cannot batch
 //! (`StepPlan::Unbatchable`: pld/lookahead) fall back to their solo
-//! `step` within the same cycle.  A short job submitted behind a long one
+//! `step` within the same cycle.
+//!
+//! **Fused draft expansion** (PR 5).  Before planning, each cycle runs a
+//! DRAFT phase: EAGLE-family sessions build their draft trees
+//! level-synchronously (`Method::draft_next`/`draft_feed`), and the
+//! worker fuses the same round's levels across sessions into one
+//! `draft_decode` graph call (`engine::sessions::fused_draft_decode`,
+//! grouped by the same page-granular capacity machinery over the draft
+//! width ladder; host-drafted `mock` sessions batch through their shared
+//! `host_drafter`) — per-group draft calls per cycle drop from `N·depth`
+//! to `~depth`.  Sessions left unfused (lone planner, failed fused call)
+//! keep their pending level and their own `plan` drives the walk solo.
+//!
+//! A short job submitted behind a long one
 //! still starts immediately and finishes first (cycle granularity), and
 //! each live session owns its `Method` instance (own KV caches) checked
 //! out of a per-name free list, returned at completion.  Sessions without
@@ -77,12 +90,16 @@ use anyhow::Result;
 
 use crate::engine::build_method;
 use crate::engine::metrics::Metrics;
-use crate::engine::sessions::{fused_decode, pick_block, TargetSession, MAX_BLOCK};
+use crate::engine::sessions::{
+    fused_decode, fused_draft_decode, pick_block, pick_width, DraftSession, TargetSession,
+    MAX_BLOCK,
+};
 use crate::kvcache::FusedScratch;
 use crate::runtime::Runtime;
 use crate::sampling::SampleParams;
 use crate::spec::{
-    GenRequest, GenState, HostVerifier, Method, MethodCfg, StepPlan, VerifyOut, VerifyRows,
+    DraftPhase, DraftRows, GenRequest, GenState, HostVerifier, Method, MethodCfg, StepPlan,
+    VerifyOut, VerifyRows,
 };
 use crate::tokenizer;
 use crate::util::stats::Stopwatch;
@@ -174,6 +191,17 @@ pub struct WorkerStats {
     pub solo_calls: u64,
     /// candidate rows covered by fused calls (occupancy numerator)
     pub fused_rows: u64,
+    /// draft executions that fused >= 2 sessions' levels into one call
+    pub draft_fused_calls: u64,
+    /// single-session draft executions (a lone session's walk driven
+    /// inside its own `plan`, or the fused-draft fallback)
+    pub draft_solo_calls: u64,
+    /// draft rows covered by fused draft calls (occupancy numerator)
+    pub draft_fused_rows: u64,
+    /// draft KV pages memcpy'd into the fused draft image across packs
+    pub draft_pack_pages_copied: u64,
+    /// draft KV pages skipped because their `(id, stamp)` was staged
+    pub draft_pack_pages_reused: u64,
     /// KV pages memcpy'd into the fused image across all packs (paged KV:
     /// steady-state cycles copy only changed tail pages)
     pub pack_pages_copied: u64,
@@ -197,6 +225,14 @@ impl WorkerStats {
             return 0.0;
         }
         self.fused_rows as f64 / self.fused_calls as f64
+    }
+
+    /// Mean rows per fused draft call.
+    pub fn mean_draft_fused_rows(&self) -> f64 {
+        if self.draft_fused_calls == 0 {
+            return 0.0;
+        }
+        self.draft_fused_rows as f64 / self.draft_fused_calls as f64
     }
 }
 
@@ -276,6 +312,40 @@ impl PoolStats {
             return 0.0;
         }
         self.fused_rows() as f64 / calls as f64
+    }
+
+    pub fn draft_fused_calls(&self) -> u64 {
+        self.workers.iter().map(|w| w.draft_fused_calls).sum()
+    }
+
+    pub fn draft_solo_calls(&self) -> u64 {
+        self.workers.iter().map(|w| w.draft_solo_calls).sum()
+    }
+
+    pub fn draft_fused_rows(&self) -> u64 {
+        self.workers.iter().map(|w| w.draft_fused_rows).sum()
+    }
+
+    pub fn draft_pack_pages_copied(&self) -> u64 {
+        self.workers.iter().map(|w| w.draft_pack_pages_copied).sum()
+    }
+
+    pub fn draft_pack_pages_reused(&self) -> u64 {
+        self.workers.iter().map(|w| w.draft_pack_pages_reused).sum()
+    }
+
+    /// Pool-wide draft executions (each serves >= 1 session's level).
+    pub fn draft_execs(&self) -> u64 {
+        self.draft_fused_calls() + self.draft_solo_calls()
+    }
+
+    /// Pool-wide mean rows per fused draft call.
+    pub fn mean_draft_fused_rows(&self) -> f64 {
+        let calls = self.draft_fused_calls();
+        if calls == 0 {
+            return 0.0;
+        }
+        self.draft_fused_rows() as f64 / calls as f64
     }
 }
 
@@ -591,6 +661,27 @@ impl WorkerCtx {
         stats[self.id].solo_calls += 1;
     }
 
+    /// Record one fused draft execution covering `rows` rows.
+    fn note_draft_fused(&self, rows: usize) {
+        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
+        stats[self.id].draft_fused_calls += 1;
+        stats[self.id].draft_fused_rows += rows as u64;
+    }
+
+    /// Record `calls` single-session draft executions (levels a session's
+    /// own `plan` drove solo).
+    fn note_draft_solo(&self, calls: u64) {
+        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
+        stats[self.id].draft_solo_calls += calls;
+    }
+
+    /// Record one fused DRAFT pack's page traffic.
+    fn note_draft_pack(&self, copied: u64, reused: u64) {
+        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
+        stats[self.id].draft_pack_pages_copied += copied;
+        stats[self.id].draft_pack_pages_reused += reused;
+    }
+
     /// Consume a pending cancel marker for `id`.
     fn take_cancel(&self, id: u64) -> bool {
         self.cancels.lock().unwrap_or_else(|p| p.into_inner()).remove(&id)
@@ -671,6 +762,11 @@ fn worker(ctx: WorkerCtx, artifact_dir: PathBuf, cfg: MethodCfg, rx: Arc<Mutex<R
     // packing O(changed pages) — and a cycle that splits into several
     // capacity groups must not let group B's pack evict group A's staging
     let mut scratches: Vec<FusedScratch> = Vec::new();
+    // fused DRAFT packs stage into their own per-group scratches: the
+    // draft cache's single-layer geometry differs from the target's, and
+    // FusedScratch staging is keyed by geometry (sharing one vec would
+    // thrash both staging caches every cycle)
+    let mut draft_scratches: Vec<FusedScratch> = Vec::new();
     let mut draining = false;
     loop {
         // ---- admit new jobs up to max_active ----
@@ -746,7 +842,9 @@ fn worker(ctx: WorkerCtx, artifact_dir: PathBuf, cfg: MethodCfg, rx: Arc<Mutex<R
             }
             continue;
         }
-        // ---- one fused verification cycle over every live session ----
+        // ---- one fused cycle over every live session: level-synchronous
+        // draft expansion first, then fused verification ----
+        run_draft_phase(&ctx, &mut active, &mut draft_scratches);
         run_cycle(&ctx, &mut active, &mut scratches);
         sweep_ended(&ctx, &mut pool, &mut active);
     }
@@ -924,6 +1022,18 @@ enum VerKind {
 /// replacement for the old `Σ prefixes + block <= slots` ceiling (a
 /// shared-prefix fleet can therefore fuse past the old session bound).
 pub(crate) fn plan_fuse_groups(cands: &[Option<&FuseCand>]) -> Vec<Vec<usize>> {
+    plan_fuse_groups_by(cands, MAX_BLOCK, pick_block)
+}
+
+/// [`plan_fuse_groups`] with a pluggable compiled-width ladder: `max_rows`
+/// is the widest artifact and `pick(n)` the padded width for `n` rows —
+/// the draft phase reuses the grouping machinery over the
+/// `draft_decode_b{N}` inventory instead of the target ladder.
+pub(crate) fn plan_fuse_groups_by(
+    cands: &[Option<&FuseCand>],
+    max_rows: usize,
+    pick: impl Fn(usize) -> usize,
+) -> Vec<Vec<usize>> {
     let mut groups: Vec<Vec<usize>> = Vec::new();
     let mut cur: Vec<usize> = Vec::new();
     let mut cur_pages: HashSet<u64> = HashSet::new();
@@ -947,8 +1057,8 @@ pub(crate) fn plan_fuse_groups(cands: &[Option<&FuseCand>]) -> Vec<Vec<usize>> {
             && c.wptr == cur_wptr
             && c.slots == cur_slots
             && c.page_size == cur_ps
-            && cur_rows + c.rows <= MAX_BLOCK
-            && (cur_segments + add) * c.page_size + pick_block(cur_rows + c.rows) <= c.slots;
+            && cur_rows + c.rows <= max_rows
+            && (cur_segments + add) * c.page_size + pick(cur_rows + c.rows) <= c.slots;
         if fits {
             cur.push(i);
             cur_rows += c.rows;
@@ -973,6 +1083,304 @@ pub(crate) fn plan_fuse_groups(cands: &[Option<&FuseCand>]) -> Vec<Vec<usize>> {
         groups.push(cur);
     }
     groups
+}
+
+/// Phase 0 of a cycle: level-synchronous fused draft expansion (PR 5).
+///
+/// Each round polls every live session for its next draft-tree level
+/// (`Method::draft_next` — idempotent until fed) and fuses the rows of
+/// >= 2 compatible sessions into ONE draft execution: compiled
+/// EAGLE-family sessions through `engine::sessions::fused_draft_decode`
+/// (draft pages packed page-granular like verify packing, grouped by the
+/// same capacity machinery over the `draft_decode_b{N}` width ladder),
+/// host-drafted sessions (mock) through one batched call of their shared
+/// drafter.  Rounds repeat until no fused execution makes progress —
+/// sessions left ungrouped (lone planner, failed fused call, method
+/// without a draft phase) keep their pending level and `plan` drives the
+/// remainder of their walk solo, which is why fused-draft failure needs
+/// no cleanup: packing copies pages OUT of the sessions and mutates only
+/// the worker's scratch image.
+fn run_draft_phase(ctx: &WorkerCtx, active: &mut [ActiveJob], scratches: &mut Vec<FusedScratch>) {
+    let n = active.len();
+    loop {
+        // ---- poll each live session for its next level ----
+        let mut pend: Vec<Option<DraftRows>> = (0..n).map(|_| None).collect();
+        for i in 0..n {
+            let a = &mut active[i];
+            if a.ended.is_some() || a.state.done {
+                continue;
+            }
+            // cancel/deadline before spending draft calls on the session
+            // (run_cycle re-checks, but a job cancelled mid-phase must
+            // not burn a whole tree build first — and must report
+            // "cancelled", not whatever error the doomed drafting hits)
+            if ctx.take_cancel(a.job.id) {
+                complete(ctx, a, Some("cancelled".to_string()));
+                a.ended = Some(true);
+                continue;
+            }
+            if past_deadline(&a.job, &a.submit_sw) {
+                let ms = a.job.deadline_ms.unwrap_or(0);
+                complete(ctx, a, Some(format!("deadline_ms exceeded ({ms} ms)")));
+                a.ended = Some(true);
+                continue;
+            }
+            let cpu_sw = Stopwatch::start();
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                a.method.draft_next(&mut a.state)
+            }));
+            a.cpu_s += cpu_sw.secs();
+            match caught {
+                Err(p) => {
+                    complete(ctx, a, Some(format!("engine panic: {}", panic_text(p.as_ref()))));
+                    a.ended = Some(false);
+                }
+                Ok(Err(e)) => {
+                    complete(ctx, a, Some(format!("{e:#}")));
+                    a.ended = Some(true);
+                }
+                Ok(Ok(DraftPhase::Rows(r))) => pend[i] = Some(r),
+                // Ready / Finished / no draft phase: nothing to fuse —
+                // `plan` (the verify cycle's phase 1) takes it from here
+                Ok(Ok(_)) => {}
+            }
+        }
+
+        let mut progressed = false;
+
+        // ---- compiled draft groups (page-granular capacity over the
+        // draft width ladder) ----
+        let mut widths: Vec<usize> = Vec::new();
+        let cands: Vec<Option<FuseCand>> = (0..n)
+            .map(|i| {
+                let rows = pend[i].as_ref()?;
+                let a = &mut active[i];
+                let d = a.method.draft_handle()?;
+                if widths.is_empty() {
+                    widths = d.widths().to_vec();
+                }
+                Some(FuseCand {
+                    wptr: Rc::as_ptr(&d.weights) as usize,
+                    slots: d.slots,
+                    page_size: d.cache.page_size(),
+                    pages: d.cache.page_ids_covering(rows.write_start),
+                    rows: rows.len(),
+                })
+            })
+            .collect();
+        let groups = if widths.is_empty() {
+            Vec::new()
+        } else {
+            let max_w = *widths.last().expect("non-empty widths");
+            let refs: Vec<Option<&FuseCand>> = cands.iter().map(|c| c.as_ref()).collect();
+            plan_fuse_groups_by(&refs, max_w, |r| pick_width(&widths, r).unwrap_or(max_w))
+        };
+        for (gi, g) in groups.iter().enumerate() {
+            if g.len() < 2 {
+                // a lone session's walk is cheaper inside its own plan
+                continue;
+            }
+            while scratches.len() <= gi {
+                scratches.push(FusedScratch::new());
+            }
+            let scratch = &mut scratches[gi];
+            let total_rows: usize = g.iter().map(|&i| pend[i].as_ref().unwrap().len()).sum();
+            let pack_before = (scratch.pages_copied, scratch.pages_reused);
+            let sw = Stopwatch::start();
+            let outs = {
+                let mut batch: Vec<(&mut DraftSession, &DraftRows)> = Vec::with_capacity(g.len());
+                for (i, a) in active.iter_mut().enumerate() {
+                    if !g.contains(&i) {
+                        continue;
+                    }
+                    if let (Some(d), Some(rows)) = (a.method.draft_handle(), pend[i].as_ref()) {
+                        batch.push((d, rows));
+                    }
+                }
+                if batch.len() == g.len() {
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        fused_draft_decode(scratch, &mut batch)
+                    }))
+                    .unwrap_or_else(|p| {
+                        Err(anyhow::anyhow!("engine panic: {}", panic_text(p.as_ref())))
+                    })
+                } else {
+                    Err(anyhow::anyhow!("draft handle disappeared between probe and pack"))
+                }
+            };
+            let draft_s = sw.secs();
+            ctx.note_draft_pack(
+                scratch.pages_copied - pack_before.0,
+                scratch.pages_reused - pack_before.1,
+            );
+            match outs {
+                Ok(outs) => {
+                    ctx.note_draft_fused(total_rows);
+                    progressed = true;
+                    let share = draft_s / g.len() as f64;
+                    let mut oi = 0usize;
+                    for (i, a) in active.iter_mut().enumerate() {
+                        if !g.contains(&i) {
+                            continue;
+                        }
+                        pend[i] = None;
+                        a.state.metrics.phases.draft_s += share;
+                        a.cpu_s += share;
+                        feed_one(ctx, a, &outs[oi]);
+                        oi += 1;
+                    }
+                }
+                Err(e) => {
+                    // execute each member's level solo NOW (packing
+                    // copies pages OUT of the sessions, so nothing needs
+                    // undoing) — leaving the levels pending would retry
+                    // the same failing fused call every round
+                    eprintln!(
+                        "[scheduler] worker {}: fused draft failed ({e:#}); \
+                         falling back to solo expansion",
+                        ctx.id
+                    );
+                    progressed = true;
+                    for (i, a) in active.iter_mut().enumerate() {
+                        if !g.contains(&i) {
+                            continue;
+                        }
+                        let Some(rows) = pend[i].take() else { continue };
+                        solo_draft_exec(ctx, a, &rows);
+                    }
+                }
+            }
+        }
+
+        // ---- host draft groups: every host-drafted session of the same
+        // method shares one batched drafter call ----
+        let mut host_groups: Vec<(String, Vec<usize>)> = Vec::new();
+        for i in 0..n {
+            if pend[i].is_none() || active[i].ended.is_some() {
+                continue;
+            }
+            if active[i].method.host_drafter().is_none() {
+                continue;
+            }
+            let name = active[i].job.method.clone();
+            match host_groups.iter().position(|(k, _)| *k == name) {
+                Some(p) => host_groups[p].1.push(i),
+                None => host_groups.push((name, vec![i])),
+            }
+        }
+        for (_, g) in &host_groups {
+            if g.len() < 2 {
+                continue;
+            }
+            let Some(hd) = active[g[0]].method.host_drafter() else { continue };
+            let mut tokens: Vec<i32> = Vec::new();
+            let mut positions: Vec<usize> = Vec::new();
+            for &i in g {
+                let rows = pend[i].as_ref().unwrap();
+                tokens.extend_from_slice(&rows.tokens);
+                positions.extend_from_slice(&rows.positions);
+            }
+            let sw = Stopwatch::start();
+            let caught =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| hd(&tokens, &positions)));
+            let draft_s = sw.secs();
+            let out = match caught {
+                Ok(out) => out,
+                Err(p) => {
+                    let msg = panic_text(p.as_ref());
+                    for (i, a) in active.iter_mut().enumerate() {
+                        if !g.contains(&i) {
+                            continue;
+                        }
+                        pend[i] = None;
+                        complete(ctx, a, Some(format!("engine panic: {msg}")));
+                        a.ended = Some(true);
+                    }
+                    continue;
+                }
+            };
+            ctx.note_draft_fused(tokens.len());
+            progressed = true;
+            let vocab = out.logits.dims[1];
+            let fdim = out.feats.dims[1];
+            let share = draft_s / g.len() as f64;
+            let mut off = 0usize;
+            for (i, a) in active.iter_mut().enumerate() {
+                if !g.contains(&i) {
+                    continue;
+                }
+                let n_i = pend[i].take().map_or(0, |r| r.len());
+                let mut lj = Vec::with_capacity(n_i * vocab);
+                let mut fj = Vec::with_capacity(n_i * fdim);
+                for r in off..off + n_i {
+                    lj.extend_from_slice(out.logits.row(r));
+                    fj.extend_from_slice(out.feats.row(r));
+                }
+                off += n_i;
+                let member_out = VerifyOut {
+                    logits: crate::runtime::TensorF { dims: vec![n_i, vocab], data: lj },
+                    feats: crate::runtime::TensorF { dims: vec![n_i, fdim], data: fj },
+                };
+                a.state.metrics.phases.draft_s += share;
+                a.cpu_s += share;
+                feed_one(ctx, a, &member_out);
+            }
+        }
+
+        if !progressed {
+            break;
+        }
+    }
+}
+
+/// Execute one session's pending draft level through its own compiled
+/// draft session (the fused-failure fallback), then feed it.
+fn solo_draft_exec(ctx: &WorkerCtx, a: &mut ActiveJob, rows: &DraftRows) {
+    let cpu_sw = Stopwatch::start();
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        match a.method.draft_handle() {
+            Some(d) => d.decode_rows(rows),
+            None => Err(anyhow::anyhow!("draft handle disappeared between probe and fallback")),
+        }
+    }));
+    let spent = cpu_sw.secs();
+    a.cpu_s += spent;
+    match caught {
+        Err(p) => {
+            complete(ctx, a, Some(format!("engine panic: {}", panic_text(p.as_ref()))));
+            a.ended = Some(false);
+        }
+        Ok(Err(e)) => {
+            complete(ctx, a, Some(format!("{e:#}")));
+            a.ended = Some(true);
+        }
+        Ok(Ok(out)) => {
+            ctx.note_draft_solo(1);
+            a.state.metrics.phases.draft_s += spent;
+            feed_one(ctx, a, &out);
+        }
+    }
+}
+
+/// Feed one fused draft level's outputs into a session, with the same
+/// completion/panic discipline as a solo step.
+fn feed_one(ctx: &WorkerCtx, a: &mut ActiveJob, out: &VerifyOut) {
+    let cpu_sw = Stopwatch::start();
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        a.method.draft_feed(&mut a.state, out)
+    }));
+    a.cpu_s += cpu_sw.secs();
+    match caught {
+        Err(p) => {
+            complete(ctx, a, Some(format!("engine panic: {}", panic_text(p.as_ref()))));
+            a.ended = Some(false);
+        }
+        Ok(Err(e)) => {
+            complete(ctx, a, Some(format!("{e:#}")));
+            a.ended = Some(true);
+        }
+        Ok(Ok(())) => {}
+    }
 }
 
 /// One fused verification cycle over every live session:
@@ -1012,9 +1420,17 @@ fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob], scratches: &mut Vec<Fuse
             continue;
         }
         let cpu_sw = Stopwatch::start();
+        let draft_before = a.state.metrics.draft_calls;
         let caught =
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| a.method.plan(&mut a.state)));
         a.cpu_s += cpu_sw.secs();
+        // draft executions plan ran itself (walk levels the draft phase
+        // left unfused, or a method that drafts entirely inside plan) are
+        // the solo side of the draft-batching ledger
+        let solo_drafts = a.state.metrics.draft_calls.saturating_sub(draft_before);
+        if solo_drafts > 0 {
+            ctx.note_draft_solo(solo_drafts as u64);
+        }
         match caught {
             Err(p) => {
                 complete(ctx, a, Some(format!("engine panic: {}", panic_text(p.as_ref()))));
@@ -1673,6 +2089,65 @@ mod tests {
         fused.shutdown();
     }
 
+    /// THE draft-batching acceptance test (tentpole): one worker fusing 4
+    /// co-active mock sessions must produce token-for-token the outputs
+    /// (and acceptance metrics) of 4 sequential solo runs with the same
+    /// seeds, while issuing >= 2x fewer draft executions — each fused
+    /// draft call carries one level of EVERY co-active session instead of
+    /// `N·depth` solo calls per cycle.
+    #[test]
+    fn fused_draft_matches_sequential_solo_runs() {
+        let jobs = || -> Vec<Job> {
+            (0..4u64)
+                .map(|i| {
+                    let mut j = mock_job(1 + i, 20 + 5 * i as usize, false);
+                    j.seed = 300 + i;
+                    j
+                })
+                .collect()
+        };
+        // sequential baseline: every draft level runs solo inside plan
+        let solo = Scheduler::start(bad_dir(), MethodCfg::default(), 16, 1, 1);
+        let mut want = Vec::new();
+        for j in jobs() {
+            let r = recv_done(&solo.submit(j, true).unwrap());
+            assert!(r.error.is_none(), "solo run failed: {:?}", r.error);
+            want.push((r.text, r.tokens, r.tau));
+        }
+        let solo_stats = solo.stats();
+        assert!(solo_stats.draft_solo_calls() > 0, "sequential runs must draft solo");
+        assert_eq!(solo_stats.draft_fused_calls(), 0, "nothing to fuse at max_active 1");
+        solo.shutdown();
+
+        // fused: one worker interleaving all four (admission throttled so
+        // every session is co-active before the first cycle)
+        let fused = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 16, 1, 4, Some(2));
+        let rxs: Vec<_> = jobs().into_iter().map(|j| fused.submit(j, true).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = recv_done(&rx);
+            assert!(r.error.is_none(), "fused run failed: {:?}", r.error);
+            let (text, tokens, tau) = &want[i];
+            assert_eq!(&r.text, text, "job {i}: fused-draft text diverged from solo");
+            assert_eq!(r.tokens, *tokens, "job {i}: token count diverged");
+            assert!((r.tau - tau).abs() < 1e-9, "job {i}: tau diverged ({} vs {tau})", r.tau);
+        }
+        let fused_stats = fused.stats();
+        assert!(fused_stats.draft_fused_calls() > 0, "fused draft path must be exercised");
+        assert!(
+            fused_stats.mean_draft_fused_rows() > 1.5,
+            "fused draft calls must carry multiple sessions' rows (mean {})",
+            fused_stats.mean_draft_fused_rows()
+        );
+        // the scaling lever: >= 2x fewer draft executions for the same jobs
+        assert!(
+            fused_stats.draft_execs() * 2 <= solo_stats.draft_execs(),
+            "fused {} vs solo {} draft executions",
+            fused_stats.draft_execs(),
+            solo_stats.draft_execs()
+        );
+        fused.shutdown();
+    }
+
     fn cand(wptr: usize, pages: Vec<u64>, rows: usize) -> Option<FuseCand> {
         Some(FuseCand { wptr, slots: 128, page_size: 8, pages, rows })
     }
@@ -1715,6 +2190,30 @@ mod tests {
             cand(1, vec![9; 9], 4),
         ];
         assert_eq!(groups_of(&cands), vec![vec![0], vec![1]]);
+    }
+
+    /// The draft grouping reuses the capacity machinery over the draft
+    /// width ladder: rows respect the widest draft artifact instead of
+    /// the target's, padded by the smallest fitting draft width.
+    #[test]
+    fn fuse_groups_by_respects_draft_width_ladder() {
+        let widths = [10usize, 40];
+        let pick = |r: usize| pick_width(&widths, r).unwrap_or(40);
+        // 5 + 5 rows pad to 10 -> one group; a third member of 35 rows
+        // would blow the 40-row ladder and splits
+        let cands = vec![cand(1, vec![1], 5), cand(1, vec![2], 5), cand(1, vec![3], 35)];
+        let refs: Vec<Option<&FuseCand>> = cands.iter().map(|c| c.as_ref()).collect();
+        assert_eq!(plan_fuse_groups_by(&refs, 40, pick), vec![vec![0, 1], vec![2]]);
+        // the same members under the target ladder would all fuse
+        assert_eq!(plan_fuse_groups(&refs), vec![vec![0, 1, 2]]);
+        // page capacity still binds: two 8-page members at page 8 leave
+        // no room for a 40-wide block in 128 slots
+        let cands = vec![
+            cand(1, (1..=8).collect(), 20),
+            cand(1, (11..=18).collect(), 20),
+        ];
+        let refs: Vec<Option<&FuseCand>> = cands.iter().map(|c| c.as_ref()).collect();
+        assert_eq!(plan_fuse_groups_by(&refs, 40, pick), vec![vec![0], vec![1]]);
     }
 
     /// THE lifted-ceiling test: a shared-prefix fleet whose summed

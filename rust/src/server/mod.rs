@@ -17,16 +17,23 @@
 //!   stats:    {"stats": true}
 //!          -> {"stats": {"workers": [{"worker": 0, "jobs_ok": 3,
 //!              "fused_calls": 9, "solo_calls": 2, "mean_fused_rows": 17.5,
+//!              "draft_fused_calls": 30, "draft_solo_calls": 4,
+//!              "mean_draft_fused_rows": 6.5,
 //!              "pack_pages_copied": 12, "pack_pages_reused": 87,
+//!              "draft_pack_pages_copied": 9, "draft_pack_pages_reused": 60,
 //!              "shared_pages": 3, ...}],
 //!              "aggregate": {"jobs": 3, "tokens": 120, "tau": 3.1, ...}}}
-//!             (fused_calls/solo_calls/fused_rows are the worker's batch
-//!             occupancy: how many verify executions covered >= 2
+//!             (fused_calls/solo_calls/fused_rows are the worker's verify
+//!             batch occupancy: how many verify executions covered >= 2
 //!             sessions, and how many candidate rows those carried;
-//!             pack_pages_copied/pack_pages_reused are the paged-KV pack
-//!             traffic — steady-state cycles copy only changed tail
-//!             pages — and shared_pages gauges cross-session prompt-page
-//!             sharing in the latest fused pack)
+//!             draft_fused_calls/draft_solo_calls/draft_fused_rows are
+//!             the same ledger for DRAFT executions — fused level-
+//!             synchronous expansion vs levels driven solo inside plan;
+//!             pack_pages_copied/pack_pages_reused (and their draft_
+//!             twins) are the paged-KV pack traffic — steady-state cycles
+//!             copy only changed tail pages — and shared_pages gauges
+//!             cross-session prompt-page sharing in the latest fused
+//!             pack)
 //!   error:    {"id": 1, "error": "..."}  ("id" omitted when the line
 //!             could not be parsed; messages are JSON-escaped)
 //!
@@ -177,8 +184,14 @@ pub fn format_pool_stats(p: &PoolStats) -> String {
                 ("solo_calls", Json::num(w.solo_calls as f64)),
                 ("fused_rows", Json::num(w.fused_rows as f64)),
                 ("mean_fused_rows", Json::num(wire_r3(w.mean_fused_rows()))),
+                ("draft_fused_calls", Json::num(w.draft_fused_calls as f64)),
+                ("draft_solo_calls", Json::num(w.draft_solo_calls as f64)),
+                ("draft_fused_rows", Json::num(w.draft_fused_rows as f64)),
+                ("mean_draft_fused_rows", Json::num(wire_r3(w.mean_draft_fused_rows()))),
                 ("pack_pages_copied", Json::num(w.pack_pages_copied as f64)),
                 ("pack_pages_reused", Json::num(w.pack_pages_reused as f64)),
+                ("draft_pack_pages_copied", Json::num(w.draft_pack_pages_copied as f64)),
+                ("draft_pack_pages_reused", Json::num(w.draft_pack_pages_reused as f64)),
                 ("shared_pages", Json::num(w.shared_pages as f64)),
                 ("tau", Json::num(wire_r3(w.metrics.tau()))),
             ])
@@ -196,8 +209,14 @@ pub fn format_pool_stats(p: &PoolStats) -> String {
         ("solo_calls", Json::num(p.solo_calls() as f64)),
         ("fused_rows", Json::num(p.fused_rows() as f64)),
         ("mean_fused_rows", Json::num(wire_r3(p.mean_fused_rows()))),
+        ("draft_fused_calls", Json::num(p.draft_fused_calls() as f64)),
+        ("draft_solo_calls", Json::num(p.draft_solo_calls() as f64)),
+        ("draft_fused_rows", Json::num(p.draft_fused_rows() as f64)),
+        ("mean_draft_fused_rows", Json::num(wire_r3(p.mean_draft_fused_rows()))),
         ("pack_pages_copied", Json::num(p.pack_pages_copied() as f64)),
         ("pack_pages_reused", Json::num(p.pack_pages_reused() as f64)),
+        ("draft_pack_pages_copied", Json::num(p.draft_pack_pages_copied() as f64)),
+        ("draft_pack_pages_reused", Json::num(p.draft_pack_pages_reused() as f64)),
         ("shared_pages", Json::num(p.shared_pages() as f64)),
         ("tau", Json::num(wire_r3(p.tau()))),
     ]);
@@ -604,6 +623,11 @@ mod tests {
                     fused_calls: 4,
                     solo_calls: 2,
                     fused_rows: 70,
+                    draft_fused_calls: 10,
+                    draft_solo_calls: 3,
+                    draft_fused_rows: 40,
+                    draft_pack_pages_copied: 6,
+                    draft_pack_pages_reused: 30,
                     pack_pages_copied: 12,
                     pack_pages_reused: 88,
                     shared_pages: 3,
@@ -619,6 +643,11 @@ mod tests {
                     fused_calls: 1,
                     solo_calls: 3,
                     fused_rows: 10,
+                    draft_fused_calls: 0,
+                    draft_solo_calls: 5,
+                    draft_fused_rows: 0,
+                    draft_pack_pages_copied: 0,
+                    draft_pack_pages_reused: 0,
                     pack_pages_copied: 4,
                     pack_pages_reused: 2,
                     shared_pages: 0,
@@ -644,6 +673,14 @@ mod tests {
         assert_eq!(agg.usize_at("pack_pages_copied"), Some(16));
         assert_eq!(agg.usize_at("pack_pages_reused"), Some(90));
         assert_eq!(agg.usize_at("shared_pages"), Some(3));
+        // draft-batching satellite: fused/solo draft executions, rows, and
+        // draft-page pack traffic
+        assert_eq!(agg.usize_at("draft_fused_calls"), Some(10));
+        assert_eq!(agg.usize_at("draft_solo_calls"), Some(8));
+        assert_eq!(agg.usize_at("draft_fused_rows"), Some(40));
+        assert_eq!(agg.f64_at("mean_draft_fused_rows"), Some(4.0));
+        assert_eq!(agg.usize_at("draft_pack_pages_copied"), Some(6));
+        assert_eq!(agg.usize_at("draft_pack_pages_reused"), Some(30));
         let workers = stats.get("workers").unwrap().as_arr().unwrap();
         assert_eq!(workers.len(), 2);
         assert_eq!(workers[0].usize_at("jobs_ok"), Some(3));
@@ -652,7 +689,12 @@ mod tests {
         assert_eq!(workers[0].usize_at("pack_pages_copied"), Some(12));
         assert_eq!(workers[0].usize_at("pack_pages_reused"), Some(88));
         assert_eq!(workers[0].usize_at("shared_pages"), Some(3));
+        assert_eq!(workers[0].usize_at("draft_fused_calls"), Some(10));
+        assert_eq!(workers[0].f64_at("mean_draft_fused_rows"), Some(4.0));
+        assert_eq!(workers[0].usize_at("draft_pack_pages_copied"), Some(6));
         assert_eq!(workers[1].usize_at("worker"), Some(1));
         assert_eq!(workers[1].usize_at("solo_calls"), Some(3));
+        assert_eq!(workers[1].usize_at("draft_solo_calls"), Some(5));
+        assert_eq!(workers[1].f64_at("mean_draft_fused_rows"), Some(0.0));
     }
 }

@@ -8,25 +8,32 @@
 //!      through the draft net with their *target* features (now known from
 //!      verification), writing committed draft-KV rows; the last row's
 //!      output doubles as the tree root's feature + child distribution.
-//!   2. **tree expansion** — `depth-1` further draft calls; EAGLE-2 keeps a
-//!      global top-`beam` frontier by cumulative log-prob, EAGLE follows
-//!      the fixed template.  Draft-KV rows for tree nodes live in a scratch
-//!      region above the committed boundary, visible only via per-node
-//!      ancestor masks.
+//!   2. **tree expansion** — up to `depth-1` further draft calls; EAGLE-2
+//!      keeps a global top-`beam` frontier by cumulative log-prob, EAGLE
+//!      follows the fixed template.  Draft-KV rows for tree nodes live in
+//!      a scratch region above the committed boundary, visible only via
+//!      per-node ancestor masks.
 //!   3. **rerank** (dynamic only): keep the best `total_tokens` nodes
 //!      (ancestor-closed), flatten BFS.
 //!   4. **verify** — one target call over the block; lossless acceptance
 //!      walk; accepted rows compact into the target cache.
+//!
+//! Since PR 5 the commit+expand loop is a resumable per-level walk
+//! ([`DraftWalk`], driven through `Method::draft_next`/`draft_feed`) so a
+//! scheduler can fuse the same level of many co-active sessions into ONE
+//! `draft_decode` call; `plan` drives any unfinished walk to completion
+//! solo, which is also the fused-failure fallback.
 
 use std::rc::Rc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::engine::sessions::{DraftSession, TargetSession};
 use crate::runtime::{Checkpoint, Runtime};
 use crate::sampling::{log_softmax, process_logits, sample_token, topk};
 use crate::spec::{
-    accept_walk, GenRequest, GenState, Method, StepOutcome, StepPlan, VerifyOut, VerifyRows,
+    accept_walk, DraftPhase, DraftRows, GenRequest, GenState, Method, StepOutcome, StepPlan,
+    VerifyOut, VerifyRows,
 };
 use crate::tree::{eagle_static_template, Tree, VerifyPlan};
 use crate::util::stats::Stopwatch;
@@ -56,6 +63,10 @@ struct EagleState {
     /// the next cycle's commit rows
     pending_tokens: Vec<i32>,
     pending_feats: Vec<Vec<f32>>,
+    /// the in-progress draft tree build (one cycle's commit + expansion),
+    /// resumable level by level so a scheduler can fuse levels across
+    /// sessions
+    walk: Option<DraftWalk>,
     /// the tree `plan` flattened for verification, awaiting `absorb`
     pending_plan: Option<VerifyPlan>,
 }
@@ -69,6 +80,35 @@ struct NodeInfo {
     anc_slots: Vec<usize>,
     /// rank path (static template bookkeeping)
     path: Vec<usize>,
+}
+
+/// Resumable state of one cycle's draft-tree build.  Level 0 is the
+/// commit call (pending tokens + root expansion); levels `1..depth` are
+/// frontier expansions.  `pending` holds the rows `draft_next` emitted
+/// but `draft_feed` has not consumed — `draft_next` is idempotent while
+/// it is set, so a fused executor that fails can walk away and the solo
+/// drive resumes from the same rows.
+struct DraftWalk {
+    tree: Tree,
+    info: Vec<NodeInfo>,
+    frontier: Vec<usize>,
+    /// sequence position of the tree root
+    base_pos: usize,
+    /// next level to feed (0 = commit call)
+    level: usize,
+    /// scratch watermark: slot where the next level's rows land (levels
+    /// pack densely — `beam > block` chunks into extra calls instead of
+    /// overlapping a fixed stride)
+    watermark: usize,
+    pending: Option<PendingLevel>,
+    /// tree complete; `plan` emits the verify rows
+    ready: bool,
+}
+
+struct PendingLevel {
+    rows: DraftRows,
+    /// tree nodes the rows expand (empty for the commit level)
+    expand: Vec<usize>,
 }
 
 /// Children for a static-template node as (template rank, draft log-prob,
@@ -92,6 +132,62 @@ pub fn static_tree_children(
         .into_iter()
         .filter_map(|r| ordered.get(r).map(|&(lp, tok)| (r, lp, tok as i32)))
         .collect()
+}
+
+/// Widest level of a rank-path template: the most nodes any single
+/// expansion level can feed through the draft net (level l expands nodes
+/// whose path length is l, of which the template holds at most
+/// `|{paths of length l}|`).
+fn template_level_width(template: &[Vec<usize>]) -> usize {
+    let mut counts: Vec<usize> = Vec::new();
+    for p in template {
+        let l = p.len();
+        if counts.len() <= l {
+            counts.resize(l + 1, 0);
+        }
+        counts[l] += 1;
+    }
+    counts.into_iter().max().unwrap_or(1).max(1)
+}
+
+/// Expand `parent`'s children from its draft logits into the tree
+/// (dynamic: top-`beam`; static: template ranks), with per-node ancestor
+/// slot bookkeeping.
+fn add_children(
+    tree: &mut Tree,
+    info: &mut Vec<NodeInfo>,
+    parent: usize,
+    logits: &[f32],
+    kind: TreeKind,
+    template: &[Vec<usize>],
+    beam: usize,
+) {
+    let sm = log_softmax(logits);
+    match kind {
+        TreeKind::Dynamic => {
+            for (lp, tok) in topk(&sm, beam) {
+                let _idx = tree.add_child(parent, tok as i32, lp);
+                let mut anc = info[parent].anc_slots.clone();
+                if let Some(s) = info[parent].slot {
+                    anc.push(s);
+                }
+                info.push(NodeInfo { g: None, slot: None, anc_slots: anc, path: vec![] });
+            }
+        }
+        TreeKind::Static => {
+            let ppath = info[parent].path.clone();
+            for (r, lp, tok) in static_tree_children(&sm, &ppath, template) {
+                let _idx = tree.add_child(parent, tok, lp);
+                let mut anc = info[parent].anc_slots.clone();
+                if let Some(s) = info[parent].slot {
+                    anc.push(s);
+                }
+                let mut path = ppath.clone();
+                path.push(r);
+                info.push(NodeInfo { g: None, slot: None, anc_slots: anc, path });
+            }
+        }
+    }
 }
 
 /// Construct an EAGLE-family method (static or dynamic tree).
@@ -134,6 +230,7 @@ impl Method for Eagle {
             EagleState {
                 pending_tokens: Vec::new(),
                 pending_feats: Vec::new(),
+                walk: None,
                 pending_plan: None,
             },
         );
@@ -163,116 +260,44 @@ impl Method for Eagle {
         Some(&mut self.target)
     }
 
-    fn plan(&mut self, state: &mut GenState) -> Result<StepPlan> {
+    fn draft_handle(&mut self) -> Option<&mut DraftSession> {
+        Some(&mut self.draft)
+    }
+
+    /// Next draft-tree level: the commit call (level 0, which opens the
+    /// walk behind a capacity gate), or a frontier expansion.  Idempotent
+    /// while a level is pending.
+    fn draft_next(&mut self, state: &mut GenState) -> Result<DraftPhase> {
         let block = self.draft.block;
-        // the verify call consumes a full padded decode block of cache
-        // slots, so capacity is checked against that, not the raw rows
-        let rows_max = (self.total_tokens + 1).max(self.template.len() + 1);
-        let verify_n = crate::engine::sessions::padded_span(rows_max);
+        // per-level row ceiling: the dynamic beam (chunked when it
+        // exceeds the widest artifact), or the template's widest level —
+        // NOT the widest artifact, which over-reserves the capacity gate
+        // by an order of magnitude once wide draft blocks are compiled
+        let lvl_cap = match self.kind {
+            TreeKind::Dynamic => self.beam.max(1),
+            TreeKind::Static => template_level_width(&self.template).min(block),
+        };
         let inner = state
             .inner
             .downcast_mut::<EagleState>()
-            .context("eagle plan on a foreign GenState")?;
-        if state.done
-            || self.target.cache.remaining() < verify_n + 2
-            || self.draft.remaining() < inner.pending_tokens.len() + self.depth * block + 2
-        {
-            state.finish();
-            return Ok(StepPlan::Finished(StepOutcome { emitted: 0, done: true }));
-        }
-        let plen = state.req.prompt_tokens.len();
-        let last = *state.tokens.last().context("session has no tokens")?;
-
-        // ---- 1. commit call (also the root expansion) ----
-        let sw = Stopwatch::start();
-        let k = inner.pending_tokens.len();
-        let write_start = self.draft.committed;
-        let base_pos = plen + state.tokens.len() - 1; // seq position of the root
-        let positions: Vec<usize> = (0..k).map(|i| base_pos + 1 + i - k).collect();
-        let extra: Vec<Vec<usize>> =
-            (0..k).map(|i| (write_start..write_start + i).collect()).collect();
-        let feats_refs: Vec<&[f32]> = inner.pending_feats.iter().map(|f| f.as_slice()).collect();
-        let commit_out = self.draft.decode(
-            &inner.pending_tokens,
-            &feats_refs,
-            &positions,
-            &extra,
-            write_start,
-        )?;
-        self.draft.commit(k)?;
-        state.metrics.draft_calls += 1;
-
-        // ---- 2. tree expansion ----
-        let root_token = last;
-        let mut tree = Tree::new(root_token);
-        let mut info: Vec<NodeInfo> = vec![NodeInfo {
-            g: Some(commit_out.feats.row(k - 1).to_vec()),
-            slot: None, // committed -> visible via the committed mask
-            anc_slots: vec![],
-            path: vec![],
-        }];
-        let add_children =
-            |tree: &mut Tree,
-             info: &mut Vec<NodeInfo>,
-             parent: usize,
-             logits: &[f32],
-             kind: TreeKind,
-             template: &[Vec<usize>],
-             beam: usize| {
-                let sm = log_softmax(logits);
-                match kind {
-                    TreeKind::Dynamic => {
-                        for (lp, tok) in topk(&sm, beam) {
-                            let _idx = tree.add_child(parent, tok as i32, lp);
-                            let mut anc = info[parent].anc_slots.clone();
-                            if let Some(s) = info[parent].slot {
-                                anc.push(s);
-                            }
-                            info.push(NodeInfo {
-                                g: None,
-                                slot: None,
-                                anc_slots: anc,
-                                path: vec![],
-                            });
-                        }
-                    }
-                    TreeKind::Static => {
-                        let ppath = info[parent].path.clone();
-                        for (r, lp, tok) in static_tree_children(&sm, &ppath, template) {
-                            let _idx = tree.add_child(parent, tok, lp);
-                            let mut anc = info[parent].anc_slots.clone();
-                            if let Some(s) = info[parent].slot {
-                                anc.push(s);
-                            }
-                            let mut path = ppath.clone();
-                            path.push(r);
-                            info.push(NodeInfo { g: None, slot: None, anc_slots: anc, path });
-                        }
-                    }
-                }
-            };
-
-        add_children(
-            &mut tree,
-            &mut info,
-            0,
-            commit_out.logits.row(k - 1),
-            self.kind,
-            &self.template,
-            self.beam,
-        );
-        let mut frontier: Vec<usize> = (1..tree.len()).collect();
-
-        let scratch_base = self.draft.committed;
-        for level in 1..self.depth {
+            .context("eagle draft on a foreign GenState")?;
+        if let Some(w) = inner.walk.as_mut() {
+            if let Some(p) = &w.pending {
+                return Ok(DraftPhase::Rows(p.rows.clone()));
+            }
+            if w.ready || w.level >= self.depth {
+                w.ready = true;
+                return Ok(DraftPhase::Ready);
+            }
             // choose which frontier nodes to run through the draft net
             let expand: Vec<usize> = match self.kind {
-                TreeKind::Dynamic => tree.select_beam(&frontier, self.beam),
-                TreeKind::Static => frontier
+                TreeKind::Dynamic => w.tree.select_beam(&w.frontier, self.beam),
+                TreeKind::Static => w
+                    .frontier
                     .iter()
                     .copied()
                     .filter(|&n| {
-                        let p = &info[n].path;
+                        let p = &w.info[n].path;
                         self.template
                             .iter()
                             .any(|t| t.len() == p.len() + 1 && t[..p.len()] == p[..])
@@ -281,53 +306,172 @@ impl Method for Eagle {
                     .collect(),
             };
             if expand.is_empty() {
-                break;
+                w.ready = true;
+                return Ok(DraftPhase::Ready);
             }
-            let level_base = scratch_base + (level - 1) * block;
-            let tokens: Vec<i32> = expand.iter().map(|&n| tree.nodes[n].token).collect();
-            let feats: Vec<&[f32]> = expand
+            let tokens: Vec<i32> = expand.iter().map(|&n| w.tree.nodes[n].token).collect();
+            let feats: Vec<Vec<f32>> = expand
                 .iter()
                 .map(|&n| {
-                    let parent = tree.nodes[n].parent.unwrap();
-                    info[parent].g.as_deref().expect("parent expanded")
+                    let parent = w.tree.nodes[n].parent.expect("non-root node has a parent");
+                    w.info[parent].g.clone().expect("parent expanded")
                 })
                 .collect();
             let positions: Vec<usize> =
-                expand.iter().map(|&n| base_pos + tree.nodes[n].depth).collect();
+                expand.iter().map(|&n| w.base_pos + w.tree.nodes[n].depth).collect();
             let extra: Vec<Vec<usize>> =
-                expand.iter().map(|&n| info[n].anc_slots.clone()).collect();
-            let out = self
-                .draft
-                .decode(&tokens, &feats, &positions, &extra, level_base)?;
-            state.metrics.draft_calls += 1;
+                expand.iter().map(|&n| w.info[n].anc_slots.clone()).collect();
+            let rows = DraftRows {
+                tokens,
+                feats,
+                positions,
+                extra_visible: extra,
+                write_start: w.watermark,
+            };
+            w.pending = Some(PendingLevel { rows: rows.clone(), expand });
+            return Ok(DraftPhase::Rows(rows));
+        }
 
+        // ---- open a new walk: capacity gate + the commit level ----
+        // the verify call consumes a full padded decode block of cache
+        // slots, so capacity is checked against that, not the raw rows
+        let rows_max = (self.total_tokens + 1).max(self.template.len() + 1);
+        let verify_n = crate::engine::sessions::padded_span(rows_max);
+        let pending = inner.pending_tokens.len();
+        // the widest single draft call this cycle (commit rows or one
+        // level) is padded to its compiled width; every earlier call's
+        // rows land densely below it, so this is the only padding the
+        // gate must reserve
+        let pad = crate::engine::sessions::pick_width(
+            self.draft.widths(),
+            lvl_cap.max(pending).min(block),
+        )
+        .unwrap_or(block);
+        if state.done
+            || self.target.cache.remaining() < verify_n + 2
+            || self.draft.remaining() < pending + self.depth * lvl_cap + pad + 2
+        {
+            state.finish();
+            return Ok(DraftPhase::Finished(StepOutcome { emitted: 0, done: true }));
+        }
+        let plen = state.req.prompt_tokens.len();
+        let last = *state.tokens.last().context("session has no tokens")?;
+        let k = inner.pending_tokens.len();
+        let write_start = self.draft.committed();
+        let base_pos = plen + state.tokens.len() - 1; // seq position of the root
+        let positions: Vec<usize> = (0..k).map(|i| base_pos + 1 + i - k).collect();
+        let extra: Vec<Vec<usize>> =
+            (0..k).map(|i| (write_start..write_start + i).collect()).collect();
+        let rows = DraftRows {
+            tokens: inner.pending_tokens.clone(),
+            feats: inner.pending_feats.clone(),
+            positions,
+            extra_visible: extra,
+            write_start,
+        };
+        inner.walk = Some(DraftWalk {
+            tree: Tree::new(last),
+            info: vec![NodeInfo { g: None, slot: None, anc_slots: vec![], path: vec![] }],
+            frontier: Vec::new(),
+            base_pos,
+            level: 0,
+            watermark: write_start,
+            pending: Some(PendingLevel { rows: rows.clone(), expand: Vec::new() }),
+            ready: false,
+        });
+        Ok(DraftPhase::Rows(rows))
+    }
+
+    /// Absorb one executed level: level 0 commits the pending rows and
+    /// roots the tree, later levels expand their frontier nodes.  The
+    /// executor (solo or fused) already wrote the level's KV rows.
+    fn draft_feed(&mut self, state: &mut GenState, out: &VerifyOut) -> Result<()> {
+        let inner = state
+            .inner
+            .downcast_mut::<EagleState>()
+            .context("eagle draft_feed on a foreign GenState")?;
+        let w = inner.walk.as_mut().context("eagle draft_feed without a walk")?;
+        let p = w.pending.take().context("eagle draft_feed without pending rows")?;
+        if w.level == 0 {
+            let k = p.rows.tokens.len();
+            self.draft.commit(k)?;
+            w.info[0].g = Some(out.feats.row(k - 1).to_vec());
+            // root slot stays None: committed -> visible via the committed
+            // prefix mask
+            add_children(
+                &mut w.tree,
+                &mut w.info,
+                0,
+                out.logits.row(k - 1),
+                self.kind,
+                &self.template,
+                self.beam,
+            );
+            w.frontier = (1..w.tree.len()).collect();
+            w.watermark = self.draft.committed();
+        } else {
             let mut next_frontier = Vec::new();
-            for (i, &n) in expand.iter().enumerate() {
-                info[n].g = Some(out.feats.row(i).to_vec());
-                info[n].slot = Some(level_base + i);
-                let before = tree.len();
+            for (i, &n) in p.expand.iter().enumerate() {
+                w.info[n].g = Some(out.feats.row(i).to_vec());
+                w.info[n].slot = Some(p.rows.write_start + i);
+                let before = w.tree.len();
                 add_children(
-                    &mut tree,
-                    &mut info,
+                    &mut w.tree,
+                    &mut w.info,
                     n,
                     out.logits.row(i),
                     self.kind,
                     &self.template,
                     self.beam,
                 );
-                next_frontier.extend(before..tree.len());
+                next_frontier.extend(before..w.tree.len());
             }
-            frontier = next_frontier;
+            w.frontier = next_frontier;
+            w.watermark = p.rows.write_start + p.expand.len();
+        }
+        w.level += 1;
+        if w.level >= self.depth {
+            w.ready = true;
+        }
+        state.metrics.draft_calls += 1;
+        Ok(())
+    }
+
+    fn plan(&mut self, state: &mut GenState) -> Result<StepPlan> {
+        // ---- 1+2. drive the draft walk (commit + expansion) to
+        // completion solo; fused schedulers feed levels externally before
+        // calling plan, so a completed walk costs no draft calls here —
+        // and a partially fused walk (fused call failed mid-cycle)
+        // resumes solo from its pending level
+        let sw = Stopwatch::start();
+        loop {
+            match self.draft_next(state)? {
+                DraftPhase::Finished(o) => {
+                    state.metrics.phases.draft_s += sw.secs();
+                    return Ok(StepPlan::Finished(o));
+                }
+                DraftPhase::Ready => break,
+                DraftPhase::Rows(rows) => {
+                    let out = self.draft.decode_rows(&rows)?;
+                    self.draft_feed(state, &out)?;
+                }
+                DraftPhase::None => bail!("eagle draft walk unavailable"),
+            }
         }
         state.metrics.phases.draft_s += sw.secs();
 
         // ---- 3. rerank + flatten (the verify rows for this cycle) ----
         let sw = Stopwatch::start();
+        let inner = state
+            .inner
+            .downcast_mut::<EagleState>()
+            .context("eagle plan on a foreign GenState")?;
+        let w = inner.walk.take().context("eagle plan without a draft walk")?;
         let plan = match self.kind {
-            TreeKind::Dynamic => tree.rerank(self.total_tokens),
-            TreeKind::Static => tree.flatten_all(),
+            TreeKind::Dynamic => w.tree.rerank(self.total_tokens),
+            TreeKind::Static => w.tree.flatten_all(),
         };
-        let positions: Vec<usize> = plan.depths.iter().map(|&d| base_pos + d).collect();
+        let positions: Vec<usize> = plan.depths.iter().map(|&d| w.base_pos + d).collect();
         let anc = plan.block_mask();
         state.metrics.phases.host_s += sw.secs();
         let rows = VerifyRows { tokens: plan.tokens.clone(), positions, block_anc: Some(anc) };
@@ -378,6 +522,22 @@ mod tests {
         assert_eq!(kids[0].2, 1);
         // log-probs are descending in rank
         assert!(kids.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+
+    /// The capacity gate's static per-level cap is the template's widest
+    /// level, not the widest compiled artifact — with wide draft blocks
+    /// (b80) the old `depth·block + block` reservation exceeded the whole
+    /// 512-slot cache and killed every static-EAGLE session at cycle 1.
+    #[test]
+    fn template_level_width_is_the_widest_level() {
+        assert_eq!(template_level_width(&eagle_static_template()), 6);
+        assert_eq!(template_level_width(&[]), 1);
+        assert_eq!(template_level_width(&[vec![0], vec![1], vec![0, 0]]), 2);
+        // the default gate stays well under the cache: depth 6 levels of
+        // <= 6 nodes plus one maximally padded call (b80) fits 512 slots
+        // with room to spare even at pending + 2 overhead
+        let lvl = template_level_width(&eagle_static_template());
+        assert!(7 + 6 * lvl + 80 + 2 < 512);
     }
 
     /// Satellite regression: vocab smaller than the template fan-out must

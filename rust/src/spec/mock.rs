@@ -17,12 +17,19 @@
 //! method errors at init.  Only the first token draws from the request
 //! RNG (seed-dependent streams); everything after is a deterministic
 //! function of it, so fused and solo drives are token-for-token equal.
+//!
+//! Drafting is likewise a level-synchronous walk (PR 5): each chain link
+//! is one `draft_next` level executed through the host draft model
+//! [`mock_draft_logits`] (a [`HostVerifier`]-shaped batch fn), so a
+//! scheduler can fuse the same level of many mock sessions into ONE host
+//! draft call — CI's stand-in for the compiled `fused_draft_decode`
+//! path.  `plan` drives any unfinished chain to completion solo.
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::spec::{
-    accept_walk, GenRequest, GenState, HostVerifier, Method, StepOutcome, StepPlan, VerifyOut,
-    VerifyRows,
+    accept_walk, DraftPhase, DraftRows, GenRequest, GenState, HostVerifier, Method, StepOutcome,
+    StepPlan, VerifyOut, VerifyRows,
 };
 use crate::tokenizer;
 use crate::tree::{Tree, VerifyPlan};
@@ -85,9 +92,35 @@ fn mock_draft(token: i32, position: usize) -> i32 {
     }
 }
 
+/// Host draft model over packed rows from any number of sessions: row i
+/// is peaked on the token [`mock_draft`] proposes at (token, position),
+/// so `draft_feed`'s argmax recovers exactly the per-level chain draft.
+/// One call over a concatenation equals per-row calls (each row depends
+/// only on its own inputs) — the draft-side mirror of [`mock_verify`].
+pub fn mock_draft_logits(tokens: &[i32], positions: &[usize]) -> VerifyOut {
+    let n = tokens.len();
+    let v = tokenizer::VOCAB;
+    let mut logits = vec![-8.0f32; n * v];
+    for i in 0..n {
+        logits[i * v + mock_draft(tokens[i], positions[i]) as usize] = 6.0;
+    }
+    VerifyOut {
+        logits: crate::runtime::TensorF { dims: vec![n, v], data: logits },
+        feats: crate::runtime::TensorF::zeros(&[n, 1]),
+    }
+}
+
 pub struct Mock;
 
+/// Resumable per-cycle draft chain (level-synchronous walk).
+struct MockWalk {
+    /// root followed by the tokens drafted so far
+    chain: Vec<i32>,
+    base_pos: usize,
+}
+
 struct MockState {
+    walk: Option<MockWalk>,
     pending_plan: Option<VerifyPlan>,
 }
 
@@ -97,7 +130,7 @@ impl Method for Mock {
     }
 
     fn start(&mut self, req: &GenRequest) -> Result<GenState> {
-        let mut state = GenState::new(req, MockState { pending_plan: None });
+        let mut state = GenState::new(req, MockState { walk: None, pending_plan: None });
         // printable ASCII (32..=126): ids decode to themselves, so the
         // first (seed-dependent) token is stream-safe like all the rest
         let tok = 32 + state.rng.gen_range(95) as i32;
@@ -111,29 +144,88 @@ impl Method for Mock {
         Some(mock_verify)
     }
 
+    fn host_drafter(&self) -> Option<HostVerifier> {
+        Some(mock_draft_logits)
+    }
+
+    /// Next chain link as a one-row draft level (host model: no features,
+    /// no KV, `write_start` 0).  Idempotent — the chain only advances on
+    /// `draft_feed`.
+    fn draft_next(&mut self, state: &mut GenState) -> Result<DraftPhase> {
+        let inner = state
+            .inner
+            .downcast_mut::<MockState>()
+            .context("mock draft on a foreign GenState")?;
+        if state.done {
+            state.finish();
+            return Ok(DraftPhase::Finished(StepOutcome { emitted: 0, done: true }));
+        }
+        if inner.walk.is_none() {
+            let root = *state.tokens.last().context("session has no tokens")?;
+            let base_pos = state.req.prompt_tokens.len() + state.tokens.len() - 1;
+            inner.walk = Some(MockWalk { chain: vec![root], base_pos });
+        }
+        let w = inner.walk.as_ref().expect("walk just ensured");
+        if w.chain.len() > MOCK_GAMMA {
+            return Ok(DraftPhase::Ready);
+        }
+        let level = w.chain.len() - 1;
+        Ok(DraftPhase::Rows(DraftRows {
+            tokens: vec![*w.chain.last().expect("chain has a root")],
+            feats: vec![Vec::new()],
+            positions: vec![w.base_pos + level],
+            extra_visible: vec![Vec::new()],
+            write_start: 0,
+        }))
+    }
+
+    fn draft_feed(&mut self, state: &mut GenState, out: &VerifyOut) -> Result<()> {
+        let inner = state
+            .inner
+            .downcast_mut::<MockState>()
+            .context("mock draft_feed on a foreign GenState")?;
+        let w = inner.walk.as_mut().context("mock draft_feed without a walk")?;
+        if w.chain.len() > MOCK_GAMMA {
+            bail!("mock draft chain already complete");
+        }
+        let row = out.logits.row(0);
+        let next = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i as i32)
+            .context("empty draft logits")?;
+        w.chain.push(next);
+        state.metrics.draft_calls += 1;
+        Ok(())
+    }
+
     fn plan(&mut self, state: &mut GenState) -> Result<StepPlan> {
+        // drive any unfinished draft chain to completion through the host
+        // draft model (solo path; fused schedulers feed levels externally)
+        loop {
+            match self.draft_next(state)? {
+                DraftPhase::Finished(o) => return Ok(StepPlan::Finished(o)),
+                DraftPhase::Ready => break,
+                DraftPhase::Rows(rows) => {
+                    let out = mock_draft_logits(&rows.tokens, &rows.positions);
+                    self.draft_feed(state, &out)?;
+                }
+                DraftPhase::None => bail!("mock draft walk unavailable"),
+            }
+        }
         let inner = state
             .inner
             .downcast_mut::<MockState>()
             .context("mock plan on a foreign GenState")?;
-        if state.done {
-            state.finish();
-            return Ok(StepPlan::Finished(StepOutcome { emitted: 0, done: true }));
-        }
-        let root = *state.tokens.last().context("session has no tokens")?;
-        let base_pos = state.req.prompt_tokens.len() + state.tokens.len() - 1;
-
-        let mut tree = Tree::new(root);
+        let w = inner.walk.take().context("mock plan without a draft walk")?;
+        let mut tree = Tree::new(w.chain[0]);
         let mut parent = 0usize;
-        let mut tok = root;
-        for i in 0..MOCK_GAMMA {
-            let next = mock_draft(tok, base_pos + i);
-            parent = tree.add_child(parent, next, -0.1);
-            tok = next;
+        for &tok in &w.chain[1..] {
+            parent = tree.add_child(parent, tok, -0.1);
         }
         let plan = tree.flatten_all();
-        let positions: Vec<usize> = plan.depths.iter().map(|&d| base_pos + d).collect();
-        state.metrics.draft_calls += 1;
+        let positions: Vec<usize> = plan.depths.iter().map(|&d| w.base_pos + d).collect();
         let rows = VerifyRows {
             tokens: plan.tokens.clone(),
             positions,
@@ -243,6 +335,63 @@ mod tests {
             out.metrics.draft_tokens_verified > 0,
             "verification must see draft tokens"
         );
+    }
+
+    /// The draft-phase protocol: each cycle's chain is MOCK_GAMMA
+    /// externally drivable levels, `draft_next` is idempotent until fed,
+    /// a completed walk costs `plan` zero draft calls, and the externally
+    /// driven session equals the solo `generate` token-for-token — the
+    /// per-session half of the fused-draft equivalence contract.
+    #[test]
+    fn externally_driven_draft_levels_match_solo() {
+        let mut m = Mock;
+        let whole = m.generate(&req(16, 9)).unwrap();
+        let mut st = m.start(&req(16, 9)).unwrap();
+        while !st.done {
+            let mut levels = 0usize;
+            let finished = loop {
+                let rows = match m.draft_next(&mut st).unwrap() {
+                    DraftPhase::Rows(r) => r,
+                    DraftPhase::Ready => break false,
+                    DraftPhase::Finished(_) => break true,
+                    DraftPhase::None => panic!("mock must expose a draft walk"),
+                };
+                // idempotent until fed (the fused-failure fallback relies
+                // on re-reading the same pending level)
+                match m.draft_next(&mut st).unwrap() {
+                    DraftPhase::Rows(again) => {
+                        assert_eq!(rows.tokens, again.tokens);
+                        assert_eq!(rows.positions, again.positions);
+                    }
+                    _ => panic!("pending level must be re-emitted"),
+                }
+                let hd = m.host_drafter().expect("mock has a host drafter");
+                let out = hd(&rows.tokens, &rows.positions);
+                m.draft_feed(&mut st, &out).unwrap();
+                levels += 1;
+            };
+            if finished || st.done {
+                break;
+            }
+            assert_eq!(levels, MOCK_GAMMA, "one chain link per level");
+            let before = st.metrics.draft_calls;
+            match m.plan(&mut st).unwrap() {
+                StepPlan::Finished(_) => break,
+                StepPlan::Verify(rows) => {
+                    assert_eq!(
+                        st.metrics.draft_calls, before,
+                        "completed walk must cost plan no draft calls"
+                    );
+                    let hv = m.host_verifier().unwrap();
+                    let out = hv(&rows.tokens, &rows.positions);
+                    m.absorb(&mut st, &out).unwrap();
+                }
+                StepPlan::Unbatchable => panic!("mock must be batchable"),
+            }
+        }
+        assert_eq!(st.tokens, whole.tokens, "externally driven drafting diverged");
+        assert_eq!(st.metrics.cycles, whole.metrics.cycles);
+        assert_eq!(st.metrics.draft_calls, whole.metrics.draft_calls);
     }
 
     #[test]

@@ -47,6 +47,41 @@
 //! staged into a per-worker scratch image, unchanged pages are skipped,
 //! and pages shared across sessions occupy one fused segment), scatter
 //! the outputs, and `absorb` each session independently.
+//!
+//! ## The draft-phase protocol (level-synchronous fused expansion)
+//!
+//! PR 3 fused the *verify* forward, but each EAGLE/HASS session still
+//! burned `depth` tiny solo draft calls per cycle — with N co-active
+//! sessions the draft net dominates per-cycle graph-call count
+//! (`N·depth` draft calls vs one fused verify).  The drafting half of a
+//! cycle is therefore also externally drivable, one tree level at a
+//! time:
+//!
+//! * [`Method::draft_next`] returns the next level's rows as a
+//!   [`DraftPhase`]: [`DraftPhase::Rows`] carries the level
+//!   ([`DraftRows`]: tokens, input features, positions, per-row extra
+//!   visible slots, write offset); [`DraftPhase::Ready`] means the tree
+//!   is complete (`plan` will emit the verify rows without further draft
+//!   calls); [`DraftPhase::Finished`] means the session ended while
+//!   drafting; [`DraftPhase::None`] means the method has no externally
+//!   drivable draft phase (everything but the EAGLE family and `mock`).
+//!   `draft_next` is IDEMPOTENT until the pending level is fed — a fused
+//!   executor that fails can simply walk away and the solo path resumes
+//!   from the same rows.
+//! * [`Method::draft_feed`] consumes the level's draft outputs (child
+//!   expansion, frontier/beam bookkeeping, commit of the pending rows on
+//!   level 0) exactly as if the session had run the level itself.
+//!
+//! [`Method::plan`] is re-derived as drive-to-completion — it loops
+//! `draft_next` → solo execute → `draft_feed` until `Ready` — so solo
+//! callers are untouched and solo == fused token-for-token.  Schedulers
+//! instead run the loop ACROSS sessions: each round they collect every
+//! live session's level and fuse the rows into one
+//! `engine::sessions::fused_draft_decode` graph call (draft pages packed
+//! page-granular like verify packing; host-model methods batch through
+//! their shared [`Method::host_drafter`]), feed each session, and
+//! repeat until every tree is built — per-group draft calls per cycle
+//! drop from `N·depth` to `~depth`.
 
 pub mod eagle;
 pub mod lookup;
@@ -60,7 +95,7 @@ use std::any::Any;
 use anyhow::Result;
 
 use crate::engine::metrics::Metrics;
-use crate::engine::sessions::{DecodeOut, TargetSession};
+use crate::engine::sessions::{DecodeOut, DraftSession, TargetSession};
 use crate::sampling::{accept_at_node, process_logits, SampleParams};
 use crate::tokenizer::EOS;
 use crate::tree::VerifyPlan;
@@ -175,6 +210,49 @@ impl VerifyRows {
     }
 }
 
+/// One draft-tree level a session wants executed (module docs: the
+/// draft-phase protocol).  Row i's KV lands at `write_start + i`; slots
+/// in `extra_visible[i]` name this session's draft cache — committed
+/// prefix excluded (always visible), scratch ancestors and earlier rows
+/// of this same level included.
+#[derive(Clone, Debug)]
+pub struct DraftRows {
+    pub tokens: Vec<i32>,
+    /// input feature per row (parent's draft feature; empty rows for
+    /// host-model drafters, which condition on (token, position) alone)
+    pub feats: Vec<Vec<f32>>,
+    /// absolute sequence position of each row
+    pub positions: Vec<usize>,
+    /// per-row extra visible draft-cache slots beyond the committed prefix
+    pub extra_visible: Vec<Vec<usize>>,
+    /// draft-cache slot where this level's KV rows are written
+    pub write_start: usize,
+}
+
+impl DraftRows {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// What `Method::draft_next` decided (module docs: the draft-phase
+/// protocol).
+pub enum DraftPhase {
+    /// execute these rows through the draft net, then call `draft_feed`
+    Rows(DraftRows),
+    /// the draft tree is complete; `plan` emits the verify rows without
+    /// further draft calls
+    Ready,
+    /// the session finished while drafting (cache exhausted, already done)
+    Finished(StepOutcome),
+    /// this method has no externally drivable draft phase
+    None,
+}
+
 /// What `Method::plan` decided for this cycle (module docs).
 pub enum StepPlan {
     /// verify these rows through one (possibly fused) target forward,
@@ -212,9 +290,41 @@ pub trait Method {
     /// `max_new <= 1`).
     fn start(&mut self, req: &GenRequest) -> Result<GenState>;
 
+    /// Phase 0 of a cycle (optional): the next draft-tree level to
+    /// execute, for level-synchronous cross-session fusion (module docs).
+    /// Idempotent until the pending level is fed; the default declares
+    /// the method free of an externally drivable draft phase.
+    fn draft_next(&mut self, state: &mut GenState) -> Result<DraftPhase> {
+        let _ = state;
+        Ok(DraftPhase::None)
+    }
+
+    /// Consume the outputs of the level the last `draft_next` emitted
+    /// (child expansion + frontier bookkeeping; KV rows were already
+    /// written by the executor).
+    fn draft_feed(&mut self, state: &mut GenState, out: &DecodeOut) -> Result<()> {
+        let _ = (state, out);
+        anyhow::bail!("method '{}' has no draft phase", self.name())
+    }
+
+    /// The draft session used for fused draft expansion, if this method
+    /// drafts through a compiled draft graph.  Schedulers pack co-active
+    /// sessions' levels into one `draft_decode` call.
+    fn draft_handle(&mut self) -> Option<&mut DraftSession> {
+        None
+    }
+
+    /// Runtime-free batch draft model (same shape as [`HostVerifier`]);
+    /// methods expose one *instead of* a `draft_handle`.
+    fn host_drafter(&self) -> Option<HostVerifier> {
+        None
+    }
+
     /// Phase 1 of a cycle: draft/expand and emit this cycle's candidate
-    /// rows (module docs).  The default declares the method unbatchable,
-    /// which routes schedulers to the opaque `step`.
+    /// rows (module docs).  Methods with a draft phase drive any
+    /// unfinished walk to completion here (the solo path and the
+    /// fused-failure fallback).  The default declares the method
+    /// unbatchable, which routes schedulers to the opaque `step`.
     fn plan(&mut self, state: &mut GenState) -> Result<StepPlan> {
         let _ = state;
         Ok(StepPlan::Unbatchable)

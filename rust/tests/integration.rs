@@ -476,6 +476,19 @@ fn fused_pool_matches_sequential_with_artifacts() {
         assert!((g.2 - w.2).abs() < 1e-9, "job {i}: tau diverged");
     }
     assert!(eq_stats.fused_calls() > 0, "fused path must be exercised");
+    // draft-side batching (PR 5): co-active EAGLE-family sessions must
+    // fuse their tree levels too — compiled fused draft calls carrying
+    // multiple sessions' rows, with draft pages staged like target pages
+    assert!(eq_stats.draft_fused_calls() > 0, "fused draft path must be exercised");
+    assert!(
+        eq_stats.mean_draft_fused_rows() > 1.5,
+        "fused draft calls must carry multiple sessions' rows (mean {})",
+        eq_stats.mean_draft_fused_rows()
+    );
+    assert!(
+        eq_stats.draft_pack_pages_copied() > 0,
+        "fused draft packs must stage draft pages"
+    );
     // paged KV: fused packs copy pages, and with stable co-active
     // membership the staging cache reuses unchanged prefix pages across
     // cycles (pack cost O(changed pages), not O(context))
@@ -510,6 +523,14 @@ fn fused_pool_matches_sequential_with_artifacts() {
         "expected >= 2x fewer target verify calls: fused {} vs solo {}",
         fused_stats.verify_calls(),
         solo_stats.verify_calls()
+    );
+    // ... and the draft side must batch at least as hard: per-group draft
+    // calls per cycle drop from N*depth to ~depth
+    assert!(
+        fused_stats.draft_execs() * 2 <= solo_stats.draft_execs(),
+        "expected >= 2x fewer draft executions: fused {} vs solo {}",
+        fused_stats.draft_execs(),
+        solo_stats.draft_execs()
     );
 }
 
