@@ -1,0 +1,356 @@
+//! A deliberately small Rust lexer: just enough token structure for the
+//! `hass-analyze` rules (identifiers, numbers, string contents, single-char
+//! punctuation) plus a parallel comment stream with line numbers.
+//!
+//! It is NOT a full Rust grammar — no macro expansion, no type checking.
+//! The rules are written against token *patterns*, which keeps the whole
+//! analyzer dependency-free and fast, at the cost of being a lexical
+//! approximation.  Where that approximation could misfire, the rule docs
+//! in `rules.rs` say so.
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    Ident,
+    Num,
+    /// String literal; `text` holds the *content* (no quotes), with raw /
+    /// byte prefixes and `#` guards stripped.  Escapes are left as-is.
+    Str,
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Comment {
+    /// Full comment text including the `//` / `/*` markers.
+    pub text: String,
+    /// Line the comment starts on.
+    pub line: usize,
+}
+
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (incl. doc comments)
+        if c == '/' && i + 1 < b.len() && b[i + 1] == '/' {
+            let start = i;
+            while i < b.len() && b[i] != '\n' {
+                i += 1;
+            }
+            comments.push(Comment { text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        // block comment (nesting per Rust)
+        if c == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+            let start_line = line;
+            let start = i;
+            i += 2;
+            let mut depth = 1usize;
+            while i < b.len() && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < b.len() && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            comments.push(Comment { text: b[start..i.min(b.len())].iter().collect(), line: start_line });
+            continue;
+        }
+        // plain string literal
+        if c == '"' {
+            let sl = line;
+            i += 1;
+            let start = i;
+            while i < b.len() {
+                if b[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    break;
+                }
+                if b[i] == '\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            let end = i.min(b.len());
+            toks.push(Tok { kind: Kind::Str, text: b[start..end].iter().collect(), line: sl });
+            if i < b.len() {
+                i += 1; // closing quote
+            }
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if i + 1 < b.len() && (b[i + 1].is_alphabetic() || b[i + 1] == '_') {
+                let mut j = i + 1;
+                while j < b.len() && (b[j].is_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+                if j < b.len() && b[j] == '\'' {
+                    i = j + 1; // char literal like 'a'
+                } else {
+                    i = j; // lifetime: swallow, emit nothing
+                }
+                continue;
+            }
+            // escaped / symbolic char literal
+            i += 1;
+            while i < b.len() {
+                if b[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '\'' {
+                    i += 1;
+                    break;
+                }
+                if b[i] == '\n' {
+                    // malformed; resync at the newline
+                    break;
+                }
+                i += 1;
+            }
+            continue;
+        }
+        // identifier (may prefix a raw/byte string)
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            let is_str_prefix = matches!(text.as_str(), "r" | "b" | "br" | "rb");
+            if is_str_prefix && i < b.len() && (b[i] == '"' || b[i] == '#') {
+                let sl = line;
+                let raw = text.contains('r');
+                let mut hashes = 0usize;
+                let mut j = i;
+                while j < b.len() && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < b.len() && b[j] == '"' {
+                    i = j + 1;
+                    let cstart = i;
+                    loop {
+                        if i >= b.len() {
+                            toks.push(Tok {
+                                kind: Kind::Str,
+                                text: b[cstart..b.len()].iter().collect(),
+                                line: sl,
+                            });
+                            break;
+                        }
+                        if b[i] == '\n' {
+                            line += 1;
+                            i += 1;
+                            continue;
+                        }
+                        if !raw && b[i] == '\\' {
+                            i += 2;
+                            continue;
+                        }
+                        if b[i] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && i + 1 + k < b.len() && b[i + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                toks.push(Tok {
+                                    kind: Kind::Str,
+                                    text: b[cstart..i].iter().collect(),
+                                    line: sl,
+                                });
+                                i += 1 + hashes;
+                                break;
+                            }
+                        }
+                        i += 1;
+                    }
+                    continue;
+                }
+                // `r#ident` raw identifier or stray `#`: fall through,
+                // the `#` lexes as punctuation next iteration
+            }
+            toks.push(Tok { kind: Kind::Ident, text, line });
+            continue;
+        }
+        // number (consume `.` only when a digit follows, so `0..n` stays
+        // three tokens and range patterns survive)
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < b.len() {
+                let d = b[i];
+                if d.is_alphanumeric() || d == '_' {
+                    i += 1;
+                    continue;
+                }
+                if d == '.' && i + 1 < b.len() && b[i + 1].is_ascii_digit() {
+                    i += 1;
+                    continue;
+                }
+                break;
+            }
+            toks.push(Tok { kind: Kind::Num, text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        toks.push(Tok { kind: Kind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    Lexed { toks, comments }
+}
+
+fn tx(toks: &[Tok], i: usize) -> &str {
+    toks.get(i).map(|t| t.text.as_str()).unwrap_or("")
+}
+
+/// Drop `#[cfg(test)] mod <name> { ... }` bodies (and skip over
+/// `#[cfg(test)] mod <name>;` declarations) so the rules only see
+/// production code.  `#[cfg(test)]` on a single item (fn/impl) is left
+/// in — only whole test *modules* are stripped, which matches how this
+/// repo organizes its tests.
+pub fn strip_cfg_test(toks: &[Tok]) -> Vec<Tok> {
+    let mut out: Vec<Tok> = Vec::with_capacity(toks.len());
+    let mut i = 0usize;
+    while i < toks.len() {
+        if tx(toks, i) == "#"
+            && tx(toks, i + 1) == "["
+            && tx(toks, i + 2) == "cfg"
+            && tx(toks, i + 3) == "("
+            && tx(toks, i + 4) == "test"
+            && tx(toks, i + 5) == ")"
+            && tx(toks, i + 6) == "]"
+            && tx(toks, i + 7) == "mod"
+        {
+            let mut j = i + 8;
+            while j < toks.len() && tx(toks, j) != "{" && tx(toks, j) != ";" {
+                j += 1;
+            }
+            if j >= toks.len() {
+                break;
+            }
+            if tx(toks, j) == ";" {
+                i = j + 1;
+                continue;
+            }
+            let mut depth = 0i64;
+            while j < toks.len() {
+                match tx(toks, j) {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            j += 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            i = j;
+            continue;
+        }
+        out.push(toks[i].clone());
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn basic_tokens() {
+        assert_eq!(texts("let x = a.unwrap();"), vec!["let", "x", "=", "a", ".", "unwrap", "(", ")", ";"]);
+    }
+
+    #[test]
+    fn ranges_survive() {
+        assert_eq!(texts("0..n"), vec!["0", ".", ".", "n"]);
+        assert_eq!(texts("1.5 + 2"), vec!["1.5", "+", "2"]);
+    }
+
+    #[test]
+    fn strings_and_raw_strings() {
+        let l = lex(r###"let a = "x\"y"; let b = r#"{"stats":true}"#;"###);
+        let strs: Vec<&str> = l.toks.iter().filter(|t| t.kind == Kind::Str).map(|t| t.text.as_str()).collect();
+        assert_eq!(strs, vec!["x\\\"y", r#"{"stats":true}"#]);
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; let d = '\\n'; }");
+        assert!(l.toks.iter().all(|t| t.text != "a" || t.kind == Kind::Ident));
+        // no stray quote punctuation survives
+        assert!(l.toks.iter().all(|t| t.text != "'"));
+    }
+
+    #[test]
+    fn comments_collected_with_lines() {
+        let l = lex("// one\nlet x = 1; // two\n/* three\nfour */\nlet y = 2;");
+        assert_eq!(l.comments.len(), 3);
+        assert_eq!(l.comments[0].line, 1);
+        assert_eq!(l.comments[1].line, 2);
+        assert_eq!(l.comments[2].line, 3);
+        assert!(l.comments[2].text.contains("four"));
+    }
+
+    #[test]
+    fn strip_test_mods() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests { fn t() { x.unwrap(); } }\nfn prod2() {}";
+        let l = lex(src);
+        let s = strip_cfg_test(&l.toks);
+        let texts: Vec<&str> = s.iter().map(|t| t.text.as_str()).collect();
+        assert!(texts.contains(&"prod"));
+        assert!(texts.contains(&"prod2"));
+        assert!(!texts.contains(&"unwrap"));
+    }
+
+    #[test]
+    fn strip_test_mod_decl() {
+        let src = "#[cfg(test)]\nmod props;\nfn prod() {}";
+        let l = lex(src);
+        let s = strip_cfg_test(&l.toks);
+        assert!(s.iter().any(|t| t.text == "prod"));
+    }
+}

@@ -1,0 +1,261 @@
+//! `hass-analyze` — the repo's own lint pass over `rust/src`.
+//!
+//! The HASS serving stack rests on invariants the compiler cannot see
+//! (solo == fused token-for-token, `(id,stamp)` page identity, COW
+//! isolation, mask visibility).  This crate walks the production sources
+//! with a small lexer and enforces the conventions that keep those
+//! invariants checkable:
+//!
+//! * `no-unwrap` — no `.unwrap()` / `.expect(...)` / indexing into a call
+//!   result inside the fused-path modules (`scheduler`, `engine/sessions`,
+//!   `kvcache`) unless annotated.
+//! * `send-hygiene` — no `Rc`/`Cell`/`RefCell` fields on types reachable
+//!   from an `Arc<...>`/channel boundary, and none named inside a
+//!   `spawn(...)` closure (pre-flight gate for the Arc page-pool
+//!   migration).
+//! * `stamp-discipline` — every storage-writing `pub fn` on
+//!   `KvCache`/`Page` carries the `#[hass::mutates_storage]` doc marker
+//!   and bumps `stamp` on its write path, and vice versa.
+//! * `wire-drift` — every JSON key the client/stats paths *read* must be
+//!   *emitted* somewhere by the server/scheduler.
+//! * `panic-isolation` — every `spawn(...)` in `scheduler`/`server` wraps
+//!   its body in `catch_unwind`.
+//! * `unsafe-comment` — every `unsafe` block carries a `// SAFETY:`
+//!   comment within the preceding 3 lines.
+//!
+//! Violations are silenced site-by-site with
+//! `// hass-lint: allow(<rule>[, <rule>...]) — <justification>`; the
+//! justification is mandatory (see README.md).  Annotations cover their
+//! own line and the next one.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+pub mod lexer;
+pub mod rules;
+
+use lexer::{Comment, Lexed, Tok};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub msg: String,
+}
+
+pub struct SourceFile {
+    /// Path with `/` separators (rule matchers are written against it).
+    pub path: String,
+    /// Test-stripped token stream (no `#[cfg(test)] mod` bodies).
+    pub toks: Vec<Tok>,
+    /// All comments, with line numbers (tests included — annotations and
+    /// SAFETY comments live here).
+    pub comments: Vec<Comment>,
+    /// line -> rules allowed on that line by `hass-lint: allow(...)`.
+    pub allows: HashMap<usize, Vec<String>>,
+}
+
+impl SourceFile {
+    pub fn allowed(&self, rule: &str, line: usize) -> bool {
+        self.allows
+            .get(&line)
+            .map(|rs| rs.iter().any(|r| r == rule || r == "all"))
+            .unwrap_or(false)
+    }
+}
+
+/// Build a [`SourceFile`] from in-memory source (used by the rule tests
+/// and by [`run_sources`]).  Malformed `hass-lint:` annotations are
+/// reported through the returned violations.
+pub fn source_from(path: &str, src: &str) -> (SourceFile, Vec<Violation>) {
+    let Lexed { toks, comments } = lexer::lex(src);
+    let stripped = lexer::strip_cfg_test(&toks);
+    let (allows, viols) = parse_allow_comments(path, &comments);
+    (SourceFile { path: path.to_string(), toks: stripped, comments, allows }, viols)
+}
+
+/// Parse every `hass-lint: allow(<rules>) — <justification>` annotation.
+/// The annotation silences the listed rules on its own line and the next;
+/// a missing rule list or missing justification is itself a violation
+/// (`allow-syntax`) — an allow that doesn't say *why* is a convention
+/// hole, not an exemption.
+fn parse_allow_comments(
+    path: &str,
+    comments: &[Comment],
+) -> (HashMap<usize, Vec<String>>, Vec<Violation>) {
+    let mut map: HashMap<usize, Vec<String>> = HashMap::new();
+    let mut viols: Vec<Violation> = Vec::new();
+    let bad = |line: usize| Violation {
+        file: path.to_string(),
+        line,
+        rule: "allow-syntax".to_string(),
+        msg: "malformed `hass-lint:` annotation — expected \
+              `hass-lint: allow(<rule>[, <rule>]) — <justification>`"
+            .to_string(),
+    };
+    for c in comments {
+        let Some(pos) = c.text.find("hass-lint:") else { continue };
+        let rest = c.text[pos + "hass-lint:".len()..].trim_start();
+        let Some(rest) = rest.strip_prefix("allow") else {
+            viols.push(bad(c.line));
+            continue;
+        };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix('(') else {
+            viols.push(bad(c.line));
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            viols.push(bad(c.line));
+            continue;
+        };
+        let rules: Vec<String> = rest[..close]
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        let substantive = rest[close + 1..]
+            .chars()
+            .filter(|ch| ch.is_alphanumeric())
+            .count();
+        if rules.is_empty() || substantive < 3 {
+            viols.push(bad(c.line));
+            continue;
+        }
+        for l in [c.line, c.line + 1] {
+            map.entry(l).or_default().extend(rules.iter().cloned());
+        }
+    }
+    (map, viols)
+}
+
+/// Recursively collect `.rs` files under `root` (skipping `vendor/` and
+/// build output), sorted for deterministic reports.
+fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(root) else { return };
+    for e in entries.flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            if name == "vendor" || name == "target" || name.starts_with('.') {
+                continue;
+            }
+            collect_rs(&p, out);
+        } else if p.extension().map(|x| x == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+}
+
+/// Analyze in-memory sources: `(path, source)` pairs.  Returns all
+/// violations sorted by (file, line).
+pub fn run_sources(sources: &[(&str, &str)]) -> Vec<Violation> {
+    let mut files: Vec<SourceFile> = Vec::with_capacity(sources.len());
+    let mut viols: Vec<Violation> = Vec::new();
+    for (path, src) in sources {
+        let (f, v) = source_from(path, src);
+        viols.extend(v);
+        files.push(f);
+    }
+    viols.extend(rules::check_crate(&files));
+    viols.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    viols
+}
+
+/// Analyze the given roots (files or directories).  Returns the
+/// violations plus the number of files scanned.
+pub fn run(paths: &[String]) -> std::io::Result<(Vec<Violation>, usize)> {
+    let mut list: Vec<PathBuf> = Vec::new();
+    for p in paths {
+        let pb = PathBuf::from(p);
+        if pb.is_dir() {
+            collect_rs(&pb, &mut list);
+        } else {
+            list.push(pb);
+        }
+    }
+    list.sort();
+    list.dedup();
+    let mut files: Vec<SourceFile> = Vec::with_capacity(list.len());
+    let mut viols: Vec<Violation> = Vec::new();
+    for pb in &list {
+        let src = std::fs::read_to_string(pb)?;
+        let path = pb.to_string_lossy().replace('\\', "/");
+        let (f, v) = source_from(&path, &src);
+        viols.extend(v);
+        files.push(f);
+    }
+    let n = files.len();
+    viols.extend(rules::check_crate(&files));
+    viols.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok((viols, n))
+}
+
+/// CLI driver: print `path:line: [rule] msg` lines and return the exit
+/// code (0 = clean, 1 = violations, 2 = I/O error).
+pub fn run_cli(paths: &[String]) -> i32 {
+    let default = vec!["rust/src".to_string()];
+    let paths = if paths.is_empty() { &default } else { paths };
+    match run(paths) {
+        Ok((viols, n)) => {
+            for v in &viols {
+                println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+            }
+            println!("hass-analyze: {} file(s) scanned, {} violation(s)", n, viols.len());
+            if viols.is_empty() {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("hass-analyze: {e}");
+            2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_annotation_grammar() {
+        let (f, v) = source_from(
+            "x.rs",
+            "// hass-lint: allow(no-unwrap) — page was ensured two lines up\nlet x = 1;",
+        );
+        assert!(v.is_empty());
+        assert!(f.allowed("no-unwrap", 1));
+        assert!(f.allowed("no-unwrap", 2));
+        assert!(!f.allowed("no-unwrap", 3));
+        assert!(!f.allowed("send-hygiene", 1));
+    }
+
+    #[test]
+    fn allow_without_justification_fires() {
+        let (_, v) = source_from("x.rs", "// hass-lint: allow(no-unwrap)\nlet x = 1;");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "allow-syntax");
+    }
+
+    #[test]
+    fn allow_multiple_rules() {
+        let (f, v) = source_from(
+            "x.rs",
+            "// hass-lint: allow(no-unwrap, send-hygiene) — test fixture plumbing\nlet x = 1;",
+        );
+        assert!(v.is_empty());
+        assert!(f.allowed("no-unwrap", 2));
+        assert!(f.allowed("send-hygiene", 2));
+    }
+
+    #[test]
+    fn malformed_allow_fires() {
+        let (_, v) = source_from("x.rs", "// hass-lint: alow(no-unwrap) — typo\n");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "allow-syntax");
+    }
+}

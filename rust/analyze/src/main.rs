@@ -1,0 +1,9 @@
+//! `hass-analyze <paths...>` — lint the HASS sources.
+//!
+//! With no arguments it scans `rust/src` (run from the repo root).
+//! Exit code 0 = clean, 1 = violations, 2 = I/O error.
+
+fn main() {
+    let paths: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(hass_analyze::run_cli(&paths));
+}

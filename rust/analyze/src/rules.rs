@@ -1,0 +1,1012 @@
+//! The rule engine.  Every rule is a lexical approximation (see module
+//! docs in `lexer.rs`); each one documents the exact token pattern it
+//! matches so a surprising report can be traced.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::lexer::{Kind, Tok};
+use crate::{SourceFile, Violation};
+
+/// Fused-path modules: the code where a panic kills a worker cycle and a
+/// stale page aliases another session's KV.  `kvcache/props.rs` is a
+/// test-only oracle suite (its own file, so `#[cfg(test)]` stripping
+/// can't see the `mod` wrapper in `kvcache/mod.rs`) and is exempt.
+fn is_fused_path(p: &str) -> bool {
+    (p.contains("scheduler/") || p.ends_with("engine/sessions.rs") || p.contains("kvcache/"))
+        && !p.ends_with("kvcache/props.rs")
+}
+
+/// Files that parse or emit wire-protocol JSON keys.
+fn is_wire_file(p: &str) -> bool {
+    p.ends_with("server/mod.rs") || p.ends_with("main.rs")
+}
+
+/// Files that spawn worker / pump threads.
+fn is_thread_file(p: &str) -> bool {
+    p.ends_with("scheduler/mod.rs") || p.ends_with("server/mod.rs")
+}
+
+pub fn check_crate(files: &[SourceFile]) -> Vec<Violation> {
+    let mut out: Vec<Violation> = Vec::new();
+    for f in files {
+        r1_no_unwrap(f, &mut out);
+        r3_stamp_discipline(f, &mut out);
+        r5_panic_isolation(f, &mut out);
+        r_unsafe_comment(f, &mut out);
+    }
+    r2_send_hygiene(files, &mut out);
+    r4_wire_drift(files, &mut out);
+    out
+}
+
+fn viol(f: &SourceFile, line: usize, rule: &str, msg: String) -> Violation {
+    Violation { file: f.path.clone(), line, rule: rule.to_string(), msg }
+}
+
+fn tx(t: &[Tok], i: usize) -> &str {
+    t.get(i).map(|k| k.text.as_str()).unwrap_or("")
+}
+
+/// Matching `}` for every `{` (token indices).
+fn brace_pairs(t: &[Tok]) -> HashMap<usize, usize> {
+    let mut stack: Vec<usize> = Vec::new();
+    let mut map: HashMap<usize, usize> = HashMap::new();
+    for (i, tk) in t.iter().enumerate() {
+        match tk.text.as_str() {
+            "{" => stack.push(i),
+            "}" => {
+                if let Some(o) = stack.pop() {
+                    map.insert(o, i);
+                }
+            }
+            _ => {}
+        }
+    }
+    map
+}
+
+// ---------------------------------------------------------------------
+// R1 `no-unwrap`
+// ---------------------------------------------------------------------
+// Pattern: `.unwrap(` / `.expect(` (exact identifier, so `unwrap_or_else`
+// and friends are untouched), plus `)[` — indexing straight into a call
+// result, where no named binding carries a length proof.  Fused-path
+// files only; other indexing (named slices, tensors) is handled by the
+// shadow sanitizer at runtime, not lexically.
+
+fn r1_no_unwrap(f: &SourceFile, out: &mut Vec<Violation>) {
+    if !is_fused_path(&f.path) {
+        return;
+    }
+    let t = &f.toks;
+    for i in 0..t.len() {
+        if t[i].kind == Kind::Ident
+            && (t[i].text == "unwrap" || t[i].text == "expect")
+            && tx(t, i.wrapping_sub(1)) == "."
+            && tx(t, i + 1) == "("
+            && !f.allowed("no-unwrap", t[i].line)
+        {
+            out.push(viol(
+                f,
+                t[i].line,
+                "no-unwrap",
+                format!(
+                    ".{}() on the fused path — a panic here kills a worker cycle; \
+                     return through the existing Result plumbing or annotate with \
+                     `hass-lint: allow(no-unwrap)`",
+                    t[i].text
+                ),
+            ));
+        }
+        if t[i].text == ")" && tx(t, i + 1) == "[" && !f.allowed("no-unwrap", t[i].line) {
+            out.push(viol(
+                f,
+                t[i].line,
+                "no-unwrap",
+                "indexing straight into a call result on the fused path — bind it and \
+                 bounds-check, or annotate with `hass-lint: allow(no-unwrap)`"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// R2 `send-hygiene`
+// ---------------------------------------------------------------------
+// Thread-crossing roots are type names inside `Arc<...>` / `Sender<...>`
+// / `SyncSender<...>` / `Receiver<...>` generics, `channel::<T>` /
+// `sync_channel::<T>` turbofish, and `Arc::new(...)` construction.  From
+// those roots the rule walks struct/enum field types transitively and
+// flags any `Rc` / `Cell` / `RefCell` / `UnsafeCell` field it reaches —
+// exactly the state the Arc page-pool migration must not smuggle across
+// a thread.  It also flags those identifiers named directly inside a
+// `spawn(...)` argument span (closure captures).
+
+const NON_SEND: [&str; 4] = ["Rc", "Cell", "RefCell", "UnsafeCell"];
+
+struct TypeInfo {
+    file: usize,
+    /// Identifiers in field-type position, with the line they sit on.
+    fields: Vec<(String, usize)>,
+}
+
+fn collect_types(files: &[SourceFile]) -> HashMap<String, TypeInfo> {
+    let mut map: HashMap<String, TypeInfo> = HashMap::new();
+    for (fi, f) in files.iter().enumerate() {
+        let t = &f.toks;
+        let pairs = brace_pairs(t);
+        let mut i = 0usize;
+        while i < t.len() {
+            if t[i].kind != Kind::Ident || (t[i].text != "struct" && t[i].text != "enum") {
+                i += 1;
+                continue;
+            }
+            let Some(name) = t.get(i + 1) else { break };
+            if name.kind != Kind::Ident {
+                i += 1;
+                continue;
+            }
+            // skip generics to the body start: `{`, `(`, or `;`
+            let mut angle = 0i64;
+            let mut j = i + 2;
+            while j < t.len() {
+                match tx(t, j) {
+                    "<" => angle += 1,
+                    ">" => angle -= 1,
+                    "{" | "(" | ";" if angle <= 0 => break,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if j >= t.len() || tx(t, j) == ";" {
+                i = j + 1;
+                continue;
+            }
+            let (open, close) = if tx(t, j) == "{" {
+                match pairs.get(&j) {
+                    Some(&c) => (j, c),
+                    None => {
+                        i = j + 1;
+                        continue;
+                    }
+                }
+            } else {
+                // tuple struct / unit-with-parens: match the `)`
+                let mut d = 0i64;
+                let mut k = j;
+                let mut close = j;
+                while k < t.len() {
+                    match tx(t, k) {
+                        "(" => d += 1,
+                        ")" => {
+                            d -= 1;
+                            if d == 0 {
+                                close = k;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                (j, close)
+            };
+            let mut fields: Vec<(String, usize)> = Vec::new();
+            for k in (open + 1)..close {
+                let tk = &t[k];
+                if tk.kind != Kind::Ident {
+                    continue;
+                }
+                if matches!(tk.text.as_str(), "pub" | "crate" | "super" | "in" | "dyn" | "mut") {
+                    continue;
+                }
+                // `ident :` (single colon) is a field name, not a type
+                let single_colon =
+                    tx(t, k + 1) == ":" && tx(t, k + 2) != ":";
+                if single_colon {
+                    continue;
+                }
+                fields.push((tk.text.clone(), tk.line));
+            }
+            map.insert(name.text.clone(), TypeInfo { file: fi, fields });
+            i = close + 1;
+        }
+    }
+    map
+}
+
+/// Identifiers inside the generic argument list opening at `t[open]`
+/// (which must be `<`).  Bounded walk; `->` return arrows don't close.
+fn generic_idents(t: &[Tok], open: usize, roots: &mut HashSet<String>) {
+    let mut d = 0i64;
+    let mut j = open;
+    let mut budget = 96usize;
+    while j < t.len() && budget > 0 {
+        budget -= 1;
+        match tx(t, j) {
+            "<" => d += 1,
+            ">" => {
+                if j == 0 || tx(t, j - 1) != "-" {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+            }
+            _ => {
+                if t[j].kind == Kind::Ident {
+                    roots.insert(t[j].text.clone());
+                }
+            }
+        }
+        j += 1;
+    }
+}
+
+fn collect_roots(files: &[SourceFile], types: &HashMap<String, TypeInfo>) -> HashSet<String> {
+    let mut roots: HashSet<String> = HashSet::new();
+    for f in files {
+        let t = &f.toks;
+        for i in 0..t.len() {
+            if t[i].kind != Kind::Ident {
+                continue;
+            }
+            let name = t[i].text.as_str();
+            if matches!(name, "Arc" | "Sender" | "SyncSender" | "Receiver") && tx(t, i + 1) == "<"
+            {
+                generic_idents(t, i + 1, &mut roots);
+            }
+            if matches!(name, "channel" | "sync_channel") {
+                // turbofish: channel::<T>(...)
+                for j in (i + 1)..(i + 5).min(t.len()) {
+                    if tx(t, j) == "<" {
+                        generic_idents(t, j, &mut roots);
+                        break;
+                    }
+                    if tx(t, j) != ":" {
+                        break;
+                    }
+                }
+            }
+            if name == "Arc"
+                && tx(t, i + 1) == ":"
+                && tx(t, i + 2) == ":"
+                && tx(t, i + 3) == "new"
+                && tx(t, i + 4) == "("
+            {
+                let mut d = 0i64;
+                let mut j = i + 4;
+                while j < t.len() {
+                    match tx(t, j) {
+                        "(" => d += 1,
+                        ")" => {
+                            d -= 1;
+                            if d == 0 {
+                                break;
+                            }
+                        }
+                        _ => {
+                            if t[j].kind == Kind::Ident && types.contains_key(&t[j].text) {
+                                roots.insert(t[j].text.clone());
+                            }
+                        }
+                    }
+                    j += 1;
+                }
+            }
+        }
+    }
+    roots
+}
+
+fn r2_send_hygiene(files: &[SourceFile], out: &mut Vec<Violation>) {
+    let types = collect_types(files);
+    let mut queue: Vec<String> = collect_roots(files, &types).into_iter().collect();
+    let mut seen: HashSet<String> = queue.iter().cloned().collect();
+    while let Some(name) = queue.pop() {
+        let Some(info) = types.get(&name) else { continue };
+        let f = &files[info.file];
+        for (id, line) in &info.fields {
+            if NON_SEND.contains(&id.as_str()) {
+                if !f.allowed("send-hygiene", *line) {
+                    out.push(viol(
+                        f,
+                        *line,
+                        "send-hygiene",
+                        format!(
+                            "`{name}` holds non-Send `{id}` but is reachable from an \
+                             Arc/channel thread boundary — the Arc page-pool migration \
+                             gate; move the state or annotate with \
+                             `hass-lint: allow(send-hygiene)`"
+                        ),
+                    ));
+                }
+            } else if types.contains_key(id) && seen.insert(id.clone()) {
+                queue.push(id.clone());
+            }
+        }
+    }
+    // direct captures: Rc/Cell/RefCell named inside a spawn(...) span
+    for f in files {
+        let t = &f.toks;
+        for i in 0..t.len() {
+            if t[i].kind != Kind::Ident || t[i].text != "spawn" || tx(t, i + 1) != "(" {
+                continue;
+            }
+            let mut d = 0i64;
+            let mut j = i + 1;
+            while j < t.len() {
+                match tx(t, j) {
+                    "(" => d += 1,
+                    ")" => {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    }
+                    _ => {
+                        if t[j].kind == Kind::Ident
+                            && NON_SEND.contains(&t[j].text.as_str())
+                            && !f.allowed("send-hygiene", t[j].line)
+                        {
+                            out.push(viol(
+                                f,
+                                t[j].line,
+                                "send-hygiene",
+                                format!("`{}` named inside a spawn(...) closure", t[j].text),
+                            ));
+                        }
+                    }
+                }
+                j += 1;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// R3 `stamp-discipline`
+// ---------------------------------------------------------------------
+// In `kvcache/mod.rs`: a fn carrying the `#[hass::mutates_storage]` doc
+// marker must reach a stamp bump on its write path (`page_mut` /
+// `dedup_page*` / `next_stamp` / `stamp.set`, or a call to another
+// marked fn); conversely, any fn inside `impl KvCache` / `impl Page`
+// whose body calls `page_mut` or `dedup_page*` must carry the marker.
+// The marker is a comment, so it survives into rustdoc without needing
+// a real proc-macro.
+
+struct FnInfo {
+    name: String,
+    line: usize,
+    is_pub: bool,
+    body: Option<(usize, usize)>,
+    impl_target: Option<String>,
+}
+
+fn parse_fns(t: &[Tok]) -> Vec<FnInfo> {
+    let pairs = brace_pairs(t);
+    // impl spans: (target, open brace, close brace)
+    let mut impl_spans: Vec<(String, usize, usize)> = Vec::new();
+    let mut i = 0usize;
+    while i < t.len() {
+        if t[i].kind == Kind::Ident && t[i].text == "impl" {
+            let mut target: Option<String> = None;
+            let mut saw_for = false;
+            let mut j = i + 1;
+            while j < t.len() && tx(t, j) != "{" && tx(t, j) != ";" {
+                if t[j].kind == Kind::Ident {
+                    if t[j].text == "for" {
+                        saw_for = true;
+                    } else if saw_for {
+                        target = Some(t[j].text.clone());
+                        saw_for = false;
+                    } else if target.is_none() {
+                        target = Some(t[j].text.clone());
+                    }
+                }
+                j += 1;
+            }
+            if j < t.len() && tx(t, j) == "{" {
+                if let (Some(tg), Some(&close)) = (target, pairs.get(&j)) {
+                    impl_spans.push((tg, j, close));
+                }
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    let mut fns: Vec<FnInfo> = Vec::new();
+    for i in 0..t.len() {
+        if t[i].kind != Kind::Ident || t[i].text != "fn" {
+            continue;
+        }
+        let Some(name_tok) = t.get(i + 1) else { continue };
+        if name_tok.kind != Kind::Ident {
+            continue;
+        }
+        // visibility: scan back a handful of tokens for `pub` without
+        // crossing a statement boundary
+        let mut is_pub = false;
+        let mut k = i;
+        for _ in 0..6 {
+            if k == 0 {
+                break;
+            }
+            k -= 1;
+            match tx(t, k) {
+                "pub" => {
+                    is_pub = true;
+                    break;
+                }
+                "{" | "}" | ";" => break,
+                _ => {}
+            }
+        }
+        // body: first `{` at bracket depth 0 before a `;`
+        let mut body: Option<(usize, usize)> = None;
+        let mut depth = 0i64;
+        let mut j = i + 2;
+        while j < t.len() {
+            match tx(t, j) {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "{" if depth == 0 => {
+                    if let Some(&close) = pairs.get(&j) {
+                        body = Some((j, close));
+                    }
+                    break;
+                }
+                ";" if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let impl_target = impl_spans
+            .iter()
+            .filter(|(_, o, c)| *o < i && i < *c)
+            .min_by_key(|(_, o, c)| c - o)
+            .map(|(tg, _, _)| tg.clone());
+        fns.push(FnInfo { name: name_tok.text.clone(), line: t[i].line, is_pub, body, impl_target });
+    }
+    fns
+}
+
+const STORAGE_MARKER: &str = "#[hass::mutates_storage]";
+
+fn body_bumps_stamp(t: &[Tok], body: (usize, usize), marked_names: &HashSet<String>) -> bool {
+    let (open, close) = body;
+    for k in (open + 1)..close {
+        if t[k].kind != Kind::Ident {
+            continue;
+        }
+        let s = t[k].text.as_str();
+        if s == "page_mut" || s == "next_stamp" || s.starts_with("dedup_page") {
+            return true;
+        }
+        if s == "stamp" && tx(t, k + 1) == "." && tx(t, k + 2) == "set" {
+            return true;
+        }
+        if marked_names.contains(s) {
+            return true;
+        }
+    }
+    false
+}
+
+fn body_writes_storage(t: &[Tok], body: (usize, usize)) -> bool {
+    let (open, close) = body;
+    for k in (open + 1)..close {
+        if t[k].kind == Kind::Ident
+            && (t[k].text == "page_mut" || t[k].text.starts_with("dedup_page"))
+        {
+            return true;
+        }
+    }
+    false
+}
+
+fn r3_stamp_discipline(f: &SourceFile, out: &mut Vec<Violation>) {
+    if !f.path.ends_with("kvcache/mod.rs") {
+        return;
+    }
+    let t = &f.toks;
+    let fns = parse_fns(t);
+    // marker -> nearest following fn (within a short doc-comment window)
+    let mut marked: HashSet<usize> = HashSet::new();
+    for c in f.comments.iter().filter(|c| c.text.contains(STORAGE_MARKER)) {
+        let target = fns
+            .iter()
+            .enumerate()
+            .filter(|(_, fi)| fi.line >= c.line && fi.line <= c.line + 12)
+            .min_by_key(|(_, fi)| fi.line)
+            .map(|(idx, _)| idx);
+        match target {
+            Some(idx) => {
+                marked.insert(idx);
+            }
+            None => out.push(viol(
+                f,
+                c.line,
+                "stamp-discipline",
+                "`#[hass::mutates_storage]` marker with no fn in the next 12 lines".to_string(),
+            )),
+        }
+    }
+    let marked_names: HashSet<String> =
+        marked.iter().map(|&idx| fns[idx].name.clone()).collect();
+    for (idx, fi) in fns.iter().enumerate() {
+        let on_storage = matches!(fi.impl_target.as_deref(), Some("KvCache") | Some("Page"));
+        if !on_storage {
+            continue;
+        }
+        let Some(body) = fi.body else { continue };
+        if marked.contains(&idx) && !body_bumps_stamp(t, body, &marked_names) {
+            if !f.allowed("stamp-discipline", fi.line) {
+                out.push(viol(
+                    f,
+                    fi.line,
+                    "stamp-discipline",
+                    format!(
+                        "`{}` is marked #[hass::mutates_storage] but its body never \
+                         reaches a stamp bump (page_mut / dedup_page / next_stamp / \
+                         stamp.set) — a write without a bump lets (id,stamp) alias \
+                         two different page contents",
+                        fi.name
+                    ),
+                ));
+            }
+        }
+        if !marked.contains(&idx)
+            && fi.is_pub
+            && body_writes_storage(t, body)
+            && !f.allowed("stamp-discipline", fi.line)
+        {
+            out.push(viol(
+                f,
+                fi.line,
+                "stamp-discipline",
+                format!(
+                    "pub fn `{}` writes page storage (page_mut / dedup_page) but lacks \
+                     the #[hass::mutates_storage] doc marker",
+                    fi.name
+                ),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// R4 `wire-drift`
+// ---------------------------------------------------------------------
+// EMIT keys: `("key",` tuple patterns in server/scheduler/main (the
+// Json::obj builder convention) plus `"key":` sequences embedded inside
+// string literals (raw request lines like `{"stats":true}`).  READ keys:
+// `.get("key")` / `.str_at("key")` / `.usize_at` / `.f64_at` / `.u64_at`
+// / `.bool_at`.  Every read key must be emitted somewhere, else the
+// client is parsing a key the server no longer sends.
+
+fn embedded_keys(content: &str, keys: &mut HashSet<String>) {
+    let b: Vec<char> = content.chars().collect();
+    let mut i = 0usize;
+    while i < b.len() {
+        if b[i] == '"' || (b[i] == '\\' && i + 1 < b.len() && b[i + 1] == '"') {
+            let mut j = if b[i] == '"' { i + 1 } else { i + 2 };
+            let start = j;
+            while j < b.len() && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            if j > start {
+                // closing quote (possibly escaped) then ':'
+                let mut k = j;
+                if k < b.len() && b[k] == '\\' {
+                    k += 1;
+                }
+                if k < b.len() && b[k] == '"' {
+                    k += 1;
+                    if k < b.len() && b[k] == ':' {
+                        keys.insert(b[start..j].iter().collect());
+                        i = k;
+                        continue;
+                    }
+                }
+            }
+            i = j.max(i + 1);
+            continue;
+        }
+        i += 1;
+    }
+}
+
+const READ_FNS: [&str; 6] = ["get", "str_at", "usize_at", "f64_at", "u64_at", "bool_at"];
+
+fn r4_wire_drift(files: &[SourceFile], out: &mut Vec<Violation>) {
+    let mut emitted: HashSet<String> = HashSet::new();
+    for f in files {
+        if !(is_wire_file(&f.path) || f.path.ends_with("scheduler/mod.rs")) {
+            continue;
+        }
+        let t = &f.toks;
+        for i in 0..t.len() {
+            if tx(t, i) == "("
+                && t.get(i + 1).map(|k| k.kind == Kind::Str).unwrap_or(false)
+                && tx(t, i + 2) == ","
+            {
+                emitted.insert(t[i + 1].text.clone());
+            }
+            if t[i].kind == Kind::Str {
+                embedded_keys(&t[i].text, &mut emitted);
+            }
+        }
+    }
+    for f in files {
+        if !is_wire_file(&f.path) {
+            continue;
+        }
+        let t = &f.toks;
+        for i in 0..t.len() {
+            if t[i].kind == Kind::Ident
+                && READ_FNS.contains(&t[i].text.as_str())
+                && tx(t, i.wrapping_sub(1)) == "."
+                && tx(t, i + 1) == "("
+                && t.get(i + 2).map(|k| k.kind == Kind::Str).unwrap_or(false)
+                && tx(t, i + 3) == ")"
+            {
+                let key = &t[i + 2].text;
+                if !emitted.contains(key) && !f.allowed("wire-drift", t[i].line) {
+                    out.push(viol(
+                        f,
+                        t[i].line,
+                        "wire-drift",
+                        format!(
+                            "wire key \"{key}\" is parsed here but never emitted by \
+                             server/scheduler — protocol drift"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// R5 `panic-isolation`
+// ---------------------------------------------------------------------
+// Every `spawn(...)` argument span in scheduler/server must mention
+// `catch_unwind`: a worker or writer-pump thread that panics bare takes
+// its queue down silently.
+
+fn r5_panic_isolation(f: &SourceFile, out: &mut Vec<Violation>) {
+    if !is_thread_file(&f.path) {
+        return;
+    }
+    let t = &f.toks;
+    for i in 0..t.len() {
+        if t[i].kind != Kind::Ident || t[i].text != "spawn" || tx(t, i + 1) != "(" {
+            continue;
+        }
+        let mut d = 0i64;
+        let mut j = i + 1;
+        let mut has_catch = false;
+        while j < t.len() {
+            match tx(t, j) {
+                "(" => d += 1,
+                ")" => {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                "catch_unwind" => has_catch = true,
+                _ => {}
+            }
+            j += 1;
+        }
+        if !has_catch && !f.allowed("panic-isolation", t[i].line) {
+            out.push(viol(
+                f,
+                t[i].line,
+                "panic-isolation",
+                "spawned thread body lacks catch_unwind — a panic here silently kills \
+                 the worker/pump loop"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// R-unsafe `unsafe-comment`
+// ---------------------------------------------------------------------
+// Every `unsafe` token needs a comment containing `SAFETY:` on the same
+// line or within the 3 lines above.
+
+fn r_unsafe_comment(f: &SourceFile, out: &mut Vec<Violation>) {
+    for tok in f.toks.iter().filter(|t| t.kind == Kind::Ident && t.text == "unsafe") {
+        let line = tok.line;
+        let documented = f
+            .comments
+            .iter()
+            .any(|c| c.text.contains("SAFETY:") && c.line <= line && c.line + 3 >= line);
+        if !documented && !f.allowed("unsafe-comment", line) {
+            out.push(viol(
+                f,
+                line,
+                "unsafe-comment",
+                "unsafe block without a `// SAFETY:` comment in the preceding 3 lines"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::run_sources;
+
+    fn rules_fired(sources: &[(&str, &str)]) -> Vec<String> {
+        run_sources(sources).into_iter().map(|v| v.rule).collect()
+    }
+
+    // ---- R1 ----
+
+    #[test]
+    fn r1_fires_on_unwrap_in_fused_path() {
+        let fired = rules_fired(&[(
+            "rust/src/scheduler/mod.rs",
+            "fn f(x: Option<u32>) -> u32 { x.unwrap() }",
+        )]);
+        assert_eq!(fired, vec!["no-unwrap"]);
+    }
+
+    #[test]
+    fn r1_fires_on_expect_and_call_indexing() {
+        let v = run_sources(&[(
+            "rust/src/kvcache/mod.rs",
+            "fn f(x: Option<u32>) -> u32 { x.expect(\"boom\") }\n\
+             fn g() -> u32 { h()[0] }\nfn h() -> Vec<u32> { vec![] }",
+        )]);
+        assert_eq!(v.len(), 2);
+        assert!(v.iter().all(|v| v.rule == "no-unwrap"));
+    }
+
+    #[test]
+    fn r1_annotated_does_not_fire() {
+        let fired = rules_fired(&[(
+            "rust/src/scheduler/mod.rs",
+            "fn f(x: Option<u32>) -> u32 {\n\
+             // hass-lint: allow(no-unwrap) — x was checked by the caller\n\
+             x.unwrap()\n}",
+        )]);
+        assert!(fired.is_empty(), "{fired:?}");
+    }
+
+    #[test]
+    fn r1_ignores_non_fused_paths_and_tests() {
+        let fired = rules_fired(&[
+            ("rust/src/tables/mod.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }"),
+            (
+                "rust/src/scheduler/mod.rs",
+                "#[cfg(test)]\nmod tests { fn f(x: Option<u32>) -> u32 { x.unwrap() } }",
+            ),
+            ("rust/src/kvcache/props.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }"),
+        ]);
+        assert!(fired.is_empty(), "{fired:?}");
+    }
+
+    #[test]
+    fn r1_leaves_unwrap_or_else_alone() {
+        let fired = rules_fired(&[(
+            "rust/src/scheduler/mod.rs",
+            "fn f(m: &std::sync::Mutex<u32>) -> u32 { \
+             *m.lock().unwrap_or_else(|p| p.into_inner()) }",
+        )]);
+        assert!(fired.is_empty(), "{fired:?}");
+    }
+
+    // ---- R2 ----
+
+    #[test]
+    fn r2_fires_on_rc_field_behind_arc() {
+        let fired = rules_fired(&[(
+            "rust/src/anywhere.rs",
+            "use std::rc::Rc; use std::sync::Arc;\n\
+             struct Inner { p: Rc<u32> }\n\
+             struct Outer { inner: Inner }\n\
+             fn f(x: Arc<Outer>) { let _ = x; }",
+        )]);
+        assert_eq!(fired, vec!["send-hygiene"]);
+    }
+
+    #[test]
+    fn r2_fires_on_cell_in_channel_payload() {
+        let fired = rules_fired(&[(
+            "rust/src/anywhere.rs",
+            "enum Msg { Go(State) }\n\
+             struct State { c: std::cell::Cell<u64> }\n\
+             fn f(tx: std::sync::mpsc::Sender<Msg>) { let _ = tx; }",
+        )]);
+        assert_eq!(fired, vec!["send-hygiene"]);
+    }
+
+    #[test]
+    fn r2_unreachable_rc_is_fine() {
+        // Rc in a type never sent across a thread boundary: allowed —
+        // this is the kvcache Page today.
+        let fired = rules_fired(&[(
+            "rust/src/anywhere.rs",
+            "struct Page { s: std::cell::Cell<u64> }\n\
+             struct Sent { n: u64 }\n\
+             fn f(x: std::sync::Arc<Sent>) { let _ = x; }",
+        )]);
+        assert!(fired.is_empty(), "{fired:?}");
+    }
+
+    #[test]
+    fn r2_annotated_does_not_fire() {
+        let fired = rules_fired(&[(
+            "rust/src/anywhere.rs",
+            "struct Inner { p: std::rc::Rc<u32> } // hass-lint: allow(send-hygiene) — audited single-thread\n\
+             fn f(x: std::sync::Arc<Inner>) { let _ = x; }",
+        )]);
+        assert!(fired.is_empty(), "{fired:?}");
+    }
+
+    #[test]
+    fn r2_fires_on_rc_in_spawn_closure() {
+        let fired = rules_fired(&[(
+            "rust/src/anywhere.rs",
+            "fn f() { let r = std::rc::Rc::new(1u32); \
+             std::thread::spawn(move || { let _ = Rc::strong_count(&r); }); }",
+        )]);
+        assert_eq!(fired, vec!["send-hygiene"]);
+    }
+
+    // ---- R3 ----
+
+    #[test]
+    fn r3_fires_on_marked_fn_without_bump() {
+        let fired = rules_fired(&[(
+            "rust/src/kvcache/mod.rs",
+            "struct KvCache { n: usize }\n\
+             impl KvCache {\n\
+             /// #[hass::mutates_storage]\n\
+             pub fn touch(&mut self) { self.n += 1; }\n\
+             }",
+        )]);
+        assert_eq!(fired, vec!["stamp-discipline"]);
+    }
+
+    #[test]
+    fn r3_fires_on_unmarked_writer() {
+        let fired = rules_fired(&[(
+            "rust/src/kvcache/mod.rs",
+            "struct KvCache { n: usize }\n\
+             impl KvCache {\n\
+             fn page_mut(&mut self) -> &mut usize { &mut self.n }\n\
+             pub fn write(&mut self) { *self.page_mut() = 3; }\n\
+             }",
+        )]);
+        assert_eq!(fired, vec!["stamp-discipline"]);
+    }
+
+    #[test]
+    fn r3_marked_writer_with_bump_is_clean() {
+        let fired = rules_fired(&[(
+            "rust/src/kvcache/mod.rs",
+            "struct KvCache { n: usize }\n\
+             impl KvCache {\n\
+             fn page_mut(&mut self) -> &mut usize { &mut self.n }\n\
+             /// #[hass::mutates_storage]\n\
+             pub fn write(&mut self) { *self.page_mut() = 3; }\n\
+             }",
+        )]);
+        assert!(fired.is_empty(), "{fired:?}");
+    }
+
+    #[test]
+    fn r3_only_applies_to_kvcache() {
+        let fired = rules_fired(&[(
+            "rust/src/engine/sessions.rs",
+            "struct KvCache { n: usize }\n\
+             impl KvCache { fn page_mut(&mut self) {} pub fn w(&mut self) { self.page_mut(); } }",
+        )]);
+        assert!(fired.is_empty(), "{fired:?}");
+    }
+
+    // ---- R4 ----
+
+    #[test]
+    fn r4_fires_on_parsed_but_never_emitted_key() {
+        let fired = rules_fired(&[(
+            "rust/src/server/mod.rs",
+            "fn parse(j: &Json) { let _ = j.str_at(\"promt\"); }\n\
+             fn emit() -> Json { Json::obj(vec![(\"prompt\", Json::Bool(true))]) }",
+        )]);
+        assert_eq!(fired, vec!["wire-drift"]);
+    }
+
+    #[test]
+    fn r4_embedded_raw_string_counts_as_emit() {
+        let fired = rules_fired(&[(
+            "rust/src/server/mod.rs",
+            "fn stats(c: &mut Client) { c.send(r#\"{\"stats\":true}\"#); }\n\
+             fn parse(j: &Json) { let _ = j.get(\"stats\"); }",
+        )]);
+        assert!(fired.is_empty(), "{fired:?}");
+    }
+
+    #[test]
+    fn r4_format_escaped_key_counts_as_emit() {
+        let fired = rules_fired(&[(
+            "rust/src/server/mod.rs",
+            "fn cancel(id: u64) -> String { format!(\"{{\\\"cancel\\\":{id}}}\") }\n\
+             fn parse(j: &Json) { let _ = j.get(\"cancel\"); }",
+        )]);
+        assert!(fired.is_empty(), "{fired:?}");
+    }
+
+    #[test]
+    fn r4_ignores_non_wire_files() {
+        let fired = rules_fired(&[(
+            "rust/src/util/json.rs",
+            "fn f(j: &Json) { let _ = j.get(\"whatever\"); }",
+        )]);
+        assert!(fired.is_empty(), "{fired:?}");
+    }
+
+    // ---- R5 ----
+
+    #[test]
+    fn r5_fires_on_bare_spawn() {
+        let fired = rules_fired(&[(
+            "rust/src/server/mod.rs",
+            "fn f() { std::thread::spawn(move || { loop {} }); }",
+        )]);
+        assert_eq!(fired, vec!["panic-isolation"]);
+    }
+
+    #[test]
+    fn r5_catch_unwind_in_span_is_clean() {
+        let fired = rules_fired(&[(
+            "rust/src/scheduler/mod.rs",
+            "fn f() { std::thread::spawn(move || { \
+             let _ = std::panic::catch_unwind(|| work()); }); }\nfn work() {}",
+        )]);
+        assert!(fired.is_empty(), "{fired:?}");
+    }
+
+    #[test]
+    fn r5_annotated_does_not_fire() {
+        let fired = rules_fired(&[(
+            "rust/src/server/mod.rs",
+            "fn f() {\n\
+             // hass-lint: allow(panic-isolation) — joined immediately below\n\
+             std::thread::spawn(move || { loop {} });\n}",
+        )]);
+        assert!(fired.is_empty(), "{fired:?}");
+    }
+
+    // ---- R-unsafe ----
+
+    #[test]
+    fn unsafe_without_safety_comment_fires() {
+        let fired = rules_fired(&[(
+            "rust/src/runtime/tensor.rs",
+            "fn f(p: *const u8) -> u8 { unsafe { *p } }",
+        )]);
+        assert_eq!(fired, vec!["unsafe-comment"]);
+    }
+
+    #[test]
+    fn unsafe_with_safety_comment_is_clean() {
+        let fired = rules_fired(&[(
+            "rust/src/runtime/tensor.rs",
+            "fn f(p: *const u8) -> u8 {\n\
+             // SAFETY: caller guarantees p is valid for reads\n\
+             unsafe { *p }\n}",
+        )]);
+        assert!(fired.is_empty(), "{fired:?}");
+    }
+}

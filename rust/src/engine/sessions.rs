@@ -10,6 +10,7 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
+use crate::kvcache::audit;
 use crate::kvcache::{draft_page_size, FusedScratch, KvCache, MemberVis, PackMember, PackedLayout};
 use crate::runtime::{scalar_i32, Checkpoint, Runtime, TensorF, TensorI};
 use crate::spec::{DraftRows, VerifyRows};
@@ -429,6 +430,7 @@ pub fn fused_decode(
         }
         let dst = t.cache.committed;
         t.cache.write_rows_from(&new_k, &new_v, layout.base + off, dst, n_j)?;
+        audit::check_scatter(&mut t.cache, &new_k, &new_v, layout.base + off, dst, n_j);
         outs.push(DecodeOut {
             logits: TensorF::new(vec![n_j, vocab], lj)?,
             feats: TensorF::new(vec![n_j, d], fj)?,
@@ -502,7 +504,7 @@ impl DraftSession {
         if widths.is_empty() {
             widths.push(10);
         }
-        let block = *widths.last().expect("at least one draft width");
+        let block = widths.last().copied().unwrap_or(10);
         Ok(DraftSession {
             rt,
             weights,
@@ -834,6 +836,7 @@ pub fn fused_draft_decode(
             fj.extend_from_slice(g.row(off + i));
         }
         d.cache.write_rows_from(&new_k, &new_v, layout.base + off, r.write_start, n_j)?;
+        audit::check_scatter(&mut d.cache, &new_k, &new_v, layout.base + off, r.write_start, n_j);
         outs.push(DecodeOut {
             logits: TensorF::new(vec![n_j, vocab], lj)?,
             feats: TensorF::new(vec![n_j, gd], fj)?,

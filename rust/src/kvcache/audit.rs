@@ -1,0 +1,481 @@
+//! `HASS_CHECK=1` shadow sanitizer for the paged KV cache.
+//!
+//! The fused serving path rests on invariants the type system cannot
+//! express: `(id, stamp)` names page *content* (never aliases two
+//! different byte images), the dedup registry only ever returns
+//! byte-identical pages, the contiguous images ([`CacheImage`] /
+//! [`FusedScratch`]) stay bit-exact mirrors of the paged storage they
+//! were staged from, and composed visibility masks expose exactly the
+//! slots each member may see.  This module re-derives each of those
+//! from first principles after the fact and panics with a
+//! `hass-check[...]` tag on the first divergence.
+//!
+//! Auditing is **off** unless [`enabled`] returns true: debug builds
+//! with `HASS_CHECK=1` in the environment (the CI matrix runs one entry
+//! that way), or a thread-local force flag tests flip via
+//! [`force_enable_for_tests`].  Release builds compile the hooks down
+//! to a cold branch.
+//!
+//! The audits are deliberately O(everything-they-look-at) — full-image
+//! byte compares, per-slot mask recomputation.  That is the point: the
+//! production code is incremental (O(changed pages)), and the sanitizer
+//! is the non-incremental oracle that proves the increments added up.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::sync::OnceLock;
+
+use super::{bits_eq, CacheImage, FusedScratch, KvCache, MemberVis, Page, PackedLayout, PageRef};
+use crate::runtime::TensorF;
+
+thread_local! {
+    /// Per-thread force switch so one test can audit without leaking
+    /// the mode into tests sharing the process.
+    static FORCE: Cell<bool> = const { Cell::new(false) };
+
+    /// Every `(id, stamp)` observed by an audit, mapped to the content
+    /// hash it carried at first sight.  A second sighting with a
+    /// different hash means an in-place mutation skipped its stamp bump.
+    static SEEN: RefCell<HashMap<(u64, u64), u64>> = RefCell::new(HashMap::new());
+}
+
+/// Cap on the `(id, stamp)` sighting map; stamps are never reused, so
+/// dropping history can miss an alias but can never fabricate one.
+const SEEN_CAP: usize = 65_536;
+
+/// Whether shadow audits run on this thread.
+pub fn enabled() -> bool {
+    if FORCE.with(|f| f.get()) {
+        return true;
+    }
+    if !cfg!(debug_assertions) {
+        return false;
+    }
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| matches!(std::env::var("HASS_CHECK").as_deref(), Ok("1")))
+}
+
+/// Force-enable audits on the current thread (tests; the standard
+/// harness runs each test on its own thread, so the flag cannot leak).
+pub fn force_enable_for_tests(on: bool) {
+    FORCE.with(|f| f.set(on));
+}
+
+/// Content hash of a materialized page — must equal [`super::PageSrc::hash`]
+/// over the same bytes (a full page is its own source view: every slot
+/// valid, padding already zeroed), so registry bucket keys can be
+/// re-verified against live pages.
+fn page_hash(p: &Page) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    eat(p.layers as u64);
+    eat(p.page_size as u64);
+    let denom = p.layers * p.page_size;
+    let rs = if denom == 0 { 0 } else { p.k.len() / denom };
+    eat(rs as u64);
+    for buf in [&p.k, &p.v] {
+        for &f in buf.iter() {
+            eat(f.to_bits() as u64);
+        }
+    }
+    h
+}
+
+/// Record sightings of the given block table and panic if any
+/// `(id, stamp)` key has been seen with different content — the
+/// stamp-discipline invariant, checked on bytes instead of conventions.
+pub(super) fn note_pages(pages: &[Option<PageRef>]) {
+    SEEN.with(|s| {
+        let mut seen = s.borrow_mut();
+        if seen.len() > SEEN_CAP {
+            seen.clear();
+        }
+        for p in pages.iter().flatten() {
+            note_one(&mut seen, p);
+        }
+    });
+}
+
+fn note_one(seen: &mut HashMap<(u64, u64), u64>, p: &Page) {
+    let h = page_hash(p);
+    let key = (p.id, p.stamp.get());
+    match seen.get(&key) {
+        Some(&prev) if prev != h => panic!(
+            "hass-check[stamp]: page (id={}, stamp={}) observed with two different \
+             contents — a write skipped its stamp bump",
+            key.0, key.1
+        ),
+        Some(_) => {}
+        None => {
+            seen.insert(key, h);
+        }
+    }
+}
+
+/// Re-verify the dedup registry: every live entry must still hash to
+/// the bucket it was registered under.  The COW gate guarantees this
+/// (a page with outstanding weak refs is cloned, never mutated in
+/// place); a violation means a write path bypassed [`KvCache::page_mut`].
+pub(super) fn check_registry() {
+    super::PAGE_DEDUP.with(|reg| {
+        let reg = reg.borrow();
+        for (&bucket_hash, bucket) in reg.buckets.iter() {
+            for w in bucket {
+                let Some(p) = w.upgrade() else { continue };
+                let h = page_hash(&p);
+                if h != bucket_hash {
+                    panic!(
+                        "hass-check[registry]: page id={} registered under hash \
+                         {bucket_hash:#018x} now hashes {h:#018x} — mutated in place \
+                         while registered",
+                        p.id
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Full paged-vs-contiguous equality for a solo cache right after
+/// [`KvCache::sync_image`] refreshed it: every staged key matches the
+/// live block table, every backed region is bit-identical to its page,
+/// every unbacked region is bit-zero.  Also records stamp sightings.
+pub(super) fn check_image(
+    pages: &[Option<PageRef>],
+    image: &CacheImage,
+    layers: usize,
+    slots: usize,
+    ps: usize,
+    rs: usize,
+) {
+    note_pages(pages);
+    for (pi, slot) in pages.iter().enumerate() {
+        let key = slot.as_ref().map(|p| (p.id, p.stamp.get()));
+        if image.staged[pi] != key {
+            panic!(
+                "hass-check[image]: page {pi} staged as {:?} but block table holds {key:?} \
+                 — stale staging key after refresh",
+                image.staged[pi]
+            );
+        }
+        let p0 = pi * ps;
+        let valid = ps.min(slots - p0);
+        for l in 0..layers {
+            let io = l * slots * rs + p0 * rs;
+            match slot {
+                Some(p) => {
+                    let po = l * ps * rs;
+                    if !bits_eq(&image.k[io..io + valid * rs], &p.k[po..po + valid * rs])
+                        || !bits_eq(&image.v[io..io + valid * rs], &p.v[po..po + valid * rs])
+                    {
+                        panic!(
+                            "hass-check[image]: page {pi} layer {l} diverged between paged \
+                             storage and the contiguous image"
+                        );
+                    }
+                }
+                None => {
+                    let zero = |b: &[f32]| b.iter().all(|f| f.to_bits() == 0);
+                    if !zero(&image.k[io..io + valid * rs]) || !zero(&image.v[io..io + valid * rs])
+                    {
+                        panic!(
+                            "hass-check[image]: unbacked page {pi} layer {l} holds non-zero \
+                             image bytes"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Verify a [`FusedScratch::pack`]: rebuild the fused-slot -> page
+/// assignment independently from the layout and compare the staged
+/// keys and the staged bytes against the live pages.
+pub(super) fn check_pack(scr: &FusedScratch, layout: &PackedLayout, members: &[Vec<PageRef>]) {
+    let ps = layout.page_size;
+    let n_fused = if ps == 0 { 0 } else { layout.base / ps };
+    let mut by_fused: Vec<Option<&PageRef>> = vec![None; n_fused];
+    for (j, pages) in members.iter().enumerate() {
+        for (p, pg) in pages.iter().enumerate() {
+            let f = layout.prefix_pages[j][p];
+            by_fused[f] = Some(pg);
+        }
+    }
+    SEEN.with(|s| {
+        let mut seen = s.borrow_mut();
+        for pg in by_fused.iter().flatten() {
+            note_one(&mut seen, pg);
+        }
+    });
+    for (f, slot) in by_fused.iter().enumerate() {
+        let Some(pg) = slot else {
+            panic!("hass-check[pack]: fused page {f} has no backing member page");
+        };
+        let key = Some((pg.id, pg.stamp.get()));
+        if scr.staged[f] != key {
+            panic!(
+                "hass-check[pack]: fused page {f} staged as {:?} but members hold {key:?}",
+                scr.staged[f]
+            );
+        }
+        let p0 = f * ps;
+        for l in 0..scr.layers {
+            let io = l * scr.slots * scr.rs + p0 * scr.rs;
+            let po = l * ps * scr.rs;
+            let n = ps * scr.rs;
+            if !bits_eq(&scr.k[io..io + n], &pg.k[po..po + n])
+                || !bits_eq(&scr.v[io..io + n], &pg.v[po..po + n])
+            {
+                panic!(
+                    "hass-check[pack]: fused page {f} layer {l} diverged between the \
+                     scratch image and page id={}",
+                    pg.id
+                );
+            }
+        }
+    }
+}
+
+/// Slot-set a row of [`PackedLayout::mask`] may legally see: the valid
+/// slots of its member's page segments plus the permitted in-block
+/// ancestors plus nothing else.  Recomputed slot-by-slot (the
+/// production composer is row-major and additive; this one asks, per
+/// slot, "who is allowed to see you?").
+pub(super) fn check_mask(
+    layout: &PackedLayout,
+    width: usize,
+    ancs: &[Option<&[Vec<bool>]>],
+    data: &[i32],
+) {
+    for r in 0..width {
+        let member = member_of(layout, r);
+        for s in 0..layout.slots {
+            let want = match member {
+                None => false,
+                Some((j, i)) => {
+                    if in_member_segments(layout, j, s, layout.prefix_len[j]) {
+                        true
+                    } else {
+                        let block0 = layout.base + layout.row_off[j];
+                        if s >= block0 && s < block0 + layout.rows[j] {
+                            let b = s - block0;
+                            match ancs.get(j).copied().flatten() {
+                                Some(anc) => anc[i][b],
+                                None => b <= i,
+                            }
+                        } else {
+                            false
+                        }
+                    }
+                }
+            };
+            let got = data[r * layout.slots + s] != 0;
+            if got != want {
+                panic!(
+                    "hass-check[mask]: row {r} slot {s}: composed {got}, audit derives {want}"
+                );
+            }
+        }
+    }
+}
+
+/// Same per-slot recomputation for [`PackedLayout::mask_sparse`]: a row
+/// sees its member's committed prefix (through the page segments), the
+/// slots it explicitly listed, and its own block slot — nothing else.
+pub(super) fn check_mask_sparse(
+    layout: &PackedLayout,
+    width: usize,
+    vis: &[MemberVis],
+    data: &[i32],
+) {
+    for r in 0..width {
+        let member = member_of(layout, r);
+        for s in 0..layout.slots {
+            let want = match member {
+                None => false,
+                Some((j, i)) => {
+                    let block0 = layout.base + layout.row_off[j];
+                    let mut ok = in_member_segments(layout, j, s, vis[j].committed);
+                    ok = ok || s == block0 + i;
+                    for &e in &vis[j].extra[i] {
+                        let mapped = if e < layout.prefix_len[j] {
+                            let f = layout.prefix_pages[j][e / layout.page_size];
+                            f * layout.page_size + e % layout.page_size
+                        } else {
+                            block0 + (e - layout.prefix_len[j])
+                        };
+                        ok = ok || s == mapped;
+                    }
+                    ok
+                }
+            };
+            let got = data[r * layout.slots + s] != 0;
+            if got != want {
+                panic!(
+                    "hass-check[mask-sparse]: row {r} slot {s}: composed {got}, audit \
+                     derives {want}"
+                );
+            }
+        }
+    }
+}
+
+/// Which member owns fused block row `r`, as `(member, member-local row)`.
+fn member_of(layout: &PackedLayout, r: usize) -> Option<(usize, usize)> {
+    for j in 0..layout.rows.len() {
+        if r >= layout.row_off[j] && r < layout.row_off[j] + layout.rows[j] {
+            return Some((j, r - layout.row_off[j]));
+        }
+    }
+    None
+}
+
+/// Is fused slot `s` inside member `j`'s page segments, within the
+/// first `limit` member-local slots (prefix length or committed mark)?
+fn in_member_segments(layout: &PackedLayout, j: usize, s: usize, limit: usize) -> bool {
+    for (p, &f) in layout.prefix_pages[j].iter().enumerate() {
+        let lo = p * layout.page_size;
+        if lo >= limit {
+            break;
+        }
+        let valid = layout.page_size.min(limit - lo);
+        let s0 = f * layout.page_size;
+        if s >= s0 && s < s0 + valid {
+            return true;
+        }
+    }
+    false
+}
+
+/// Verify a scatter landed: rows `[src, src+n)` of the graph-output
+/// tensors must now read back bit-identically at `[dst, dst+n)` through
+/// the cache's contiguous image (which itself gets audited against the
+/// paged storage on the way).  Called by the fused verify/draft paths
+/// after [`KvCache::write_rows_from`].
+pub fn check_scatter(
+    cache: &mut KvCache,
+    k: &TensorF,
+    v: &TensorF,
+    src: usize,
+    dst: usize,
+    n: usize,
+) {
+    if !enabled() {
+        return;
+    }
+    let rs = cache.row_size();
+    let (layers, slots) = (cache.layers, cache.slots);
+    let (ik, iv) = cache.sync_image();
+    for l in 0..layers {
+        for r in 0..n {
+            let so = l * slots * rs + (src + r) * rs;
+            let d = l * slots * rs + (dst + r) * rs;
+            if !bits_eq(&ik[d..d + rs], &k.data[so..so + rs])
+                || !bits_eq(&iv[d..d + rs], &v.data[so..so + rs])
+            {
+                panic!(
+                    "hass-check[scatter]: layer {l} row {r} (src {src} -> dst {dst}) \
+                     diverged from the graph output"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::PackMember;
+    use super::*;
+
+    fn filled(layers: usize, slots: usize, rs: usize, seed: f32) -> (TensorF, TensorF) {
+        let n = layers * slots * rs;
+        let k = TensorF {
+            dims: vec![layers, slots, rs, 1],
+            data: (0..n).map(|i| i as f32 + seed).collect(),
+        };
+        let v = TensorF {
+            dims: vec![layers, slots, rs, 1],
+            data: (0..n).map(|i| -(i as f32 + seed)).collect(),
+        };
+        (k, v)
+    }
+
+    #[test]
+    fn happy_path_is_silent() {
+        force_enable_for_tests(true);
+        let mut c = KvCache::with_page_size(2, 16, 2, 2, 4);
+        let (k, v) = filled(2, 16, 4, 1.0);
+        c.absorb(k.clone(), v.clone(), 7).unwrap();
+        c.committed = 7;
+        c.write_rows_from(&k, &v, 7, 7, 4).unwrap();
+        let _ = c.sync_image();
+        c.compact_accepted(&[1, 3]).unwrap();
+        let _ = c.sync_image();
+        let mut scr = FusedScratch::new();
+        let pages = c.committed_pages();
+        let ids: Vec<u64> = pages.iter().map(|p| p.id()).collect();
+        let m = PackMember { page_ids: ids, prefix_len: c.committed, rows: 2 };
+        let layout = PackedLayout::plan(&[m], 16, 4, 4).unwrap();
+        scr.pack(&layout, &[pages], 2, 4).unwrap();
+        let mask = layout.mask(4, &[None]).unwrap();
+        assert_eq!(mask.dims, vec![4, 16]);
+        force_enable_for_tests(false);
+    }
+
+    #[test]
+    #[should_panic(expected = "hass-check[stamp]")]
+    fn stamp_alias_is_caught() {
+        let mk = |fill: f32| {
+            std::rc::Rc::new(Page {
+                id: 7,
+                stamp: Cell::new(9),
+                layers: 1,
+                page_size: 2,
+                k: vec![fill; 4],
+                v: vec![fill; 4],
+            })
+        };
+        note_pages(&[Some(mk(1.0))]);
+        note_pages(&[Some(mk(2.0))]); // same (id, stamp), different bytes
+    }
+
+    #[test]
+    #[should_panic(expected = "hass-check[image]")]
+    fn image_corruption_is_caught() {
+        let mut c = KvCache::with_page_size(1, 8, 1, 2, 4);
+        let (k, v) = filled(1, 8, 2, 3.0);
+        c.absorb(k, v, 8).unwrap();
+        let _ = c.sync_image();
+        if let Some(img) = c.image.as_mut() {
+            img.k[3] += 0.5; // silent bit-flip in the staged image
+        }
+        check_image(&c.pages, c.image.as_ref().unwrap(), 1, 8, 4, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "hass-check[mask]")]
+    fn mask_overexposure_is_caught() {
+        let m = PackMember { page_ids: vec![11], prefix_len: 3, rows: 2 };
+        let layout = PackedLayout::plan(&[m], 12, 4, 4).unwrap();
+        let mut mask = layout.mask(4, &[None]).unwrap();
+        // padding slot 3 of the tail page must be visible to no one
+        mask.data[3] = 1;
+        check_mask(&layout, 4, &[None], &mask.data);
+    }
+
+    #[test]
+    fn registry_check_is_silent_after_absorb() {
+        force_enable_for_tests(true);
+        let mut a = KvCache::with_page_size(1, 8, 1, 2, 4);
+        let mut b = KvCache::with_page_size(1, 8, 1, 2, 4);
+        let (k, v) = filled(1, 8, 2, 5.0);
+        a.absorb(k.clone(), v.clone(), 8).unwrap();
+        b.absorb(k, v, 8).unwrap(); // dedup hit: same prompt pages
+        check_registry();
+        force_enable_for_tests(false);
+    }
+}

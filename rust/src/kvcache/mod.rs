@@ -62,6 +62,19 @@
 //! (positions feed only the positional embedding; prefix KV carries its
 //! positions baked in), so relocating a page to any slot offset changes
 //! nothing a visible row can observe.
+//!
+//! ## Shadow sanitizer (`HASS_CHECK=1`)
+//!
+//! Debug builds with `HASS_CHECK=1` in the environment (or tests that
+//! call [`audit::force_enable_for_tests`]) re-verify the load-bearing
+//! invariants after the fact — see [`audit`]: dedup-registry entries
+//! still hash to their bucket (COW never mutates a registered page in
+//! place), `(id, stamp)` never names two different byte images, the
+//! solo [`KvCache::sync_image`] image and the fused [`FusedScratch`]
+//! image stay bit-exact mirrors of the paged storage they were staged
+//! from, fused scatters land exactly where the layout says, and
+//! composed visibility masks expose exactly the independently derived
+//! slot set.  A divergence panics with a `hass-check[...]` tag.
 
 use std::cell::{Cell, RefCell};
 use std::collections::{HashMap, HashSet};
@@ -72,6 +85,8 @@ use std::sync::OnceLock;
 use anyhow::{bail, Result};
 
 use crate::runtime::{TensorF, TensorI};
+
+pub mod audit;
 
 /// Default page size in slots; `HASS_TEST_PAGE_SIZE` overrides it (the CI
 /// matrix runs the suite at an odd size so page-boundary edge cases are
@@ -398,6 +413,7 @@ impl KvCache {
     /// exact either way.
     fn page_mut(&mut self, pi: usize) -> &mut Page {
         self.ensure_page(pi);
+        // hass-lint: allow(no-unwrap) — slot was materialized by ensure_page one line up
         let slot = self.pages[pi].as_mut().expect("page just ensured");
         if Rc::strong_count(slot) > 1 || Rc::weak_count(slot) > 0 {
             *slot = Rc::new(Page {
@@ -411,6 +427,7 @@ impl KvCache {
         } else {
             slot.stamp.set(next_stamp());
         }
+        // hass-lint: allow(no-unwrap) — the branch above just cloned or verified sole ownership
         Rc::get_mut(slot).expect("uniquely owned page after COW")
     }
 
@@ -423,6 +440,7 @@ impl KvCache {
         (0..n)
             .map(|pi| {
                 self.ensure_page(pi);
+                // hass-lint: allow(no-unwrap) — slot was materialized by ensure_page one line up
                 self.pages[pi].clone().expect("page just ensured")
             })
             .collect()
@@ -444,6 +462,7 @@ impl KvCache {
         (0..n)
             .map(|pi| {
                 self.ensure_page(pi);
+                // hass-lint: allow(no-unwrap) — slot was materialized by ensure_page one line up
                 self.pages[pi].as_ref().expect("page just ensured").id()
             })
             .collect()
@@ -462,6 +481,9 @@ impl KvCache {
     /// share physical pages until they diverge; pages beyond the prefix
     /// are dropped (their slots are masked until rewritten), keeping the
     /// per-admission cost O(prompt pages), not O(cache).
+    ///
+    /// `#[hass::mutates_storage]` — rebuilds prefix pages through the
+    /// dedup registry (fresh pages carry fresh `(id, stamp)` keys).
     pub fn absorb(&mut self, k: TensorF, v: TensorF, prefix: usize) -> Result<()> {
         let n = self.layers * self.slots * self.row_size();
         if k.data.len() != n || v.data.len() != n {
@@ -489,6 +511,10 @@ impl KvCache {
                 valid: ps.min(slots - p0),
             };
             self.pages[pi] = Some(dedup_page(&src));
+        }
+        if audit::enabled() {
+            audit::check_registry();
+            audit::note_pages(&self.pages);
         }
         Ok(())
     }
@@ -532,6 +558,9 @@ impl KvCache {
                 }
             }
             image.staged[pi] = key;
+        }
+        if audit::enabled() {
+            audit::check_image(&self.pages, image, layers, slots, ps, rs);
         }
         (&image.k, &image.v)
     }
@@ -583,6 +612,9 @@ impl KvCache {
     /// rows move to `committed .. committed+len`, then commit advances.
     /// Only the page(s) under the block region are touched (tail pages) —
     /// the committed prefix pages are never written.
+    ///
+    /// `#[hass::mutates_storage]` — scatters rows through the COW gate
+    /// (stamp bump or fresh page per touched tail page).
     pub fn compact_accepted(&mut self, accepted_rows: &[usize]) -> Result<()> {
         let base = self.committed;
         for w in accepted_rows.windows(2) {
@@ -613,6 +645,7 @@ impl KvCache {
             let so = (src % ps) * rs;
             self.ensure_page(spi);
             {
+                // hass-lint: allow(no-unwrap) — slot was materialized by ensure_page one line up
                 let p = self.pages[spi].as_ref().expect("page just ensured");
                 for l in 0..layers {
                     let po = l * ps * rs + so;
@@ -629,6 +662,9 @@ impl KvCache {
             }
         }
         self.committed += accepted_rows.len();
+        if audit::enabled() {
+            audit::note_pages(&self.pages);
+        }
         Ok(())
     }
 
@@ -646,6 +682,8 @@ impl KvCache {
     /// two caches may use different page sizes); writes go through the
     /// COW gate.  Test-only since fused packing moved to whole-page
     /// staging ([`FusedScratch::pack`]).
+    ///
+    /// `#[hass::mutates_storage]` — slot-granular writes through the COW gate.
     #[cfg(test)]
     pub fn copy_slots_from(
         &mut self,
@@ -702,6 +740,9 @@ impl KvCache {
     /// tensors into this cache — the scatter half of a decode call: the
     /// rows the graph wrote at `src` land at `dst`, exactly where a solo
     /// decode would have written them.  Page-chunked; COW per page.
+    ///
+    /// `#[hass::mutates_storage]` — page-chunked writes through the COW
+    /// gate; every touched page gets a stamp bump or a fresh id.
     pub fn write_rows_from(
         &mut self,
         k: &TensorF,
@@ -736,6 +777,9 @@ impl KvCache {
                 page.v[po..po + take * rs].copy_from_slice(&v.data[to..to + take * rs]);
             }
             s += take;
+        }
+        if audit::enabled() {
+            audit::note_pages(&self.pages);
         }
         Ok(())
     }
@@ -954,6 +998,9 @@ impl PackedLayout {
                 }
             }
         }
+        if audit::enabled() {
+            audit::check_mask(self, width, ancs, &data);
+        }
         Ok(TensorI { dims: vec![width, self.slots], data })
     }
 
@@ -1016,6 +1063,9 @@ impl PackedLayout {
                 }
                 data[off + block0 + i] = 1; // own slot
             }
+        }
+        if audit::enabled() {
+            audit::check_mask_sparse(self, width, vis, &data);
         }
         Ok(TensorI { dims: vec![width, self.slots], data })
     }
@@ -1170,7 +1220,16 @@ impl FusedScratch {
         self.pages_reused += stats.pages_reused as u64;
         self.packs += 1;
         self.shared_pages = stats.shared_pages as u64;
+        if audit::enabled() {
+            audit::check_pack(self, layout, members);
+        }
         Ok(stats)
+    }
+}
+
+impl Default for FusedScratch {
+    fn default() -> FusedScratch {
+        FusedScratch::new()
     }
 }
 

@@ -23,8 +23,7 @@
     clippy::type_complexity,
     clippy::collapsible_if,
     clippy::collapsible_else_if,
-    clippy::comparison_chain,
-    clippy::new_without_default
+    clippy::comparison_chain
 )]
 
 pub mod bench;

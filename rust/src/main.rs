@@ -12,6 +12,8 @@
 //!                                            one-shot request to a server
 //!                                            (--stats fetches pool counters,
 //!                                             --stream prints per-cycle deltas)
+//!   analyze    [paths...]                    run the in-repo lint (hass-analyze)
+//!                                            over rust/src (default) or paths
 //!   goldens                                  verify vs python goldens
 //!   calibrate                                measure the device cost model
 //!   stats      --method hass                 per-graph call-time breakdown
@@ -175,6 +177,18 @@ fn run(args: &Args) -> Result<()> {
             println!("{resp}");
             Ok(())
         }
+        "analyze" => {
+            let paths: Vec<String> = if args.positionals.is_empty() {
+                vec!["rust/src".to_string()]
+            } else {
+                args.positionals.clone()
+            };
+            let code = hass_analyze::run_cli(&paths);
+            if code != 0 {
+                bail!("hass-analyze found violations (exit {code})");
+            }
+            Ok(())
+        }
         "goldens" => {
             let rt = Rc::new(Runtime::new(&hass::artifact_dir())?);
             let goldens = rt.meta().goldens.clone();
@@ -234,7 +248,9 @@ fn run(args: &Args) -> Result<()> {
             Ok(())
         }
         "" | "help" => {
-            println!("usage: hass <generate|compare|table N|figure N|serve|client|goldens|calibrate|stats> [flags]");
+            println!(
+                "usage: hass <generate|compare|table N|figure N|serve|client|analyze|goldens|calibrate|stats> [flags]"
+            );
             println!("see rust/src/main.rs header for flags; artifacts from `make artifacts`.");
             Ok(())
         }

@@ -75,6 +75,10 @@ impl TensorI {
 
     pub fn to_literal(&self) -> Result<Literal> {
         // single-copy construction, same rationale as TensorF::to_literal
+        debug_assert_eq!(self.data.len(), numel(&self.dims), "dims/data desync");
+        // SAFETY: an initialized `[i32]` viewed as bytes — 4 bytes per
+        // element, no padding or invalid bit patterns, the length covers
+        // exactly the slice, and u8's alignment of 1 is always satisfied.
         let bytes = unsafe {
             std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
         };
@@ -92,6 +96,10 @@ pub fn scalar_i32(v: i32) -> Literal {
 
 /// Build an f32 literal directly from a host slice (one copy).
 pub fn f32_literal(dims: &[usize], data: &[f32]) -> Result<Literal> {
+    debug_assert_eq!(data.len(), numel(dims), "dims/data desync");
+    // SAFETY: an initialized `[f32]` viewed as bytes — 4 bytes per
+    // element, no padding or invalid bit patterns, the length covers
+    // exactly the slice, and u8's alignment of 1 is always satisfied.
     let bytes = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
     };

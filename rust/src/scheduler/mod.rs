@@ -75,6 +75,14 @@
 //! marker finishes its live sessions, then exits.  `HASS_TEST_JOB_DELAY_MS`
 //! injects an artificial delay at job admission *and* after every step
 //! (test-only throttle for pool scheduling tests and queueing demos).
+//!
+//! Under the `HASS_CHECK=1` shadow sanitizer every mutex acquisition in
+//! this module is traced through [`crate::util::lockorder`]; an order
+//! inversion across the worker-queue / shared-channel / stats / cancels
+//! classes panics immediately instead of deadlocking some future run.
+//! Worker threads are panic-isolated: the spawn wraps the worker loop in
+//! `catch_unwind`, so a bug in one engine thread surfaces as a logged
+//! death, not a silently stranded queue.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::PathBuf;
@@ -102,6 +110,7 @@ use crate::spec::{
     VerifyOut, VerifyRows,
 };
 use crate::tokenizer;
+use crate::util::lockorder;
 use crate::util::stats::Stopwatch;
 
 #[derive(Clone, Debug)]
@@ -368,12 +377,14 @@ impl WorkerQueue {
 
     /// Enqueue a job for this worker (load counts it until admission).
     fn push(&self, msg: Msg) {
+        let _t = lockorder::trace(lockorder::WORKER_QUEUE);
         self.q.lock().unwrap_or_else(|p| p.into_inner()).push_back(msg);
         self.load.fetch_add(1, Ordering::Relaxed);
         self.cv.notify_all();
     }
 
     fn pop(&self) -> Option<Msg> {
+        let _t = lockorder::trace(lockorder::WORKER_QUEUE);
         let m = self.q.lock().unwrap_or_else(|p| p.into_inner()).pop_front();
         if m.is_some() {
             self.load.fetch_sub(1, Ordering::Relaxed);
@@ -382,6 +393,7 @@ impl WorkerQueue {
     }
 
     fn is_empty(&self) -> bool {
+        let _t = lockorder::trace(lockorder::WORKER_QUEUE);
         self.q.lock().unwrap_or_else(|p| p.into_inner()).is_empty()
     }
 
@@ -389,6 +401,7 @@ impl WorkerQueue {
     /// under the same lock a `push` holds, so wakeups cannot be lost; the
     /// timeout is a safety net for shared-queue traffic.
     fn park(&self) {
+        let _t = lockorder::trace(lockorder::WORKER_QUEUE);
         let g = self.q.lock().unwrap_or_else(|p| p.into_inner());
         if g.is_empty() {
             let _ = self
@@ -476,7 +489,19 @@ impl Scheduler {
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("engine-{w}"))
-                    .spawn(move || worker(ctx, dir, cfg, rx))
+                    // panic isolation: a worker that dies on an unexpected
+                    // panic (engine panics inside a cycle are already
+                    // caught per-call) must not take the process down or
+                    // vanish silently with its queue
+                    .spawn(move || {
+                        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            worker(ctx, dir, cfg, rx)
+                        }));
+                        if run.is_err() {
+                            eprintln!("[scheduler] engine worker {w} died on an unexpected panic");
+                        }
+                    })
+                    // hass-lint: allow(no-unwrap) — pool startup; OS thread spawn has no fallback
                     .expect("spawn engine worker"),
             );
         }
@@ -575,11 +600,13 @@ impl Scheduler {
     /// reports a "cancelled" error result through its own event channel;
     /// cancelling an unknown or already-finished id is a no-op.
     pub fn cancel(&self, id: u64) {
+        let _t = lockorder::trace(lockorder::CANCELS);
         self.cancels.lock().unwrap_or_else(|p| p.into_inner()).insert(id);
     }
 
     /// Snapshot per-worker counters + queue depth.
     pub fn stats(&self) -> PoolStats {
+        let _t = lockorder::trace(lockorder::STATS);
         PoolStats {
             workers: self.stats.lock().unwrap_or_else(|p| p.into_inner()).clone(),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
@@ -630,60 +657,70 @@ struct WorkerCtx {
 }
 
 impl WorkerCtx {
-    fn add_idle(&self, idle_s: f64) {
+    /// Run `f` on this worker's stats row — the single traced
+    /// acquisition point for the pool stats lock, so every counter
+    /// update participates in lock-order auditing.
+    fn with_stats<R>(&self, f: impl FnOnce(&mut WorkerStats) -> R) -> R {
+        let _t = lockorder::trace(lockorder::STATS);
         let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
-        stats[self.id].idle_s += idle_s;
+        f(&mut stats[self.id])
+    }
+
+    fn add_idle(&self, idle_s: f64) {
+        self.with_stats(|s| s.idle_s += idle_s);
     }
 
     fn note_fused(&self, rows: usize) {
-        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
-        stats[self.id].fused_calls += 1;
-        stats[self.id].fused_rows += rows as u64;
+        self.with_stats(|s| {
+            s.fused_calls += 1;
+            s.fused_rows += rows as u64;
+        });
     }
 
     /// Record one fused pack's page traffic (copied/reused deltas).
     fn note_pack(&self, copied: u64, reused: u64) {
-        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
-        stats[self.id].pack_pages_copied += copied;
-        stats[self.id].pack_pages_reused += reused;
+        self.with_stats(|s| {
+            s.pack_pages_copied += copied;
+            s.pack_pages_reused += reused;
+        });
     }
 
     /// Update the shared-page gauge with a full cycle's total (summed
     /// over every fused pack the cycle ran, so multi-group cycles don't
     /// clobber one group's sharing with another's zero).
     fn note_shared(&self, shared: u64) {
-        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
-        stats[self.id].shared_pages = shared;
+        self.with_stats(|s| s.shared_pages = shared);
     }
 
     fn note_solo(&self) {
-        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
-        stats[self.id].solo_calls += 1;
+        self.with_stats(|s| s.solo_calls += 1);
     }
 
     /// Record one fused draft execution covering `rows` rows.
     fn note_draft_fused(&self, rows: usize) {
-        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
-        stats[self.id].draft_fused_calls += 1;
-        stats[self.id].draft_fused_rows += rows as u64;
+        self.with_stats(|s| {
+            s.draft_fused_calls += 1;
+            s.draft_fused_rows += rows as u64;
+        });
     }
 
     /// Record `calls` single-session draft executions (levels a session's
     /// own `plan` drove solo).
     fn note_draft_solo(&self, calls: u64) {
-        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
-        stats[self.id].draft_solo_calls += calls;
+        self.with_stats(|s| s.draft_solo_calls += calls);
     }
 
     /// Record one fused DRAFT pack's page traffic.
     fn note_draft_pack(&self, copied: u64, reused: u64) {
-        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
-        stats[self.id].draft_pack_pages_copied += copied;
-        stats[self.id].draft_pack_pages_reused += reused;
+        self.with_stats(|s| {
+            s.draft_pack_pages_copied += copied;
+            s.draft_pack_pages_reused += reused;
+        });
     }
 
     /// Consume a pending cancel marker for `id`.
     fn take_cancel(&self, id: u64) -> bool {
+        let _t = lockorder::trace(lockorder::CANCELS);
         self.cancels.lock().unwrap_or_else(|p| p.into_inner()).remove(&id)
     }
 
@@ -736,9 +773,17 @@ fn try_steal(rx: &Arc<Mutex<Receiver<Msg>>>) -> Polled {
         Err(TryRecvError::Disconnected) => Polled::Disconnected,
     };
     match rx.try_lock() {
-        Ok(guard) => recv(&guard),
+        Ok(guard) => {
+            // traced after the fact: a try-lock that would have inverted
+            // an order records the same edge without ever blocking
+            let _t = lockorder::trace(lockorder::SHARED_RX);
+            recv(&guard)
+        }
         Err(std::sync::TryLockError::WouldBlock) => Polled::Empty,
-        Err(std::sync::TryLockError::Poisoned(p)) => recv(&p.into_inner()),
+        Err(std::sync::TryLockError::Poisoned(p)) => {
+            let _t = lockorder::trace(lockorder::SHARED_RX);
+            recv(&p.into_inner())
+        }
     }
 }
 
@@ -1168,12 +1213,12 @@ fn run_draft_phase(ctx: &WorkerCtx, active: &mut [ActiveJob], scratches: &mut Ve
                 })
             })
             .collect();
-        let groups = if widths.is_empty() {
-            Vec::new()
-        } else {
-            let max_w = *widths.last().expect("non-empty widths");
-            let refs: Vec<Option<&FuseCand>> = cands.iter().map(|c| c.as_ref()).collect();
-            plan_fuse_groups_by(&refs, max_w, |r| pick_width(&widths, r).unwrap_or(max_w))
+        let groups = match widths.last().copied() {
+            None => Vec::new(),
+            Some(max_w) => {
+                let refs: Vec<Option<&FuseCand>> = cands.iter().map(|c| c.as_ref()).collect();
+                plan_fuse_groups_by(&refs, max_w, |r| pick_width(&widths, r).unwrap_or(max_w))
+            }
         };
         for (gi, g) in groups.iter().enumerate() {
             if g.len() < 2 {
@@ -1184,7 +1229,8 @@ fn run_draft_phase(ctx: &WorkerCtx, active: &mut [ActiveJob], scratches: &mut Ve
                 scratches.push(FusedScratch::new());
             }
             let scratch = &mut scratches[gi];
-            let total_rows: usize = g.iter().map(|&i| pend[i].as_ref().unwrap().len()).sum();
+            let total_rows: usize =
+                g.iter().map(|&i| pend[i].as_ref().map_or(0, |r| r.len())).sum();
             let pack_before = (scratch.pages_copied, scratch.pages_reused);
             let sw = Stopwatch::start();
             let outs = {
@@ -1276,7 +1322,13 @@ fn run_draft_phase(ctx: &WorkerCtx, active: &mut [ActiveJob], scratches: &mut Ve
             let mut tokens: Vec<i32> = Vec::new();
             let mut positions: Vec<usize> = Vec::new();
             for &i in g {
-                let rows = pend[i].as_ref().unwrap();
+                let Some(rows) = pend[i].as_ref() else {
+                    // unreachable (host groups are built from pending
+                    // members) — but a lost member must not kill the
+                    // worker; the scatter below skips it the same way
+                    eprintln!("[scheduler] worker {}: host draft member lost its rows", ctx.id);
+                    continue;
+                };
                 tokens.extend_from_slice(&rows.tokens);
                 positions.extend_from_slice(&rows.positions);
             }
@@ -1499,11 +1551,12 @@ fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob], scratches: &mut Vec<Fuse
     }
     // sessions with no executor handle verify solo
     for i in 0..n {
-        if matches!(kinds[i], Some(VerKind::Solo)) {
-            let rows = rows_of[i].take().unwrap();
-            solo_verify_absorb(ctx, &mut active[i], &rows);
-            ctx.sleep_throttle();
+        if !matches!(kinds[i], Some(VerKind::Solo)) {
+            continue;
         }
+        let Some(rows) = rows_of[i].take() else { continue };
+        solo_verify_absorb(ctx, &mut active[i], &rows);
+        ctx.sleep_throttle();
     }
 
     // ---- phase 3a: fused compiled groups ----
@@ -1511,7 +1564,7 @@ fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob], scratches: &mut Vec<Fuse
     for (gi, g) in groups.iter().enumerate() {
         if g.len() == 1 {
             let i = g[0];
-            let rows = rows_of[i].take().unwrap();
+            let Some(rows) = rows_of[i].take() else { continue };
             solo_verify_absorb(ctx, &mut active[i], &rows);
             ctx.sleep_throttle();
             continue;
@@ -1522,7 +1575,8 @@ fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob], scratches: &mut Vec<Fuse
             scratches.push(FusedScratch::new());
         }
         let scratch = &mut scratches[gi];
-        let total_rows: usize = g.iter().map(|&i| rows_of[i].as_ref().unwrap().len()).sum();
+        let total_rows: usize =
+            g.iter().map(|&i| rows_of[i].as_ref().map_or(0, |r| r.len())).sum();
         let pack_before = (scratch.pages_copied, scratch.pages_reused, scratch.packs);
         let sw = Stopwatch::start();
         let outs = {
@@ -1584,7 +1638,7 @@ fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob], scratches: &mut Vec<Fuse
                     ctx.id
                 );
                 for &i in g {
-                    let rows = rows_of[i].take().unwrap();
+                    let Some(rows) = rows_of[i].take() else { continue };
                     solo_verify_absorb(ctx, &mut active[i], &rows);
                     ctx.sleep_throttle();
                 }
@@ -1602,7 +1656,7 @@ fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob], scratches: &mut Vec<Fuse
     for (_, g) in &host_groups {
         if g.len() == 1 {
             let i = g[0];
-            let rows = rows_of[i].take().unwrap();
+            let Some(rows) = rows_of[i].take() else { continue };
             solo_verify_absorb(ctx, &mut active[i], &rows);
             ctx.sleep_throttle();
             continue;
@@ -1613,7 +1667,7 @@ fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob], scratches: &mut Vec<Fuse
             // probe went stale (cannot happen for stateless verifiers):
             // degrade to per-member solo verifies instead of stalling
             for &i in g {
-                let rows = rows_of[i].take().unwrap();
+                let Some(rows) = rows_of[i].take() else { continue };
                 solo_verify_absorb(ctx, &mut active[i], &rows);
                 ctx.sleep_throttle();
             }
@@ -1622,7 +1676,13 @@ fn run_cycle(ctx: &WorkerCtx, active: &mut [ActiveJob], scratches: &mut Vec<Fuse
         let mut tokens: Vec<i32> = Vec::new();
         let mut positions: Vec<usize> = Vec::new();
         for &i in g {
-            let rows = rows_of[i].as_ref().unwrap();
+            let Some(rows) = rows_of[i].as_ref() else {
+                // unreachable (host groups are built from planned members)
+                // — but a lost member must not kill the worker; the
+                // scatter below skips it the same way
+                eprintln!("[scheduler] worker {}: host verify member lost its rows", ctx.id);
+                continue;
+            };
             tokens.extend_from_slice(&rows.tokens);
             positions.extend_from_slice(&rows.positions);
         }
@@ -1981,6 +2041,30 @@ mod tests {
         assert_eq!(stats.jobs_ok(), 1);
         assert_eq!(stats.tokens(), 8);
         sched.shutdown();
+    }
+
+    /// Equivalence under the shadow sanitizer: with audits force-enabled
+    /// on the submitting thread (lock-order tracing through submit /
+    /// stats / cancel) the pool must behave identically and the audits
+    /// must stay silent.  The `HASS_CHECK=1` CI matrix entry additionally
+    /// enables the worker-side audits for the whole suite.
+    #[test]
+    fn audited_pool_is_equivalent_and_silent() {
+        crate::kvcache::audit::force_enable_for_tests(true);
+        let sched = Scheduler::start(bad_dir(), MethodCfg::default(), 8, 2, 2);
+        let rxs: Vec<_> =
+            (0..6u64).map(|i| sched.submit(mock_job(i, 6, false), true).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = recv_done(&rx);
+            assert_eq!(r.id, i as u64);
+            assert!(r.error.is_none(), "audited mock job failed: {:?}", r.error);
+            assert_eq!(r.tokens, 6);
+        }
+        sched.cancel(999); // unknown id: traced, then lazily cleared
+        let stats = sched.stats();
+        assert_eq!(stats.jobs_ok(), 6);
+        sched.shutdown();
+        crate::kvcache::audit::force_enable_for_tests(false);
     }
 
     /// THE continuous-batching acceptance test: one worker interleaving

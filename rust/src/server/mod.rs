@@ -239,9 +239,16 @@ pub fn serve(listener: TcpListener, scheduler: Arc<Scheduler>) -> Result<()> {
     for stream in listener.incoming() {
         let stream = stream?;
         let sched = scheduler.clone();
+        // panic isolation: a handler bug costs one connection, never the
+        // accept loop or the process
         std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, &sched) {
-                eprintln!("[server] connection error: {e:#}");
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                handle_conn(stream, &sched)
+            }));
+            match run {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => eprintln!("[server] connection error: {e:#}"),
+                Err(_) => eprintln!("[server] connection handler panicked"),
             }
         });
     }
@@ -266,11 +273,18 @@ fn handle_conn(stream: TcpStream, sched: &Arc<Scheduler>) -> Result<()> {
     let (rtx, rrx) = channel::<JobEvent>();
     let pump = {
         let w = writer.clone();
+        // panic isolation: a formatter/writer bug must not leave the
+        // connection with a silently dead pump and no diagnostic
         std::thread::spawn(move || {
-            for ev in rrx {
-                if write_line(&w, &format_event(&ev)).is_err() {
-                    return; // client gone; drain-by-drop
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                for ev in rrx {
+                    if write_line(&w, &format_event(&ev)).is_err() {
+                        return; // client gone; drain-by-drop
+                    }
                 }
+            }));
+            if run.is_err() {
+                eprintln!("[server] event pump panicked; dropping connection events");
             }
         })
     };

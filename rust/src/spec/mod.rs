@@ -82,6 +82,36 @@
 //! their shared [`Method::host_drafter`]), feed each session, and
 //! repeat until every tree is built — per-group draft calls per cycle
 //! drop from `N·depth` to `~depth`.
+//!
+//! ## Audited invariants (`HASS_CHECK=1` shadow sanitizer)
+//!
+//! The solo == fused guarantee rests on a handful of cross-layer
+//! invariants that no single module can see whole.  Debug builds with
+//! `HASS_CHECK=1` re-verify them at every call boundary
+//! (`kvcache::audit` + `util::lockorder`):
+//!
+//! * **page identity** — a live `(page id, stamp)` pair maps to exactly
+//!   one content hash pool-wide, and every bump of a page's bytes bumps
+//!   its stamp (the staleness signal `sync_image` keys on);
+//! * **image equality** — a synced cache image (the incremental
+//!   contiguous view) is byte-identical to materializing the page
+//!   table from scratch;
+//! * **pack equality** — every fused segment in a
+//!   [`crate::kvcache::FusedScratch`] matches its member page's bytes,
+//!   shared pages appearing once;
+//! * **mask soundness** — each packed block-diagonal / sparse
+//!   visibility mask equals an independent per-slot recomputation
+//!   (members never see each other's rows);
+//! * **scatter landing** — fused verify/draft outputs land on exactly
+//!   the rows the member planned (`engine::sessions` re-reads them
+//!   back);
+//! * **lock order** — scheduler locks follow one global class order
+//!   (queue < shared-rx < stats < cancels), checked per-acquisition.
+//!
+//! The static side of the same contract — no `unwrap` on the fused
+//! path, `Send`-hygiene, stamp-discipline markers, wire-key drift,
+//! panic isolation — is enforced offline by `rust/analyze`
+//! (`cargo run -p hass-analyze -- rust/src`, also `hass analyze`).
 
 pub mod eagle;
 pub mod lookup;

@@ -1,0 +1,181 @@
+//! Lock-order tracker for the `HASS_CHECK=1` shadow sanitizer.
+//!
+//! The scheduler holds a handful of mutexes (per-worker queues, the
+//! shared overflow channel, the stats vector, the cancel set).  None of
+//! them may ever be acquired in inconsistent order across threads, or a
+//! future refactor (the Arc page-pool migration in particular) can
+//! deadlock under load in ways no unit test reproduces.  When auditing
+//! is enabled ([`crate::kvcache::audit::enabled`]), every traced
+//! acquisition records a directed edge `held -> acquired` in a global
+//! graph; acquiring `A` while holding `B` after some thread ever
+//! acquired `B` while holding `A` panics with `hass-check[lock-order]`.
+//!
+//! Tracing is cooperative: call [`trace`] with the site's lock class
+//! just before (or just after, for try-locks) taking the real mutex and
+//! keep the returned token alive for the critical section.  When
+//! auditing is off the token is inert and the call is a branch + return.
+
+use std::cell::RefCell;
+use std::collections::HashSet;
+use std::sync::{Mutex, OnceLock};
+
+/// Lock classes (coarse, per-role: two queues of the same class are not
+/// distinguished — no current code path nests same-class locks, and the
+/// tracker flags such nesting as a violation so it stays that way).
+pub const WORKER_QUEUE: u16 = 1;
+pub const SHARED_RX: u16 = 2;
+pub const STATS: u16 = 3;
+pub const CANCELS: u16 = 4;
+
+fn class_name(c: u16) -> &'static str {
+    match c {
+        WORKER_QUEUE => "worker-queue",
+        SHARED_RX => "shared-rx",
+        STATS => "stats",
+        CANCELS => "cancels",
+        _ => "unknown",
+    }
+}
+
+/// The pure order graph — kept free of globals so the inversion logic is
+/// directly unit-testable.
+#[derive(Default)]
+pub struct LockGraph {
+    /// directed edges: held -> then-acquired
+    edges: HashSet<(u16, u16)>,
+}
+
+impl LockGraph {
+    pub fn new() -> LockGraph {
+        LockGraph { edges: HashSet::new() }
+    }
+
+    /// Record acquiring `class` while `held` are held.  Returns a
+    /// description of the violation, if this acquisition creates one.
+    pub fn acquire(&mut self, held: &[u16], class: u16) -> Option<String> {
+        for &h in held {
+            if h == class {
+                return Some(format!(
+                    "lock class `{}` acquired while already held (self-deadlock risk)",
+                    class_name(class)
+                ));
+            }
+            if self.edges.contains(&(class, h)) {
+                return Some(format!(
+                    "inversion: acquiring `{}` while holding `{}`, but the opposite \
+                     order `{}` -> `{}` was recorded earlier",
+                    class_name(class),
+                    class_name(h),
+                    class_name(class),
+                    class_name(h)
+                ));
+            }
+        }
+        for &h in held {
+            self.edges.insert((h, class));
+        }
+        None
+    }
+}
+
+fn graph() -> &'static Mutex<LockGraph> {
+    static G: OnceLock<Mutex<LockGraph>> = OnceLock::new();
+    G.get_or_init(|| Mutex::new(LockGraph::new()))
+}
+
+thread_local! {
+    static HELD: RefCell<Vec<u16>> = RefCell::new(Vec::new());
+}
+
+/// RAII hold token; dropping it releases the class from this thread's
+/// held set.  Inert (`live = false`) when auditing is disabled.
+pub struct Token {
+    class: u16,
+    live: bool,
+}
+
+pub fn trace(class: u16) -> Token {
+    if !crate::kvcache::audit::enabled() {
+        return Token { class, live: false };
+    }
+    let violation = HELD.with(|h| {
+        let held = h.borrow();
+        let mut g = graph().lock().unwrap_or_else(|p| p.into_inner());
+        g.acquire(&held, class)
+    });
+    if let Some(msg) = violation {
+        panic!("hass-check[lock-order]: {msg}");
+    }
+    HELD.with(|h| h.borrow_mut().push(class));
+    Token { class, live: true }
+}
+
+impl Drop for Token {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(p) = held.iter().rposition(|&c| c == self.class) {
+                held.remove(p);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consistent_order_is_clean() {
+        let mut g = LockGraph::new();
+        assert!(g.acquire(&[], WORKER_QUEUE).is_none());
+        assert!(g.acquire(&[WORKER_QUEUE], STATS).is_none());
+        assert!(g.acquire(&[], WORKER_QUEUE).is_none());
+        assert!(g.acquire(&[WORKER_QUEUE], STATS).is_none());
+    }
+
+    #[test]
+    fn inversion_is_detected() {
+        let mut g = LockGraph::new();
+        // thread 1: queue then stats
+        assert!(g.acquire(&[WORKER_QUEUE], STATS).is_none());
+        // thread 2: stats then queue — inversion
+        let v = g.acquire(&[STATS], WORKER_QUEUE);
+        assert!(v.is_some());
+        assert!(v.unwrap_or_default().contains("inversion"));
+    }
+
+    #[test]
+    fn transitive_edges_are_per_pair() {
+        let mut g = LockGraph::new();
+        assert!(g.acquire(&[WORKER_QUEUE], SHARED_RX).is_none());
+        assert!(g.acquire(&[SHARED_RX], STATS).is_none());
+        // direct opposite of a recorded edge still fires
+        assert!(g.acquire(&[STATS], SHARED_RX).is_some());
+    }
+
+    #[test]
+    fn reacquire_same_class_is_flagged() {
+        let mut g = LockGraph::new();
+        let v = g.acquire(&[CANCELS], CANCELS);
+        assert!(v.is_some());
+        assert!(v.unwrap_or_default().contains("already held"));
+    }
+
+    #[test]
+    fn inert_token_when_disabled() {
+        // auditing is off by default in tests (no force flag on this
+        // thread, no HASS_CHECK): trace must be a no-op that never
+        // touches the global graph
+        if crate::kvcache::audit::enabled() {
+            return; // HASS_CHECK=1 run: tokens are live by design
+        }
+        let t = trace(WORKER_QUEUE);
+        assert!(!t.live);
+        drop(t);
+        HELD.with(|h| assert!(h.borrow().is_empty()));
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod lockorder;
 pub mod prop;
 pub mod rng;
 pub mod stats;
