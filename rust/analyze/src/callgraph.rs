@@ -1,0 +1,253 @@
+//! Best-effort call graph over the [`ItemGraph`], plus the reachability
+//! and bottom-up summary helpers the interprocedural rules share.
+//!
+//! Call sites are the lexical patterns `name(` and `.name(`; a site is
+//! linked to every in-crate fn that plausibly resolves to it:
+//!
+//! * `.name(` method calls link to fns named `name` that sit inside an
+//!   `impl` (preferring them over free fns when both exist);
+//! * `Qual::name(` qualified calls link to fns whose impl target is
+//!   `Qual` when any exist, else to every fn named `name`;
+//! * bare `name(` calls prefer same-file fns, else every fn named
+//!   `name`.
+//!
+//! This over-approximates (no receiver types, no trait dispatch) and
+//! under-approximates (closures and fn-pointers passed by name are not
+//! edges).  Rules that rely on it say which direction they err.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use crate::lexer::Kind;
+use crate::resolve::{tx, ItemGraph};
+use crate::SourceFile;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CallSite {
+    /// Callee index into `ItemGraph::fns`.
+    pub callee: usize,
+    /// Token index of the callee name in the caller's file.
+    pub tok: usize,
+    pub line: usize,
+}
+
+pub struct CallGraph {
+    /// Outgoing call sites per fn (indexed like `ItemGraph::fns`).
+    pub calls: Vec<Vec<CallSite>>,
+}
+
+impl CallGraph {
+    pub fn build(files: &[SourceFile], items: &ItemGraph) -> CallGraph {
+        let mut calls: Vec<Vec<CallSite>> = vec![Vec::new(); items.fns.len()];
+        for (fi, f) in items.fns.iter().enumerate() {
+            let Some((open, close)) = f.body else { continue };
+            let t = &files[f.file].toks;
+            for i in (open + 1)..close {
+                if t[i].kind != Kind::Ident || tx(t, i + 1) != "(" {
+                    continue;
+                }
+                if tx(t, i.wrapping_sub(1)) == "fn" {
+                    continue; // nested fn definition header
+                }
+                let Some(cands) = items.by_name.get(&t[i].text) else { continue };
+                let resolved: Vec<usize> = if tx(t, i.wrapping_sub(1)) == "." {
+                    // method call: prefer impl fns
+                    let impls: Vec<usize> = cands
+                        .iter()
+                        .copied()
+                        .filter(|&c| items.fns[c].impl_target.is_some())
+                        .collect();
+                    if impls.is_empty() { cands.clone() } else { impls }
+                } else if tx(t, i.wrapping_sub(1)) == ":"
+                    && tx(t, i.wrapping_sub(2)) == ":"
+                    && t.get(i.wrapping_sub(3)).map(|k| k.kind == Kind::Ident).unwrap_or(false)
+                {
+                    // qualified call: prefer fns whose impl target matches
+                    let q = tx(t, i.wrapping_sub(3));
+                    let m: Vec<usize> = cands
+                        .iter()
+                        .copied()
+                        .filter(|&c| items.fns[c].impl_target.as_deref() == Some(q))
+                        .collect();
+                    if m.is_empty() { cands.clone() } else { m }
+                } else {
+                    // bare call: prefer same-file fns
+                    let same: Vec<usize> =
+                        cands.iter().copied().filter(|&c| items.fns[c].file == f.file).collect();
+                    if same.is_empty() { cands.clone() } else { same }
+                };
+                for callee in resolved {
+                    calls[fi].push(CallSite { callee, tok: i, line: t[i].line });
+                }
+            }
+        }
+        CallGraph { calls }
+    }
+
+    /// Shortest-path next-hop table toward any fn in `targets`: for every
+    /// fn that can reach a target through call edges, the first call site
+    /// on a shortest path.  Targets themselves map to `None`.
+    pub fn next_hops(&self, targets: &HashSet<usize>) -> HashMap<usize, Option<CallSite>> {
+        // reverse adjacency: callee -> (caller, site)
+        let mut rev: HashMap<usize, Vec<(usize, CallSite)>> = HashMap::new();
+        for (caller, sites) in self.calls.iter().enumerate() {
+            for &s in sites {
+                rev.entry(s.callee).or_default().push((caller, s));
+            }
+        }
+        let mut hops: HashMap<usize, Option<CallSite>> = HashMap::new();
+        let mut q: VecDeque<usize> = VecDeque::new();
+        for &t in targets {
+            hops.insert(t, None);
+            q.push_back(t);
+        }
+        while let Some(v) = q.pop_front() {
+            if let Some(callers) = rev.get(&v) {
+                for &(caller, site) in callers {
+                    hops.entry(caller).or_insert_with(|| {
+                        q.push_back(caller);
+                        Some(site)
+                    });
+                }
+            }
+        }
+        hops
+    }
+
+    /// The chain of call sites from `from` toward a target per the
+    /// next-hop table (empty when `from` is itself a target).
+    pub fn chain(&self, hops: &HashMap<usize, Option<CallSite>>, from: usize) -> Vec<CallSite> {
+        let mut out = Vec::new();
+        let mut cur = from;
+        let mut budget = 64usize;
+        while budget > 0 {
+            budget -= 1;
+            match hops.get(&cur) {
+                Some(Some(site)) => {
+                    out.push(*site);
+                    cur = site.callee;
+                }
+                _ => break,
+            }
+        }
+        out
+    }
+
+    /// Forward reachability: every fn reachable from `seeds` through call
+    /// edges (seeds included).
+    pub fn reachable_from(&self, seeds: &HashSet<usize>) -> HashSet<usize> {
+        let mut seen: HashSet<usize> = seeds.clone();
+        let mut q: VecDeque<usize> = seeds.iter().copied().collect();
+        while let Some(v) = q.pop_front() {
+            for s in &self.calls[v] {
+                if seen.insert(s.callee) {
+                    q.push_back(s.callee);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Bottom-up set propagation to a fixpoint: each fn's set becomes its
+    /// local set unioned with every callee's (handles recursion by
+    /// iterating until stable).
+    pub fn propagate_sets(&self, local: &[HashSet<String>]) -> Vec<HashSet<String>> {
+        let mut all: Vec<HashSet<String>> = local.to_vec();
+        loop {
+            let mut changed = false;
+            for f in 0..all.len() {
+                for si in 0..self.calls[f].len() {
+                    let callee = self.calls[f][si].callee;
+                    if callee == f {
+                        continue;
+                    }
+                    let add: Vec<String> =
+                        all[callee].difference(&all[f]).cloned().collect();
+                    if !add.is_empty() {
+                        all[f].extend(add);
+                        changed = true;
+                    }
+                }
+            }
+            if !changed {
+                return all;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::source_from;
+
+    fn build(srcs: &[(&str, &str)]) -> (Vec<SourceFile>, ItemGraph, CallGraph) {
+        let mut files = Vec::new();
+        for (p, s) in srcs {
+            let (f, v) = source_from(p, s);
+            assert!(v.is_empty(), "{v:?}");
+            files.push(f);
+        }
+        let items = ItemGraph::build(&files);
+        let cg = CallGraph::build(&files, &items);
+        (files, items, cg)
+    }
+
+    fn idx(items: &ItemGraph, name: &str) -> usize {
+        items.by_name[name][0]
+    }
+
+    #[test]
+    fn cross_file_edges_and_chains() {
+        let (_, items, cg) = build(&[
+            ("rust/src/a.rs", "pub fn top() { mid(1); }\nfn mid(x: u32) { bottom(); }"),
+            ("rust/src/b.rs", "pub fn bottom() { }"),
+        ]);
+        let top = idx(&items, "top");
+        let bottom = idx(&items, "bottom");
+        let hops = cg.next_hops(&[bottom].into_iter().collect());
+        assert!(hops.contains_key(&top));
+        let chain = cg.chain(&hops, top);
+        let names: Vec<&str> =
+            chain.iter().map(|s| items.fns[s.callee].name.as_str()).collect();
+        assert_eq!(names, vec!["mid", "bottom"]);
+    }
+
+    #[test]
+    fn qualified_calls_prefer_impl_target() {
+        let (_, items, cg) = build(&[(
+            "rust/src/a.rs",
+            "struct A; struct B;\n\
+             impl A { pub fn go() {} }\n\
+             impl B { pub fn go() {} }\n\
+             fn f() { A::go(); }",
+        )]);
+        let f = idx(&items, "f");
+        assert_eq!(cg.calls[f].len(), 1);
+        let callee = &items.fns[cg.calls[f][0].callee];
+        assert_eq!(callee.impl_target.as_deref(), Some("A"));
+    }
+
+    #[test]
+    fn recursion_reaches_fixpoint() {
+        let (_, items, cg) = build(&[(
+            "rust/src/a.rs",
+            "fn a() { b(); }\nfn b() { a(); leaf(); }\nfn leaf() {}",
+        )]);
+        let mut local: Vec<HashSet<String>> = vec![HashSet::new(); items.fns.len()];
+        local[idx(&items, "leaf")].insert("L".to_string());
+        let all = cg.propagate_sets(&local);
+        assert!(all[idx(&items, "a")].contains("L"));
+        assert!(all[idx(&items, "b")].contains("L"));
+    }
+
+    #[test]
+    fn forward_reachability() {
+        let (_, items, cg) = build(&[(
+            "rust/src/a.rs",
+            "pub fn root() { helper(); }\nfn helper() { deep(); }\nfn deep() {}\nfn island() {}",
+        )]);
+        let r = cg.reachable_from(&[idx(&items, "root")].into_iter().collect());
+        assert!(r.contains(&idx(&items, "deep")));
+        assert!(!r.contains(&idx(&items, "island")));
+    }
+}

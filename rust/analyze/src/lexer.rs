@@ -44,6 +44,13 @@ pub fn lex(src: &str) -> Lexed {
     let mut line = 1usize;
     let mut toks: Vec<Tok> = Vec::new();
     let mut comments: Vec<Comment> = Vec::new();
+    // shebang: `#!...` on the very first line is not Rust tokens — but
+    // `#![...]` is an inner attribute and must lex normally
+    if b.first() == Some(&'#') && b.get(1) == Some(&'!') && b.get(2) != Some(&'[') {
+        while i < b.len() && b[i] != '\n' {
+            i += 1;
+        }
+    }
     while i < b.len() {
         let c = b[i];
         if c == '\n' {
@@ -212,6 +219,8 @@ pub fn lex(src: &str) -> Lexed {
         // three tokens and range patterns survive)
         if c.is_ascii_digit() {
             let start = i;
+            let radix_prefix = c == '0'
+                && matches!(b.get(i + 1), Some(&'x') | Some(&'b') | Some(&'o') | Some(&'X'));
             i += 1;
             while i < b.len() {
                 let d = b[i];
@@ -220,6 +229,17 @@ pub fn lex(src: &str) -> Lexed {
                     continue;
                 }
                 if d == '.' && i + 1 < b.len() && b[i + 1].is_ascii_digit() {
+                    i += 1;
+                    continue;
+                }
+                // float exponent sign: `1e-5` / `2.5E+10` stay one token
+                // (not in hex/binary/octal literals, where `e` is a digit)
+                if (d == '+' || d == '-')
+                    && !radix_prefix
+                    && matches!(b[i - 1], 'e' | 'E')
+                    && i + 1 < b.len()
+                    && b[i + 1].is_ascii_digit()
+                {
                     i += 1;
                     continue;
                 }
@@ -344,6 +364,56 @@ mod tests {
         assert!(texts.contains(&"prod"));
         assert!(texts.contains(&"prod2"));
         assert!(!texts.contains(&"unwrap"));
+    }
+
+    #[test]
+    fn shebang_skipped_but_inner_attr_lexes() {
+        // a shebang line is not tokens and must not desync line numbers
+        let l = lex("#!/usr/bin/env run-cargo-script\nfn main() {}");
+        let texts: Vec<&str> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["fn", "main", "(", ")", "{", "}"]);
+        assert_eq!(l.toks[0].line, 2);
+        // `#![...]` is an inner attribute, not a shebang
+        let l = lex("#![allow(dead_code)]\nfn main() {}");
+        let texts: Vec<&str> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert!(texts.starts_with(&["#", "!", "[", "allow"]), "{texts:?}");
+    }
+
+    #[test]
+    fn float_exponents_stay_one_token() {
+        assert_eq!(texts("1e-5 + 2.5E+10 - 3e7"), vec!["1e-5", "+", "2.5E+10", "-", "3e7"]);
+        // hex `e` is a digit, not an exponent: `-` stays an operator
+        assert_eq!(texts("0x1e - 5"), vec!["0x1e", "-", "5"]);
+        // `1e - x` (no digit after sign) is not an exponent
+        assert_eq!(texts("1e - x"), vec!["1e", "-", "x"]);
+    }
+
+    #[test]
+    fn nested_block_comments_deep() {
+        let l = lex("/* a /* b /* c */ d */ e */ fn f() {}");
+        let texts: Vec<&str> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["fn", "f", "(", ")", "{", "}"]);
+        assert_eq!(l.comments.len(), 1);
+        assert!(l.comments[0].text.contains("c */ d"));
+    }
+
+    #[test]
+    fn raw_strings_with_comment_markers_inside() {
+        let src = "let a = r#\"// not a comment /* nor this */\"#; let b = 1;";
+        let l = lex(src);
+        assert!(l.comments.is_empty());
+        let strs: Vec<&str> =
+            l.toks.iter().filter(|t| t.kind == Kind::Str).map(|t| t.text.as_str()).collect();
+        assert_eq!(strs, vec!["// not a comment /* nor this */"]);
+        assert!(l.toks.iter().any(|t| t.text == "b"));
+    }
+
+    #[test]
+    fn lifetime_then_char_sequences() {
+        // `<'a>` lifetime, `'x'` char, `b'x'` byte char, `'\\'` escaped
+        let l = lex("fn f<'a>() { let c = 'x'; let d = b'y'; let e = '\\\\'; }");
+        assert!(l.toks.iter().all(|t| t.text != "'"));
+        assert!(l.toks.iter().any(|t| t.text == "e"));
     }
 
     #[test]

@@ -1,23 +1,28 @@
-//! `hass-analyze` — the repo's own lint pass over `rust/src`.
+//! `hass-analyze` — the repo's own whole-crate lint pass over `rust/src`.
 //!
 //! The HASS serving stack rests on invariants the compiler cannot see
 //! (solo == fused token-for-token, `(id,stamp)` page identity, COW
-//! isolation, mask visibility).  This crate walks the production sources
-//! with a small lexer and enforces the conventions that keep those
-//! invariants checkable:
+//! isolation, mask visibility).  This crate parses the production
+//! sources into an item graph (`resolve`) and a best-effort call graph
+//! (`callgraph`) and enforces the conventions that keep those invariants
+//! checkable:
 //!
 //! * `no-unwrap` — no `.unwrap()` / `.expect(...)` / indexing into a call
 //!   result inside the fused-path modules (`scheduler`, `engine/sessions`,
 //!   `kvcache`) unless annotated.
-//! * `send-hygiene` — no `Rc`/`Cell`/`RefCell` fields on types reachable
-//!   from an `Arc<...>`/channel boundary, and none named inside a
-//!   `spawn(...)` closure (pre-flight gate for the Arc page-pool
-//!   migration).
-//! * `stamp-discipline` — every storage-writing `pub fn` on
-//!   `KvCache`/`Page` carries the `#[hass::mutates_storage]` doc marker
-//!   and bumps `stamp` on its write path, and vice versa.
-//! * `wire-drift` — every JSON key the client/stats paths *read* must be
-//!   *emitted* somewhere by the server/scheduler.
+//! * `send-hygiene` — no `Rc`/`Cell`/`RefCell` fields (alias-aware) on
+//!   types reachable from an `Arc<...>`/channel boundary.
+//! * `lock-order` — no potential acquisition cycles between
+//!   `util::lockorder` classes on any call path (static complement of
+//!   the `HASS_CHECK=1` runtime inversion detector).
+//! * `thread-escape` — no binding or call result whose type reaches
+//!   `Rc`/`Cell` may flow into a spawn capture, channel send, or
+//!   `Arc::new` span.
+//! * `stamp-discipline` — any fn that can reach `page_mut`/`next_stamp`
+//!   through any call chain carries the `#[hass::mutates_storage]` doc
+//!   marker or is a private helper of a marked fn, and vice versa.
+//! * `wire-drift` / `wire-dead` — every JSON key read must be emitted
+//!   somewhere, and every emitted key must have a reader.
 //! * `panic-isolation` — every `spawn(...)` in `scheduler`/`server` wraps
 //!   its body in `catch_unwind`.
 //! * `unsafe-comment` — every `unsafe` block carries a `// SAFETY:`
@@ -26,22 +31,33 @@
 //! Violations are silenced site-by-site with
 //! `// hass-lint: allow(<rule>[, <rule>...]) — <justification>`; the
 //! justification is mandatory (see README.md).  Annotations cover their
-//! own line and the next one.
+//! own line and the next one.  Whole findings can instead be
+//! grandfathered in a reviewed baseline (`--baseline`, see `report`).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+pub mod callgraph;
 pub mod lexer;
+pub mod report;
+pub mod resolve;
 pub mod rules;
 
 use lexer::{Comment, Lexed, Tok};
+use report::{fingerprint, Baseline, Format};
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Violation {
     pub file: String,
     pub line: usize,
     pub rule: String,
+    /// "error" or "warning" (both gate CI unless baselined; the level
+    /// only affects how GitHub annotations render).
+    pub severity: String,
     pub msg: String,
+    /// Witness chain: how the rule got here (call frames, field chains,
+    /// binding sites), outermost first.
+    pub witness: Vec<String>,
 }
 
 pub struct SourceFile {
@@ -49,6 +65,9 @@ pub struct SourceFile {
     pub path: String,
     /// Test-stripped token stream (no `#[cfg(test)] mod` bodies).
     pub toks: Vec<Tok>,
+    /// Full token stream, tests included (wire-dead counts test readers
+    /// as consumers).
+    pub toks_full: Vec<Tok>,
     /// All comments, with line numbers (tests included — annotations and
     /// SAFETY comments live here).
     pub comments: Vec<Comment>,
@@ -72,7 +91,16 @@ pub fn source_from(path: &str, src: &str) -> (SourceFile, Vec<Violation>) {
     let Lexed { toks, comments } = lexer::lex(src);
     let stripped = lexer::strip_cfg_test(&toks);
     let (allows, viols) = parse_allow_comments(path, &comments);
-    (SourceFile { path: path.to_string(), toks: stripped, comments, allows }, viols)
+    (
+        SourceFile {
+            path: path.to_string(),
+            toks: stripped,
+            toks_full: toks,
+            comments,
+            allows,
+        },
+        viols,
+    )
 }
 
 /// Parse every `hass-lint: allow(<rules>) — <justification>` annotation.
@@ -90,9 +118,11 @@ fn parse_allow_comments(
         file: path.to_string(),
         line,
         rule: "allow-syntax".to_string(),
+        severity: "error".to_string(),
         msg: "malformed `hass-lint:` annotation — expected \
               `hass-lint: allow(<rule>[, <rule>]) — <justification>`"
             .to_string(),
+        witness: Vec::new(),
     };
     for c in comments {
         let Some(pos) = c.text.find("hass-lint:") else { continue };
@@ -193,27 +223,107 @@ pub fn run(paths: &[String]) -> std::io::Result<(Vec<Violation>, usize)> {
     Ok((viols, n))
 }
 
-/// CLI driver: print `path:line: [rule] msg` lines and return the exit
-/// code (0 = clean, 1 = violations, 2 = I/O error).
-pub fn run_cli(paths: &[String]) -> i32 {
-    let default = vec!["rust/src".to_string()];
-    let paths = if paths.is_empty() { &default } else { paths };
-    match run(paths) {
-        Ok((viols, n)) => {
-            for v in &viols {
-                println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+/// CLI driver.  Accepts the full argument vector:
+///
+/// ```text
+/// hass-analyze [--format text|json|github] [--baseline <file>]
+///              [--update-baseline] [paths...]
+/// ```
+///
+/// Exit codes: 0 = clean (or baseline updated), 1 = new findings,
+/// 2 = I/O error or bad arguments.  With `--baseline`, findings whose
+/// fingerprint is listed are suppressed and only *new* findings gate.
+pub fn run_cli(args: &[String]) -> i32 {
+    let mut format = Format::Text;
+    let mut baseline_path: Option<String> = None;
+    let mut update_baseline = false;
+    let mut paths: Vec<String> = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let (flag, inline) = match a.split_once('=') {
+            Some((f, v)) if f.starts_with("--") => (f, Some(v.to_string())),
+            _ => (a.as_str(), None),
+        };
+        match flag {
+            "--format" => {
+                let Some(v) = inline.or_else(|| it.next().cloned()) else {
+                    eprintln!("hass-analyze: --format needs a value (text|json|github)");
+                    return 2;
+                };
+                let Some(f) = Format::parse(&v) else {
+                    eprintln!("hass-analyze: unknown format `{v}` (expected text|json|github)");
+                    return 2;
+                };
+                format = f;
             }
-            println!("hass-analyze: {} file(s) scanned, {} violation(s)", n, viols.len());
-            if viols.is_empty() {
-                0
-            } else {
-                1
+            "--baseline" => {
+                let Some(v) = inline.or_else(|| it.next().cloned()) else {
+                    eprintln!("hass-analyze: --baseline needs a file path");
+                    return 2;
+                };
+                baseline_path = Some(v);
             }
+            "--update-baseline" => update_baseline = true,
+            s if s.starts_with("--") => {
+                eprintln!("hass-analyze: unknown flag `{s}`");
+                return 2;
+            }
+            _ => paths.push(a.clone()),
         }
+    }
+    if update_baseline && baseline_path.is_none() {
+        eprintln!("hass-analyze: --update-baseline requires --baseline <file>");
+        return 2;
+    }
+    let default = vec!["rust/src".to_string()];
+    let paths = if paths.is_empty() { default } else { paths };
+    let (viols, n) = match run(&paths) {
+        Ok(x) => x,
         Err(e) => {
             eprintln!("hass-analyze: {e}");
-            2
+            return 2;
         }
+    };
+    let baseline = match &baseline_path {
+        Some(p) => match std::fs::read_to_string(p) {
+            Ok(s) => Baseline::parse(&s),
+            // A missing file is fine when we're about to create it.
+            Err(_) if update_baseline => Baseline::default(),
+            Err(e) => {
+                eprintln!("hass-analyze: cannot read baseline `{p}`: {e}");
+                return 2;
+            }
+        },
+        None => Baseline::default(),
+    };
+    if update_baseline {
+        if let Some(p) = &baseline_path {
+            let text = baseline.render_updated(&viols);
+            if let Err(e) = std::fs::write(p, text) {
+                eprintln!("hass-analyze: cannot write baseline `{p}`: {e}");
+                return 2;
+            }
+            println!(
+                "hass-analyze: baseline `{p}` updated to cover {} finding(s)",
+                viols.len()
+            );
+        }
+        return 0;
+    }
+    let mut fresh: Vec<Violation> = Vec::new();
+    let mut suppressed = 0usize;
+    for v in viols {
+        if baseline.contains(&fingerprint(&v)) {
+            suppressed += 1;
+        } else {
+            fresh.push(v);
+        }
+    }
+    print!("{}", report::render(&fresh, format, n, suppressed));
+    if fresh.is_empty() {
+        0
+    } else {
+        1
     }
 }
 

@@ -1,7 +1,9 @@
-//! `hass-analyze <paths...>` — lint the HASS sources.
+//! `hass-analyze [--format text|json|github] [--baseline <file>]
+//! [--update-baseline] <paths...>` — lint the HASS sources.
 //!
-//! With no arguments it scans `rust/src` (run from the repo root).
-//! Exit code 0 = clean, 1 = violations, 2 = I/O error.
+//! With no paths it scans `rust/src` (run from the repo root).  Exit
+//! code 0 = clean / baseline updated, 1 = new violations, 2 = I/O error
+//! or bad arguments.
 
 fn main() {
     let paths: Vec<String> = std::env::args().skip(1).collect();

@@ -1,0 +1,317 @@
+//! Report rendering (text / json / github) and the findings baseline.
+//!
+//! The baseline lets a new rule land with pre-existing findings
+//! grandfathered: `--baseline baseline.json` filters out any finding
+//! whose fingerprint is listed, so CI fails only on *new* findings.
+//! Fingerprints are line-number-insensitive (file + rule + message), so
+//! unrelated edits that shift code don't invalidate the baseline.
+//! `--update-baseline` rewrites the file from the current findings,
+//! preserving the recorded justification (`why`) of entries that
+//! survive; new entries get a TODO justification that a reviewer must
+//! replace.
+
+use crate::Violation;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Format {
+    Text,
+    Json,
+    Github,
+}
+
+impl Format {
+    pub fn parse(s: &str) -> Option<Format> {
+        match s {
+            "text" => Some(Format::Text),
+            "json" => Some(Format::Json),
+            "github" => Some(Format::Github),
+            _ => None,
+        }
+    }
+}
+
+/// Line-insensitive identity of a finding, used for baseline matching.
+pub fn fingerprint(v: &Violation) -> String {
+    let msg: String = v.msg.split_whitespace().collect::<Vec<_>>().join(" ");
+    format!("{}|{}|{}", v.file, v.rule, msg)
+}
+
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut it = s.chars();
+    while let Some(c) = it.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match it.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('u') => {
+                let hex: String = (0..4).filter_map(|_| it.next()).collect();
+                if let Some(c) = u32::from_str_radix(&hex, 16).ok().and_then(char::from_u32) {
+                    out.push(c);
+                }
+            }
+            Some(c) => out.push(c),
+            None => {}
+        }
+    }
+    out
+}
+
+/// Render the given findings in `format`.  `suppressed` is the number of
+/// baselined findings filtered out (surfaced in the summary so a
+/// "clean" run that leans on the baseline says so).
+pub fn render(viols: &[Violation], format: Format, files_scanned: usize, suppressed: usize) -> String {
+    match format {
+        Format::Text => {
+            let mut out = String::new();
+            for v in viols {
+                out.push_str(&format!("{}:{}: [{}] {}\n", v.file, v.line, v.rule, v.msg));
+                for w in &v.witness {
+                    out.push_str(&format!("    via {w}\n"));
+                }
+            }
+            out.push_str(&format!(
+                "hass-analyze: {} file(s) scanned, {} violation(s){}\n",
+                files_scanned,
+                viols.len(),
+                if suppressed > 0 { format!(", {suppressed} baselined") } else { String::new() }
+            ));
+            out
+        }
+        Format::Json => {
+            let mut out = String::from("{\n");
+            out.push_str(&format!("  \"files_scanned\": {files_scanned},\n"));
+            out.push_str(&format!("  \"baselined\": {suppressed},\n"));
+            out.push_str("  \"findings\": [");
+            for (i, v) in viols.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str("\n    {");
+                out.push_str(&format!("\"file\": \"{}\", ", json_escape(&v.file)));
+                out.push_str(&format!("\"line\": {}, ", v.line));
+                out.push_str(&format!("\"rule\": \"{}\", ", json_escape(&v.rule)));
+                out.push_str(&format!("\"severity\": \"{}\", ", v.severity));
+                out.push_str(&format!("\"msg\": \"{}\", ", json_escape(&v.msg)));
+                out.push_str("\"witness\": [");
+                for (j, w) in v.witness.iter().enumerate() {
+                    if j > 0 {
+                        out.push_str(", ");
+                    }
+                    out.push_str(&format!("\"{}\"", json_escape(w)));
+                }
+                out.push_str("]}");
+            }
+            out.push_str(if viols.is_empty() { "]\n}\n" } else { "\n  ]\n}\n" });
+            out
+        }
+        Format::Github => {
+            // ::error file=...,line=...::message  (newline escape per the
+            // workflow-command syntax; witness chain folded in)
+            let mut out = String::new();
+            for v in viols {
+                let level = if v.severity == "warning" { "warning" } else { "error" };
+                let mut msg = format!("[{}] {}", v.rule, v.msg);
+                for w in &v.witness {
+                    msg.push_str(&format!("%0A  via {w}"));
+                }
+                let msg = msg.replace('\n', "%0A").replace('\r', "%0D");
+                out.push_str(&format!(
+                    "::{level} file={},line={}::{}\n",
+                    v.file, v.line, msg
+                ));
+            }
+            out
+        }
+    }
+}
+
+/// A reviewed set of grandfathered findings.
+#[derive(Default)]
+pub struct Baseline {
+    /// (fingerprint, justification), in file order.
+    pub entries: Vec<(String, String)>,
+}
+
+impl Baseline {
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.iter().any(|(k, _)| k == key)
+    }
+
+    pub fn why(&self, key: &str) -> Option<&str> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, w)| w.as_str())
+    }
+
+    /// Parse the baseline file.  The format is the JSON this module
+    /// writes; the parser is a small string-field scanner (the analyzer
+    /// is dependency-free), tolerant of whitespace and ordering but not
+    /// of non-string keys.
+    pub fn parse(src: &str) -> Baseline {
+        let mut entries: Vec<(String, String)> = Vec::new();
+        let b: Vec<char> = src.chars().collect();
+        let mut i = 0usize;
+        let mut pending_key: Option<String> = None;
+        while i < b.len() {
+            if b[i] != '"' {
+                i += 1;
+                continue;
+            }
+            // scan one string literal
+            let start = i + 1;
+            let mut j = start;
+            while j < b.len() && b[j] != '"' {
+                if b[j] == '\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            let raw: String = b[start..j.min(b.len())].iter().collect();
+            i = j + 1;
+            // is this a field name followed by `:`?
+            let mut k = i;
+            while k < b.len() && b[k].is_whitespace() {
+                k += 1;
+            }
+            let is_field = k < b.len() && b[k] == ':';
+            if is_field && (raw == "key" || raw == "why") {
+                // read the value string
+                let mut m = k + 1;
+                while m < b.len() && b[m].is_whitespace() {
+                    m += 1;
+                }
+                if m < b.len() && b[m] == '"' {
+                    let vstart = m + 1;
+                    let mut n = vstart;
+                    while n < b.len() && b[n] != '"' {
+                        if b[n] == '\\' {
+                            n += 1;
+                        }
+                        n += 1;
+                    }
+                    let val = json_unescape(&b[vstart..n.min(b.len())].iter().collect::<String>());
+                    i = n + 1;
+                    if raw == "key" {
+                        if let Some(prev) = pending_key.take() {
+                            entries.push((prev, String::new()));
+                        }
+                        pending_key = Some(val);
+                    } else if let Some(key) = pending_key.take() {
+                        entries.push((key, val));
+                    }
+                }
+            }
+        }
+        if let Some(prev) = pending_key.take() {
+            entries.push((prev, String::new()));
+        }
+        Baseline { entries }
+    }
+
+    /// Serialize a baseline covering exactly `viols`, preserving the
+    /// `why` of entries already present in `self`.
+    pub fn render_updated(&self, viols: &[Violation]) -> String {
+        let mut seen: Vec<String> = Vec::new();
+        let mut out = String::from("{\n  \"version\": 1,\n  \"findings\": [");
+        let mut first = true;
+        for v in viols {
+            let key = fingerprint(v);
+            if seen.contains(&key) {
+                continue;
+            }
+            let why = self
+                .why(&key)
+                .filter(|w| !w.is_empty())
+                .unwrap_or("TODO: justify this finding or fix it");
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "\n    {{\"key\": \"{}\",\n     \"why\": \"{}\"}}",
+                json_escape(&key),
+                json_escape(why)
+            ));
+            seen.push(key);
+        }
+        out.push_str(if first { "]\n}\n" } else { "\n  ]\n}\n" });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(file: &str, rule: &str, msg: &str) -> Violation {
+        Violation {
+            file: file.to_string(),
+            line: 7,
+            rule: rule.to_string(),
+            severity: "error".to_string(),
+            msg: msg.to_string(),
+            witness: vec!["a.rs:1: f -> g".to_string()],
+        }
+    }
+
+    #[test]
+    fn baseline_roundtrip_preserves_why() {
+        let viols = vec![v("a.rs", "wire-dead", "wire key \"x\" dead"), v("b.rs", "lock-order", "cycle")];
+        let empty = Baseline::default();
+        let text = empty.render_updated(&viols);
+        let parsed = Baseline::parse(&text);
+        assert_eq!(parsed.entries.len(), 2);
+        assert!(parsed.contains(&fingerprint(&viols[0])));
+        assert_eq!(parsed.why(&fingerprint(&viols[0])), Some("TODO: justify this finding or fix it"));
+        // hand-edit the why, re-update: the edit survives
+        let edited = text.replace("TODO: justify this finding or fix it", "reviewed 2026-08: consumed off-wire");
+        let parsed = Baseline::parse(&edited);
+        let text2 = parsed.render_updated(&viols);
+        assert!(text2.contains("reviewed 2026-08: consumed off-wire"));
+    }
+
+    #[test]
+    fn fingerprint_is_line_insensitive() {
+        let mut a = v("a.rs", "r", "same   msg");
+        let b = v("a.rs", "r", "same msg");
+        a.line = 99;
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+    }
+
+    #[test]
+    fn json_render_escapes() {
+        let viols = vec![v("a.rs", "r", "key \"x\"\nnext")];
+        let s = render(&viols, Format::Json, 3, 1);
+        assert!(s.contains("\\\"x\\\"\\nnext"));
+        assert!(s.contains("\"files_scanned\": 3"));
+        assert!(s.contains("\"baselined\": 1"));
+        assert!(s.contains("\"witness\": [\"a.rs:1: f -> g\"]"));
+    }
+
+    #[test]
+    fn github_render_format() {
+        let mut w = v("rust/src/x.rs", "lock-order", "cycle A -> B -> A");
+        w.severity = "warning".to_string();
+        let s = render(&[w], Format::Github, 1, 0);
+        assert!(s.starts_with("::warning file=rust/src/x.rs,line=7::[lock-order] cycle A -> B -> A%0A  via a.rs:1: f -> g\n"), "{s}");
+    }
+}

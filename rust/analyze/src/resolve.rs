@@ -1,0 +1,670 @@
+//! Whole-crate item resolution: the item graph the interprocedural rules
+//! and the call graph are built on.
+//!
+//! From every [`SourceFile`] this extracts:
+//!
+//! * `use` aliases — a per-file map from local name to the canonical
+//!   `::`-joined path, so rules can ask "is `Shared` really
+//!   `std::rc::Rc`?" instead of string-matching bare identifiers;
+//! * type items — structs, enums, and `type` aliases, each with the
+//!   identifiers appearing in field-type position (the edges of the type
+//!   graph R2/R8 walk);
+//! * fn items — name, visibility, enclosing `impl` target, body token
+//!   span, parameter bindings with their type identifiers, return-type
+//!   identifiers, and whether the fn carries the
+//!   `#[hass::mutates_storage]` doc marker.
+//!
+//! Everything here is a lexical approximation (see `lexer.rs`): no
+//! hygiene, no generics instantiation, no trait solving.  The graph errs
+//! toward over-approximation (more edges, more type links), which for a
+//! lint means erring toward reporting; each rule documents where that
+//! matters.
+
+use std::collections::HashMap;
+
+use crate::lexer::{Kind, Tok};
+use crate::SourceFile;
+
+/// The storage-write doc marker enforced by `stamp-discipline` (a
+/// comment convention, so it survives into rustdoc without a real
+/// proc-macro).
+pub const STORAGE_MARKER: &str = "#[hass::mutates_storage]";
+
+/// A marker must sit within this many lines above its fn (doc comment
+/// block length budget).
+pub const MARKER_WINDOW: usize = 12;
+
+pub fn tx(t: &[Tok], i: usize) -> &str {
+    t.get(i).map(|k| k.text.as_str()).unwrap_or("")
+}
+
+/// Matching `}` for every `{` (token indices).
+pub fn brace_pairs(t: &[Tok]) -> HashMap<usize, usize> {
+    let mut stack: Vec<usize> = Vec::new();
+    let mut map: HashMap<usize, usize> = HashMap::new();
+    for (i, tk) in t.iter().enumerate() {
+        match tk.text.as_str() {
+            "{" => stack.push(i),
+            "}" => {
+                if let Some(o) = stack.pop() {
+                    map.insert(o, i);
+                }
+            }
+            _ => {}
+        }
+    }
+    map
+}
+
+#[derive(Debug)]
+pub struct FnItem {
+    pub name: String,
+    /// Index into the `files` slice the graph was built from.
+    pub file: usize,
+    pub line: usize,
+    pub is_pub: bool,
+    /// Innermost enclosing `impl` target type, if any.
+    pub impl_target: Option<String>,
+    /// `{`..`}` token span of the body (absent for trait-decl fns).
+    pub body: Option<(usize, usize)>,
+    /// Parameter bindings: (binding name, identifiers in type position).
+    pub params: Vec<(String, Vec<String>)>,
+    /// Identifiers in return-type position.
+    pub ret: Vec<String>,
+    /// Carries the `#[hass::mutates_storage]` marker.
+    pub marked: bool,
+}
+
+impl FnItem {
+    /// `Target::name` when inside an impl, else just `name` — the frame
+    /// label used in witness chains.
+    pub fn qname(&self) -> String {
+        match &self.impl_target {
+            Some(t) => format!("{t}::{}", self.name),
+            None => self.name.clone(),
+        }
+    }
+}
+
+pub struct TypeItem {
+    pub file: usize,
+    pub line: usize,
+    /// Identifiers in field-type position (structs/enums) or on the RHS
+    /// (type aliases), with the line they sit on.
+    pub fields: Vec<(String, usize)>,
+}
+
+pub struct ItemGraph {
+    pub fns: Vec<FnItem>,
+    pub types: HashMap<String, TypeItem>,
+    /// Per file: local name -> canonical `::`-joined path from `use`.
+    pub aliases: Vec<HashMap<String, String>>,
+    /// fn name -> indices into `fns`.
+    pub by_name: HashMap<String, Vec<usize>>,
+    /// `#[hass::mutates_storage]` markers with no fn in the next
+    /// [`MARKER_WINDOW`] lines: (file, line).
+    pub dangling_markers: Vec<(usize, usize)>,
+}
+
+impl ItemGraph {
+    /// Canonical `::`-joined path of `name` as seen from `file`
+    /// (resolved through that file's `use` aliases; falls back to the
+    /// bare name).
+    pub fn canon<'a>(&'a self, file: usize, name: &'a str) -> &'a str {
+        self.aliases
+            .get(file)
+            .and_then(|m| m.get(name))
+            .map(String::as_str)
+            .unwrap_or(name)
+    }
+
+    pub fn build(files: &[SourceFile]) -> ItemGraph {
+        let mut fns: Vec<FnItem> = Vec::new();
+        let mut types: HashMap<String, TypeItem> = HashMap::new();
+        let mut aliases: Vec<HashMap<String, String>> = Vec::new();
+        let mut dangling: Vec<(usize, usize)> = Vec::new();
+        for (fi, f) in files.iter().enumerate() {
+            let t = &f.toks;
+            let pairs = brace_pairs(t);
+            aliases.push(parse_uses(t));
+            collect_types(fi, t, &pairs, &mut types);
+            let first = fns.len();
+            parse_fns(fi, t, &pairs, &mut fns);
+            // attach markers: nearest following fn within the window
+            for c in f.comments.iter().filter(|c| c.text.contains(STORAGE_MARKER)) {
+                let target = fns[first..]
+                    .iter_mut()
+                    .filter(|x| x.line >= c.line && x.line <= c.line + MARKER_WINDOW)
+                    .min_by_key(|x| x.line);
+                match target {
+                    Some(x) => x.marked = true,
+                    None => dangling.push((fi, c.line)),
+                }
+            }
+        }
+        let mut by_name: HashMap<String, Vec<usize>> = HashMap::new();
+        for (i, f) in fns.iter().enumerate() {
+            by_name.entry(f.name.clone()).or_default().push(i);
+        }
+        ItemGraph { fns, types, aliases, by_name, dangling_markers: dangling }
+    }
+}
+
+/// Parse every `use` item in a token stream into local-name -> canonical
+/// path entries.  Handles `a::b::C`, `as` renames, nested `{...}` trees,
+/// and leading `crate`/`super`/`self` segments; `*` globs are skipped
+/// (they bind no local name we can track).
+fn parse_uses(t: &[Tok]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut i = 0usize;
+    while i < t.len() {
+        if t[i].kind == Kind::Ident && t[i].text == "use" {
+            i = parse_use_tree(t, i + 1, &[], &mut map);
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+/// Parse one use-tree starting at `i` with the given path `prefix`;
+/// returns the index just past it.
+fn parse_use_tree(
+    t: &[Tok],
+    mut i: usize,
+    prefix: &[String],
+    map: &mut HashMap<String, String>,
+) -> usize {
+    let mut segs: Vec<String> = prefix.to_vec();
+    let mut bound = false;
+    loop {
+        match tx(t, i) {
+            "{" => {
+                // group: recurse per comma-separated subtree
+                i += 1;
+                loop {
+                    i = parse_use_tree(t, i, &segs, map);
+                    match tx(t, i) {
+                        "," => i += 1,
+                        "}" => return i + 1,
+                        _ => return i, // malformed / EOF: bail
+                    }
+                }
+            }
+            ":" => {
+                i += 1; // `::` path separator (two Punct tokens)
+                if tx(t, i) == ":" {
+                    i += 1;
+                }
+            }
+            "*" => return i + 1, // glob: nothing to bind
+            ";" | "," | "}" | "" => {
+                if !bound {
+                    bind(map, &segs, None);
+                }
+                return if tx(t, i) == ";" { i + 1 } else { i };
+            }
+            "as" => {
+                let alias = tx(t, i + 1).to_string();
+                bind(map, &segs, Some(alias));
+                bound = true;
+                i += 2;
+                // next loop turn handles the terminator
+            }
+            _ if t[i].kind == Kind::Ident => {
+                segs.push(t[i].text.clone());
+                i += 1;
+            }
+            _ => return i + 1, // unexpected token: resync
+        }
+    }
+}
+
+fn bind(map: &mut HashMap<String, String>, segs: &[String], alias: Option<String>) {
+    // `use a::b::{self}` binds `b`; `self`/`crate`/`super` never bind alone
+    let mut segs = segs.to_vec();
+    if segs.last().map(String::as_str) == Some("self") {
+        segs.pop();
+    }
+    let Some(last) = segs.last() else { return };
+    let name = alias.unwrap_or_else(|| last.clone());
+    if name == "crate" || name == "super" || name == "self" || name.is_empty() {
+        return;
+    }
+    map.insert(name, segs.join("::"));
+}
+
+/// Structs, enums, and `type` aliases, with identifiers in field-type /
+/// RHS position.
+fn collect_types(
+    fi: usize,
+    t: &[Tok],
+    pairs: &HashMap<usize, usize>,
+    map: &mut HashMap<String, TypeItem>,
+) {
+    let mut i = 0usize;
+    while i < t.len() {
+        if t[i].kind != Kind::Ident {
+            i += 1;
+            continue;
+        }
+        // `type X = RHS;` alias: RHS idents become the fields of X
+        if t[i].text == "type"
+            && t.get(i + 1).map(|k| k.kind == Kind::Ident).unwrap_or(false)
+            && (tx(t, i + 2) == "=" || (tx(t, i + 2) == "<" /* generic alias */))
+        {
+            let name = t[i + 1].text.clone();
+            let line = t[i + 1].line;
+            let mut j = i + 2;
+            while j < t.len() && tx(t, j) != "=" && tx(t, j) != ";" {
+                j += 1;
+            }
+            let mut fields: Vec<(String, usize)> = Vec::new();
+            while j < t.len() && tx(t, j) != ";" {
+                if t[j].kind == Kind::Ident {
+                    fields.push((t[j].text.clone(), t[j].line));
+                }
+                j += 1;
+            }
+            // `type X;` in traits / `let ... type`-free matches: only keep
+            // aliases that actually have an RHS
+            if !fields.is_empty() {
+                map.insert(name, TypeItem { file: fi, line, fields });
+            }
+            i = j + 1;
+            continue;
+        }
+        if t[i].text != "struct" && t[i].text != "enum" {
+            i += 1;
+            continue;
+        }
+        let Some(name) = t.get(i + 1) else { break };
+        if name.kind != Kind::Ident {
+            i += 1;
+            continue;
+        }
+        // skip generics to the body start: `{`, `(`, or `;`
+        let mut angle = 0i64;
+        let mut j = i + 2;
+        while j < t.len() {
+            match tx(t, j) {
+                "<" => angle += 1,
+                ">" => angle -= 1,
+                "{" | "(" | ";" if angle <= 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        if j >= t.len() || tx(t, j) == ";" {
+            i = j + 1;
+            continue;
+        }
+        let (open, close) = if tx(t, j) == "{" {
+            match pairs.get(&j) {
+                Some(&c) => (j, c),
+                None => {
+                    i = j + 1;
+                    continue;
+                }
+            }
+        } else {
+            // tuple struct: match the `)`
+            let mut d = 0i64;
+            let mut k = j;
+            let mut close = j;
+            while k < t.len() {
+                match tx(t, k) {
+                    "(" => d += 1,
+                    ")" => {
+                        d -= 1;
+                        if d == 0 {
+                            close = k;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            (j, close)
+        };
+        let mut fields: Vec<(String, usize)> = Vec::new();
+        for k in (open + 1)..close {
+            let tk = &t[k];
+            if tk.kind != Kind::Ident {
+                continue;
+            }
+            if matches!(tk.text.as_str(), "pub" | "crate" | "super" | "in" | "dyn" | "mut") {
+                continue;
+            }
+            // `ident :` (single colon) is a field name, not a type
+            let single_colon = tx(t, k + 1) == ":" && tx(t, k + 2) != ":";
+            if single_colon {
+                continue;
+            }
+            fields.push((tk.text.clone(), tk.line));
+        }
+        map.insert(name.text.clone(), TypeItem { file: fi, line: name.line, fields });
+        i = close + 1;
+    }
+}
+
+/// Fn items with signatures: visibility, impl target, body span, params
+/// (binding name + type idents), and return-type idents.
+fn parse_fns(fi: usize, t: &[Tok], pairs: &HashMap<usize, usize>, out: &mut Vec<FnItem>) {
+    // impl spans: (target, open brace, close brace)
+    let mut impl_spans: Vec<(String, usize, usize)> = Vec::new();
+    let mut i = 0usize;
+    while i < t.len() {
+        if t[i].kind == Kind::Ident && t[i].text == "impl" {
+            let mut j = i + 1;
+            // skip the generic parameter list `impl<T, U>`
+            if tx(t, j) == "<" {
+                let mut angle = 0i64;
+                while j < t.len() {
+                    match tx(t, j) {
+                        "<" => angle += 1,
+                        ">" => {
+                            angle -= 1;
+                            if angle == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            }
+            let mut target: Option<String> = None;
+            let mut saw_for = false;
+            while j < t.len() && tx(t, j) != "{" && tx(t, j) != ";" {
+                if t[j].kind == Kind::Ident {
+                    if t[j].text == "for" {
+                        saw_for = true;
+                    } else if saw_for {
+                        target = Some(t[j].text.clone());
+                        saw_for = false;
+                    } else if target.is_none() {
+                        target = Some(t[j].text.clone());
+                    }
+                }
+                j += 1;
+            }
+            if j < t.len() && tx(t, j) == "{" {
+                if let (Some(tg), Some(&close)) = (target, pairs.get(&j)) {
+                    impl_spans.push((tg, j, close));
+                }
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    for i in 0..t.len() {
+        if t[i].kind != Kind::Ident || t[i].text != "fn" {
+            continue;
+        }
+        let Some(name_tok) = t.get(i + 1) else { continue };
+        if name_tok.kind != Kind::Ident {
+            continue;
+        }
+        // visibility: scan back a handful of tokens for `pub` without
+        // crossing a statement boundary
+        let mut is_pub = false;
+        let mut k = i;
+        for _ in 0..6 {
+            if k == 0 {
+                break;
+            }
+            k -= 1;
+            match tx(t, k) {
+                "pub" => {
+                    is_pub = true;
+                    break;
+                }
+                "{" | "}" | ";" => break,
+                _ => {}
+            }
+        }
+        // skip fn generics `<...>` to the parameter list
+        let mut j = i + 2;
+        if tx(t, j) == "<" {
+            let mut angle = 0i64;
+            while j < t.len() {
+                match tx(t, j) {
+                    "<" => angle += 1,
+                    ">" if tx(t, j.wrapping_sub(1)) != "-" => {
+                        angle -= 1;
+                        if angle == 0 {
+                            j += 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+        // parameter list span
+        let mut params: Vec<(String, Vec<String>)> = Vec::new();
+        let mut params_end = j;
+        if tx(t, j) == "(" {
+            let mut d = 0i64;
+            let mut k = j;
+            while k < t.len() {
+                match tx(t, k) {
+                    "(" | "[" => d += 1,
+                    ")" | "]" => {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            parse_params(t, j + 1, k, &mut params);
+            params_end = k + 1;
+        }
+        // return-type idents: `-> ...` until `{` / `;` / `where`
+        let mut ret: Vec<String> = Vec::new();
+        let mut j = params_end;
+        if tx(t, j) == "-" && tx(t, j + 1) == ">" {
+            j += 2;
+            let mut d = 0i64;
+            while j < t.len() {
+                match tx(t, j) {
+                    "(" | "[" => d += 1,
+                    ")" | "]" => d -= 1,
+                    "{" | ";" if d <= 0 => break,
+                    "where" if d <= 0 => break,
+                    _ => {
+                        if t[j].kind == Kind::Ident {
+                            ret.push(t[j].text.clone());
+                        }
+                    }
+                }
+                j += 1;
+            }
+        }
+        // body: first `{` at bracket depth 0 before a `;`
+        let mut body: Option<(usize, usize)> = None;
+        let mut depth = 0i64;
+        let mut j = i + 2;
+        while j < t.len() {
+            match tx(t, j) {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "{" if depth == 0 => {
+                    if let Some(&close) = pairs.get(&j) {
+                        body = Some((j, close));
+                    }
+                    break;
+                }
+                ";" if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let impl_target = impl_spans
+            .iter()
+            .filter(|(_, o, c)| *o < i && i < *c)
+            .min_by_key(|(_, o, c)| c - o)
+            .map(|(tg, _, _)| tg.clone());
+        out.push(FnItem {
+            name: name_tok.text.clone(),
+            file: fi,
+            line: t[i].line,
+            is_pub,
+            impl_target,
+            body,
+            params,
+            ret,
+            marked: false,
+        });
+    }
+}
+
+/// Split the parameter span `[open, close)` on top-level commas; each
+/// chunk `pat: Type` yields (last ident before the single `:`, idents
+/// after it).  `self` receivers are skipped.
+fn parse_params(t: &[Tok], open: usize, close: usize, out: &mut Vec<(String, Vec<String>)>) {
+    let mut chunk_start = open;
+    let mut d = 0i64;
+    let mut k = open;
+    loop {
+        let at_end = k >= close;
+        let is_split = at_end || (d == 0 && tx(t, k) == ",");
+        if is_split {
+            let chunk = &t[chunk_start..k.min(close)];
+            // the single `:` separating pattern from type (not `::`)
+            let colon = chunk.iter().enumerate().position(|(ci, c)| {
+                c.text == ":"
+                    && chunk.get(ci + 1).map(|n| n.text != ":").unwrap_or(true)
+                    && (ci == 0 || chunk[ci - 1].text != ":")
+            });
+            if let Some(ci) = colon {
+                let name = chunk[..ci]
+                    .iter()
+                    .rev()
+                    .find(|c| c.kind == Kind::Ident && c.text != "mut" && c.text != "ref");
+                let tys: Vec<String> = chunk[ci + 1..]
+                    .iter()
+                    .filter(|c| c.kind == Kind::Ident)
+                    .map(|c| c.text.clone())
+                    .collect();
+                if let Some(n) = name {
+                    if n.text != "self" {
+                        out.push((n.text.clone(), tys));
+                    }
+                }
+            }
+            chunk_start = k + 1;
+        }
+        if at_end {
+            break;
+        }
+        match tx(t, k) {
+            "(" | "[" | "{" => d += 1,
+            ")" | "]" | "}" => d -= 1,
+            _ => {}
+        }
+        k += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::source_from;
+
+    fn graph(src: &str) -> (Vec<SourceFile>, ItemGraph) {
+        let (f, v) = source_from("rust/src/x.rs", src);
+        assert!(v.is_empty(), "{v:?}");
+        let files = vec![f];
+        let g = ItemGraph::build(&files);
+        (files, g)
+    }
+
+    #[test]
+    fn use_aliases_resolve() {
+        let (_, g) = graph(
+            "use std::rc::Rc as Shared;\n\
+             use std::sync::{Arc, mpsc::{Sender, SyncSender as Stx}};\n\
+             use crate::kvcache::KvCache;\n",
+        );
+        assert_eq!(g.canon(0, "Shared"), "std::rc::Rc");
+        assert_eq!(g.canon(0, "Arc"), "std::sync::Arc");
+        assert_eq!(g.canon(0, "Stx"), "std::sync::mpsc::SyncSender");
+        assert_eq!(g.canon(0, "KvCache"), "crate::kvcache::KvCache");
+        assert_eq!(g.canon(0, "Unknown"), "Unknown");
+    }
+
+    #[test]
+    fn use_self_binds_module() {
+        let (_, g) = graph("use crate::util::{self, lockorder};\n");
+        assert_eq!(g.canon(0, "util"), "crate::util");
+        assert_eq!(g.canon(0, "lockorder"), "crate::util::lockorder");
+    }
+
+    #[test]
+    fn type_alias_fields_feed_type_graph() {
+        let (_, g) = graph("type PageRef = std::rc::Rc<Page>;\nstruct Page { n: u32 }\n");
+        let fields: Vec<&str> =
+            g.types["PageRef"].fields.iter().map(|(s, _)| s.as_str()).collect();
+        assert!(fields.contains(&"Rc"));
+        assert!(fields.contains(&"Page"));
+    }
+
+    #[test]
+    fn fn_signatures_parsed() {
+        let (_, g) = graph(
+            "impl KvCache {\n\
+             pub fn write(&mut self, rows: &[Vec<f32>], n: usize) -> Option<PageRef> { None }\n\
+             }\n\
+             fn helper<T: Clone>(x: T, mut s: String) -> u32 { 0 }\n",
+        );
+        let w = g.fns.iter().find(|f| f.name == "write").unwrap();
+        assert!(w.is_pub);
+        assert_eq!(w.impl_target.as_deref(), Some("KvCache"));
+        assert_eq!(w.qname(), "KvCache::write");
+        assert_eq!(w.params.len(), 2);
+        assert_eq!(w.params[0].0, "rows");
+        assert!(w.params[0].1.contains(&"Vec".to_string()));
+        assert!(w.ret.contains(&"PageRef".to_string()));
+        let h = g.fns.iter().find(|f| f.name == "helper").unwrap();
+        assert!(!h.is_pub);
+        assert_eq!(h.params[1].0, "s");
+        assert!(h.params[1].1.contains(&"String".to_string()));
+    }
+
+    #[test]
+    fn generic_impl_target() {
+        let (_, g) = graph("impl<T> Holder<T> { fn get(&self) -> &T { &self.0 } }\nstruct Holder<T>(T);");
+        let f = g.fns.iter().find(|f| f.name == "get").unwrap();
+        assert_eq!(f.impl_target.as_deref(), Some("Holder"));
+    }
+
+    #[test]
+    fn marker_attaches_to_following_fn() {
+        let (_, g) = graph(
+            "impl KvCache {\n\
+             /// #[hass::mutates_storage]\n\
+             /// Writes rows.\n\
+             pub fn write(&mut self) {}\n\
+             pub fn read(&self) {}\n\
+             }\nstruct KvCache;",
+        );
+        assert!(g.fns.iter().find(|f| f.name == "write").unwrap().marked);
+        assert!(!g.fns.iter().find(|f| f.name == "read").unwrap().marked);
+        assert!(g.dangling_markers.is_empty());
+    }
+
+    #[test]
+    fn dangling_marker_recorded() {
+        let (_, g) = graph("/// #[hass::mutates_storage]\nstruct NotAFn;\n");
+        assert_eq!(g.dangling_markers, vec![(0, 1)]);
+    }
+}

@@ -1,0 +1,256 @@
+//! Integration fixtures for the whole-crate rules (R7 lock-order,
+//! R8 thread-escape, R9 stamp-discipline) plus the baseline workflow.
+//!
+//! Unlike the unit tests in `src/rules.rs` (single-file, rule-at-a-time)
+//! these fixtures cross file boundaries the way the production tree
+//! does — the call graph has to resolve callees in *other* files for the
+//! witness chains to come out right — and they assert the witness
+//! chains EXACTLY, line numbers included.  If a refactor changes how
+//! frames are rendered, these tests are the contract that breaks.
+
+use hass_analyze::report::{fingerprint, Baseline};
+use hass_analyze::run_sources;
+
+// ---------------------------------------------------------------------
+// R7 lock-order
+// ---------------------------------------------------------------------
+
+/// Two files acquire WORKER_QUEUE and STATS in opposite orders, each
+/// through a one-call indirection.  One cycle, reported once, anchored
+/// at the lexicographically smallest class (STATS), with a full
+/// acquire -> call -> acquire witness for BOTH edges.
+#[test]
+fn r7_cross_file_inversion_exact_witness() {
+    let sched = "fn push_job() {\n\
+                 \x20   let _q = trace(WORKER_QUEUE);\n\
+                 \x20   bump_stats();\n\
+                 }\n\
+                 fn bump_stats() {\n\
+                 \x20   let _s = trace(STATS);\n\
+                 }\n";
+    let drain = "fn drain() {\n\
+                 \x20   let _s = trace(STATS);\n\
+                 \x20   requeue();\n\
+                 }\n\
+                 fn requeue() {\n\
+                 \x20   let _q = trace(WORKER_QUEUE);\n\
+                 }\n";
+    let v = run_sources(&[
+        ("rust/src/scheduler/mod.rs", sched),
+        ("rust/src/scheduler/drain.rs", drain),
+    ]);
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].rule, "lock-order");
+    // anchored at the STATS -> WORKER_QUEUE edge (drain.rs, line 2)
+    assert_eq!(v[0].file, "rust/src/scheduler/drain.rs");
+    assert_eq!(v[0].line, 2);
+    assert!(
+        v[0].msg.contains("potential lock-order cycle: STATS -> WORKER_QUEUE -> STATS"),
+        "{}",
+        v[0].msg
+    );
+    assert_eq!(
+        v[0].witness,
+        vec![
+            "rust/src/scheduler/drain.rs:2: drain acquires STATS".to_string(),
+            "rust/src/scheduler/drain.rs:3: drain -> requeue".to_string(),
+            "rust/src/scheduler/drain.rs:6: requeue acquires WORKER_QUEUE".to_string(),
+            "rust/src/scheduler/mod.rs:2: push_job acquires WORKER_QUEUE".to_string(),
+            "rust/src/scheduler/mod.rs:3: push_job -> bump_stats".to_string(),
+            "rust/src/scheduler/mod.rs:6: bump_stats acquires STATS".to_string(),
+        ]
+    );
+}
+
+/// Same two classes, same indirection depth, but every path acquires
+/// WORKER_QUEUE before STATS: no cycle, no finding.
+#[test]
+fn r7_cross_file_consistent_order_is_clean() {
+    let a = "fn push_job() { let _q = trace(WORKER_QUEUE); bump_stats(); }\n\
+             fn bump_stats() { let _s = trace(STATS); }\n";
+    let b = "fn drain() { let _q = trace(WORKER_QUEUE); flush_stats(); }\n\
+             fn flush_stats() { let _s = trace(STATS); }\n";
+    let v = run_sources(&[
+        ("rust/src/scheduler/mod.rs", a),
+        ("rust/src/scheduler/drain.rs", b),
+    ]);
+    assert!(v.is_empty(), "{v:?}");
+}
+
+// ---------------------------------------------------------------------
+// R8 thread-escape
+// ---------------------------------------------------------------------
+
+/// A helper in another file returns a `Handle` that embeds an `Rc`; the
+/// caller binds it and moves it into a `spawn`.  The witness walks the
+/// whole flow: capture site -> binding -> returning call -> type chain
+/// down to the non-Send core.
+#[test]
+fn r8_helper_returned_handle_into_spawn_exact_witness() {
+    let handles = "use std::rc::Rc;\n\
+                   pub struct Handle {\n\
+                   \x20   pub slots: Rc<Vec<u32>>,\n\
+                   }\n\
+                   pub fn make_handle() -> Handle {\n\
+                   \x20   Handle { slots: Rc::new(vec![]) }\n\
+                   }\n";
+    let engine = "fn start() {\n\
+                  \x20   let h = make_handle();\n\
+                  \x20   std::thread::spawn(move || {\n\
+                  \x20       let _ = h;\n\
+                  \x20   });\n\
+                  }\n";
+    let v = run_sources(&[
+        ("rust/src/engine/handles.rs", handles),
+        ("rust/src/engine/mod.rs", engine),
+    ]);
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].rule, "thread-escape");
+    assert_eq!(v[0].file, "rust/src/engine/mod.rs");
+    assert_eq!(v[0].line, 4);
+    assert!(
+        v[0].msg.contains("`h` carries non-Send state into a spawn"),
+        "{}",
+        v[0].msg
+    );
+    assert_eq!(
+        v[0].witness,
+        vec![
+            "rust/src/engine/mod.rs:4: `h` (bound at line 2) is captured by the spawn here"
+                .to_string(),
+            "rust/src/engine/mod.rs:2: `h` bound from make_handle() returning `Handle`"
+                .to_string(),
+            "rust/src/engine/handles.rs:3: Handle holds non-Send `Rc`".to_string(),
+        ]
+    );
+}
+
+/// The same tainted helper used entirely on one thread (no spawn/send/
+/// Arc::new span) is fine — R8 is value-flow into escape sites, not a
+/// blanket Rc ban (the per-worker engine `Runtime` is Rc-based by
+/// design).
+#[test]
+fn r8_tainted_helper_on_one_thread_is_clean() {
+    let handles = "use std::rc::Rc;\n\
+                   pub struct Handle {\n\
+                   \x20   pub slots: Rc<Vec<u32>>,\n\
+                   }\n\
+                   pub fn make_handle() -> Handle {\n\
+                   \x20   Handle { slots: Rc::new(vec![]) }\n\
+                   }\n";
+    let engine = "fn start() {\n\
+                  \x20   let h = make_handle();\n\
+                  \x20   drop(h);\n\
+                  }\n";
+    let v = run_sources(&[
+        ("rust/src/engine/handles.rs", handles),
+        ("rust/src/engine/mod.rs", engine),
+    ]);
+    assert!(v.is_empty(), "{v:?}");
+}
+
+// ---------------------------------------------------------------------
+// R9 stamp-discipline
+// ---------------------------------------------------------------------
+
+/// An unmarked pub fn reaching `page_mut` two calls down fires with the
+/// exact call chain; the private middleman (under no marked fn) fires
+/// too, with its own one-hop chain.
+#[test]
+fn r9_unmarked_transitive_writer_exact_witness() {
+    let kv = "pub struct KvCache {\n\
+              \x20   n: usize,\n\
+              }\n\
+              impl KvCache {\n\
+              \x20   fn page_mut(&mut self) -> &mut usize {\n\
+              \x20       &mut self.n\n\
+              \x20   }\n\
+              \x20   fn ensure_page(&mut self) {\n\
+              \x20       self.page_mut();\n\
+              \x20   }\n\
+              \x20   pub fn write_rows(&mut self) {\n\
+              \x20       self.ensure_page();\n\
+              \x20   }\n\
+              }\n";
+    let v = run_sources(&[("rust/src/kvcache/mod.rs", kv)]);
+    assert_eq!(v.len(), 2, "{v:?}");
+    assert!(v.iter().all(|x| x.rule == "stamp-discipline"), "{v:?}");
+    // sorted by line: ensure_page (8) then write_rows (11)
+    assert_eq!(v[0].line, 8);
+    assert!(v[0].msg.contains("private fn `ensure_page`"), "{}", v[0].msg);
+    assert_eq!(
+        v[0].witness,
+        vec!["rust/src/kvcache/mod.rs:9: KvCache::ensure_page -> KvCache::page_mut".to_string()]
+    );
+    assert_eq!(v[1].line, 11);
+    assert!(
+        v[1].msg.contains(
+            "pub fn `write_rows` reaches page-storage writes through its call chain"
+        ),
+        "{}",
+        v[1].msg
+    );
+    assert_eq!(
+        v[1].witness,
+        vec![
+            "rust/src/kvcache/mod.rs:12: KvCache::write_rows -> KvCache::ensure_page".to_string(),
+            "rust/src/kvcache/mod.rs:9: KvCache::ensure_page -> KvCache::page_mut".to_string(),
+        ]
+    );
+}
+
+/// Marking the pub entry point covers it AND its private helper: the
+/// helper sits on a marked fn's call path, so neither fires.
+#[test]
+fn r9_marked_entry_point_covers_the_chain() {
+    let kv = "pub struct KvCache {\n\
+              \x20   n: usize,\n\
+              }\n\
+              impl KvCache {\n\
+              \x20   fn page_mut(&mut self) -> &mut usize {\n\
+              \x20       &mut self.n\n\
+              \x20   }\n\
+              \x20   fn ensure_page(&mut self) {\n\
+              \x20       self.page_mut();\n\
+              \x20   }\n\
+              \x20   /// `#[hass::mutates_storage]` — allocates pages\n\
+              \x20   pub fn write_rows(&mut self) {\n\
+              \x20       self.ensure_page();\n\
+              \x20   }\n\
+              }\n";
+    let v = run_sources(&[("rust/src/kvcache/mod.rs", kv)]);
+    assert!(v.is_empty(), "{v:?}");
+}
+
+// ---------------------------------------------------------------------
+// Baseline workflow (grandfather -> gate on new)
+// ---------------------------------------------------------------------
+
+/// End-to-end over the public API: a wire key emitted with no reader is
+/// a `wire-dead` warning; `render_updated` grandfathers it, the parsed
+/// baseline suppresses exactly that fingerprint, and a genuinely new
+/// finding is NOT covered.
+#[test]
+fn baseline_covers_old_findings_but_not_new_ones() {
+    let server = "fn stats_line() -> Json {\n\
+                  \x20   Json::obj(vec![(\"queue_ms\", Json::num(1.0))])\n\
+                  }\n";
+    let v = run_sources(&[("rust/src/server/mod.rs", server)]);
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].rule, "wire-dead");
+    assert_eq!(v[0].severity, "warning");
+    assert!(v[0].msg.contains("wire key \"queue_ms\" is emitted but no reader"), "{}", v[0].msg);
+
+    // grandfather the current findings, then re-run with a second dead
+    // key: only the new one should be un-baselined
+    let baseline = Baseline::parse(&Baseline::default().render_updated(&v));
+    assert!(baseline.contains(&fingerprint(&v[0])));
+    let server2 = "fn stats_line() -> Json {\n\
+                   \x20   Json::obj(vec![(\"queue_ms\", Json::num(1.0)),\n\
+                   \x20                  (\"busy_ms\", Json::num(2.0))])\n\
+                   }\n";
+    let v2 = run_sources(&[("rust/src/server/mod.rs", server2)]);
+    let fresh: Vec<_> = v2.iter().filter(|x| !baseline.contains(&fingerprint(x))).collect();
+    assert_eq!(fresh.len(), 1, "{fresh:?}");
+    assert!(fresh[0].msg.contains("\"busy_ms\""), "{}", fresh[0].msg);
+}

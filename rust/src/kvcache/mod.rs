@@ -435,6 +435,9 @@ impl KvCache {
     /// the caller claimed without writing), for fused packing.  The draft
     /// path packs past `committed` — its scratch tree rows live above the
     /// committed boundary but must travel with the prefix.
+    ///
+    /// `#[hass::mutates_storage]` — allocates missing pages (fresh
+    /// `(id, stamp)` identities) even though it writes no rows.
     pub fn pages_covering(&mut self, prefix: usize) -> Vec<PageRef> {
         let n = prefix.min(self.slots).div_ceil(self.page_size);
         (0..n)
@@ -448,6 +451,8 @@ impl KvCache {
 
     /// Handles for the pages backing the committed prefix, for fused
     /// packing.
+    ///
+    /// `#[hass::mutates_storage]` — allocates via [`KvCache::pages_covering`].
     pub fn committed_pages(&mut self) -> Vec<PageRef> {
         let c = self.committed;
         self.pages_covering(c)
@@ -457,6 +462,9 @@ impl KvCache {
     /// distinct ids are what page-granular occupancy counts).  Allocates
     /// missing pages like [`KvCache::pages_covering`] but clones no
     /// handles.
+    ///
+    /// `#[hass::mutates_storage]` — allocates missing pages (fresh
+    /// `(id, stamp)` identities).
     pub fn page_ids_covering(&mut self, prefix: usize) -> Vec<u64> {
         let n = prefix.min(self.slots).div_ceil(self.page_size);
         (0..n)
@@ -469,6 +477,8 @@ impl KvCache {
     }
 
     /// Ids of the committed-prefix pages.
+    ///
+    /// `#[hass::mutates_storage]` — allocates via [`KvCache::page_ids_covering`].
     pub fn committed_page_ids(&mut self) -> Vec<u64> {
         let c = self.committed;
         self.page_ids_covering(c)

@@ -178,12 +178,19 @@ fn run(args: &Args) -> Result<()> {
             Ok(())
         }
         "analyze" => {
-            let paths: Vec<String> = if args.positionals.is_empty() {
-                vec!["rust/src".to_string()]
-            } else {
-                args.positionals.clone()
-            };
-            let code = hass_analyze::run_cli(&paths);
+            // forward the analyzer flags; paths default inside run_cli
+            let mut argv: Vec<String> = Vec::new();
+            for flag in ["format", "baseline"] {
+                let v = args.get_or(flag, "");
+                if !v.is_empty() {
+                    argv.push(format!("--{flag}={v}"));
+                }
+            }
+            if args.has("update-baseline") {
+                argv.push("--update-baseline".to_string());
+            }
+            argv.extend(args.positionals.iter().cloned());
+            let code = hass_analyze::run_cli(&argv);
             if code != 0 {
                 bail!("hass-analyze found violations (exit {code})");
             }

@@ -393,6 +393,7 @@ impl WorkerQueue {
     }
 
     fn is_empty(&self) -> bool {
+        // hass-lint: allow(lock-order) — the `.is_empty()` below is VecDeque's, called on the held guard; name-based call resolution reads it as WorkerQueue::is_empty and infers same-class re-entry
         let _t = lockorder::trace(lockorder::WORKER_QUEUE);
         self.q.lock().unwrap_or_else(|p| p.into_inner()).is_empty()
     }
@@ -1847,9 +1848,7 @@ fn complete(ctx: &WorkerCtx, a: &mut ActiveJob, error: Option<String>) {
             error: None,
         },
     };
-    {
-        let mut stats = ctx.stats.lock().unwrap_or_else(|p| p.into_inner());
-        let w = &mut stats[ctx.id];
+    ctx.with_stats(|w| {
         w.busy_s += a.cpu_s;
         a.cpu_s = 0.0;
         w.tokens += result.tokens as u64;
@@ -1860,7 +1859,7 @@ fn complete(ctx: &WorkerCtx, a: &mut ActiveJob, error: Option<String>) {
                 w.metrics.merge(&a.state.metrics);
             }
         }
-    }
+    });
     let _ = a.rtx.send(JobEvent::Done(result));
 }
 
@@ -1876,11 +1875,10 @@ fn reject(
     rtx: &Sender<JobEvent>,
 ) {
     ctx.take_cancel(job.id);
-    {
-        let mut stats = ctx.stats.lock().unwrap_or_else(|p| p.into_inner());
-        stats[ctx.id].jobs_err += 1;
-        stats[ctx.id].busy_s += busy_s;
-    }
+    ctx.with_stats(|w| {
+        w.jobs_err += 1;
+        w.busy_s += busy_s;
+    });
     let _ = rtx.send(JobEvent::Done(err_result(job, queue_s, latency_s, msg, ctx.id)));
 }
 
