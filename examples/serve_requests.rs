@@ -16,10 +16,13 @@
 //! verification); the run ends with a streamed request that counts
 //! per-cycle delta lines, followed by a fused-vs-solo verification
 //! comparison (one worker, `--max-active 1` vs `4`, same jobs) whose
-//! numbers are written to `BENCH_fused_verify.json`, and a paged-KV
+//! numbers are written to `BENCH_fused_verify.json`, a paged-KV
 //! shared-prompt scenario (host pack bytes/cycle and fusion capacity,
 //! paged vs. contiguous, plus scheduler pack counters) written to
-//! `BENCH_paged_kv.json`.
+//! `BENCH_paged_kv.json`, and a shared-page-pool scenario (physical vs
+//! logical prompt pages across 2 worker threads, plus a 2-worker fleet
+//! with prefix-affinity routing on vs off) written to
+//! `BENCH_page_pool.json`.
 
 use std::sync::Arc;
 
@@ -161,6 +164,7 @@ fn main() -> anyhow::Result<()> {
     fused_verify_bench(&dir, &wl, &method, n_requests)?;
     paged_kv_bench(&dir, &method)?;
     draft_batch_bench(&dir, &wl, &method, n_requests)?;
+    page_pool_bench(&dir, &method)?;
     Ok(())
 }
 
@@ -579,5 +583,185 @@ fn draft_batch_bench(
     kv.push(("fused_over_solo_tok_per_s", Json::num(speedup)));
     std::fs::write("BENCH_draft_batch.json", Json::obj(kv).to_string())?;
     println!("  wrote BENCH_draft_batch.json");
+    Ok(())
+}
+
+/// Shared-page-pool scenario (PR 8): the pool-wide `Arc` page registry
+/// dedups identical prompt pages ACROSS worker threads, and prefix-
+/// affinity dispatch routes same-prefix sessions to the worker whose
+/// pages are already hot.
+///
+/// Two parts:
+/// * a host microbench: 2 OS threads ("workers") each absorb the same
+///   prompt KV into 4 caches; physical pages = distinct page ids
+///   pool-wide vs logical pages = Σ per-cache prompt pages.  Under the
+///   old per-thread `Rc` registry the threads could never share, so
+///   physical was ~2x one prompt's pages; the shared pool holds them
+///   once (~1x);
+/// * a same-prefix fleet through a 2-worker scheduler pool with
+///   prefix-affinity routing on vs off: tok/s plus the routing counters
+///   (`affinity_hits`/`affinity_misses`/`cross_worker_shared_pages`)
+///   and the registry gauges.
+///
+/// Results go to stdout and `BENCH_page_pool.json`.
+fn page_pool_bench(dir: &std::path::Path, method: &str) -> anyhow::Result<()> {
+    use std::collections::HashSet;
+
+    use hass::kvcache::KvCache;
+    use hass::runtime::TensorF;
+    use hass::scheduler::{Job, Scheduler};
+    use hass::util::json::Json;
+
+    // ---- host microbench: cross-thread prompt-page dedup ----
+    let (layers, slots, heads, hd) = (2usize, 128usize, 2usize, 8usize);
+    let rs = heads * hd;
+    let (n_threads, caches_per, prompt_len) = (2usize, 4usize, 96usize);
+    // no captures: the tensor builder must cross the spawn boundary
+    fn prompt_tensors(layers: usize, slots: usize, heads: usize, hd: usize) -> (TensorF, TensorF) {
+        let n = layers * slots * heads * hd;
+        let f =
+            |i: usize| ((i as u32).wrapping_mul(2654435761).wrapping_add(7) % 9973) as f32 * 0.1;
+        (
+            TensorF { dims: vec![layers, slots, heads, hd], data: (0..n).map(f).collect() },
+            TensorF { dims: vec![layers, slots, heads, hd], data: (0..n).map(|i| -f(i)).collect() },
+        )
+    }
+    let threads: Vec<_> = (0..n_threads)
+        .map(|_| {
+            std::thread::spawn(move || {
+                (0..caches_per)
+                    .map(|_| {
+                        let mut c = KvCache::new(layers, slots, heads, hd);
+                        let (k, v) = prompt_tensors(layers, slots, heads, hd);
+                        c.absorb(k, v, prompt_len).expect("absorb prompt");
+                        c.committed = prompt_len;
+                        c
+                    })
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    let mut caches: Vec<KvCache> = Vec::new();
+    for h in threads {
+        caches.extend(h.join().expect("worker thread"));
+    }
+    let page = caches[0].page_size();
+    let mut physical: HashSet<u64> = HashSet::new();
+    let mut logical = 0usize;
+    for c in caches.iter_mut() {
+        let pages = c.committed_pages();
+        logical += pages.len();
+        physical.extend(pages.iter().map(|p| p.id()));
+    }
+    let page_bytes = 2 * layers * page * rs * 4; // k + v, f32
+    let physical_bytes = physical.len() * page_bytes;
+    let logical_bytes = logical * page_bytes;
+    println!("\n== shared page pool: physical vs logical prompt pages ==");
+    println!(
+        "  {n_threads} threads x {caches_per} caches, {prompt_len}-slot shared prompt, \
+         page={page}"
+    );
+    println!(
+        "  physical={} pages ({physical_bytes} B) vs logical={logical} pages \
+         ({logical_bytes} B) -> {:.2}x dedup",
+        physical.len(),
+        logical as f64 / physical.len().max(1) as f64,
+    );
+    drop(caches);
+
+    // ---- 2-worker fleet: prefix-affinity routing on vs off ----
+    let method = {
+        let resolved = resolve_runnable(dir, method)?;
+        if resolved != method {
+            println!("  (page-pool bench: '{method}' unavailable, using 'mock')");
+        }
+        resolved
+    };
+    let shared_prompt = "User: Summarize the history of container shipping.\nAssistant:";
+    let n_jobs = 8usize;
+    println!("== shared page pool: 2-worker fleet, affinity off vs on ('{method}') ==");
+    let mut report: Vec<(&str, Json)> = Vec::new();
+    let mut tok_per_s = [0.0f64; 2];
+    for (pass, &(label, affinity)) in
+        [("affinity_off", false), ("affinity_on", true)].iter().enumerate()
+    {
+        let sched = Scheduler::start_with_affinity(
+            dir.to_path_buf(),
+            MethodCfg::default(),
+            64,
+            2,
+            4,
+            affinity,
+        );
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let t0 = std::time::Instant::now();
+        for i in 0..n_jobs {
+            let job = Job {
+                id: i as u64 + 1,
+                method: method.clone(),
+                prompt: shared_prompt.to_string(),
+                max_new: 24,
+                temperature: 0.0,
+                seed: i as u64,
+                stream: false,
+                deadline_ms: None,
+            };
+            sched.submit_to(job, true, rtx.clone())?;
+        }
+        drop(rtx);
+        let mut tokens = 0usize;
+        let mut errors = 0usize;
+        for r in rrx.iter().filter_map(hass::scheduler::JobEvent::into_result) {
+            match r.error {
+                Some(_) => errors += 1,
+                None => tokens += r.tokens,
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = sched.stats();
+        sched.shutdown();
+        tok_per_s[pass] = if wall > 0.0 { tokens as f64 / wall } else { 0.0 };
+        let workers_used = stats.workers.iter().filter(|w| w.jobs() > 0).count();
+        println!(
+            "  {label:<12}: {tokens} tokens in {wall:.2}s ({:.1} tok/s)  \
+             workers_used={workers_used} hits={} misses={} cross_shared={} \
+             registry_entries={} errors={errors}",
+            tok_per_s[pass],
+            stats.affinity_hits(),
+            stats.affinity_misses(),
+            stats.cross_worker_shared_pages(),
+            stats.registry_entries,
+        );
+        report.push((
+            label,
+            Json::obj(vec![
+                ("jobs", Json::num(n_jobs as f64)),
+                ("errors", Json::num(errors as f64)),
+                ("tokens", Json::num(tokens as f64)),
+                ("wall_s", Json::num(wall)),
+                ("tok_per_s", Json::num(tok_per_s[pass])),
+                ("workers_used", Json::num(workers_used as f64)),
+                ("affinity_hits", Json::num(stats.affinity_hits() as f64)),
+                ("affinity_misses", Json::num(stats.affinity_misses() as f64)),
+                ("cross_worker_shared_pages", Json::num(stats.cross_worker_shared_pages() as f64)),
+                ("registry_entries", Json::num(stats.registry_entries as f64)),
+                ("registry_evictions", Json::num(stats.registry_evictions as f64)),
+            ]),
+        ));
+    }
+    let speedup = if tok_per_s[0] > 0.0 { tok_per_s[1] / tok_per_s[0] } else { 0.0 };
+    println!("  affinity-on/off throughput: {speedup:.2}x");
+    let mut kv = vec![
+        ("method", Json::str(method)),
+        ("physical_prompt_pages", Json::num(physical.len() as f64)),
+        ("logical_prompt_pages", Json::num(logical as f64)),
+        ("physical_prompt_bytes", Json::num(physical_bytes as f64)),
+        ("logical_prompt_bytes", Json::num(logical_bytes as f64)),
+        ("page_bytes", Json::num(page_bytes as f64)),
+    ];
+    kv.extend(report);
+    kv.push(("affinity_on_over_off_tok_per_s", Json::num(speedup)));
+    std::fs::write("BENCH_page_pool.json", Json::obj(kv).to_string())?;
+    println!("  wrote BENCH_page_pool.json");
     Ok(())
 }

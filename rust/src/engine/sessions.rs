@@ -4,6 +4,12 @@
 //! model (target GPT, EAGLE/HASS draft net, SpS tiny LM, Medusa heads).
 //! All graph outputs come back as host tensors; the engine layers the
 //! speculative policies (spec/) on top.
+//!
+//! The runtime/checkpoint handles stay per-thread `Rc` (each worker owns
+//! its compiled graphs), but the KV pages underneath every session are
+//! pool-shared `Arc<Page>` (see `kvcache`): fused packs here may stage
+//! pages first absorbed on ANOTHER worker, and COW in `page_mut` keeps a
+//! write on one worker from ever reaching a peer's image.
 
 use std::rc::Rc;
 

@@ -101,7 +101,7 @@ pub(super) fn note_pages(pages: &[Option<PageRef>]) {
 
 fn note_one(seen: &mut HashMap<(u64, u64), u64>, p: &Page) {
     let h = page_hash(p);
-    let key = (p.id, p.stamp.get());
+    let key = (p.id, p.stamp());
     match seen.get(&key) {
         Some(&prev) if prev != h => panic!(
             "hass-check[stamp]: page (id={}, stamp={}) observed with two different \
@@ -115,16 +115,19 @@ fn note_one(seen: &mut HashMap<(u64, u64), u64>, p: &Page) {
     }
 }
 
-/// Re-verify the dedup registry: every live entry must still hash to
-/// the bucket it was registered under.  The COW gate guarantees this
-/// (a page with outstanding weak refs is cloned, never mutated in
-/// place); a violation means a write path bypassed [`KvCache::page_mut`].
+/// Re-verify the pool-wide dedup registry: every live entry, in every
+/// shard, must still hash to the bucket it was registered under.  The
+/// COW gate guarantees this (a page with outstanding weak refs is
+/// cloned, never mutated in place); a violation means a write path
+/// bypassed [`KvCache::page_mut`].  Shards are visited strictly one at
+/// a time — the leaf discipline for `lockorder::PAGE_SHARD`.
 pub(super) fn check_registry() {
-    super::PAGE_DEDUP.with(|reg| {
-        let reg = reg.borrow();
+    for shard in super::registry().iter() {
+        let _t = crate::util::lockorder::trace(crate::util::lockorder::PAGE_SHARD);
+        let reg = shard.lock().unwrap_or_else(|p| p.into_inner());
         for (&bucket_hash, bucket) in reg.buckets.iter() {
-            for w in bucket {
-                let Some(p) = w.upgrade() else { continue };
+            for e in bucket {
+                let Some(p) = e.w.upgrade() else { continue };
                 let h = page_hash(&p);
                 if h != bucket_hash {
                     panic!(
@@ -136,7 +139,7 @@ pub(super) fn check_registry() {
                 }
             }
         }
-    });
+    }
 }
 
 /// Full paged-vs-contiguous equality for a solo cache right after
@@ -153,7 +156,7 @@ pub(super) fn check_image(
 ) {
     note_pages(pages);
     for (pi, slot) in pages.iter().enumerate() {
-        let key = slot.as_ref().map(|p| (p.id, p.stamp.get()));
+        let key = slot.as_ref().map(|p| (p.id, p.stamp()));
         if image.staged[pi] != key {
             panic!(
                 "hass-check[image]: page {pi} staged as {:?} but block table holds {key:?} \
@@ -215,7 +218,7 @@ pub(super) fn check_pack(scr: &FusedScratch, layout: &PackedLayout, members: &[V
         let Some(pg) = slot else {
             panic!("hass-check[pack]: fused page {f} has no backing member page");
         };
-        let key = Some((pg.id, pg.stamp.get()));
+        let key = Some((pg.id, pg.stamp()));
         if scr.staged[f] != key {
             panic!(
                 "hass-check[pack]: fused page {f} staged as {:?} but members hold {key:?}",
@@ -430,9 +433,9 @@ mod tests {
     #[should_panic(expected = "hass-check[stamp]")]
     fn stamp_alias_is_caught() {
         let mk = |fill: f32| {
-            std::rc::Rc::new(Page {
+            std::sync::Arc::new(Page {
                 id: 7,
-                stamp: Cell::new(9),
+                stamp: std::sync::atomic::AtomicU64::new(9),
                 layers: 1,
                 page_size: 2,
                 k: vec![fill; 4],

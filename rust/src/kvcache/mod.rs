@@ -7,26 +7,44 @@
 //! **paged**, not one flat `Vec<f32>`:
 //!
 //! * Storage is split into fixed-size [`Page`]s of `page_size` slots
-//!   (every layer of those slots lives in the page), refcounted via `Rc`.
-//!   A [`KvCache`] is a *block table*: `ceil(slots / page_size)` page
-//!   references, allocated lazily on first write.
+//!   (every layer of those slots lives in the page), refcounted via
+//!   `Arc` — pages move freely between worker threads, so a session
+//!   admitted on worker A and one admitted on worker B can reference
+//!   the *same physical page*.  A [`KvCache`] is a *block table*:
+//!   `ceil(slots / page_size)` page references, allocated lazily on
+//!   first write.
 //! * **Copy-on-write**: writing through [`KvCache::write_rows_from`] or
 //!   [`KvCache::compact_accepted`] clones a page first when anyone else
-//!   still references it (another session, or the prompt-dedup registry
-//!   below).  Cloning a `KvCache` is therefore cheap and safe: both
-//!   copies share pages until they diverge.
-//! * **Shared prompt pages**: [`KvCache::absorb`] (the prefill path)
-//!   rebuilds the pages covering the prompt from the graph output
-//!   (later pages are dropped — masked until rewritten) and runs each
-//!   through a per-thread content-addressed registry — sessions admitted
-//!   with an identical prompt prefix end up referencing the *same*
-//!   physical pages.  The registry holds `Weak` references only,
-//!   verifies byte-for-byte equality on every hit (so a page mutated
-//!   after registration can never be falsely shared), and sweeps dead
-//!   entries periodically.
+//!   still references it (another session — on any thread — or the
+//!   pool registry below).  Cloning a `KvCache` is therefore cheap and
+//!   safe: both copies share pages until they diverge.  The gate is
+//!   race-free without a lock: when `Arc::strong_count == 1` and
+//!   `Arc::weak_count == 0` the writing thread holds the only path to
+//!   the page (nobody else can clone a handle they don't have), and
+//!   `Arc::get_mut` re-verifies sole ownership atomically.
+//! * **Shared prompt pages, pool-wide**: [`KvCache::absorb`] (the
+//!   prefill path) rebuilds the pages covering the prompt from the
+//!   graph output (later pages are dropped — masked until rewritten)
+//!   and runs each through a **sharded, content-addressed pool
+//!   registry** shared by every worker thread — sessions admitted with
+//!   an identical prompt prefix reference the *same* physical pages no
+//!   matter which worker admitted them, so fleet memory scales with
+//!   unique prefixes, not active sessions.  The registry is
+//!   [`REGISTRY_SHARDS`] independently locked shards routed by content
+//!   hash (lock class [`lockorder::PAGE_SHARD`](crate::util::lockorder)
+//!   — a strict leaf: a shard critical section calls nothing that
+//!   locks).  It holds `Weak` references only, verifies byte-for-byte
+//!   equality on every hit (so a hash collision or a page mutated after
+//!   registration can never be falsely shared), prunes dead entries on
+//!   a cadence and on every probed bucket, and caps each shard at
+//!   [`SHARD_ENTRY_CAP`] entries so dead or cold prefixes cannot pin a
+//!   shard ([`registry_stats`] exposes live-entry and eviction gauges).
 //! * Each page carries a unique `id` plus a `stamp` bumped on every
-//!   in-place mutation.  `(id, stamp)` identifies page *content*, which
-//!   is what makes O(changed-pages) packing possible (below).
+//!   in-place mutation (an `AtomicU64`, so pages are `Send + Sync`).
+//!   Ids and stamps are drawn from one global counter, so `(id, stamp)`
+//!   identifies page *content* pool-wide — which is what makes
+//!   O(changed-pages) packing possible (below) even when the pages were
+//!   produced by another worker.
 //!
 //! Commit semantics are unchanged: tree verification writes its N rows at
 //! `committed`; after acceptance the accepted rows are *compacted* down
@@ -76,11 +94,10 @@
 //! composed visibility masks expose exactly the independently derived
 //! slot set.  A divergence panics with a `hass-check[...]` tag.
 
-use std::cell::{Cell, RefCell};
+use std::cell::Cell;
 use std::collections::{HashMap, HashSet};
-use std::rc::{Rc, Weak};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, Mutex, OnceLock, Weak};
 
 use anyhow::{bail, Result};
 
@@ -127,14 +144,18 @@ fn next_stamp() -> u64 {
 
 /// One fixed-size block of KV storage: `page_size` slots across every
 /// layer, for both K and V (layout `[L, page_size, H*hd]`, layer-major).
-/// Pages are shared by `Rc`; mutation goes through the owning cache's
-/// copy-on-write discipline ([`KvCache`] module docs).
+/// Pages are shared by `Arc` across worker threads; mutation goes
+/// through the owning cache's copy-on-write discipline ([`KvCache`]
+/// module docs), so a page's bytes are immutable while any other holder
+/// (or a registry weak) can observe them.
 #[derive(Debug)]
 pub struct Page {
     id: u64,
     /// bumped on every in-place mutation — `(id, stamp)` is the staging
-    /// key that lets packers skip unchanged pages
-    stamp: Cell<u64>,
+    /// key that lets packers skip unchanged pages.  Atomic only so the
+    /// page is `Sync`; stores race with nothing (the COW gate proves the
+    /// writer is the sole owner before bumping).
+    stamp: AtomicU64,
     layers: usize,
     page_size: usize,
     k: Vec<f32>,
@@ -147,46 +168,142 @@ impl Page {
     }
 
     pub fn stamp(&self) -> u64 {
-        self.stamp.get()
+        self.stamp.load(Ordering::Relaxed)
     }
 }
 
-/// Shared handle to one physical page.
-pub type PageRef = Rc<Page>;
+/// Shared handle to one physical page (pool-wide: handles move freely
+/// between worker threads).
+pub type PageRef = Arc<Page>;
 
-/// Per-thread content-addressed page registry (prompt sharing).  Keyed by
-/// a content hash; every hit is verified byte-for-byte, so hash collisions
-/// and post-registration mutations are both harmless.  Dead entries are
-/// pruned per-bucket on every access and globally every
-/// [`DEDUP_SWEEP_EVERY`] registrations, so unique-prompt traffic cannot
-/// grow the registry without bound.
-thread_local! {
-    static PAGE_DEDUP: RefCell<PageRegistry> = RefCell::new(PageRegistry::default());
-}
+/// Number of shards in the pool-wide page registry — content hashes
+/// route to shards, so workers admitting different prompts almost never
+/// contend on the same lock.
+pub const REGISTRY_SHARDS: usize = 16;
 
-/// Global sweep cadence: after this many registrations, drop every bucket
-/// entry whose page died (a dead `Weak` still pins the `RcBox`).
+/// Per-shard live-entry cap: [`RegistryShard::enforce_cap`] evicts past
+/// it so a cold prefix working set cannot pin a shard's memory.  An
+/// evicted live entry only disables future dedup for that content —
+/// sessions keep their strong refs and COW still sees them.
+pub const SHARD_ENTRY_CAP: usize = 4096;
+
+/// Per-shard sweep cadence: after this many registrations, drop every
+/// bucket entry whose page died (a dead `Weak` still pins the `ArcBox`).
 const DEDUP_SWEEP_EVERY: usize = 1024;
 
-#[derive(Default)]
-struct PageRegistry {
-    buckets: HashMap<u64, Vec<Weak<Page>>>,
-    /// registrations since the last global sweep
-    since_sweep: usize,
+/// One registered page: the weak content handle plus the thread that
+/// registered it, so a dedup hit from a *different* thread can be
+/// counted as cross-worker sharing on the stats wire.
+struct RegEntry {
+    w: Weak<Page>,
+    owner: std::thread::ThreadId,
 }
 
-impl PageRegistry {
+/// One shard of the pool-wide content-addressed registry.
+#[derive(Default)]
+struct RegistryShard {
+    buckets: HashMap<u64, Vec<RegEntry>>,
+    /// entries currently held (live or not-yet-swept dead)
+    entries: usize,
+    /// registrations since the last whole-shard prune
+    since_sweep: usize,
+    /// cumulative entries dropped: dead-prefix sweeps + cap evictions
+    evictions: u64,
+}
+
+impl RegistryShard {
+    /// Drop every entry whose page died (dead prefixes must not pin the
+    /// shard), folding the drops into the eviction counter.
+    fn prune(&mut self) {
+        let mut dropped = 0usize;
+        self.buckets.retain(|_, bucket| {
+            let before = bucket.len();
+            bucket.retain(|e| e.w.strong_count() > 0);
+            dropped += before - bucket.len();
+            !bucket.is_empty()
+        });
+        self.entries -= dropped;
+        self.evictions += dropped as u64;
+    }
+
     fn sweep_if_due(&mut self) {
         self.since_sweep += 1;
         if self.since_sweep < DEDUP_SWEEP_EVERY {
             return;
         }
         self.since_sweep = 0;
-        self.buckets.retain(|_, bucket| {
-            bucket.retain(|w| w.strong_count() > 0);
-            !bucket.is_empty()
-        });
+        self.prune();
     }
+
+    /// Keep the shard at or under `cap` entries: prune dead ones first,
+    /// then evict whole buckets (arbitrary order) until under the cap.
+    fn enforce_cap(&mut self, cap: usize) {
+        if self.entries <= cap {
+            return;
+        }
+        self.prune();
+        while self.entries > cap {
+            let Some(&h) = self.buckets.keys().next() else { break };
+            if let Some(bucket) = self.buckets.remove(&h) {
+                self.entries -= bucket.len();
+                self.evictions += bucket.len() as u64;
+            }
+        }
+    }
+}
+
+/// The pool-wide registry: [`REGISTRY_SHARDS`] independently locked
+/// shards.  Shard locks are leaves in the lock order (class
+/// [`lockorder::PAGE_SHARD`](crate::util::lockorder)): a shard critical
+/// section calls nothing that locks, and whole-pool walks
+/// ([`registry_stats`], [`audit::check_registry`]) visit shards strictly
+/// one at a time.
+fn registry() -> &'static [Mutex<RegistryShard>; REGISTRY_SHARDS] {
+    static POOL: OnceLock<[Mutex<RegistryShard>; REGISTRY_SHARDS]> = OnceLock::new();
+    POOL.get_or_init(|| std::array::from_fn(|_| Mutex::new(RegistryShard::default())))
+}
+
+fn shard_of(hash: u64) -> usize {
+    (hash % REGISTRY_SHARDS as u64) as usize
+}
+
+thread_local! {
+    /// Dedup hits THIS thread took on pages first registered by another
+    /// thread, since the last [`take_cross_worker_hits`] drain.
+    static CROSS_HITS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Drain the calling thread's cross-worker dedup-hit counter (scheduler
+/// workers fold it into their `cross_worker_shared_pages` stats row).
+pub fn take_cross_worker_hits() -> u64 {
+    CROSS_HITS.with(|c| c.replace(0))
+}
+
+/// Pool-wide registry gauges for the stats wire.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RegistryStats {
+    /// live registered pages across all shards
+    pub entries: u64,
+    /// cumulative entries dropped (dead-prefix sweeps + cap evictions)
+    pub evictions: u64,
+}
+
+/// Walk the shards (one lock at a time — see [`registry`]) and report
+/// live entries plus cumulative evictions.
+pub fn registry_stats() -> RegistryStats {
+    let mut out = RegistryStats::default();
+    for shard in registry().iter() {
+        let _t = crate::util::lockorder::trace(crate::util::lockorder::PAGE_SHARD);
+        let reg = shard.lock().unwrap_or_else(|p| p.into_inner());
+        out.entries += reg
+            .buckets
+            .values()
+            .flat_map(|b| b.iter())
+            .filter(|e| e.w.strong_count() > 0)
+            .count() as u64;
+        out.evictions += reg.evictions;
+    }
+    out
 }
 
 fn bits_eq(a: &[f32], b: &[f32]) -> bool {
@@ -272,33 +389,54 @@ impl PageSrc<'_> {
 }
 
 /// Return a shared page for this content if a live byte-identical one is
-/// registered, otherwise materialize, register and return a fresh page.
+/// registered anywhere in the pool, otherwise materialize, register and
+/// return a fresh page.  Hits on pages first registered by another
+/// thread are counted into [`take_cross_worker_hits`].
 fn dedup_page(src: &PageSrc) -> PageRef {
     let h = src.hash();
-    PAGE_DEDUP.with(|reg| {
-        let mut reg = reg.borrow_mut();
-        reg.sweep_if_due();
-        let bucket = reg.buckets.entry(h).or_default();
-        bucket.retain(|w| w.strong_count() > 0);
-        for w in bucket.iter() {
-            if let Some(p) = w.upgrade() {
+    let tid = std::thread::current().id();
+    let _t = crate::util::lockorder::trace(crate::util::lockorder::PAGE_SHARD);
+    let mut reg = registry()[shard_of(h)].lock().unwrap_or_else(|p| p.into_inner());
+    reg.sweep_if_due();
+    let mut dropped = 0usize;
+    let mut hit = None;
+    if let Some(bucket) = reg.buckets.get_mut(&h) {
+        let before = bucket.len();
+        bucket.retain(|e| e.w.strong_count() > 0);
+        dropped = before - bucket.len();
+        for e in bucket.iter() {
+            if let Some(p) = e.w.upgrade() {
                 if src.matches(&p) {
-                    return p;
+                    if e.owner != tid {
+                        CROSS_HITS.with(|c| c.set(c.get() + 1));
+                    }
+                    hit = Some(p);
+                    break;
                 }
             }
         }
-        let (pk, pv) = src.materialize();
-        let p = Rc::new(Page {
-            id: next_stamp(),
-            stamp: Cell::new(next_stamp()),
-            layers: src.layers,
-            page_size: src.page_size,
-            k: pk,
-            v: pv,
-        });
-        bucket.push(Rc::downgrade(&p));
-        p
-    })
+    }
+    reg.entries -= dropped;
+    reg.evictions += dropped as u64;
+    if let Some(p) = hit {
+        return p;
+    }
+    let (pk, pv) = src.materialize();
+    let p = Arc::new(Page {
+        id: next_stamp(),
+        stamp: AtomicU64::new(next_stamp()),
+        layers: src.layers,
+        page_size: src.page_size,
+        k: pk,
+        v: pv,
+    });
+    reg.buckets
+        .entry(h)
+        .or_default()
+        .push(RegEntry { w: Arc::downgrade(&p), owner: tid });
+    reg.entries += 1;
+    reg.enforce_cap(SHARD_ENTRY_CAP);
+    p
 }
 
 /// Solo-decode staging state: a contiguous `[L,S,H,hd]` image of the
@@ -383,21 +521,22 @@ impl KvCache {
     }
 
     /// Pages whose refcount shows another holder (another session's block
-    /// table; the dedup registry holds only weak refs and doesn't count).
+    /// table, possibly on another worker thread; the dedup registry holds
+    /// only weak refs and doesn't count).
     pub fn shared_pages(&self) -> usize {
         self.pages
             .iter()
             .flatten()
-            .filter(|p| Rc::strong_count(p) > 1)
+            .filter(|p| Arc::strong_count(p) > 1)
             .count()
     }
 
     fn ensure_page(&mut self, pi: usize) {
         if self.pages[pi].is_none() {
             let n = self.layers * self.page_size * self.row_size();
-            self.pages[pi] = Some(Rc::new(Page {
+            self.pages[pi] = Some(Arc::new(Page {
                 id: next_stamp(),
-                stamp: Cell::new(next_stamp()),
+                stamp: AtomicU64::new(next_stamp()),
                 layers: self.layers,
                 page_size: self.page_size,
                 k: vec![0.0; n],
@@ -411,24 +550,31 @@ impl KvCache {
     /// cloned with a fresh id; a uniquely owned page is mutated in place
     /// with a stamp bump, so staging caches keyed by `(id, stamp)` stay
     /// exact either way.
+    ///
+    /// Race-freedom across threads: when `strong_count == 1` and
+    /// `weak_count == 0` this cache holds the *only* path to the page —
+    /// no other thread can mint a new handle without already holding one
+    /// — so the counts cannot change under us.  `Arc::get_mut` re-checks
+    /// both counts atomically and would refuse (panic here) if that
+    /// reasoning were ever violated.
     fn page_mut(&mut self, pi: usize) -> &mut Page {
         self.ensure_page(pi);
         // hass-lint: allow(no-unwrap) — slot was materialized by ensure_page one line up
         let slot = self.pages[pi].as_mut().expect("page just ensured");
-        if Rc::strong_count(slot) > 1 || Rc::weak_count(slot) > 0 {
-            *slot = Rc::new(Page {
+        if Arc::strong_count(slot) > 1 || Arc::weak_count(slot) > 0 {
+            *slot = Arc::new(Page {
                 id: next_stamp(),
-                stamp: Cell::new(next_stamp()),
+                stamp: AtomicU64::new(next_stamp()),
                 layers: slot.layers,
                 page_size: slot.page_size,
                 k: slot.k.clone(),
                 v: slot.v.clone(),
             });
         } else {
-            slot.stamp.set(next_stamp());
+            slot.stamp.store(next_stamp(), Ordering::Relaxed);
         }
         // hass-lint: allow(no-unwrap) — the branch above just cloned or verified sole ownership
-        Rc::get_mut(slot).expect("uniquely owned page after COW")
+        Arc::get_mut(slot).expect("uniquely owned page after COW")
     }
 
     /// Handles for the pages backing slots `[0, prefix)` (allocating any
@@ -486,9 +632,10 @@ impl KvCache {
 
     /// Replace the cache from graph outputs (`[L,S,H,hd]` tensors) — the
     /// prefill path.  Only the pages covering the `prefix` valid slots
-    /// (the prompt) are materialized, each routed through the per-thread
-    /// dedup registry so sessions prefilled with an identical prompt
-    /// share physical pages until they diverge; pages beyond the prefix
+    /// (the prompt) are materialized, each routed through the pool-wide
+    /// sharded dedup registry so sessions prefilled with an identical
+    /// prompt — on *any* worker thread — share physical pages until they
+    /// diverge; pages beyond the prefix
     /// are dropped (their slots are masked until rewritten), keeping the
     /// per-admission cost O(prompt pages), not O(cache).
     ///
@@ -544,7 +691,7 @@ impl KvCache {
             staged: vec![None; n_pages],
         });
         for (pi, slot) in self.pages.iter().enumerate() {
-            let key = slot.as_ref().map(|p| (p.id, p.stamp.get()));
+            let key = slot.as_ref().map(|p| (p.id, p.stamp()));
             if image.staged[pi] == key {
                 continue;
             }
@@ -1211,7 +1358,7 @@ impl FusedScratch {
             if refs[f] >= 2 {
                 stats.shared_pages += 1;
             }
-            let key = Some((pg.id, pg.stamp.get()));
+            let key = Some((pg.id, pg.stamp()));
             if self.staged[f] == key {
                 stats.pages_reused += 1;
                 continue;
@@ -1739,5 +1886,96 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// Page handles and whole caches must cross threads freely — the
+    /// pool-wide registry and prefix-affinity dispatch depend on it.
+    #[test]
+    fn pages_are_send_and_sync() {
+        fn assert_ss<T: Send + Sync>() {}
+        assert_ss::<PageRef>();
+        assert_ss::<KvCache>();
+    }
+
+    /// Shard bookkeeping: pruning drops dead weaks and counts evictions;
+    /// the cap evicts live buckets once dead ones are gone.
+    #[test]
+    fn registry_shard_prunes_and_caps() {
+        let mk = |seed: u64| {
+            Arc::new(Page {
+                id: seed,
+                stamp: AtomicU64::new(seed),
+                layers: 1,
+                page_size: 1,
+                k: vec![seed as f32; 8],
+                v: vec![seed as f32; 8],
+            })
+        };
+        let tid = std::thread::current().id();
+        let mut shard = RegistryShard::default();
+        let live: Vec<PageRef> = (0..3).map(|i| mk(100 + i)).collect();
+        for (i, p) in live.iter().enumerate() {
+            shard
+                .buckets
+                .entry(i as u64)
+                .or_default()
+                .push(RegEntry { w: Arc::downgrade(p), owner: tid });
+            shard.entries += 1;
+        }
+        // a dead entry in its own bucket
+        let dead = mk(999);
+        shard
+            .buckets
+            .entry(77)
+            .or_default()
+            .push(RegEntry { w: Arc::downgrade(&dead), owner: tid });
+        shard.entries += 1;
+        drop(dead);
+        shard.prune();
+        assert_eq!(shard.entries, 3, "dead entry must be pruned");
+        assert_eq!(shard.evictions, 1);
+        assert!(!shard.buckets.contains_key(&77), "empty bucket must be dropped");
+        // cap below the live count: whole live buckets are evicted
+        shard.enforce_cap(1);
+        assert_eq!(shard.entries, 1);
+        assert_eq!(shard.evictions, 3);
+        assert!(live.iter().all(|p| Arc::strong_count(p) == 1), "eviction never frees live pages");
+    }
+
+    /// The registry is pool-wide: a cache absorbed on another OS thread
+    /// shares physical pages with one absorbed here, the hit is counted
+    /// as cross-worker, and a divergent write stays thread-local.
+    #[test]
+    fn registry_shares_pages_across_threads() {
+        let (layers, slots, ps) = (2usize, 16usize, 4usize);
+        let (k, v) = fill_tensors(layers, slots, 8, 4242.0);
+        let (tk, tv) = (k.clone(), v.clone());
+        let mut remote = std::thread::spawn(move || {
+            let mut c = KvCache::with_page_size(layers, slots, 2, 4, ps);
+            c.absorb(tk, tv, 10).unwrap();
+            c.committed = 10;
+            c
+        })
+        .join()
+        .expect("remote absorb thread");
+        let _ = take_cross_worker_hits(); // reset this thread's counter
+        let mut local = KvCache::with_page_size(layers, slots, 2, 4, ps);
+        local.absorb(k.clone(), v.clone(), 10).unwrap();
+        local.committed = 10;
+        assert_eq!(
+            local.committed_page_ids(),
+            remote.committed_page_ids(),
+            "identical prompts on two threads must share physical pages"
+        );
+        assert!(local.shared_pages() > 0);
+        assert!(
+            take_cross_worker_hits() >= 1,
+            "dedup hits on another thread's pages must be attributed"
+        );
+        // divergence on this thread leaves the remote cache's bytes alone
+        let (k2, v2) = fill_tensors(layers, slots, 8, -4242.0);
+        local.write_rows_from(&k2, &v2, 10, 10, 1).unwrap();
+        assert_ne!(local.committed_page_ids().last(), remote.committed_page_ids().last());
+        assert_eq!(k_row(&mut remote, 0, 10), k.data[10 * 8..11 * 8].to_vec());
     }
 }

@@ -276,6 +276,61 @@ fn prop_clone_is_cow_isolated() {
     );
 }
 
+/// Multi-handle Arc-COW: clones of one cache handed to several OS
+/// threads stay isolated — each thread hammers its own handle with the
+/// op sequence while the original's bytes (read afterwards on the
+/// spawning thread) never change.  This is the cross-worker version of
+/// [`prop_clone_is_cow_isolated`]: pages are `Arc`-shared through the
+/// pool-wide registry, so a COW bug here would corrupt another worker's
+/// prompt, not just a local snapshot.
+#[test]
+fn prop_multi_handle_arc_cow_is_thread_isolated() {
+    prop::check(
+        "multi-handle Arc-COW is thread-isolated",
+        gen_case,
+        |case| {
+            let rs = case.heads * 4;
+            let mut c = KvCache::with_page_size(case.layers, case.slots, case.heads, 4, case.page);
+            let (k, v) = tensors(case.layers, case.slots, rs, 42);
+            c.write_rows_from(&k, &v, 0, 0, case.slots).map_err(|e| e.to_string())?;
+            c.committed = case.slots / 2;
+            let want_k = c.k_tensor().data;
+            let want_v = c.v_tensor().data;
+            let threads: Vec<_> = (0..3)
+                .map(|_| {
+                    let mut h = c.clone();
+                    let ops = case.ops.clone();
+                    let (layers, slots) = (case.layers, case.slots);
+                    std::thread::spawn(move || {
+                        for op in &ops {
+                            match op {
+                                Op::Write { at, n, seed } => {
+                                    let (k, v) = tensors(layers, slots, rs, *seed);
+                                    let _ = h.write_rows_from(&k, &v, *at, *at, *n);
+                                }
+                                Op::Commit(n) => {
+                                    let _ = h.commit(*n);
+                                }
+                                Op::Compact(rows) => {
+                                    let _ = h.compact_accepted(rows);
+                                }
+                                Op::Reset => h.reset(),
+                            }
+                        }
+                    })
+                })
+                .collect();
+            for t in threads {
+                t.join().map_err(|_| "mutator thread panicked".to_string())?;
+            }
+            if c.k_tensor().data != want_k || c.v_tensor().data != want_v {
+                return Err("original bytes changed under other threads' mutations".into());
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Draft-session op sequence for the passthrough-equivalence property.
 #[derive(Clone, Debug)]
 enum DraftOp {

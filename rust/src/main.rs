@@ -153,6 +153,21 @@ fn run(args: &Args) -> Result<()> {
                         agg.usize_at("draft_pack_pages_copied").unwrap_or(0),
                         agg.usize_at("draft_pack_pages_reused").unwrap_or(0),
                     );
+                    println!(
+                        "routing: affinity_hits={} affinity_misses={} \
+                         cross_worker_shared_pages={} registry_entries={} \
+                         registry_evictions={}",
+                        agg.usize_at("affinity_hits").unwrap_or(0),
+                        agg.usize_at("affinity_misses").unwrap_or(0),
+                        agg.usize_at("cross_worker_shared_pages").unwrap_or(0),
+                        agg.usize_at("registry_entries").unwrap_or(0),
+                        agg.usize_at("registry_evictions").unwrap_or(0),
+                    );
+                    println!(
+                        "occupancy: busy_ms={} idle_ms={}",
+                        agg.f64_at("busy_ms").unwrap_or(0.0),
+                        agg.f64_at("idle_ms").unwrap_or(0.0),
+                    );
                 }
                 return Ok(());
             }

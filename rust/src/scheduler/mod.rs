@@ -1,13 +1,23 @@
-//! Request scheduler: least-loaded per-worker queues + a shared overflow
-//! queue feeding a pool of engine workers, each running cycle-granular
-//! continuous batching with FUSED cross-session verification.
+//! Request scheduler: prefix-affinity per-worker queues + a shared
+//! overflow queue feeding a pool of engine workers, each running
+//! cycle-granular continuous batching with FUSED cross-session
+//! verification.
 //!
 //! The PJRT client (and thus every session) is thread-pinned, so each of
 //! the N engine worker threads constructs its own `Runtime` and per-method
-//! instance pool locally.  **Dispatch is least-loaded**: `submit` enqueues
-//! onto the worker with the fewest (live sessions + queued jobs), so
-//! session-heavy jobs spread instead of piling onto the first worker to
-//! poll.  When the pool-wide backlog reaches `queue_cap`, submissions
+//! instance pool locally.  **Dispatch is prefix-affine over least-loaded**:
+//! `submit` fingerprints the prompt prefix and routes a known prefix to
+//! the worker that last served it — that worker already holds the
+//! prompt's pages hot in its fused-pack staging caches, and (pages being
+//! pool-wide `Arc`s, see `kvcache`) its sessions share them physically.
+//! Unknown prefixes fall back to the worker with the fewest (live
+//! sessions + queued jobs), and a load-imbalance **escape hatch** remaps
+//! a prefix whose worker is more than [`AFFINITY_MAX_IMBALANCE`] load
+//! units above the least-loaded one, so a single hot prefix cannot
+//! starve the pool (the pool-wide registry still dedups its pages across
+//! workers).  The fingerprint map is bounded ([`AFFINITY_MAP_CAP`]) and
+//! per-worker `affinity_hits`/`affinity_misses` land on the stats wire.
+//! When the pool-wide backlog reaches `queue_cap`, submissions
 //! spill to the shared bounded channel, whose blocking `send` provides
 //! the backpressure (workers steal from it between cycles — the
 //! steal-from-shared fallback; at most ~2×`queue_cap` jobs sit unserved).
@@ -78,8 +88,11 @@
 //!
 //! Under the `HASS_CHECK=1` shadow sanitizer every mutex acquisition in
 //! this module is traced through [`crate::util::lockorder`]; an order
-//! inversion across the worker-queue / shared-channel / stats / cancels
-//! classes panics immediately instead of deadlocking some future run.
+//! inversion across the worker-queue / shared-channel / stats / cancels /
+//! affinity classes (or against the kvcache's page-shard leaf class)
+//! panics immediately instead of deadlocking some future run.  Each lock
+//! here is held alone — the affinity map in particular is released
+//! before the queue push and the stats update it decides.
 //! Worker threads are panic-isolated: the spawn wraps the worker loop in
 //! `catch_unwind`, so a bug in one engine thread surfaces as a logged
 //! death, not a silently stranded queue.
@@ -219,6 +232,16 @@ pub struct WorkerStats {
     /// cross-session shared pages seen by this worker's most recent fused
     /// pack (gauge; > 0 means co-active sessions share a prompt prefix)
     pub shared_pages: u64,
+    /// submits routed here because this worker already served the
+    /// prompt's prefix fingerprint (its pages are hot here)
+    pub affinity_hits: u64,
+    /// affinity-routed submits that landed here via least-loaded
+    /// fallback instead — unknown prefix, or the escape hatch rebalanced
+    /// a hot one
+    pub affinity_misses: u64,
+    /// dedup hits this worker's thread took on pages first registered by
+    /// ANOTHER worker — physical prompt pages shared across the pool
+    pub cross_worker_shared_pages: u64,
     /// acceptance metrics merged over every successful job
     pub metrics: Metrics,
 }
@@ -245,12 +268,18 @@ impl WorkerStats {
     }
 }
 
-/// Snapshot of the whole pool: per-worker counters + queue depth.
+/// Snapshot of the whole pool: per-worker counters + queue depth +
+/// pool-wide page-registry gauges.
 #[derive(Clone, Debug, Default)]
 pub struct PoolStats {
     pub workers: Vec<WorkerStats>,
     /// jobs submitted but not yet picked up by a worker
     pub queue_depth: usize,
+    /// live pages in the pool-wide dedup registry (gauge)
+    pub registry_entries: u64,
+    /// cumulative registry entries dropped (dead-prefix sweeps + cap
+    /// evictions)
+    pub registry_evictions: u64,
 }
 
 impl PoolStats {
@@ -272,6 +301,10 @@ impl PoolStats {
 
     pub fn busy_s(&self) -> f64 {
         self.workers.iter().map(|w| w.busy_s).sum()
+    }
+
+    pub fn idle_s(&self) -> f64 {
+        self.workers.iter().map(|w| w.idle_s).sum()
     }
 
     /// Acceptance metrics merged across every worker.
@@ -307,6 +340,19 @@ impl PoolStats {
     /// Cross-session shared pages over the workers' latest fused packs.
     pub fn shared_pages(&self) -> u64 {
         self.workers.iter().map(|w| w.shared_pages).sum()
+    }
+
+    pub fn affinity_hits(&self) -> u64 {
+        self.workers.iter().map(|w| w.affinity_hits).sum()
+    }
+
+    pub fn affinity_misses(&self) -> u64 {
+        self.workers.iter().map(|w| w.affinity_misses).sum()
+    }
+
+    /// Pool-wide dedup hits on pages first registered by another worker.
+    pub fn cross_worker_shared_pages(&self) -> u64 {
+        self.workers.iter().map(|w| w.cross_worker_shared_pages).sum()
     }
 
     /// Pool-wide verify executions (each serves >= 1 session's cycle).
@@ -417,12 +463,35 @@ impl WorkerQueue {
     }
 }
 
+/// Bound on the prefix-affinity map (fingerprint -> worker).  A full map
+/// is simply cleared: affinity is a routing hint, and losing it costs
+/// one least-loaded fallback per prefix, not correctness.
+const AFFINITY_MAP_CAP: usize = 4096;
+
+/// Escape-hatch threshold: an affinity worker more than this many load
+/// units (queued jobs + live sessions) above the least-loaded worker
+/// loses the prefix — one hot prefix must not starve the pool.
+const AFFINITY_MAX_IMBALANCE: usize = 4;
+
+/// FNV-1a over the first 64 prompt bytes — sessions sharing a system
+/// prompt / template prefix collide on purpose (their prompt pages
+/// dedup), while the tail of a long prompt cannot split an otherwise
+/// identical prefix across workers.
+fn prompt_fingerprint(prompt: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in prompt.as_bytes().iter().take(64) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 pub struct Scheduler {
     /// `None` once shutdown has begun: closing submissions *before* the
     /// stop markers are enqueued guarantees no job can land behind them
     /// (it would be dropped unserved and hang its client).
     tx: RwLock<Option<SyncSender<Msg>>>,
-    /// per-worker direct-dispatch queues (least-loaded routing)
+    /// per-worker direct-dispatch queues (affinity/least-loaded routing)
     queues: Vec<Arc<WorkerQueue>>,
     /// pool-wide backlog bound before submissions spill to the shared
     /// channel (whose own bound provides the blocking backpressure)
@@ -433,12 +502,18 @@ pub struct Scheduler {
     stats: Arc<Mutex<Vec<WorkerStats>>>,
     queue_depth: Arc<AtomicUsize>,
     cancels: Arc<Mutex<HashSet<u64>>>,
+    /// prompt-prefix fingerprint -> last worker routed (prefix-affinity
+    /// dispatch); bounded by [`AFFINITY_MAP_CAP`], held only inside
+    /// [`Scheduler::route`]
+    affinity: Mutex<HashMap<u64, usize>>,
+    affinity_on: bool,
 }
 
 impl Scheduler {
     /// Spawn `workers` engine threads sharing one bounded work queue.
     /// `queue_cap` bounds submitted-but-unserved requests; `max_active`
     /// bounds the sessions one worker interleaves (1 = run-to-completion).
+    /// Prefix-affinity routing is on (see [`Scheduler::start_with_affinity`]).
     pub fn start(
         artifact_dir: PathBuf,
         cfg: MethodCfg,
@@ -446,13 +521,36 @@ impl Scheduler {
         workers: usize,
         max_active: usize,
     ) -> Scheduler {
+        Scheduler::start_with_affinity(artifact_dir, cfg, queue_cap, workers, max_active, true)
+    }
+
+    /// [`Scheduler::start`] with prefix-affinity routing explicitly on or
+    /// off (off = pure least-loaded dispatch; the page-pool bench
+    /// measures both sides).
+    pub fn start_with_affinity(
+        artifact_dir: PathBuf,
+        cfg: MethodCfg,
+        queue_cap: usize,
+        workers: usize,
+        max_active: usize,
+        affinity_on: bool,
+    ) -> Scheduler {
         // the env knob is read once per pool (demo/test throttle)
         let test_delay_ms: Option<u64> = std::env::var("HASS_TEST_JOB_DELAY_MS")
             .ok()
             .and_then(|v| v.parse().ok());
-        Scheduler::start_inner(artifact_dir, cfg, queue_cap, workers, max_active, test_delay_ms)
+        Scheduler::start_inner(
+            artifact_dir,
+            cfg,
+            queue_cap,
+            workers,
+            max_active,
+            test_delay_ms,
+            affinity_on,
+        )
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn start_inner(
         artifact_dir: PathBuf,
         cfg: MethodCfg,
@@ -460,6 +558,7 @@ impl Scheduler {
         workers: usize,
         max_active: usize,
         test_delay_ms: Option<u64>,
+        affinity_on: bool,
     ) -> Scheduler {
         let workers = workers.max(1);
         let max_active = max_active.max(1);
@@ -516,6 +615,8 @@ impl Scheduler {
             stats,
             queue_depth,
             cancels,
+            affinity: Mutex::new(HashMap::new()),
+            affinity_on,
         }
     }
 
@@ -539,11 +640,13 @@ impl Scheduler {
     /// collect many jobs (events carry the job id), which lets a server
     /// connection drain all its responses with a single pump thread.
     ///
-    /// Dispatch is least-loaded: while the pool-wide backlog is under
-    /// `queue_cap`, the job goes straight onto the queue of the worker
-    /// with the fewest (live sessions + queued jobs).  Beyond that the
-    /// job spills to the shared bounded channel — `blocking` waits for
-    /// space there (backpressure), otherwise a full queue is an error.
+    /// Dispatch is prefix-affine (module docs): while the pool-wide
+    /// backlog is under `queue_cap`, the job goes straight onto the
+    /// queue of the worker holding its prompt prefix hot — least-loaded
+    /// on an unknown prefix or when the escape hatch rebalances.  Beyond
+    /// that the job spills to the shared bounded channel — `blocking`
+    /// waits for space there (backpressure), otherwise a full queue is
+    /// an error.
     pub fn submit_to(&self, job: Job, blocking: bool, rtx: Sender<JobEvent>) -> Result<()> {
         // holding the read lock across the send excludes shutdown()'s
         // write-locked sender teardown, so an accepted job always sits
@@ -553,12 +656,16 @@ impl Scheduler {
             Some(tx) => tx,
             None => return Err(anyhow::anyhow!("scheduler down")),
         };
+        let (worker, affinity_hit) = self.route(&job);
         let msg = Msg::Run(job, Stopwatch::start(), rtx);
         // count before sending so the gauge never underflows when a worker
         // dequeues between the send and the increment
         let backlog = self.queue_depth.fetch_add(1, Ordering::Relaxed);
         if backlog < self.queue_cap {
-            self.queues[self.least_loaded()].push(msg);
+            if let Some(hit) = affinity_hit {
+                self.note_affinity(worker, hit);
+            }
+            self.queues[worker].push(msg);
             return Ok(());
         }
         let sent = if blocking {
@@ -597,6 +704,55 @@ impl Scheduler {
         best
     }
 
+    /// Pick the worker for `job`.  With affinity routing on (and > 1
+    /// worker), a prompt prefix seen before goes back to the worker that
+    /// last served it — unless that worker is more than
+    /// [`AFFINITY_MAX_IMBALANCE`] load units above the least-loaded one,
+    /// in which case the prefix is remapped there (the escape hatch).
+    /// Returns `(worker, Some(hit))` when affinity routing decided, or
+    /// `(worker, None)` for pure least-loaded dispatch.  The affinity
+    /// lock is released before the caller touches any queue or stats
+    /// lock (only atomics are read inside).
+    fn route(&self, job: &Job) -> (usize, Option<bool>) {
+        if !self.affinity_on || self.workers < 2 {
+            return (self.least_loaded(), None);
+        }
+        let fp = prompt_fingerprint(&job.prompt);
+        let ll = self.least_loaded();
+        let _t = lockorder::trace(lockorder::AFFINITY);
+        let mut map = self.affinity.lock().unwrap_or_else(|p| p.into_inner());
+        if map.len() >= AFFINITY_MAP_CAP {
+            map.clear();
+        }
+        match map.get(&fp).copied() {
+            Some(w) => {
+                let wl = self.queues[w].load.load(Ordering::Relaxed);
+                let lll = self.queues[ll].load.load(Ordering::Relaxed);
+                if wl <= lll + AFFINITY_MAX_IMBALANCE {
+                    (w, Some(true))
+                } else {
+                    map.insert(fp, ll);
+                    (ll, Some(false))
+                }
+            }
+            None => {
+                map.insert(fp, ll);
+                (ll, Some(false))
+            }
+        }
+    }
+
+    /// Count an affinity routing outcome on the routed worker's stats row.
+    fn note_affinity(&self, worker: usize, hit: bool) {
+        let _t = lockorder::trace(lockorder::STATS);
+        let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
+        if hit {
+            stats[worker].affinity_hits += 1;
+        } else {
+            stats[worker].affinity_misses += 1;
+        }
+    }
+
     /// Request cancellation of a job by id.  The job — queued or live —
     /// reports a "cancelled" error result through its own event channel;
     /// cancelling an unknown or already-finished id is a no-op.
@@ -605,12 +761,17 @@ impl Scheduler {
         self.cancels.lock().unwrap_or_else(|p| p.into_inner()).insert(id);
     }
 
-    /// Snapshot per-worker counters + queue depth.
+    /// Snapshot per-worker counters + queue depth + pool-wide registry
+    /// gauges.  The registry walk finishes before the stats lock is
+    /// taken — no lock is ever held across another class here.
     pub fn stats(&self) -> PoolStats {
+        let reg = crate::kvcache::registry_stats();
         let _t = lockorder::trace(lockorder::STATS);
         PoolStats {
             workers: self.stats.lock().unwrap_or_else(|p| p.into_inner()).clone(),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            registry_entries: reg.entries,
+            registry_evictions: reg.evictions,
         }
     }
 
@@ -881,6 +1042,12 @@ fn worker(ctx: WorkerCtx, artifact_dir: PathBuf, cfg: MethodCfg, rx: Arc<Mutex<R
                     }
                 }
             }
+        }
+        // fold this thread's cross-worker dedup hits (admission prefills
+        // and cycle absorbs since the last drain) into the stats row
+        let cross = crate::kvcache::take_cross_worker_hits();
+        if cross > 0 {
+            ctx.with_stats(|s| s.cross_worker_shared_pages += cross);
         }
         if active.is_empty() {
             if draining && ctx.queue.is_empty() {
@@ -1999,7 +2166,8 @@ mod tests {
         // inject the per-job delay directly (mutating the process env from
         // a parallel test races other threads reading it) so one worker
         // can't drain the queue alone
-        let sched = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 32, 2, 1, Some(20));
+        let sched =
+            Scheduler::start_inner(bad_dir(), MethodCfg::default(), 32, 2, 1, Some(20), true);
         let rxs: Vec<_> = (0..8).map(|i| sched.submit(job(i), true).unwrap()).collect();
         let served: std::collections::HashSet<usize> =
             rxs.into_iter().map(|rx| recv_done(&rx).worker).collect();
@@ -2070,7 +2238,8 @@ mod tests {
     /// first (cycle-granular scheduling beats head-of-line blocking).
     #[test]
     fn short_job_overtakes_long_job_when_interleaving() {
-        let sched = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 32, 1, 2, Some(3));
+        let sched =
+            Scheduler::start_inner(bad_dir(), MethodCfg::default(), 32, 1, 2, Some(3), true);
         let (rtx, rrx) = std::sync::mpsc::channel();
         sched.submit_to(mock_job(1, 64, false), true, rtx.clone()).unwrap();
         sched.submit_to(mock_job(2, 4, false), true, rtx).unwrap();
@@ -2089,7 +2258,8 @@ mod tests {
     /// queue behind it.
     #[test]
     fn cancelled_job_errors_without_blocking_queue() {
-        let sched = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 32, 1, 1, Some(3));
+        let sched =
+            Scheduler::start_inner(bad_dir(), MethodCfg::default(), 32, 1, 1, Some(3), true);
         let rx1 = sched.submit(mock_job(1, 100_000, false), true).unwrap();
         sched.cancel(1);
         let rx2 = sched.submit(mock_job(2, 4, false), true).unwrap();
@@ -2104,7 +2274,7 @@ mod tests {
 
     #[test]
     fn deadline_exceeded_job_errors() {
-        let sched = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 8, 1, 1, Some(5));
+        let sched = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 8, 1, 1, Some(5), true);
         let mut j = mock_job(1, 100_000, false);
         j.deadline_ms = Some(20);
         let r = recv_done(&sched.submit(j, true).unwrap());
@@ -2143,7 +2313,8 @@ mod tests {
 
         // fused: one worker interleaving all four (admission throttled so
         // every session is co-active before the first cycle)
-        let fused = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 16, 1, 4, Some(2));
+        let fused =
+            Scheduler::start_inner(bad_dir(), MethodCfg::default(), 16, 1, 4, Some(2), true);
         let rxs: Vec<_> =
             jobs(1).into_iter().map(|j| fused.submit(j, true).unwrap()).collect();
         for (i, rx) in rxs.into_iter().enumerate() {
@@ -2203,7 +2374,8 @@ mod tests {
 
         // fused: one worker interleaving all four (admission throttled so
         // every session is co-active before the first cycle)
-        let fused = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 16, 1, 4, Some(2));
+        let fused =
+            Scheduler::start_inner(bad_dir(), MethodCfg::default(), 16, 1, 4, Some(2), true);
         let rxs: Vec<_> = jobs().into_iter().map(|j| fused.submit(j, true).unwrap()).collect();
         for (i, rx) in rxs.into_iter().enumerate() {
             let r = recv_done(&rx);
@@ -2317,12 +2489,15 @@ mod tests {
         assert!(groups.len() > 1, "disjoint prefixes must still hit the slot budget");
     }
 
-    /// Least-loaded dispatch: with every worker idle, consecutive submits
-    /// spread round-robin-ish instead of piling onto worker 0.
+    /// Least-loaded dispatch (affinity off): with every worker idle,
+    /// consecutive submits spread round-robin-ish instead of piling onto
+    /// worker 0.  (With affinity on, same-prompt jobs deliberately pile
+    /// onto one worker — the test below.)
     #[test]
     fn least_loaded_dispatch_spreads_queued_jobs() {
         // throttled so queued jobs stay queued while we submit
-        let sched = Scheduler::start_inner(bad_dir(), MethodCfg::default(), 64, 3, 1, Some(10));
+        let sched =
+            Scheduler::start_inner(bad_dir(), MethodCfg::default(), 64, 3, 1, Some(10), false);
         let rxs: Vec<_> =
             (0..9).map(|i| sched.submit(mock_job(i, 4, false), true).unwrap()).collect();
         let mut served = std::collections::HashMap::new();
@@ -2339,6 +2514,102 @@ mod tests {
             "least-loaded dispatch must spread 9 jobs over 3 workers: {served:?}"
         );
         sched.shutdown();
+    }
+
+    /// Prefix-affinity dispatch: same-prompt jobs land on ONE worker
+    /// (whose staging caches hold their pages hot) while the load stays
+    /// within the imbalance budget, and the hit/miss counters say so.
+    #[test]
+    fn prefix_affinity_routes_same_prompt_jobs_together() {
+        // throttled so the affinity worker's load (4 < 1 + imbalance 4)
+        // never trips the escape hatch while we submit
+        let sched =
+            Scheduler::start_inner(bad_dir(), MethodCfg::default(), 64, 3, 1, Some(10), true);
+        let rxs: Vec<_> =
+            (0..4).map(|i| sched.submit(mock_job(i, 4, false), true).unwrap()).collect();
+        let served: std::collections::HashSet<usize> =
+            rxs.into_iter().map(|rx| recv_done(&rx).worker).collect();
+        assert_eq!(served.len(), 1, "same-prefix jobs must share a worker: {served:?}");
+        let stats = sched.stats();
+        assert_eq!(stats.affinity_misses(), 1, "first sighting of the prefix is the miss");
+        assert_eq!(stats.affinity_hits(), 3, "every later submit must hit the mapping");
+        sched.shutdown();
+    }
+
+    /// The escape hatch: a hot prefix whose worker runs more than
+    /// AFFINITY_MAX_IMBALANCE load units ahead of the least-loaded one
+    /// is remapped there instead of starving the pool.
+    #[test]
+    fn affinity_escape_hatch_rebalances_hot_prefix() {
+        let sched =
+            Scheduler::start_inner(bad_dir(), MethodCfg::default(), 64, 2, 1, Some(15), true);
+        let rxs: Vec<_> =
+            (0..8).map(|i| sched.submit(mock_job(i, 4, false), true).unwrap()).collect();
+        let served: std::collections::HashSet<usize> =
+            rxs.into_iter().map(|rx| recv_done(&rx).worker).collect();
+        assert_eq!(
+            served.len(),
+            2,
+            "8 same-prefix jobs must overflow one worker's imbalance budget: {served:?}"
+        );
+        let stats = sched.stats();
+        // initial sighting + at least one escape-hatch remap
+        assert!(stats.affinity_misses() >= 2, "stats: {:?}", stats.affinity_misses());
+        assert!(stats.affinity_hits() >= 1);
+        sched.shutdown();
+    }
+
+    /// Cross-worker COW isolation over the pool-wide page pool: a
+    /// 2-worker fleet serving the SAME prompt with different seeds must
+    /// produce exactly the outputs of sequential solo runs — sessions
+    /// diverging after a shared prefix never leak writes across workers.
+    /// Audits are force-enabled on the submitting thread; the
+    /// `shared-pool` CI matrix entry re-runs this whole suite with
+    /// `HASS_CHECK=1`, which also audits every worker thread.
+    #[test]
+    fn two_worker_shared_prompt_fleet_matches_solo_runs() {
+        crate::kvcache::audit::force_enable_for_tests(true);
+        let jobs = || -> Vec<Job> {
+            (0..6u64)
+                .map(|i| {
+                    let mut j = mock_job(1 + i, 16, false);
+                    j.seed = 700 + i; // same prompt, divergent continuations
+                    j
+                })
+                .collect()
+        };
+        // sequential baseline: one worker, one session at a time
+        let solo = Scheduler::start(bad_dir(), MethodCfg::default(), 16, 1, 1);
+        let mut want = Vec::new();
+        for j in jobs() {
+            let r = recv_done(&solo.submit(j, true).unwrap());
+            assert!(r.error.is_none(), "solo run failed: {:?}", r.error);
+            want.push((r.text, r.tokens, r.tau));
+        }
+        solo.shutdown();
+
+        // fleet: 2 workers, affinity OFF so the fleet actually spreads
+        // over both workers (affinity would co-locate the shared prefix);
+        // throttled so all six submits land before any job completes
+        let fleet =
+            Scheduler::start_inner(bad_dir(), MethodCfg::default(), 16, 2, 3, Some(5), false);
+        let rxs: Vec<_> = jobs().into_iter().map(|j| fleet.submit(j, true).unwrap()).collect();
+        let mut served = std::collections::HashSet::new();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = recv_done(&rx);
+            assert!(r.error.is_none(), "fleet run failed: {:?}", r.error);
+            served.insert(r.worker);
+            let (text, tokens, tau) = &want[i];
+            assert_eq!(&r.text, text, "job {i}: fleet text diverged from solo");
+            assert_eq!(r.tokens, *tokens, "job {i}: token count diverged");
+            assert!((r.tau - tau).abs() < 1e-9, "job {i}: tau diverged");
+        }
+        assert_eq!(served.len(), 2, "fleet must actually spread over both workers");
+        // divergent seeds must actually diverge — otherwise the leak
+        // assertion above would be vacuous
+        assert!(want.iter().map(|(t, _, _)| t).collect::<HashSet<_>>().len() > 1);
+        fleet.shutdown();
+        crate::kvcache::audit::force_enable_for_tests(false);
     }
 
     /// Streamed deltas concatenate to exactly the non-streamed text for a

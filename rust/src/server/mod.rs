@@ -21,8 +21,10 @@
 //!              "mean_draft_fused_rows": 6.5,
 //!              "pack_pages_copied": 12, "pack_pages_reused": 87,
 //!              "draft_pack_pages_copied": 9, "draft_pack_pages_reused": 60,
-//!              "shared_pages": 3, ...}],
-//!              "aggregate": {"jobs": 3, "tokens": 120, "tau": 3.1, ...}}}
+//!              "shared_pages": 3, "affinity_hits": 5,
+//!              "affinity_misses": 2, "cross_worker_shared_pages": 4, ...}],
+//!              "aggregate": {"jobs": 3, "tokens": 120, "tau": 3.1,
+//!              "registry_entries": 12, "registry_evictions": 0, ...}}}
 //!             (fused_calls/solo_calls/fused_rows are the worker's verify
 //!             batch occupancy: how many verify executions covered >= 2
 //!             sessions, and how many candidate rows those carried;
@@ -33,7 +35,11 @@
 //!             twins) are the paged-KV pack traffic — steady-state cycles
 //!             copy only changed tail pages — and shared_pages gauges
 //!             cross-session prompt-page sharing in the latest fused
-//!             pack)
+//!             pack; affinity_hits/affinity_misses count prefix-affine
+//!             dispatch decisions, cross_worker_shared_pages counts dedup
+//!             registry hits against pages first absorbed on a *different*
+//!             worker, and registry_entries/registry_evictions gauge the
+//!             pool-wide page registry)
 //!   error:    {"id": 1, "error": "..."}  ("id" omitted when the line
 //!             could not be parsed; messages are JSON-escaped)
 //!
@@ -193,6 +199,9 @@ pub fn format_pool_stats(p: &PoolStats) -> String {
                 ("draft_pack_pages_copied", Json::num(w.draft_pack_pages_copied as f64)),
                 ("draft_pack_pages_reused", Json::num(w.draft_pack_pages_reused as f64)),
                 ("shared_pages", Json::num(w.shared_pages as f64)),
+                ("affinity_hits", Json::num(w.affinity_hits as f64)),
+                ("affinity_misses", Json::num(w.affinity_misses as f64)),
+                ("cross_worker_shared_pages", Json::num(w.cross_worker_shared_pages as f64)),
                 ("tau", Json::num(wire_r3(w.metrics.tau()))),
             ])
         })
@@ -205,6 +214,7 @@ pub fn format_pool_stats(p: &PoolStats) -> String {
         ("tokens", Json::num(p.tokens() as f64)),
         ("queue_depth", Json::num(p.queue_depth as f64)),
         ("busy_ms", Json::num(wire_ms(p.busy_s()))),
+        ("idle_ms", Json::num(wire_ms(p.idle_s()))),
         ("fused_calls", Json::num(p.fused_calls() as f64)),
         ("solo_calls", Json::num(p.solo_calls() as f64)),
         ("fused_rows", Json::num(p.fused_rows() as f64)),
@@ -218,6 +228,11 @@ pub fn format_pool_stats(p: &PoolStats) -> String {
         ("draft_pack_pages_copied", Json::num(p.draft_pack_pages_copied() as f64)),
         ("draft_pack_pages_reused", Json::num(p.draft_pack_pages_reused() as f64)),
         ("shared_pages", Json::num(p.shared_pages() as f64)),
+        ("affinity_hits", Json::num(p.affinity_hits() as f64)),
+        ("affinity_misses", Json::num(p.affinity_misses() as f64)),
+        ("cross_worker_shared_pages", Json::num(p.cross_worker_shared_pages() as f64)),
+        ("registry_entries", Json::num(p.registry_entries as f64)),
+        ("registry_evictions", Json::num(p.registry_evictions as f64)),
         ("tau", Json::num(wire_r3(p.tau()))),
     ]);
     Json::obj(vec![(
@@ -645,6 +660,9 @@ mod tests {
                     pack_pages_copied: 12,
                     pack_pages_reused: 88,
                     shared_pages: 3,
+                    affinity_hits: 5,
+                    affinity_misses: 2,
+                    cross_worker_shared_pages: 4,
                     metrics: m.clone(),
                 },
                 WorkerStats {
@@ -665,10 +683,15 @@ mod tests {
                     pack_pages_copied: 4,
                     pack_pages_reused: 2,
                     shared_pages: 0,
+                    affinity_hits: 1,
+                    affinity_misses: 1,
+                    cross_worker_shared_pages: 0,
                     metrics: m,
                 },
             ],
             queue_depth: 4,
+            registry_entries: 12,
+            registry_evictions: 1,
         };
         let j = json::parse(&format_pool_stats(&p)).unwrap();
         let stats = j.get("stats").unwrap();
@@ -695,6 +718,12 @@ mod tests {
         assert_eq!(agg.f64_at("mean_draft_fused_rows"), Some(4.0));
         assert_eq!(agg.usize_at("draft_pack_pages_copied"), Some(6));
         assert_eq!(agg.usize_at("draft_pack_pages_reused"), Some(30));
+        // shared-pool satellite: prefix-affinity routing + pool registry
+        assert_eq!(agg.usize_at("affinity_hits"), Some(6));
+        assert_eq!(agg.usize_at("affinity_misses"), Some(3));
+        assert_eq!(agg.usize_at("cross_worker_shared_pages"), Some(4));
+        assert_eq!(agg.usize_at("registry_entries"), Some(12));
+        assert_eq!(agg.usize_at("registry_evictions"), Some(1));
         let workers = stats.get("workers").unwrap().as_arr().unwrap();
         assert_eq!(workers.len(), 2);
         assert_eq!(workers[0].usize_at("jobs_ok"), Some(3));
@@ -706,7 +735,10 @@ mod tests {
         assert_eq!(workers[0].usize_at("draft_fused_calls"), Some(10));
         assert_eq!(workers[0].f64_at("mean_draft_fused_rows"), Some(4.0));
         assert_eq!(workers[0].usize_at("draft_pack_pages_copied"), Some(6));
+        assert_eq!(workers[0].usize_at("affinity_hits"), Some(5));
+        assert_eq!(workers[0].usize_at("cross_worker_shared_pages"), Some(4));
         assert_eq!(workers[1].usize_at("worker"), Some(1));
+        assert_eq!(workers[1].usize_at("affinity_misses"), Some(1));
         assert_eq!(workers[1].usize_at("solo_calls"), Some(3));
         assert_eq!(workers[1].usize_at("draft_solo_calls"), Some(5));
         assert_eq!(workers[1].f64_at("mean_draft_fused_rows"), Some(0.0));

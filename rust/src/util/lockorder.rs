@@ -1,10 +1,16 @@
 //! Lock-order tracker for the `HASS_CHECK=1` shadow sanitizer.
 //!
 //! The scheduler holds a handful of mutexes (per-worker queues, the
-//! shared overflow channel, the stats vector, the cancel set).  None of
-//! them may ever be acquired in inconsistent order across threads, or a
-//! future refactor (the Arc page-pool migration in particular) can
-//! deadlock under load in ways no unit test reproduces.  When auditing
+//! shared overflow channel, the stats vector, the cancel set, the
+//! prefix-affinity map), and since the Arc page-pool migration the
+//! kvcache adds the registry shard locks.  None of them may ever be
+//! acquired in inconsistent order across threads, or the pool can
+//! deadlock under load in ways no unit test reproduces.  The intended
+//! order is: scheduler classes first ([`WORKER_QUEUE`], [`SHARED_RX`],
+//! [`STATS`], [`CANCELS`], [`AFFINITY`] — each held alone in practice),
+//! with the page-registry shard ([`PAGE_SHARD`]) strictly a leaf:
+//! `dedup_page`/`registry_stats` take one shard at a time and call
+//! nothing that locks.  When auditing
 //! is enabled ([`crate::kvcache::audit::enabled`]), every traced
 //! acquisition records a directed edge `held -> acquired` in a global
 //! graph; acquiring `A` while holding `B` after some thread ever
@@ -26,6 +32,13 @@ pub const WORKER_QUEUE: u16 = 1;
 pub const SHARED_RX: u16 = 2;
 pub const STATS: u16 = 3;
 pub const CANCELS: u16 = 4;
+/// Scheduler prefix-affinity map (fingerprint -> worker); held only
+/// inside `Scheduler::route`, never across a queue push or stats update.
+pub const AFFINITY: u16 = 5;
+/// One shard of the pool-wide page registry (`kvcache::dedup_page`);
+/// a leaf class — shard critical sections call nothing that locks, and
+/// whole-pool walks visit shards strictly one at a time.
+pub const PAGE_SHARD: u16 = 6;
 
 fn class_name(c: u16) -> &'static str {
     match c {
@@ -33,6 +46,8 @@ fn class_name(c: u16) -> &'static str {
         SHARED_RX => "shared-rx",
         STATS => "stats",
         CANCELS => "cancels",
+        AFFINITY => "affinity",
+        PAGE_SHARD => "page-shard",
         _ => "unknown",
     }
 }
@@ -163,6 +178,19 @@ mod tests {
         let v = g.acquire(&[CANCELS], CANCELS);
         assert!(v.is_some());
         assert!(v.unwrap_or_default().contains("already held"));
+    }
+
+    #[test]
+    fn page_shard_stays_a_leaf() {
+        let mut g = LockGraph::new();
+        // workers dedup pages with a stats update already traced (the
+        // drain path), so stats -> shard is the recorded direction
+        assert!(g.acquire(&[], PAGE_SHARD).is_none());
+        assert!(g.acquire(&[], AFFINITY).is_none());
+        assert!(g.acquire(&[STATS], PAGE_SHARD).is_none());
+        // locking back out of a shard critical section is the inversion
+        // the leaf rule exists to prevent
+        assert!(g.acquire(&[PAGE_SHARD], STATS).is_some());
     }
 
     #[test]
