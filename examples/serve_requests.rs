@@ -19,10 +19,14 @@
 //! numbers are written to `BENCH_fused_verify.json`, a paged-KV
 //! shared-prompt scenario (host pack bytes/cycle and fusion capacity,
 //! paged vs. contiguous, plus scheduler pack counters) written to
-//! `BENCH_paged_kv.json`, and a shared-page-pool scenario (physical vs
+//! `BENCH_paged_kv.json`, a shared-page-pool scenario (physical vs
 //! logical prompt pages across 2 worker threads, plus a 2-worker fleet
 //! with prefix-affinity routing on vs off) written to
-//! `BENCH_page_pool.json`.
+//! `BENCH_page_pool.json`, and an OPEN-LOOP load scenario (Poisson and
+//! bursty arrivals fired on a wall-clock schedule regardless of
+//! completions at 0.5x/1x/2x estimated capacity; p50/p95/p99 latency,
+//! TTFT, goodput, shed/preempt/breaker counts) written to
+//! `BENCH_load.json`.
 
 use std::sync::Arc;
 
@@ -165,6 +169,7 @@ fn main() -> anyhow::Result<()> {
     paged_kv_bench(&dir, &method)?;
     draft_batch_bench(&dir, &wl, &method, n_requests)?;
     page_pool_bench(&dir, &method)?;
+    load_bench(&dir, &wl, &method)?;
     Ok(())
 }
 
@@ -184,6 +189,7 @@ fn resolve_runnable(dir: &std::path::Path, method: &str) -> anyhow::Result<Strin
         seed: 0,
         stream: false,
         deadline_ms: None,
+        priority: 0,
     };
     let rx = probe.submit(job, true)?;
     let ok = loop {
@@ -245,6 +251,7 @@ fn fused_verify_bench(
                 seed: i as u64,
                 stream: false,
                 deadline_ms: None,
+                priority: 0,
             };
             sched.submit_to(job, true, rtx.clone())?;
         }
@@ -430,6 +437,7 @@ fn paged_kv_bench(dir: &std::path::Path, method: &str) -> anyhow::Result<()> {
             seed: i as u64,
             stream: false,
             deadline_ms: None,
+            priority: 0,
         };
         sched.submit_to(job, true, rtx.clone())?;
     }
@@ -522,6 +530,7 @@ fn draft_batch_bench(
                 seed: i as u64,
                 stream: false,
                 deadline_ms: None,
+                priority: 0,
             };
             sched.submit_to(job, true, rtx.clone())?;
         }
@@ -705,6 +714,7 @@ fn page_pool_bench(dir: &std::path::Path, method: &str) -> anyhow::Result<()> {
                 seed: i as u64,
                 stream: false,
                 deadline_ms: None,
+                priority: 0,
             };
             sched.submit_to(job, true, rtx.clone())?;
         }
@@ -763,5 +773,235 @@ fn page_pool_bench(dir: &std::path::Path, method: &str) -> anyhow::Result<()> {
     kv.push(("affinity_on_over_off_tok_per_s", Json::num(speedup)));
     std::fs::write("BENCH_page_pool.json", Json::obj(kv).to_string())?;
     println!("  wrote BENCH_page_pool.json");
+    Ok(())
+}
+
+/// Open-loop load scenario (PR 9): estimate the pool's closed-loop
+/// capacity, then fire Poisson (0.5x/1x) and bursty (2x) arrival traces
+/// on a wall-clock schedule REGARDLESS of completions through a pool
+/// with a tight spill timeout, so sustained overload sheds explicitly
+/// (`overloaded` + `retry_after_ms`) instead of queueing unboundedly.
+/// Per load: p50/p95/p99 end-to-end latency, TTFT (first streamed
+/// delta), goodput, and the shed/preempt/breaker counters, written to
+/// `BENCH_load.json` and cross-checkable against the pool's stats wire.
+fn load_bench(dir: &std::path::Path, wl: &Workloads, method: &str) -> anyhow::Result<()> {
+    use std::collections::HashMap;
+
+    use hass::scheduler::{Job, JobEvent, OverloadPolicy, Overloaded, Scheduler};
+    use hass::util::json::Json;
+    use hass::util::stats::percentile_sorted as pct;
+    use hass::workload::Arrivals;
+
+    let method = {
+        let resolved = resolve_runnable(dir, method)?;
+        if resolved != method {
+            println!("\n(load bench: '{method}' unavailable, using 'mock')");
+        }
+        resolved
+    };
+    let (workers, max_active) = (2usize, 4usize);
+    // throttle every admission + step so service time dominates submit
+    // overhead — without it the mock backend is so fast that "2x
+    // capacity" cannot be generated from one submitter thread
+    std::env::set_var("HASS_TEST_JOB_DELAY_MS", "2");
+
+    // ---- closed-loop capacity estimate (same pool shape) ----
+    let capacity_req_s = {
+        let sched =
+            Scheduler::start(dir.to_path_buf(), MethodCfg::default(), 64, workers, max_active);
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let n = 32usize;
+        let t0 = std::time::Instant::now();
+        for i in 0..n {
+            let job = Job {
+                id: i as u64 + 1,
+                method: method.clone(),
+                prompt: "User: capacity probe\nAssistant:".into(),
+                max_new: 16,
+                temperature: 0.0,
+                seed: i as u64,
+                stream: false,
+                deadline_ms: None,
+                priority: 0,
+            };
+            sched.submit_to(job, true, rtx.clone())?;
+        }
+        drop(rtx);
+        let ok = rrx
+            .iter()
+            .filter_map(JobEvent::into_result)
+            .filter(|r| r.error.is_none())
+            .count();
+        let wall = t0.elapsed().as_secs_f64();
+        sched.shutdown();
+        ok.max(1) as f64 / wall.max(1e-6)
+    };
+    println!("\n== open-loop load ({workers} workers, method '{method}') ==");
+    println!("  estimated closed-loop capacity: {capacity_req_s:.1} req/s");
+
+    let loads: [(&str, f64); 3] = [("load_0_5x", 0.5), ("load_1x", 1.0), ("load_2x", 2.0)];
+    let mut report: Vec<(&str, Json)> = Vec::new();
+    let mut next_id = 1u64;
+    for (label, factor) in loads {
+        let rate = (capacity_req_s * factor).max(1.0);
+        // ~2.5s of arrivals per load point, bounded for slow machines
+        let n = ((rate * 2.5) as usize).clamp(16, 160);
+        // 2x arrives in bursts — the pattern that actually trips shedding
+        let arrivals = if factor > 1.0 {
+            Arrivals::Bursty { rate_per_s: rate, burst: 8, every_ms: 250 }
+        } else {
+            Arrivals::Poisson { rate_per_s: rate }
+        };
+        let trace = wl.open_loop_trace(n, 42 + factor as u64, arrivals);
+
+        // tight spill timeout: sustained overload sheds in ~50ms instead
+        // of parking the submitter on the bounded channel for 2s
+        let policy = OverloadPolicy {
+            spill_timeout_ms: 50,
+            retry_after_ms: 100,
+            breaker_max_ms: Some(1500),
+            ..OverloadPolicy::default()
+        };
+        let sched = Scheduler::start_with_policy(
+            dir.to_path_buf(),
+            MethodCfg::default(),
+            8,
+            workers,
+            max_active,
+            true,
+            policy,
+        );
+        let t0 = std::time::Instant::now();
+        let (rtx, rrx) = std::sync::mpsc::channel::<JobEvent>();
+        // collector thread timestamps events on arrival (TTFT needs the
+        // first delta's wall-clock offset, not its drain time)
+        let collector = std::thread::spawn(move || {
+            let mut first_delta: HashMap<u64, f64> = HashMap::new();
+            let mut done: Vec<hass::scheduler::JobResult> = Vec::new();
+            for ev in rrx {
+                let now = t0.elapsed().as_secs_f64();
+                match ev {
+                    JobEvent::Delta { id, .. } => {
+                        first_delta.entry(id).or_insert(now);
+                    }
+                    JobEvent::Done(r) => done.push(r),
+                }
+            }
+            (first_delta, done)
+        });
+
+        // open-loop submitter: fire at each arrival offset no matter how
+        // far behind the pool is
+        let mut submit_at: HashMap<u64, f64> = HashMap::new();
+        let (mut shed, mut submit_errors) = (0usize, 0usize);
+        for req in trace {
+            let due = std::time::Duration::from_millis(req.at_ms);
+            let now = t0.elapsed();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+            let id = next_id;
+            next_id += 1;
+            submit_at.insert(id, t0.elapsed().as_secs_f64());
+            let job = Job {
+                id,
+                method: method.clone(),
+                prompt: req.prompt,
+                max_new: req.max_new,
+                temperature: 0.0,
+                seed: id,
+                stream: true, // deltas give TTFT
+                deadline_ms: None,
+                priority: req.priority,
+            };
+            if let Err(e) = sched.submit_to(job, true, rtx.clone()) {
+                if Overloaded::parse(&format!("{e:#}")).is_some() {
+                    shed += 1;
+                } else {
+                    submit_errors += 1;
+                }
+            }
+        }
+        drop(rtx);
+        let (first_delta, done) = collector.join().expect("collector thread");
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = sched.stats();
+        sched.shutdown();
+
+        let mut lats: Vec<f64> = Vec::new();
+        let mut ttfts: Vec<f64> = Vec::new();
+        let mut tokens = 0usize;
+        let (mut ok, mut errored) = (0usize, 0usize);
+        for r in &done {
+            if r.error.is_some() {
+                errored += 1;
+                continue;
+            }
+            ok += 1;
+            tokens += r.tokens;
+            lats.push(r.latency_s * 1000.0);
+            if let Some((t_first, t_sub)) = first_delta.get(&r.id).zip(submit_at.get(&r.id)) {
+                ttfts.push((t_first - t_sub) * 1000.0);
+            }
+        }
+        lats.sort_by(|a, b| a.total_cmp(b));
+        ttfts.sort_by(|a, b| a.total_cmp(b));
+        let goodput = ok as f64 / wall.max(1e-6);
+        println!(
+            "  {label:<9} rate={rate:.1} req/s n={n}: ok={ok} shed={shed} errored={errored} \
+             goodput={goodput:.1} req/s  lat p50={:.0} p95={:.0} p99={:.0} ms  \
+             ttft p50={:.0} p95={:.0} ms  preempt={} breaker={} rejects={}",
+            pct(&lats, 0.50),
+            pct(&lats, 0.95),
+            pct(&lats, 0.99),
+            pct(&ttfts, 0.50),
+            pct(&ttfts, 0.95),
+            stats.preemptions(),
+            stats.breaker_trips(),
+            stats.admission_rejects,
+        );
+        if submit_errors > 0 {
+            println!("  {label:<9} non-overload submit errors: {submit_errors}");
+        }
+        report.push((
+            label,
+            Json::obj(vec![
+                ("load_factor", Json::num(factor)),
+                ("arrivals", Json::str(if factor > 1.0 { "bursty" } else { "poisson" })),
+                ("rate_req_per_s", Json::num(rate)),
+                ("requests", Json::num(n as f64)),
+                ("ok", Json::num(ok as f64)),
+                ("shed", Json::num(shed as f64)),
+                ("errored", Json::num(errored as f64)),
+                ("submit_errors", Json::num(submit_errors as f64)),
+                ("tokens", Json::num(tokens as f64)),
+                ("wall_s", Json::num(wall)),
+                ("goodput_req_per_s", Json::num(goodput)),
+                ("latency_ms_p50", Json::num(pct(&lats, 0.50))),
+                ("latency_ms_p95", Json::num(pct(&lats, 0.95))),
+                ("latency_ms_p99", Json::num(pct(&lats, 0.99))),
+                ("ttft_ms_p50", Json::num(pct(&ttfts, 0.50))),
+                ("ttft_ms_p95", Json::num(pct(&ttfts, 0.95))),
+                ("ttft_ms_p99", Json::num(pct(&ttfts, 0.99))),
+                ("admission_rejects", Json::num(stats.admission_rejects as f64)),
+                ("preemptions", Json::num(stats.preemptions() as f64)),
+                ("resumes", Json::num(stats.resumes() as f64)),
+                ("breaker_trips", Json::num(stats.breaker_trips() as f64)),
+                ("mean_queue_wait_ms", Json::num(stats.mean_queue_wait_ms())),
+                ("mean_ttft_ms", Json::num(stats.mean_ttft_ms())),
+            ]),
+        ));
+    }
+    std::env::remove_var("HASS_TEST_JOB_DELAY_MS");
+
+    let mut kv = vec![
+        ("method", Json::str(method)),
+        ("workers", Json::num(workers as f64)),
+        ("max_active", Json::num(max_active as f64)),
+        ("est_capacity_req_per_s", Json::num(capacity_req_s)),
+    ];
+    kv.extend(report);
+    std::fs::write("BENCH_load.json", Json::obj(kv).to_string())?;
+    println!("  wrote BENCH_load.json");
     Ok(())
 }

@@ -24,9 +24,10 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     }
     let summary = summarize(&samples);
     println!(
-        "{name:<40} {:>10.3}us/iter  p50={:>10.3}us  p99={:>10.3}us  (n={})",
+        "{name:<40} {:>10.3}us/iter  p50={:>10.3}us  p95={:>10.3}us  p99={:>10.3}us  (n={})",
         summary.mean * 1e6,
         summary.p50 * 1e6,
+        summary.p95 * 1e6,
         summary.p99 * 1e6,
         iters
     );

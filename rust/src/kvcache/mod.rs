@@ -142,6 +142,19 @@ fn next_stamp() -> u64 {
     NEXT_PAGE_STAMP.fetch_add(1, Ordering::Relaxed)
 }
 
+/// Pool-wide count of physical pages currently alive.  Every [`Page`]
+/// is built through [`Page::alloc`] (which increments) and decrements on
+/// drop, so this gauge is exact across workers — it is what the
+/// scheduler's admission-control and preemption watermarks read.
+static LIVE_PAGES: AtomicU64 = AtomicU64::new(0);
+
+/// Current number of physical pages alive anywhere in the process (all
+/// workers, all caches; registry weaks don't keep pages alive and are
+/// not counted).
+pub fn live_pages() -> u64 {
+    LIVE_PAGES.load(Ordering::Relaxed)
+}
+
 /// One fixed-size block of KV storage: `page_size` slots across every
 /// layer, for both K and V (layout `[L, page_size, H*hd]`, layer-major).
 /// Pages are shared by `Arc` across worker threads; mutation goes
@@ -163,12 +176,33 @@ pub struct Page {
 }
 
 impl Page {
+    /// Sole constructor: every physical page allocation passes through
+    /// here so [`live_pages`] counts exactly the pages that exist
+    /// (construction increments, [`Drop`] decrements).
+    fn alloc(layers: usize, page_size: usize, k: Vec<f32>, v: Vec<f32>) -> Page {
+        LIVE_PAGES.fetch_add(1, Ordering::Relaxed);
+        Page {
+            id: next_stamp(),
+            stamp: AtomicU64::new(next_stamp()),
+            layers,
+            page_size,
+            k,
+            v,
+        }
+    }
+
     pub fn id(&self) -> u64 {
         self.id
     }
 
     pub fn stamp(&self) -> u64 {
         self.stamp.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Page {
+    fn drop(&mut self) {
+        LIVE_PAGES.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -422,14 +456,7 @@ fn dedup_page(src: &PageSrc) -> PageRef {
         return p;
     }
     let (pk, pv) = src.materialize();
-    let p = Arc::new(Page {
-        id: next_stamp(),
-        stamp: AtomicU64::new(next_stamp()),
-        layers: src.layers,
-        page_size: src.page_size,
-        k: pk,
-        v: pv,
-    });
+    let p = Arc::new(Page::alloc(src.layers, src.page_size, pk, pv));
     reg.buckets
         .entry(h)
         .or_default()
@@ -534,14 +561,12 @@ impl KvCache {
     fn ensure_page(&mut self, pi: usize) {
         if self.pages[pi].is_none() {
             let n = self.layers * self.page_size * self.row_size();
-            self.pages[pi] = Some(Arc::new(Page {
-                id: next_stamp(),
-                stamp: AtomicU64::new(next_stamp()),
-                layers: self.layers,
-                page_size: self.page_size,
-                k: vec![0.0; n],
-                v: vec![0.0; n],
-            }));
+            self.pages[pi] = Some(Arc::new(Page::alloc(
+                self.layers,
+                self.page_size,
+                vec![0.0; n],
+                vec![0.0; n],
+            )));
         }
     }
 
@@ -562,14 +587,12 @@ impl KvCache {
         // hass-lint: allow(no-unwrap) — slot was materialized by ensure_page one line up
         let slot = self.pages[pi].as_mut().expect("page just ensured");
         if Arc::strong_count(slot) > 1 || Arc::weak_count(slot) > 0 {
-            *slot = Arc::new(Page {
-                id: next_stamp(),
-                stamp: AtomicU64::new(next_stamp()),
-                layers: slot.layers,
-                page_size: slot.page_size,
-                k: slot.k.clone(),
-                v: slot.v.clone(),
-            });
+            *slot = Arc::new(Page::alloc(
+                slot.layers,
+                slot.page_size,
+                slot.k.clone(),
+                slot.v.clone(),
+            ));
         } else {
             slot.stamp.store(next_stamp(), Ordering::Relaxed);
         }
@@ -832,6 +855,24 @@ impl KvCache {
         for p in &mut self.pages {
             *p = None;
         }
+    }
+
+    /// Park support (page-granular preemption): drop everything a
+    /// resumed session can rebuild — the contiguous staging image and
+    /// every page wholly past the committed prefix (uncommitted draft /
+    /// scratch rows) — while keeping committed pages intact so they
+    /// still dedup through the registry and resume is token-identical.
+    /// Returns the number of pages released.
+    pub fn release_staging(&mut self) -> usize {
+        self.image = None;
+        let keep = self.committed.div_ceil(self.page_size);
+        let mut dropped = 0usize;
+        for slot in self.pages.iter_mut().skip(keep) {
+            if slot.take().is_some() {
+                dropped += 1;
+            }
+        }
+        dropped
     }
 
     /// Copy `n` slot rows (every layer) from `src` starting at
@@ -1901,16 +1942,8 @@ mod tests {
     /// the cap evicts live buckets once dead ones are gone.
     #[test]
     fn registry_shard_prunes_and_caps() {
-        let mk = |seed: u64| {
-            Arc::new(Page {
-                id: seed,
-                stamp: AtomicU64::new(seed),
-                layers: 1,
-                page_size: 1,
-                k: vec![seed as f32; 8],
-                v: vec![seed as f32; 8],
-            })
-        };
+        let mk =
+            |seed: u64| Arc::new(Page::alloc(1, 1, vec![seed as f32; 8], vec![seed as f32; 8]));
         let tid = std::thread::current().id();
         let mut shard = RegistryShard::default();
         let live: Vec<PageRef> = (0..3).map(|i| mk(100 + i)).collect();
@@ -1977,5 +2010,41 @@ mod tests {
         local.write_rows_from(&k2, &v2, 10, 10, 1).unwrap();
         assert_ne!(local.committed_page_ids().last(), remote.committed_page_ids().last());
         assert_eq!(k_row(&mut remote, 0, 10), k.data[10 * 8..11 * 8].to_vec());
+    }
+
+    /// The pool-wide live-page gauge (the overload policy's admission
+    /// signal) counts every constructed page.  The gauge is global and
+    /// other test threads allocate concurrently, so the only safe
+    /// assertion is a lower bound: holding N pages, the gauge reads
+    /// at least N.
+    #[test]
+    fn overload_live_page_gauge_counts_held_pages() {
+        let caches: Vec<KvCache> = (0..4)
+            .map(|_| {
+                let mut c = KvCache::with_page_size(1, 8, 2, 4, 2);
+                // lazily allocated zero pages skip dedup: 4 fresh pages
+                c.page_ids_covering(8);
+                c
+            })
+            .collect();
+        assert!(live_pages() >= 16, "gauge {} < the 16 pages held here", live_pages());
+        drop(caches);
+    }
+
+    /// `release_staging` (the preemption park path) drops exactly the
+    /// pages above the committed boundary and the contiguous image:
+    /// committed rows stay byte-identical, dropped slots read as masked
+    /// zeros, and a second call finds nothing left.
+    #[test]
+    fn overload_release_staging_keeps_committed_pages() {
+        let mut c = filled_ps(2, 16, 4);
+        c.commit(10).unwrap();
+        let committed_row = k_row(&mut c, 1, 5);
+        // pages 0..3 back slots 0..12 (ceil(10/4) = 3 kept); page 3 drops
+        assert_eq!(c.release_staging(), 1, "only the page above the boundary drops");
+        assert_eq!(k_row(&mut c, 1, 5), committed_row, "committed rows must survive the park");
+        assert!(k_row(&mut c, 0, 13).iter().all(|x| *x == 0.0), "dropped slots must read masked");
+        assert_eq!(c.release_staging(), 0, "second park finds nothing to drop");
+        assert_eq!(c.committed, 10);
     }
 }

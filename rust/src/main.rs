@@ -8,7 +8,8 @@
 //!   serve      [--port 7777 --queue 64 --workers 1 --max-active 2]
 //!                                            TCP JSON-lines server; each worker
 //!                                            interleaves up to --max-active jobs
-//!   client     --prompt "..." [--addr ... --stats --stream --deadline-ms N]
+//!   client     --prompt "..." [--addr ... --stats --stream --deadline-ms N
+//!                              --priority N]
 //!                                            one-shot request to a server
 //!                                            (--stats fetches pool counters,
 //!                                             --stream prints per-cycle deltas)
@@ -168,6 +169,22 @@ fn run(args: &Args) -> Result<()> {
                         agg.f64_at("busy_ms").unwrap_or(0.0),
                         agg.f64_at("idle_ms").unwrap_or(0.0),
                     );
+                    println!(
+                        "overload: admission_rejects={} preemptions={} resumes={} \
+                         breaker_trips={} live_pages={} free_pages={} page_budget={}",
+                        agg.usize_at("admission_rejects").unwrap_or(0),
+                        agg.usize_at("preemptions").unwrap_or(0),
+                        agg.usize_at("resumes").unwrap_or(0),
+                        agg.usize_at("breaker_trips").unwrap_or(0),
+                        agg.usize_at("live_pages").unwrap_or(0),
+                        agg.usize_at("free_pages").unwrap_or(0),
+                        agg.usize_at("page_budget").unwrap_or(0),
+                    );
+                    println!(
+                        "slo: mean_queue_wait_ms={} mean_ttft_ms={}",
+                        agg.f64_at("mean_queue_wait_ms").unwrap_or(0.0),
+                        agg.f64_at("mean_ttft_ms").unwrap_or(0.0),
+                    );
                 }
                 return Ok(());
             }
@@ -178,6 +195,7 @@ fn run(args: &Args) -> Result<()> {
                 seed: args.usize_or("seed", 0) as u64,
                 stream: args.has("stream"),
                 deadline_ms: args.u64_opt("deadline-ms"),
+                priority: args.usize_or("priority", 0).min(u8::MAX as usize) as u8,
             };
             let prompt =
                 args.get_or("prompt", "User: How does photosynthesis work?\nAssistant:");

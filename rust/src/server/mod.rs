@@ -3,7 +3,7 @@
 //! Protocol: one JSON object per line.
 //!   generate: {"prompt": "...", "max_tokens": 64, "temperature": 0.0,
 //!              "method": "hass", "seed": 1, "stream": false,
-//!              "deadline_ms": 2000}
+//!              "deadline_ms": 2000, "priority": 0}
 //!          -> {"id": 1, "text": "...", "tokens": 12, "tau": 4.2,
 //!              "latency_ms": 180.0, "queue_ms": 2.0, "worker": 0}
 //!   streaming ("stream": true): one line per drafting-verification cycle
@@ -42,6 +42,16 @@
 //!             pool-wide page registry)
 //!   error:    {"id": 1, "error": "..."}  ("id" omitted when the line
 //!             could not be parsed; messages are JSON-escaped)
+//!   overload: {"id": 1, "error": "overloaded", "retry_after_ms": 250}
+//!             — admission control or a timed-out spill shed the job at
+//!             submit time; clients should back off and retry.  A job
+//!             aborted by a circuit breaker reports its error result
+//!             with "aborted": "breaker" alongside "error" (see the
+//!             scheduler module docs' overload-policy section).
+//!
+//! `priority` (0 = default, higher = more important) orders preemption:
+//! over the page budget a worker parks its lowest-priority/youngest
+//! session first and resumes the highest-priority/oldest first.
 //!
 //! `deadline_ms` counts from submission; the worker aborts the job with an
 //! error result once exceeded (checked between cycles).
@@ -62,7 +72,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use crate::scheduler::{Job, JobEvent, JobResult, PoolStats, Scheduler};
+use crate::scheduler::{Job, JobEvent, JobResult, Overloaded, PoolStats, Scheduler};
 use crate::util::json::{self, Json};
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
@@ -101,6 +111,7 @@ pub fn parse_request_with(line: &str, next_id: &AtomicU64) -> Result<Request> {
         seed: j.usize_at("seed").unwrap_or(0) as u64,
         stream: j.get("stream").and_then(|v| v.as_bool()).unwrap_or(false),
         deadline_ms: j.usize_at("deadline_ms").map(|v| v as u64),
+        priority: j.usize_at("priority").unwrap_or(0).min(u8::MAX as usize) as u8,
     }))
 }
 
@@ -125,7 +136,13 @@ fn error_json(id: Option<u64>, msg: &str) -> Json {
 
 fn response_json(r: &JobResult) -> Json {
     match &r.error {
-        Some(e) => error_json(Some(r.id), e),
+        Some(e) => {
+            let mut j = error_json(Some(r.id), e);
+            if let (Json::Obj(kv), Some(a)) = (&mut j, r.aborted) {
+                kv.push(("aborted".to_string(), Json::str(a)));
+            }
+            j
+        }
         None => Json::obj(vec![
             ("id", Json::num(r.id as f64)),
             ("text", Json::str(r.text.clone())),
@@ -147,6 +164,22 @@ pub fn format_response(r: &JobResult) -> String {
 /// interpolation emitted them raw).
 pub fn format_error(id: Option<u64>, msg: &str) -> String {
     error_json(id, msg).to_string()
+}
+
+/// Wire line for a submit-time failure.  Admission-control and
+/// spill-timeout sheds render as the explicit machine-readable overload
+/// shape so clients can back off and retry; every other error keeps the
+/// generic line.
+pub fn format_submit_error(id: u64, msg: &str) -> String {
+    match Overloaded::parse(msg) {
+        Some(o) => Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("error", Json::str("overloaded")),
+            ("retry_after_ms", Json::num(o.retry_after_ms as f64)),
+        ])
+        .to_string(),
+        None => format_error(Some(id), msg),
+    }
 }
 
 /// Wire line for one scheduler event.  Streamed jobs get per-cycle delta
@@ -202,6 +235,11 @@ pub fn format_pool_stats(p: &PoolStats) -> String {
                 ("affinity_hits", Json::num(w.affinity_hits as f64)),
                 ("affinity_misses", Json::num(w.affinity_misses as f64)),
                 ("cross_worker_shared_pages", Json::num(w.cross_worker_shared_pages as f64)),
+                ("preemptions", Json::num(w.preemptions as f64)),
+                ("resumes", Json::num(w.resumes as f64)),
+                ("breaker_trips", Json::num(w.breaker_trips as f64)),
+                ("mean_queue_wait_ms", Json::num(wire_r3(w.mean_queue_wait_ms()))),
+                ("mean_ttft_ms", Json::num(wire_r3(w.mean_ttft_ms()))),
                 ("tau", Json::num(wire_r3(w.metrics.tau()))),
             ])
         })
@@ -233,6 +271,15 @@ pub fn format_pool_stats(p: &PoolStats) -> String {
         ("cross_worker_shared_pages", Json::num(p.cross_worker_shared_pages() as f64)),
         ("registry_entries", Json::num(p.registry_entries as f64)),
         ("registry_evictions", Json::num(p.registry_evictions as f64)),
+        ("admission_rejects", Json::num(p.admission_rejects as f64)),
+        ("preemptions", Json::num(p.preemptions() as f64)),
+        ("resumes", Json::num(p.resumes() as f64)),
+        ("breaker_trips", Json::num(p.breaker_trips() as f64)),
+        ("live_pages", Json::num(p.live_pages as f64)),
+        ("page_budget", Json::num(p.page_budget as f64)),
+        ("free_pages", Json::num(p.free_pages as f64)),
+        ("mean_queue_wait_ms", Json::num(wire_r3(p.mean_queue_wait_ms()))),
+        ("mean_ttft_ms", Json::num(wire_r3(p.mean_ttft_ms()))),
         ("tau", Json::num(wire_r3(p.tau()))),
     ]);
     Json::obj(vec![(
@@ -325,7 +372,7 @@ fn handle_conn(stream: TcpStream, sched: &Arc<Scheduler>) -> Result<()> {
                 let id = job.id;
                 submitted.insert(id);
                 if let Err(e) = sched.submit_to(job, true, rtx.clone()) {
-                    write_line(&writer, &format_error(Some(id), &format!("{e:#}")))?;
+                    write_line(&writer, &format_submit_error(id, &format!("{e:#}")))?;
                 }
             }
             Err(e) => write_line(&writer, &format_error(None, &format!("bad request: {e:#}")))?,
@@ -348,6 +395,8 @@ pub struct ReqOpts {
     pub seed: u64,
     pub stream: bool,
     pub deadline_ms: Option<u64>,
+    /// Overload class (0 = default; higher survives preemption longer).
+    pub priority: u8,
 }
 
 impl Default for ReqOpts {
@@ -359,6 +408,7 @@ impl Default for ReqOpts {
             seed: 0,
             stream: false,
             deadline_ms: None,
+            priority: 0,
         }
     }
 }
@@ -432,6 +482,9 @@ impl Client {
         if let Some(d) = opts.deadline_ms {
             kv.push(("deadline_ms", Json::num(d as f64)));
         }
+        if opts.priority > 0 {
+            kv.push(("priority", Json::num(opts.priority as f64)));
+        }
         self.send_line(&Json::obj(kv).to_string())?;
         loop {
             let j = self.read_json()?;
@@ -479,6 +532,7 @@ mod tests {
             worker: 1,
             stream,
             error: error.map(str::to_string),
+            aborted: None,
         }
     }
 
@@ -491,6 +545,14 @@ mod tests {
         assert!((j.temperature - 1.0).abs() < 1e-6);
         assert!(!j.stream);
         assert_eq!(j.deadline_ms, None);
+        assert_eq!(j.priority, 0);
+    }
+
+    #[test]
+    fn parse_request_priority() {
+        assert_eq!(gen(r#"{"prompt": "x", "priority": 2}"#).priority, 2);
+        // out-of-range priorities clamp instead of erroring
+        assert_eq!(gen(r#"{"prompt": "x", "priority": 9999}"#).priority, 255);
     }
 
     #[test]
@@ -584,6 +646,37 @@ mod tests {
         assert_eq!(j.str_at("error"), Some("engine said \"no\""));
     }
 
+    /// Overload satellite: a submit-time `Overloaded` error renders as the
+    /// explicit machine-readable shape; other submit errors keep the
+    /// generic line.
+    #[test]
+    fn overload_submit_error_wire_shapes() {
+        use crate::scheduler::Overloaded;
+        let msg = format!("{:#}", Overloaded { retry_after_ms: 250 }.to_error());
+        let j = json::parse(&format_submit_error(6, &msg)).unwrap();
+        assert_eq!(j.usize_at("id"), Some(6));
+        assert_eq!(j.str_at("error"), Some("overloaded"));
+        assert_eq!(j.usize_at("retry_after_ms"), Some(250));
+        // non-overload submit errors keep the generic error line
+        let j = json::parse(&format_submit_error(7, "scheduler down")).unwrap();
+        assert_eq!(j.str_at("error"), Some("scheduler down"));
+        assert!(j.get("retry_after_ms").is_none());
+    }
+
+    /// Breaker satellite: an aborted result carries the distinct
+    /// "aborted" marker next to its error message.
+    #[test]
+    fn overload_breaker_abort_carries_marker() {
+        let mut r = result(8, "", false, Some("breaker: session exceeded 4 cycles"));
+        r.aborted = Some("breaker");
+        let j = json::parse(&format_response(&r)).unwrap();
+        assert_eq!(j.str_at("aborted"), Some("breaker"));
+        assert_eq!(j.str_at("error"), Some("breaker: session exceeded 4 cycles"));
+        // plain errors never grow the marker
+        let j = json::parse(&format_response(&result(9, "", false, Some("cancelled")))).unwrap();
+        assert!(j.get("aborted").is_none());
+    }
+
     /// Stream wire format: deltas carry done:false, the streamed final
     /// line (success or error) carries done:true, and non-streamed final
     /// lines keep the legacy shape (no "done" key).
@@ -663,6 +756,12 @@ mod tests {
                     affinity_hits: 5,
                     affinity_misses: 2,
                     cross_worker_shared_pages: 4,
+                    preemptions: 2,
+                    resumes: 2,
+                    breaker_trips: 1,
+                    queue_wait_ms_sum: 8.0,
+                    ttft_ms_sum: 30.0,
+                    ttft_count: 3,
                     metrics: m.clone(),
                 },
                 WorkerStats {
@@ -686,12 +785,22 @@ mod tests {
                     affinity_hits: 1,
                     affinity_misses: 1,
                     cross_worker_shared_pages: 0,
+                    preemptions: 0,
+                    resumes: 0,
+                    breaker_trips: 0,
+                    queue_wait_ms_sum: 4.0,
+                    ttft_ms_sum: 10.0,
+                    ttft_count: 2,
                     metrics: m,
                 },
             ],
             queue_depth: 4,
             registry_entries: 12,
             registry_evictions: 1,
+            admission_rejects: 3,
+            live_pages: 40,
+            page_budget: 48,
+            free_pages: 8,
         };
         let j = json::parse(&format_pool_stats(&p)).unwrap();
         let stats = j.get("stats").unwrap();
@@ -724,6 +833,18 @@ mod tests {
         assert_eq!(agg.usize_at("cross_worker_shared_pages"), Some(4));
         assert_eq!(agg.usize_at("registry_entries"), Some(12));
         assert_eq!(agg.usize_at("registry_evictions"), Some(1));
+        // overload satellite: shed/preempt/breaker counters, page gauges,
+        // and the SLO means (queue wait + TTFT) cross-checkable against
+        // BENCH_load.json
+        assert_eq!(agg.usize_at("admission_rejects"), Some(3));
+        assert_eq!(agg.usize_at("preemptions"), Some(2));
+        assert_eq!(agg.usize_at("resumes"), Some(2));
+        assert_eq!(agg.usize_at("breaker_trips"), Some(1));
+        assert_eq!(agg.usize_at("live_pages"), Some(40));
+        assert_eq!(agg.usize_at("page_budget"), Some(48));
+        assert_eq!(agg.usize_at("free_pages"), Some(8));
+        assert_eq!(agg.f64_at("mean_queue_wait_ms"), Some(2.0));
+        assert_eq!(agg.f64_at("mean_ttft_ms"), Some(8.0));
         let workers = stats.get("workers").unwrap().as_arr().unwrap();
         assert_eq!(workers.len(), 2);
         assert_eq!(workers[0].usize_at("jobs_ok"), Some(3));
@@ -737,8 +858,14 @@ mod tests {
         assert_eq!(workers[0].usize_at("draft_pack_pages_copied"), Some(6));
         assert_eq!(workers[0].usize_at("affinity_hits"), Some(5));
         assert_eq!(workers[0].usize_at("cross_worker_shared_pages"), Some(4));
+        assert_eq!(workers[0].usize_at("preemptions"), Some(2));
+        assert_eq!(workers[0].usize_at("resumes"), Some(2));
+        assert_eq!(workers[0].usize_at("breaker_trips"), Some(1));
+        assert_eq!(workers[0].f64_at("mean_queue_wait_ms"), Some(2.0));
+        assert_eq!(workers[0].f64_at("mean_ttft_ms"), Some(10.0));
         assert_eq!(workers[1].usize_at("worker"), Some(1));
         assert_eq!(workers[1].usize_at("affinity_misses"), Some(1));
+        assert_eq!(workers[1].f64_at("mean_ttft_ms"), Some(5.0));
         assert_eq!(workers[1].usize_at("solo_calls"), Some(3));
         assert_eq!(workers[1].usize_at("draft_solo_calls"), Some(5));
         assert_eq!(workers[1].f64_at("mean_draft_fused_rows"), Some(0.0));

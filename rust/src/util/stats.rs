@@ -11,7 +11,21 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
+}
+
+/// p-th percentile (p in 0.0..=1.0) of an ascending-sorted sample set,
+/// nearest-rank on the rounded fractional index; 0.0 on empty input.
+/// Shared by `summarize` and the latency/TTFT tails the load bench and
+/// SLO reporting quote, so every percentile in the repo means the same
+/// thing.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((p * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1);
+    sorted[i]
 }
 
 pub fn summarize(samples: &[f64]) -> Summary {
@@ -23,16 +37,16 @@ pub fn summarize(samples: &[f64]) -> Summary {
     let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
     let mut sorted = samples.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| sorted[((p * (n - 1) as f64).round() as usize).min(n - 1)];
     Summary {
         n,
         mean,
         std: var.sqrt(),
         min: sorted[0],
         max: sorted[n - 1],
-        p50: pct(0.50),
-        p90: pct(0.90),
-        p99: pct(0.99),
+        p50: percentile_sorted(&sorted, 0.50),
+        p90: percentile_sorted(&sorted, 0.90),
+        p95: percentile_sorted(&sorted, 0.95),
+        p99: percentile_sorted(&sorted, 0.99),
     }
 }
 
@@ -90,8 +104,19 @@ mod tests {
     #[test]
     fn summary_single() {
         let s = summarize(&[7.0]);
+        assert_eq!(s.p95, 7.0);
         assert_eq!(s.p99, 7.0);
         assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let sorted: Vec<f64> = (1..=100).map(f64::from).collect();
+        assert_eq!(percentile_sorted(&sorted, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&sorted, 0.50), 51.0); // round(0.5*99)=50
+        assert_eq!(percentile_sorted(&sorted, 0.95), 95.0);
+        assert_eq!(percentile_sorted(&sorted, 1.0), 100.0);
+        assert_eq!(percentile_sorted(&[], 0.5), 0.0);
     }
 
     #[test]

@@ -443,6 +443,7 @@ fn fused_pool_matches_sequential_with_artifacts() {
                             seed: i,
                             stream: false,
                             deadline_ms: None,
+                            priority: 0,
                         },
                         true,
                     )
@@ -588,5 +589,60 @@ fn tcp_cancel_aborts_streaming_job() {
     };
     assert!(after.get("error").is_none(), "follow-up failed: {after:?}");
     assert_eq!(after.usize_at("tokens"), Some(3));
+    sched.shutdown();
+}
+
+/// End-to-end overload shedding over TCP: a pool whose page gauge sits
+/// past the admission high-water mark answers a generate request with
+/// the explicit `{"error":"overloaded","retry_after_ms":N}` wire shape
+/// (never a hang), the stats wire reports the shed and the exhausted
+/// budget, and the SAME client's retry succeeds once pressure clears —
+/// the documented client protocol.  Runs everywhere — `mock` needs no
+/// artifacts.
+#[test]
+fn overload_admission_reject_then_client_retry_succeeds() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    let gauge = Arc::new(AtomicU64::new(1000));
+    let policy = hass::scheduler::OverloadPolicy {
+        page_budget: Some(100),
+        retry_after_ms: 55,
+        gauge: Some(gauge.clone()),
+        ..Default::default()
+    };
+    let sched = Arc::new(hass::scheduler::Scheduler::start_with_policy(
+        std::path::PathBuf::from("/nonexistent/hass-artifacts"),
+        MethodCfg::default(),
+        16,
+        1,
+        1,
+        true,
+        policy,
+    ));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let s2 = sched.clone();
+    std::thread::spawn(move || {
+        let _ = hass::server::serve(listener, s2);
+    });
+
+    let mut c = hass::server::Client::connect(&addr).unwrap();
+    let opts =
+        hass::server::ReqOpts { method: "mock".into(), max_tokens: 6, ..Default::default() };
+    let rej = c.generate("hello", &opts, |_| panic!("shed request must not stream")).unwrap();
+    assert_eq!(rej.str_at("error"), Some("overloaded"), "unexpected response: {rej:?}");
+    assert_eq!(rej.usize_at("retry_after_ms"), Some(55), "retry hint missing: {rej:?}");
+
+    let stats = c.stats().unwrap();
+    let agg = stats.get("stats").expect("stats envelope").get("aggregate").unwrap();
+    assert!(agg.usize_at("admission_rejects").unwrap_or(0) >= 1, "stats: {stats:?}");
+    assert_eq!(agg.usize_at("page_budget"), Some(100));
+    assert_eq!(agg.usize_at("free_pages"), Some(0));
+
+    // pressure clears: the retry the hint asked for now succeeds
+    gauge.store(0, Ordering::Relaxed);
+    let ok = c.generate("hello", &opts, |_| {}).unwrap();
+    assert!(ok.get("error").is_none(), "retry failed: {ok:?}");
+    assert_eq!(ok.usize_at("tokens"), Some(6));
     sched.shutdown();
 }
