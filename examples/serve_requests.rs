@@ -26,7 +26,12 @@
 //! bursty arrivals fired on a wall-clock schedule regardless of
 //! completions at 0.5x/1x/2x estimated capacity; p50/p95/p99 latency,
 //! TTFT, goodput, shed/preempt/breaker counts) written to
-//! `BENCH_load.json`.
+//! `BENCH_load.json`, and a CHAOS scenario (the same open-loop trace
+//! replayed under injected worker panics and decode errors at >= 1%
+//! rates via `util::failpoint`; asserts zero lost, duplicated or
+//! token-corrupted responses vs. a fault-free baseline and reports
+//! worker deaths, requeues/replays, recovery latency and per-point
+//! trigger counts) written to `BENCH_chaos.json`.
 
 use std::sync::Arc;
 
@@ -170,6 +175,7 @@ fn main() -> anyhow::Result<()> {
     draft_batch_bench(&dir, &wl, &method, n_requests)?;
     page_pool_bench(&dir, &method)?;
     load_bench(&dir, &wl, &method)?;
+    chaos_bench(&dir, &wl, &method)?;
     Ok(())
 }
 
@@ -1003,5 +1009,177 @@ fn load_bench(dir: &std::path::Path, wl: &Workloads, method: &str) -> anyhow::Re
     kv.extend(report);
     std::fs::write("BENCH_load.json", Json::obj(kv).to_string())?;
     println!("  wrote BENCH_load.json");
+    Ok(())
+}
+
+/// Chaos scenario (PR 10): replay one seeded open-loop trace twice
+/// through identical pools — once fault-free for a per-request baseline,
+/// once under injected faults (worker panics per cycle plus decode-call
+/// errors, each >= 1%) scoped to the chaos pool's threads.  The run
+/// ASSERTS the recovery contract: every request completes exactly once
+/// (zero lost, zero duplicated), error-free, with streamed deltas
+/// concatenating to a final text byte-identical to the fault-free run.
+/// Recovery latency, requeue/replay counts and per-point failpoint
+/// trigger counts go to stdout and `BENCH_chaos.json`.
+fn chaos_bench(dir: &std::path::Path, wl: &Workloads, method: &str) -> anyhow::Result<()> {
+    use std::collections::HashMap;
+
+    use hass::scheduler::{Job, JobEvent, Scheduler};
+    use hass::util::failpoint::{self, Action, FaultSpec};
+    use hass::util::json::Json;
+    use hass::workload::Arrivals;
+
+    let method = {
+        let resolved = resolve_runnable(dir, method)?;
+        if resolved != method {
+            println!("\n(chaos bench: '{method}' unavailable, using 'mock')");
+        }
+        resolved
+    };
+    let (workers, max_active, n) = (2usize, 2usize, 24usize);
+    // stretch cycles so worker-tick faults actually interleave with live
+    // sessions (the mock backend is otherwise too fast to interrupt)
+    std::env::set_var("HASS_TEST_JOB_DELAY_MS", "2");
+    let trace = || wl.open_loop_trace(n, 777, Arrivals::Poisson { rate_per_s: 40.0 });
+    let job_for = |id: u64, prompt: String, max_new: usize, stream: bool| Job {
+        id,
+        method: method.clone(),
+        prompt,
+        max_new,
+        temperature: 0.0,
+        seed: id, // generation is seeded: replay after a crash is exact
+        stream,
+        deadline_ms: None,
+        priority: 0,
+    };
+
+    // ---- fault-free baseline: text per request id ----
+    let baseline: HashMap<u64, (String, usize)> = {
+        let sched =
+            Scheduler::start(dir.to_path_buf(), MethodCfg::default(), 64, workers, max_active);
+        let (rtx, rrx) = std::sync::mpsc::channel::<JobEvent>();
+        for (i, req) in trace().into_iter().enumerate() {
+            let job = job_for(i as u64 + 1, req.prompt, req.max_new, false);
+            sched.submit_to(job, true, rtx.clone())?;
+        }
+        drop(rtx);
+        let out: HashMap<u64, (String, usize)> = rrx
+            .iter()
+            .filter_map(JobEvent::into_result)
+            .filter(|r| r.error.is_none())
+            .map(|r| (r.id, (r.text, r.tokens)))
+            .collect();
+        sched.shutdown();
+        out
+    };
+    anyhow::ensure!(baseline.len() == n, "baseline run lost requests: {}/{n}", baseline.len());
+
+    // ---- same trace under chaos ----
+    let sched = Scheduler::start(dir.to_path_buf(), MethodCfg::default(), 64, workers, max_active);
+    // worker panics + decode errors, each at >= 1% (decode points only
+    // trigger for compiled methods; the mock backend never calls them)
+    let specs = vec![
+        FaultSpec { point: failpoint::WORKER_TICK, action: Action::Panic, rate: 0.02 },
+        FaultSpec { point: failpoint::TARGET_DECODE, action: Action::Err, rate: 0.02 },
+        FaultSpec { point: failpoint::DRAFT_DECODE, action: Action::Err, rate: 0.02 },
+    ];
+    let fault_rates: Vec<(&str, Json)> = specs
+        .iter()
+        .map(|s| (s.point.name(), Json::num(s.rate)))
+        .collect();
+    let guard = failpoint::install(Some(sched.fault_scope()), specs, 0xC7A05);
+    let t0 = std::time::Instant::now();
+    let (rtx, rrx) = std::sync::mpsc::channel::<JobEvent>();
+    let collector = std::thread::spawn(move || {
+        let mut deltas: HashMap<u64, String> = HashMap::new();
+        let mut done: Vec<hass::scheduler::JobResult> = Vec::new();
+        for ev in rrx {
+            match ev {
+                JobEvent::Delta { id, text, .. } => deltas.entry(id).or_default().push_str(&text),
+                JobEvent::Done(r) => done.push(r),
+            }
+        }
+        (deltas, done)
+    });
+    let mut submit_errors = 0usize;
+    for (i, req) in trace().into_iter().enumerate() {
+        let due = std::time::Duration::from_millis(req.at_ms);
+        let now = t0.elapsed();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        // streamed, so crash recovery exercises the replay path and the
+        // delta journal proves no token is delivered twice
+        let job = job_for(i as u64 + 1, req.prompt, req.max_new, true);
+        if sched.submit_to(job, true, rtx.clone()).is_err() {
+            submit_errors += 1;
+        }
+    }
+    drop(rtx);
+    let (deltas, done) = collector.join().expect("collector thread");
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = sched.stats();
+    drop(guard);
+    sched.shutdown();
+    std::env::remove_var("HASS_TEST_JOB_DELAY_MS");
+
+    // ---- the recovery contract ----
+    anyhow::ensure!(submit_errors == 0, "{submit_errors} submissions failed under chaos");
+    anyhow::ensure!(
+        done.len() == n,
+        "lost or duplicated responses under chaos: {} done for {n} submitted",
+        done.len()
+    );
+    let mut seen = std::collections::HashSet::new();
+    for r in &done {
+        anyhow::ensure!(seen.insert(r.id), "request {} completed twice", r.id);
+        anyhow::ensure!(r.error.is_none(), "request {} errored under chaos: {:?}", r.id, r.error);
+        let (want_text, want_tokens) = &baseline[&r.id];
+        anyhow::ensure!(
+            r.text == *want_text && r.tokens == *want_tokens,
+            "request {} token-corrupted under chaos",
+            r.id
+        );
+        let streamed = deltas.get(&r.id).map(String::as_str).unwrap_or("");
+        anyhow::ensure!(
+            streamed == r.text,
+            "request {} deltas diverged from its final text (duplicate or missing tokens)",
+            r.id
+        );
+    }
+    let triggers: Vec<(&str, Json)> = failpoint::triggers()
+        .into_iter()
+        .filter(|&(_, c)| c > 0)
+        .map(|(name, c)| (name, Json::num(c as f64)))
+        .collect();
+    println!("\n== chaos ({workers} workers, method '{method}', {n} requests) ==");
+    println!(
+        "  all {n} requests exactly-once and token-identical to the fault-free run\n  \
+         worker_deaths={} requeues={} replays={} mean_recovery_ms={:.1} wall={wall:.1}s",
+        stats.worker_deaths(),
+        stats.requeues(),
+        stats.replays(),
+        stats.mean_recovery_ms(),
+    );
+    println!("  failpoint triggers: {}", Json::obj(triggers.clone()));
+    let kv = vec![
+        ("method", Json::str(method)),
+        ("workers", Json::num(workers as f64)),
+        ("max_active", Json::num(max_active as f64)),
+        ("requests", Json::num(n as f64)),
+        ("fault_rates", Json::obj(fault_rates)),
+        ("ok", Json::num(done.len() as f64)),
+        ("lost", Json::num(0.0)),
+        ("duplicated", Json::num(0.0)),
+        ("token_corrupted", Json::num(0.0)),
+        ("worker_deaths", Json::num(stats.worker_deaths() as f64)),
+        ("requeues", Json::num(stats.requeues() as f64)),
+        ("replays", Json::num(stats.replays() as f64)),
+        ("mean_recovery_ms", Json::num(stats.mean_recovery_ms())),
+        ("wall_s", Json::num(wall)),
+        ("failpoint_triggers", Json::obj(triggers)),
+    ];
+    std::fs::write("BENCH_chaos.json", Json::obj(kv).to_string())?;
+    println!("  wrote BENCH_chaos.json");
     Ok(())
 }

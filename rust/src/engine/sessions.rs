@@ -20,6 +20,7 @@ use crate::kvcache::audit;
 use crate::kvcache::{draft_page_size, FusedScratch, KvCache, MemberVis, PackMember, PackedLayout};
 use crate::runtime::{scalar_i32, Checkpoint, Runtime, TensorF, TensorI};
 use crate::spec::{DraftRows, VerifyRows};
+use crate::util::failpoint;
 
 /// Compiled decode-block widths, ascending (see `python/compile/aot.py`).
 pub const BLOCK_WIDTHS: &[usize] = &[1, 8, 64, 128];
@@ -264,6 +265,7 @@ impl TargetSession {
                 }
             }
         }
+        failpoint::fire(failpoint::TARGET_DECODE)?;
         let graph = format!("target_decode_n{nb}");
         // borrow the incrementally synced image (O(changed pages), no
         // full-buffer clone per call) just long enough to build literals
@@ -399,6 +401,7 @@ pub fn fused_decode(
     let mask = layout.mask(nb, &ancs)?;
 
     // ---- one graph call for every member ----
+    failpoint::fire(failpoint::TARGET_DECODE)?;
     let rt = &batch[0].0.rt;
     let graph = format!("target_decode_n{nb}");
     let out = call(
@@ -671,6 +674,7 @@ impl DraftSession {
             }
             mask[off + write_start + i] = 1; // own slot
         }
+        failpoint::fire(failpoint::DRAFT_DECODE)?;
         let graph = format!("draft_decode_b{b}");
         let dims = [self.slots, self.cache.heads, self.cache.head_dim];
         let (kv_k, kv_v) = {
@@ -802,6 +806,7 @@ pub fn fused_draft_decode(
     };
 
     // ---- one graph call for every member's level ----
+    failpoint::fire(failpoint::DRAFT_DECODE)?;
     let graph = format!("draft_decode_b{width}");
     let dims = [slots, heads, hd];
     let inputs = [

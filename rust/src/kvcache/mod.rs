@@ -180,6 +180,7 @@ impl Page {
     /// here so [`live_pages`] counts exactly the pages that exist
     /// (construction increments, [`Drop`] decrements).
     fn alloc(layers: usize, page_size: usize, k: Vec<f32>, v: Vec<f32>) -> Page {
+        crate::util::failpoint::fire_unit(crate::util::failpoint::PAGE_ALLOC);
         LIVE_PAGES.fetch_add(1, Ordering::Relaxed);
         Page {
             id: next_stamp(),
@@ -431,6 +432,10 @@ fn dedup_page(src: &PageSrc) -> PageRef {
     let tid = std::thread::current().id();
     let _t = crate::util::lockorder::trace(crate::util::lockorder::PAGE_SHARD);
     let mut reg = registry()[shard_of(h)].lock().unwrap_or_else(|p| p.into_inner());
+    // chaos: a panic here poisons the shard lock at a point where its
+    // contents are still consistent (nothing mutated yet), exercising the
+    // `into_inner` poison-recovery path above
+    crate::util::failpoint::fire_unit(crate::util::failpoint::DEDUP_SHARD);
     reg.sweep_if_due();
     let mut dropped = 0usize;
     let mut hit = None;
@@ -2046,5 +2051,50 @@ mod tests {
         assert!(k_row(&mut c, 0, 13).iter().all(|x| *x == 0.0), "dropped slots must read masked");
         assert_eq!(c.release_staging(), 0, "second park finds nothing to drop");
         assert_eq!(c.committed, 10);
+    }
+
+    /// Robustness satellite: a panic injected inside a dedup-registry
+    /// shard critical section (`kvcache.dedup_shard`, fired before any
+    /// mutation) poisons that shard's lock with its contents consistent;
+    /// the `into_inner` recovery path must keep dedup fully functional
+    /// afterwards, including hits against entries registered pre-poison.
+    #[test]
+    fn chaos_poisoned_registry_shard_recovers() {
+        use crate::util::failpoint;
+        let (layers, slots, ps) = (2usize, 16usize, 4usize);
+        let (k, v) = fill_tensors(layers, slots, 8, 4242.0);
+        // register the content first, fault-free
+        let mut a = KvCache::with_page_size(layers, slots, 2, 4, ps);
+        a.absorb(k.clone(), v.clone(), 10).unwrap();
+        a.committed = 10;
+        // poison the shard: the failpoint fires with the lock held
+        let tag = std::thread::current().name().expect("test threads are named").to_string();
+        let g = failpoint::install(
+            Some(&tag),
+            vec![failpoint::FaultSpec {
+                point: failpoint::DEDUP_SHARD,
+                action: failpoint::Action::Panic,
+                rate: 1.0,
+            }],
+            23,
+        );
+        let mut b = KvCache::with_page_size(layers, slots, 2, 4, ps);
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            b.absorb(k.clone(), v.clone(), 10)
+        }));
+        assert!(boom.is_err(), "the dedup_shard failpoint must panic the absorber");
+        drop(g);
+        // recovery: the same content still dedups against a's pages
+        // through the poisoned (into_inner-recovered) shard
+        let mut c = KvCache::with_page_size(layers, slots, 2, 4, ps);
+        c.absorb(k.clone(), v.clone(), 10).unwrap();
+        c.committed = 10;
+        assert_eq!(
+            a.committed_page_ids(),
+            c.committed_page_ids(),
+            "post-poison absorb must still dedup against pre-poison pages"
+        );
+        // and the pool-wide registry walk stays functional too
+        assert!(registry_stats().entries >= 1);
     }
 }

@@ -9,10 +9,12 @@
 //!                                            TCP JSON-lines server; each worker
 //!                                            interleaves up to --max-active jobs
 //!   client     --prompt "..." [--addr ... --stats --stream --deadline-ms N
-//!                              --priority N]
+//!                              --priority N --retries N]
 //!                                            one-shot request to a server
 //!                                            (--stats fetches pool counters,
-//!                                             --stream prints per-cycle deltas)
+//!                                             --stream prints per-cycle deltas,
+//!                                             --retries N retries overloaded/
+//!                                             worker_lost with jittered backoff)
 //!   analyze    [paths...]                    run the in-repo lint (hass-analyze)
 //!                                            over rust/src (default) or paths
 //!   goldens                                  verify vs python goldens
@@ -185,6 +187,19 @@ fn run(args: &Args) -> Result<()> {
                         agg.f64_at("mean_queue_wait_ms").unwrap_or(0.0),
                         agg.f64_at("mean_ttft_ms").unwrap_or(0.0),
                     );
+                    println!(
+                        "robustness: worker_deaths={} requeues={} replays={} \
+                         mean_recovery_ms={}",
+                        agg.usize_at("worker_deaths").unwrap_or(0),
+                        agg.usize_at("requeues").unwrap_or(0),
+                        agg.usize_at("replays").unwrap_or(0),
+                        agg.f64_at("mean_recovery_ms").unwrap_or(0.0),
+                    );
+                }
+                // per-point fault-injection trigger counters (non-zero
+                // only; empty outside HASS_FAULTS runs)
+                if let Some(fp) = stats.get("stats").and_then(|s| s.get("failpoints")) {
+                    println!("failpoints: {fp}");
                 }
                 return Ok(());
             }
@@ -200,7 +215,8 @@ fn run(args: &Args) -> Result<()> {
             let prompt =
                 args.get_or("prompt", "User: How does photosynthesis work?\nAssistant:");
             let streaming = opts.stream;
-            let resp = c.generate(&prompt, &opts, |delta| {
+            let retries = args.usize_or("retries", 0);
+            let resp = c.generate_with_retry(&prompt, &opts, retries, |delta| {
                 print!("{delta}");
                 let _ = std::io::Write::flush(&mut std::io::stdout());
             })?;

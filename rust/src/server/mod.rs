@@ -48,6 +48,14 @@
 //!             aborted by a circuit breaker reports its error result
 //!             with "aborted": "breaker" alongside "error" (see the
 //!             scheduler module docs' overload-policy section).
+//!   worker_lost: {"id": 1, "error": "worker_lost", "retryable": true}
+//!             — the engine worker serving the job died and the job could
+//!             not be transparently recovered (redelivery budget spent,
+//!             or a streamed replay diverged from the already-emitted
+//!             prefix).  Safe to retry: the scheduler checks a job out of
+//!             its crash journal only immediately before the final
+//!             response is handed over, so a job that reports this line
+//!             never also completed.
 //!
 //! `priority` (0 = default, higher = more important) orders preemption:
 //! over the page budget a worker parks its lowest-priority/youngest
@@ -63,6 +71,25 @@
 //! one channel).  Responses carry "id" so clients can pair them; with
 //! N>1 engine workers (or in-worker interleaving) they may arrive out of
 //! order relative to the requests on the same connection.
+//!
+//! # Failure semantics
+//!
+//! Engine-worker crashes are supervised by the scheduler (see the
+//! scheduler module docs' failure-semantics section): recoverable jobs
+//! are requeued or replayed transparently, and unrecoverable ones report
+//! the retryable `worker_lost` line above instead of leaving the client
+//! blocked until its deadline.  [`Client::generate_with_retry`] layers
+//! client-side recovery on top: it retries both `worker_lost` failures
+//! and `overloaded` rejections with jittered exponential backoff,
+//! honoring the server's `retry_after_ms` hint when present.
+//!
+//! Connection I/O carries the `server.conn_read` / `server.conn_write`
+//! failpoints (`HASS_FAULTS` — see `util::failpoint`): an injected read
+//! error ends the connection exactly like a peer reset, and an injected
+//! write error ends a response write the way a closed socket would.
+//! Either way in-flight jobs run to completion and their events are
+//! discarded (drain-by-drop), identical to a genuine disconnect — the
+//! pool is never stalled by a failed or slow connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -72,8 +99,10 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use crate::scheduler::{Job, JobEvent, JobResult, Overloaded, PoolStats, Scheduler};
+use crate::scheduler::{is_worker_lost, Job, JobEvent, JobResult, Overloaded, PoolStats, Scheduler};
+use crate::util::failpoint;
 use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
@@ -137,7 +166,17 @@ fn error_json(id: Option<u64>, msg: &str) -> Json {
 fn response_json(r: &JobResult) -> Json {
     match &r.error {
         Some(e) => {
-            let mut j = error_json(Some(r.id), e);
+            // a lost-worker failure renders as the explicit retryable
+            // shape (module docs) instead of the raw scheduler message
+            let mut j = if is_worker_lost(e) {
+                Json::obj(vec![
+                    ("id", Json::num(r.id as f64)),
+                    ("error", Json::str("worker_lost")),
+                    ("retryable", Json::Bool(true)),
+                ])
+            } else {
+                error_json(Some(r.id), e)
+            };
             if let (Json::Obj(kv), Some(a)) = (&mut j, r.aborted) {
                 kv.push(("aborted".to_string(), Json::str(a)));
             }
@@ -238,6 +277,10 @@ pub fn format_pool_stats(p: &PoolStats) -> String {
                 ("preemptions", Json::num(w.preemptions as f64)),
                 ("resumes", Json::num(w.resumes as f64)),
                 ("breaker_trips", Json::num(w.breaker_trips as f64)),
+                ("requeues", Json::num(w.requeues as f64)),
+                ("replays", Json::num(w.replays as f64)),
+                ("worker_deaths", Json::num(w.worker_deaths as f64)),
+                ("mean_recovery_ms", Json::num(wire_r3(w.mean_recovery_ms()))),
                 ("mean_queue_wait_ms", Json::num(wire_r3(w.mean_queue_wait_ms()))),
                 ("mean_ttft_ms", Json::num(wire_r3(w.mean_ttft_ms()))),
                 ("tau", Json::num(wire_r3(w.metrics.tau()))),
@@ -275,6 +318,10 @@ pub fn format_pool_stats(p: &PoolStats) -> String {
         ("preemptions", Json::num(p.preemptions() as f64)),
         ("resumes", Json::num(p.resumes() as f64)),
         ("breaker_trips", Json::num(p.breaker_trips() as f64)),
+        ("requeues", Json::num(p.requeues() as f64)),
+        ("replays", Json::num(p.replays() as f64)),
+        ("worker_deaths", Json::num(p.worker_deaths() as f64)),
+        ("mean_recovery_ms", Json::num(wire_r3(p.mean_recovery_ms()))),
         ("live_pages", Json::num(p.live_pages as f64)),
         ("page_budget", Json::num(p.page_budget as f64)),
         ("free_pages", Json::num(p.free_pages as f64)),
@@ -282,9 +329,20 @@ pub fn format_pool_stats(p: &PoolStats) -> String {
         ("mean_ttft_ms", Json::num(wire_r3(p.mean_ttft_ms()))),
         ("tau", Json::num(wire_r3(p.tau()))),
     ]);
+    // chaos observability: per-point trigger counters (non-zero only, so
+    // fault-free runs emit an empty object and the line stays compact)
+    let fired: Vec<(&str, Json)> = failpoint::triggers()
+        .into_iter()
+        .filter(|&(_, n)| n > 0)
+        .map(|(name, n)| (name, Json::num(n as f64)))
+        .collect();
     Json::obj(vec![(
         "stats",
-        Json::obj(vec![("workers", Json::Arr(workers)), ("aggregate", aggregate)]),
+        Json::obj(vec![
+            ("workers", Json::Arr(workers)),
+            ("aggregate", aggregate),
+            ("failpoints", Json::obj(fired)),
+        ]),
     )])
     .to_string()
 }
@@ -318,6 +376,11 @@ pub fn serve(listener: TcpListener, scheduler: Arc<Scheduler>) -> Result<()> {
 }
 
 fn write_line(writer: &Arc<Mutex<TcpStream>>, line: &str) -> std::io::Result<()> {
+    // chaos: an injected write error behaves exactly like a closed socket
+    // (callers drop the connection; the pool is unaffected)
+    if let Err(e) = failpoint::fire(failpoint::CONN_WRITE) {
+        return Err(std::io::Error::other(e.to_string()));
+    }
     let mut w = writer.lock().unwrap_or_else(|p| p.into_inner());
     w.write_all(line.as_bytes())?;
     w.write_all(b"\n")
@@ -357,6 +420,9 @@ fn handle_conn(stream: TcpStream, sched: &Arc<Scheduler>) -> Result<()> {
     let mut submitted: std::collections::HashSet<u64> = std::collections::HashSet::new();
     for line in reader.lines() {
         let line = line?;
+        // chaos: an injected read error ends the connection like a peer
+        // reset; in-flight jobs finish and drain-by-drop as usual
+        failpoint::fire(failpoint::CONN_READ)?;
         if line.trim().is_empty() {
             continue;
         }
@@ -493,6 +559,51 @@ impl Client {
                 None => return Ok(j), // final line (success or error)
             }
         }
+    }
+
+    /// [`Client::generate`] with client-side recovery: retries up to
+    /// `retries` additional attempts when the final line is a retryable
+    /// failure — an `overloaded` rejection (honoring the server's
+    /// `retry_after_ms` hint) or a `worker_lost` report — sleeping a
+    /// jittered exponential backoff between attempts (full jitter in
+    /// [base/2, base), base doubling from 25 ms, capped at 2 s; the
+    /// server hint raises the base when longer).  Non-retryable errors
+    /// and successes return immediately; the last attempt's line is
+    /// returned as-is when the budget runs out.
+    ///
+    /// Each retry resubmits a fresh job, so for `stream: true` requests
+    /// `on_delta` may replay text already seen before the failed
+    /// attempt's final line — callers that render deltas incrementally
+    /// should reset their buffer when a retry starts (non-streamed
+    /// requests are unaffected).
+    pub fn generate_with_retry(
+        &mut self,
+        prompt: &str,
+        opts: &ReqOpts,
+        retries: usize,
+        mut on_delta: impl FnMut(&str),
+    ) -> Result<Json> {
+        // deterministic jitter: seeded from the request seed so load
+        // tests replay identical schedules
+        let mut rng = Rng::new(opts.seed ^ 0x5EED_BACC_0FF5);
+        let mut base_ms: u64 = 25;
+        for attempt in 0..=retries {
+            let j = self.generate(prompt, opts, &mut on_delta)?;
+            let err = match j.str_at("error") {
+                None => return Ok(j),
+                Some(e) => e.to_string(),
+            };
+            let retryable = err == "overloaded" || is_worker_lost(&err);
+            if !retryable || attempt == retries {
+                return Ok(j);
+            }
+            let hint = j.usize_at("retry_after_ms").unwrap_or(0) as u64;
+            let base = base_ms.max(hint).max(2);
+            let wait = base / 2 + rng.next_u64() % (base / 2);
+            std::thread::sleep(std::time::Duration::from_millis(wait));
+            base_ms = (base_ms * 2).min(2_000);
+        }
+        unreachable!("the final attempt returns from inside the loop")
     }
 
     /// Fetch the pool's `{"stats": ...}` snapshot.
@@ -729,6 +840,98 @@ mod tests {
         server.join().unwrap();
     }
 
+    /// Robustness satellite: an unrecoverable lost-worker result renders
+    /// as the explicit retryable shape, streamed or not; other errors
+    /// keep the raw message and never grow the marker.
+    #[test]
+    fn worker_lost_wire_shape() {
+        use crate::scheduler::WORKER_LOST_MSG;
+        let r = result(3, "", false, Some(WORKER_LOST_MSG));
+        let j = json::parse(&format_response(&r)).unwrap();
+        assert_eq!(j.usize_at("id"), Some(3));
+        assert_eq!(j.str_at("error"), Some("worker_lost"));
+        assert_eq!(j.get("retryable").and_then(|v| v.as_bool()), Some(true));
+        // streamed final line keeps done:true alongside the shape
+        let r = result(4, "", true, Some(WORKER_LOST_MSG));
+        let j = json::parse(&format_event(&JobEvent::Done(r))).unwrap();
+        assert_eq!(j.get("done").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(j.str_at("error"), Some("worker_lost"));
+        assert_eq!(j.get("retryable").and_then(|v| v.as_bool()), Some(true));
+        // unrelated errors are untouched
+        let j = json::parse(&format_response(&result(5, "", false, Some("cancelled")))).unwrap();
+        assert_eq!(j.str_at("error"), Some("cancelled"));
+        assert!(j.get("retryable").is_none());
+    }
+
+    /// Retry satellite: a scripted server rejects with overloaded
+    /// (carrying a retry_after_ms hint), then reports worker_lost, then
+    /// accepts — generate_with_retry must walk through all three and
+    /// return the success.
+    #[test]
+    fn client_retries_overload_then_worker_lost() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || -> usize {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut w = stream.try_clone().unwrap();
+            let responses = [
+                "{\"id\":1,\"error\":\"overloaded\",\"retry_after_ms\":1}\n",
+                "{\"id\":2,\"error\":\"worker_lost\",\"retryable\":true}\n",
+                "{\"id\":3,\"text\":\"ok\",\"tokens\":2}\n",
+            ];
+            let mut seen = 0;
+            for r in responses {
+                let mut line = String::new();
+                if reader.read_line(&mut line).unwrap() == 0 {
+                    break;
+                }
+                seen += 1;
+                w.write_all(r.as_bytes()).unwrap();
+            }
+            seen
+        });
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let r = c.generate_with_retry("p", &ReqOpts::default(), 3, |_| {}).unwrap();
+        assert_eq!(r.str_at("text"), Some("ok"));
+        assert_eq!(server.join().unwrap(), 3, "expected exactly three attempts");
+    }
+
+    /// Retry satellite: a zero budget returns the retryable line as-is,
+    /// and non-retryable errors never burn retries.
+    #[test]
+    fn client_retry_budget_and_non_retryable() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || -> usize {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut w = stream.try_clone().unwrap();
+            let responses = [
+                "{\"id\":1,\"error\":\"worker_lost\",\"retryable\":true}\n",
+                "{\"id\":2,\"error\":\"cancelled\"}\n",
+            ];
+            let mut seen = 0;
+            for r in responses {
+                let mut line = String::new();
+                if reader.read_line(&mut line).unwrap() == 0 {
+                    break;
+                }
+                seen += 1;
+                w.write_all(r.as_bytes()).unwrap();
+            }
+            seen
+        });
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        // retries=0: the worker_lost line comes back untouched
+        let r = c.generate_with_retry("p", &ReqOpts::default(), 0, |_| {}).unwrap();
+        assert_eq!(r.str_at("error"), Some("worker_lost"));
+        // a non-retryable error returns immediately despite budget left
+        let r = c.generate_with_retry("p", &ReqOpts::default(), 5, |_| {}).unwrap();
+        assert_eq!(r.str_at("error"), Some("cancelled"));
+        assert_eq!(server.join().unwrap(), 2);
+    }
+
     #[test]
     fn pool_stats_roundtrip() {
         let mut m = Metrics::default();
@@ -759,6 +962,10 @@ mod tests {
                     preemptions: 2,
                     resumes: 2,
                     breaker_trips: 1,
+                    requeues: 2,
+                    replays: 1,
+                    worker_deaths: 2,
+                    recovery_ms_sum: 50.0,
                     queue_wait_ms_sum: 8.0,
                     ttft_ms_sum: 30.0,
                     ttft_count: 3,
@@ -788,6 +995,10 @@ mod tests {
                     preemptions: 0,
                     resumes: 0,
                     breaker_trips: 0,
+                    requeues: 0,
+                    replays: 0,
+                    worker_deaths: 0,
+                    recovery_ms_sum: 0.0,
                     queue_wait_ms_sum: 4.0,
                     ttft_ms_sum: 10.0,
                     ttft_count: 2,
@@ -845,6 +1056,14 @@ mod tests {
         assert_eq!(agg.usize_at("free_pages"), Some(8));
         assert_eq!(agg.f64_at("mean_queue_wait_ms"), Some(2.0));
         assert_eq!(agg.f64_at("mean_ttft_ms"), Some(8.0));
+        // robustness satellite: supervision/recovery counters
+        assert_eq!(agg.usize_at("requeues"), Some(2));
+        assert_eq!(agg.usize_at("replays"), Some(1));
+        assert_eq!(agg.usize_at("worker_deaths"), Some(2));
+        assert_eq!(agg.f64_at("mean_recovery_ms"), Some(25.0));
+        // failpoint trigger counters ride along as their own object
+        // (empty in a fault-free process, but the key is always present)
+        assert!(stats.get("failpoints").is_some());
         let workers = stats.get("workers").unwrap().as_arr().unwrap();
         assert_eq!(workers.len(), 2);
         assert_eq!(workers[0].usize_at("jobs_ok"), Some(3));
@@ -861,6 +1080,12 @@ mod tests {
         assert_eq!(workers[0].usize_at("preemptions"), Some(2));
         assert_eq!(workers[0].usize_at("resumes"), Some(2));
         assert_eq!(workers[0].usize_at("breaker_trips"), Some(1));
+        assert_eq!(workers[0].usize_at("requeues"), Some(2));
+        assert_eq!(workers[0].usize_at("replays"), Some(1));
+        assert_eq!(workers[0].usize_at("worker_deaths"), Some(2));
+        assert_eq!(workers[0].f64_at("mean_recovery_ms"), Some(25.0));
+        assert_eq!(workers[1].usize_at("worker_deaths"), Some(0));
+        assert_eq!(workers[1].f64_at("mean_recovery_ms"), Some(0.0));
         assert_eq!(workers[0].f64_at("mean_queue_wait_ms"), Some(2.0));
         assert_eq!(workers[0].f64_at("mean_ttft_ms"), Some(10.0));
         assert_eq!(workers[1].usize_at("worker"), Some(1));

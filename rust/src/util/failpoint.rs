@@ -1,0 +1,464 @@
+//! Deterministic fault-injection points for chaos testing.
+//!
+//! A *failpoint* is a named site on a production code path where a fault
+//! (an error return, a panic, or a delay) can be injected at a configured
+//! rate from a seeded RNG, so worker supervision, in-flight recovery and
+//! poison-recovery paths can be exercised reproducibly.  Faults come from
+//! two sources:
+//!
+//! - **Process-wide, via env** (the CI chaos matrix entry):
+//!   `HASS_FAULTS="<point>:<err|panic|delay:N>:<rate>[,<spec>...]"` with
+//!   `HASS_FAULTS_SEED=<u64>` for a reproducible stream.  Parsing rejects
+//!   unknown point names loudly (a typo'd chaos config must not silently
+//!   inject nothing) — the known names live in one table,
+//!   [`POINT_NAMES`].
+//! - **Scoped, via [`install`]** (unit tests, `chaos_bench`): a spec set
+//!   active only on threads whose *name* contains a tag (the scheduler
+//!   names workers `engine-p{pool}-{w}`, so a test can target its own
+//!   pool without perturbing tests running in parallel).  The returned
+//!   [`Guard`] uninstalls on drop.
+//!
+//! The hot path is a branch on one atomic pointer: with nothing
+//! installed, [`fire`] is a null-check and return.  Each installed spec
+//! owns an atomic SplitMix64 stream (seed mixed with the point index) so
+//! trigger decisions are reproducible per point for a given call
+//! sequence, lock-free — `fire` never takes a lock, so it is safe inside
+//! critical sections (that is exactly where the poison tests place it).
+//! Per-point trigger counters are exported for the stats wire via
+//! [`triggers`].
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+/// The single registry of failpoint names.  `HASS_FAULTS` parsing
+/// rejects anything not listed here; indices match the `Point` consts.
+pub const POINT_NAMES: &[&str] = &[
+    "engine.target_decode",
+    "engine.draft_decode",
+    "kvcache.page_alloc",
+    "kvcache.dedup_shard",
+    "scheduler.spill_send",
+    "scheduler.steal",
+    "scheduler.worker_tick",
+    "scheduler.stats_update",
+    "scheduler.affinity_route",
+    "server.conn_read",
+    "server.conn_write",
+];
+
+/// Index into [`POINT_NAMES`]; construct via the named consts only.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Point(usize);
+
+/// Fused and solo `target_decode` graph calls (`engine/sessions.rs`).
+pub const TARGET_DECODE: Point = Point(0);
+/// Fused and solo `draft_decode` graph calls (`engine/sessions.rs`).
+pub const DRAFT_DECODE: Point = Point(1);
+/// `kvcache::Page::alloc` — physical page allocation.
+pub const PAGE_ALLOC: Point = Point(2);
+/// Inside a dedup-registry shard critical section (`kvcache::dedup_page`).
+pub const DEDUP_SHARD: Point = Point(3);
+/// The scheduler spill path (`submit` overflowing to the shared channel).
+pub const SPILL_SEND: Point = Point(4);
+/// The work-stealing pull off the shared channel.
+pub const STEAL: Point = Point(5);
+/// Top of the engine worker main loop — `panic` here kills the worker
+/// thread and exercises supervision/respawn.
+pub const WORKER_TICK: Point = Point(6);
+/// Inside the per-worker stats critical section (`WorkerCtx::with_stats`).
+pub const STATS_UPDATE: Point = Point(7);
+/// Inside the prefix-affinity map critical section (`Scheduler::route`).
+pub const AFFINITY_ROUTE: Point = Point(8);
+/// Server per-connection request read.
+pub const CONN_READ: Point = Point(9);
+/// Server per-connection response write.
+pub const CONN_WRITE: Point = Point(10);
+
+impl Point {
+    pub fn name(self) -> &'static str {
+        POINT_NAMES[self.0]
+    }
+}
+
+/// What happens when a point triggers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Return an injected `Err` from the fault site (ignored — but still
+    /// counted — at sites that cannot fail, see [`fire_unit`]).
+    Err,
+    /// Panic at the fault site (worker death / lock poisoning).
+    Panic,
+    /// Sleep for N milliseconds (slow graph call / stalled I/O).
+    Delay(u64),
+}
+
+/// One parsed `<point>:<action>:<rate>` clause.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    pub point: Point,
+    pub action: Action,
+    pub rate: f64,
+}
+
+/// Parse a `HASS_FAULTS` string: comma/semicolon-separated
+/// `<point>:<err|panic|delay:N>:<rate>` clauses.  Unknown point names,
+/// unknown actions and out-of-range rates are hard errors.
+pub fn parse(s: &str) -> Result<Vec<FaultSpec>> {
+    let mut out = Vec::new();
+    for item in s.split([',', ';']).map(str::trim).filter(|t| !t.is_empty()) {
+        let parts: Vec<&str> = item.split(':').collect();
+        if parts.len() < 3 {
+            bail!("failpoint spec `{item}`: want <point>:<err|panic|delay:N>:<rate>");
+        }
+        let point = POINT_NAMES
+            .iter()
+            .position(|&n| n == parts[0])
+            .map(Point)
+            .ok_or_else(|| {
+                anyhow!("unknown failpoint `{}` (known: {})", parts[0], POINT_NAMES.join(", "))
+            })?;
+        let raw_rate = parts[parts.len() - 1];
+        let rate: f64 = raw_rate
+            .parse()
+            .map_err(|_| anyhow!("failpoint spec `{item}`: bad rate `{raw_rate}`"))?;
+        if !(0.0..=1.0).contains(&rate) {
+            bail!("failpoint spec `{item}`: rate {rate} outside [0, 1]");
+        }
+        let action = match parts[1..parts.len() - 1] {
+            ["err"] => Action::Err,
+            ["panic"] => Action::Panic,
+            ["delay", n] => Action::Delay(
+                n.trim_end_matches("ms")
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("failpoint spec `{item}`: bad delay `{n}`"))?,
+            ),
+            ref other => bail!(
+                "failpoint spec `{item}`: unknown action `{}` (want err, panic or delay:N)",
+                other.join(":")
+            ),
+        };
+        out.push(FaultSpec { point, action, rate });
+    }
+    Ok(out)
+}
+
+/// One spec compiled into the active snapshot; `rng` is an atomic
+/// SplitMix64 state so trigger rolls are lock-free.
+struct SpecState {
+    action: Action,
+    rate: f64,
+    scope: Option<String>,
+    rng: AtomicU64,
+}
+
+struct Config {
+    by_point: Vec<Vec<SpecState>>,
+}
+
+/// Active snapshot.  Replaced (never freed — snapshots are intentionally
+/// leaked so `fire` can hold a `&'static` without locking; installs are
+/// rare and tiny) under the `sets()` mutex.
+static CONFIG: AtomicPtr<Config> = AtomicPtr::new(std::ptr::null_mut());
+static ENV_INIT: Once = Once::new();
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+fn triggers_vec() -> &'static Vec<AtomicU64> {
+    static T: OnceLock<Vec<AtomicU64>> = OnceLock::new();
+    T.get_or_init(|| POINT_NAMES.iter().map(|_| AtomicU64::new(0)).collect())
+}
+
+struct InstallSet {
+    id: u64,
+    scope: Option<String>,
+    seed: u64,
+    specs: Vec<FaultSpec>,
+}
+
+fn sets() -> &'static Mutex<Vec<InstallSet>> {
+    static S: OnceLock<Mutex<Vec<InstallSet>>> = OnceLock::new();
+    S.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn rebuild(live: &[InstallSet]) {
+    let ptr = if live.is_empty() {
+        std::ptr::null_mut()
+    } else {
+        let mut by_point: Vec<Vec<SpecState>> = POINT_NAMES.iter().map(|_| Vec::new()).collect();
+        for set in live {
+            for spec in &set.specs {
+                by_point[spec.point.0].push(SpecState {
+                    action: spec.action.clone(),
+                    rate: spec.rate,
+                    scope: set.scope.clone(),
+                    rng: AtomicU64::new(
+                        set.seed ^ (spec.point.0 as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                    ),
+                });
+            }
+        }
+        Box::into_raw(Box::new(Config { by_point }))
+    };
+    CONFIG.store(ptr, Ordering::Release);
+}
+
+/// Uninstalls its spec set on drop.
+pub struct Guard {
+    id: u64,
+}
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        let mut s = sets().lock().unwrap_or_else(|p| p.into_inner());
+        s.retain(|x| x.id != self.id);
+        rebuild(&s);
+    }
+}
+
+/// Install a spec set.  `scope: Some(tag)` limits firing to threads
+/// whose name contains `tag` (e.g. a scheduler pool tag, so parallel
+/// tests do not see each other's faults); `None` is process-wide.
+pub fn install(scope: Option<&str>, specs: Vec<FaultSpec>, seed: u64) -> Guard {
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    let mut s = sets().lock().unwrap_or_else(|p| p.into_inner());
+    s.push(InstallSet { id, scope: scope.map(str::to_string), seed, specs });
+    rebuild(&s);
+    Guard { id }
+}
+
+fn init_env() {
+    let Ok(cfg) = std::env::var("HASS_FAULTS") else { return };
+    if cfg.trim().is_empty() {
+        return;
+    }
+    let specs = match parse(&cfg) {
+        Ok(s) => s,
+        // fail loudly: a typo'd chaos config must not silently inject nothing
+        Err(e) => panic!("HASS_FAULTS: {e:#}"),
+    };
+    let seed = std::env::var("HASS_FAULTS_SEED")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let mut s = sets().lock().unwrap_or_else(|p| p.into_inner());
+    s.push(InstallSet { id: 0, scope: None, seed, specs });
+    rebuild(&s);
+}
+
+/// Advance an atomic SplitMix64 stream and return a uniform f64 in [0,1).
+fn roll(state: &AtomicU64) -> f64 {
+    let s = state
+        .fetch_add(0x9E3779B97F4A7C15, Ordering::Relaxed)
+        .wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = s;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    ((z ^ (z >> 31)) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Hit a failpoint on a fallible path.  With nothing installed this is a
+/// null-check and return; otherwise it may inject `Err`, panic, or sleep
+/// per the active specs.
+#[inline]
+pub fn fire(p: Point) -> Result<()> {
+    ENV_INIT.call_once(init_env);
+    let ptr = CONFIG.load(Ordering::Acquire);
+    if ptr.is_null() {
+        return Ok(());
+    }
+    // SAFETY: snapshots are only ever replaced and intentionally leaked,
+    // never freed, so a loaded non-null pointer stays valid for 'static.
+    fire_slow(unsafe { &*ptr }, p, true)
+}
+
+/// Hit a failpoint on an infallible path: `err` specs count a trigger
+/// but are otherwise ignored; `panic`/`delay` act normally.
+#[inline]
+pub fn fire_unit(p: Point) {
+    ENV_INIT.call_once(init_env);
+    let ptr = CONFIG.load(Ordering::Acquire);
+    if ptr.is_null() {
+        return;
+    }
+    // SAFETY: as in `fire` — snapshots are leaked, never freed.
+    let _ = fire_slow(unsafe { &*ptr }, p, false);
+}
+
+fn fire_slow(cfg: &'static Config, p: Point, can_err: bool) -> Result<()> {
+    for spec in &cfg.by_point[p.0] {
+        if let Some(tag) = &spec.scope {
+            let cur = std::thread::current();
+            if !cur.name().is_some_and(|n| n.contains(tag.as_str())) {
+                continue;
+            }
+        }
+        if roll(&spec.rng) >= spec.rate {
+            continue;
+        }
+        triggers_vec()[p.0].fetch_add(1, Ordering::Relaxed);
+        match spec.action {
+            Action::Delay(ms) => std::thread::sleep(Duration::from_millis(ms)),
+            Action::Panic => panic!("failpoint `{}` injected panic", p.name()),
+            Action::Err => {
+                if can_err {
+                    return Err(anyhow!("failpoint `{}` injected error", p.name()));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Per-point trigger counts since process start (for the stats wire).
+pub fn triggers() -> Vec<(&'static str, u64)> {
+    POINT_NAMES
+        .iter()
+        .zip(triggers_vec().iter())
+        .map(|(&n, c)| (n, c.load(Ordering::Relaxed)))
+        .collect()
+}
+
+/// Trigger count for one point (test assertions on deltas).
+pub fn triggered(p: Point) -> u64 {
+    triggers_vec()[p.0].load(Ordering::Relaxed)
+}
+
+/// True if an injected-error message came from the named point (callers
+/// that want to classify a failure as chaos-injected).
+pub fn is_injected(msg: &str) -> bool {
+    msg.contains("failpoint `") && msg.contains("` injected")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tag() -> String {
+        // scope to this test thread's name so parallel tests are untouched
+        std::thread::current().name().unwrap_or("failpoint-test").to_string()
+    }
+
+    #[test]
+    fn failpoint_parse_accepts_all_forms() {
+        let specs = parse(
+            "engine.target_decode:err:0.01, scheduler.worker_tick:panic:1.0; \
+             server.conn_read:delay:25ms:0.5,kvcache.page_alloc:delay:3:1",
+        )
+        .expect("parse");
+        assert_eq!(specs.len(), 4);
+        assert_eq!(specs[0].point, TARGET_DECODE);
+        assert_eq!(specs[0].action, Action::Err);
+        assert!((specs[0].rate - 0.01).abs() < 1e-12);
+        assert_eq!(specs[1].action, Action::Panic);
+        assert_eq!(specs[2].action, Action::Delay(25));
+        assert_eq!(specs[3].action, Action::Delay(3));
+    }
+
+    #[test]
+    fn failpoint_parse_rejects_unknown_point() {
+        let e = parse("engine.target_decoed:err:0.5").expect_err("typo must fail");
+        let msg = format!("{e:#}");
+        assert!(msg.contains("unknown failpoint"), "{msg}");
+        assert!(msg.contains("engine.target_decode"), "message should list known names: {msg}");
+    }
+
+    #[test]
+    fn failpoint_parse_rejects_bad_action_and_rate() {
+        assert!(parse("engine.target_decode:explode:0.5").is_err());
+        assert!(parse("engine.target_decode:err:1.5").is_err());
+        assert!(parse("engine.target_decode:err:x").is_err());
+        assert!(parse("engine.target_decode").is_err());
+        assert!(parse("engine.target_decode:delay:abc:0.5").is_err());
+    }
+
+    #[test]
+    fn failpoint_disabled_is_noop() {
+        // no install for this thread's scope: must never error
+        for _ in 0..100 {
+            assert!(fire(TARGET_DECODE).is_ok());
+        }
+    }
+
+    #[test]
+    fn failpoint_scoped_err_fires_and_counts() {
+        let t = tag();
+        let before = triggered(SPILL_SEND);
+        let _g = install(
+            Some(&t),
+            vec![FaultSpec { point: SPILL_SEND, action: Action::Err, rate: 1.0 }],
+            7,
+        );
+        let e = fire(SPILL_SEND).expect_err("rate 1.0 must fire");
+        assert!(is_injected(&format!("{e:#}")));
+        assert!(triggered(SPILL_SEND) > before);
+        // a different point is unaffected
+        assert!(fire(STEAL).is_ok());
+    }
+
+    #[test]
+    fn failpoint_scope_does_not_leak_to_other_threads() {
+        let t = tag();
+        let _g = install(
+            Some(&t),
+            vec![FaultSpec { point: CONN_WRITE, action: Action::Err, rate: 1.0 }],
+            7,
+        );
+        let h = std::thread::Builder::new()
+            .name("failpoint-other-scope".to_string())
+            .spawn(|| fire(CONN_WRITE).is_ok())
+            .expect("spawn");
+        assert!(h.join().expect("join"), "fault scoped to this thread fired elsewhere");
+        assert!(fire(CONN_WRITE).is_err(), "fault must fire on the scoped thread");
+    }
+
+    #[test]
+    fn failpoint_guard_uninstalls_on_drop() {
+        let t = tag();
+        let g = install(
+            Some(&t),
+            vec![FaultSpec { point: CONN_READ, action: Action::Err, rate: 1.0 }],
+            7,
+        );
+        assert!(fire(CONN_READ).is_err());
+        drop(g);
+        assert!(fire(CONN_READ).is_ok());
+    }
+
+    #[test]
+    fn failpoint_rate_is_seeded_and_partial() {
+        let t = tag();
+        let _g = install(
+            Some(&t),
+            vec![FaultSpec { point: DEDUP_SHARD, action: Action::Err, rate: 0.5 }],
+            42,
+        );
+        let fired = (0..200).filter(|_| fire(DEDUP_SHARD).is_err()).count();
+        // seeded stream: stable, roughly half
+        assert!((60..=140).contains(&fired), "fired={fired}");
+    }
+
+    #[test]
+    fn failpoint_fire_unit_ignores_err_but_counts() {
+        let t = tag();
+        let before = triggered(STATS_UPDATE);
+        let _g = install(
+            Some(&t),
+            vec![FaultSpec { point: STATS_UPDATE, action: Action::Err, rate: 1.0 }],
+            7,
+        );
+        fire_unit(STATS_UPDATE); // must not panic or fail
+        assert!(triggered(STATS_UPDATE) > before);
+    }
+
+    #[test]
+    fn failpoint_triggers_snapshot_names_every_point() {
+        let snap = triggers();
+        assert_eq!(snap.len(), POINT_NAMES.len());
+        for (name, _) in snap {
+            assert!(POINT_NAMES.contains(&name));
+        }
+    }
+}

@@ -39,6 +39,10 @@ pub const AFFINITY: u16 = 5;
 /// a leaf class — shard critical sections call nothing that locks, and
 /// whole-pool walks visit shards strictly one at a time.
 pub const PAGE_SHARD: u16 = 6;
+/// The scheduler's flight board (per-worker in-flight job journal for
+/// crash redelivery); a leaf class like [`PAGE_SHARD`] — records are
+/// moved out of the critical section before any queue/stats lock.
+pub const FLIGHT: u16 = 7;
 
 fn class_name(c: u16) -> &'static str {
     match c {
@@ -48,6 +52,7 @@ fn class_name(c: u16) -> &'static str {
         CANCELS => "cancels",
         AFFINITY => "affinity",
         PAGE_SHARD => "page-shard",
+        FLIGHT => "flight",
         _ => "unknown",
     }
 }

@@ -2,6 +2,7 @@
 //! the `xla` crate closure — see DESIGN.md §2 substitution table).
 
 pub mod cli;
+pub mod failpoint;
 pub mod json;
 pub mod lockorder;
 pub mod prop;
